@@ -1,0 +1,57 @@
+//! A2 — ablation: the §IV-B parallelism ↔ footprint trade-off.
+//!
+//! Folding factor k shrinks the resident operand footprint ≈ k× but
+//! serializes k rounds per image. This bench sweeps k per network and
+//! prints both sides of the trade (the discussion around Fig 12).
+
+use pim_dram::bench_harness::banner;
+use pim_dram::mapping::footprint::resident_bits_at_k;
+use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::util::si;
+use pim_dram::util::table::{Align, Table};
+use pim_dram::workloads::nets::all_networks;
+
+fn main() {
+    banner("Ablation A2", "parallelism k vs footprint vs throughput");
+    for net in all_networks() {
+        let fat = net
+            .layers
+            .iter()
+            .max_by_key(|l| l.num_macs() * l.mac_size())
+            .unwrap();
+        let mut t = Table::new(&[
+            "k", "img/s", "ms/img", "fat-layer resident bits", "rounds(fat)",
+        ])
+        .aligns(&[
+            Align::Right, Align::Right, Align::Right, Align::Right, Align::Right,
+        ]);
+        let mut prev_ips = f64::INFINITY;
+        for k in [1usize, 2, 4, 8, 16] {
+            let cfg = SimConfig::paper_favorable(8).with_ks(vec![k]);
+            let r = match simulate(&net, &cfg) {
+                Ok(r) => r,
+                Err(_) => continue, // k > outer count on a head layer
+            };
+            let fat_sim = r
+                .layers
+                .iter()
+                .max_by(|a, b| {
+                    (a.mapping.macs_total * a.mapping.mac_size)
+                        .cmp(&(b.mapping.macs_total * b.mapping.mac_size))
+                })
+                .unwrap();
+            let ips = r.throughput_ips();
+            t.row(&[
+                k.to_string(),
+                format!("{ips:.0}"),
+                format!("{:.3}", r.pipeline.cycle_ns / 1e6),
+                format!("{}b", si(resident_bits_at_k(fat, 8, k) as f64)),
+                fat_sim.mapping.rounds().to_string(),
+            ]);
+            assert!(ips <= prev_ips + 1e-9, "{}: k must not speed up", net.name);
+            prev_ips = ips;
+        }
+        println!("network: {}\n{}", net.name, t.render());
+    }
+    println!("higher k → linearly smaller footprint, linearly more rounds.");
+}

@@ -1,0 +1,50 @@
+//! E1 — Fig 1: Titan Xp roofline for VGG16.
+//!
+//! Regenerates the figure's data: every VGG16 layer placed on the Titan Xp
+//! roofline (operational intensity vs attainable GFLOP/s). The paper's
+//! claim to check: *some* layers (the FC block) sit left of the ridge —
+//! memory bound — motivating PIM.
+
+use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::gpu::{roofline::roofline_points, GpuModel};
+use pim_dram::util::table::{Align, Table};
+use pim_dram::workloads::nets::vgg16;
+
+fn main() {
+    banner("Fig 1", "TITAN Xp roofline for VGG16");
+    let gpu = GpuModel::titan_xp();
+    let net = vgg16();
+    let points = roofline_points(&gpu, &net, 4);
+
+    let mut t = Table::new(&["layer", "FLOP/byte", "attainable GFLOP/s", "bound"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Left]);
+    let mut mem_bound = Vec::new();
+    for p in &points {
+        t.row(&[
+            p.layer.clone(),
+            format!("{:.2}", p.op_intensity),
+            format!("{:.1}", p.attainable_gflops),
+            if p.memory_bound { "MEMORY".into() } else { "compute".into() },
+        ]);
+        if p.memory_bound {
+            mem_bound.push(p.layer.as_str());
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "ridge point: {:.1} FLOP/byte (peak {:.2} TFLOP/s / {:.1} GB/s)",
+        gpu.ridge_intensity(),
+        gpu.peak_flops / 1e12,
+        gpu.mem_bw / 1e9
+    );
+    println!("memory-bound layers: {mem_bound:?}");
+    assert!(
+        mem_bound.contains(&"fc6") && mem_bound.contains(&"fc7"),
+        "paper's premise: VGG16 FC layers are memory bound"
+    );
+
+    let mut b = Bencher::from_env();
+    b.bench("roofline_points(vgg16)", || {
+        roofline_points(&gpu, &net, 4).len()
+    });
+}

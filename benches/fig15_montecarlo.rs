@@ -1,0 +1,52 @@
+//! E3 — Fig 15: Monte Carlo robustness of the AND primitive, 100 000
+//! samples per input case (the paper's count). Prints the pre-sense
+//! bitline histograms and the sense-margin statistic the paper reports
+//! (mean ≈ 200 mV), plus the failure count.
+
+use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::circuit::{run_monte_carlo, CircuitParams};
+
+fn main() {
+    banner("Fig 15", "Monte Carlo of the AND bitline (100k samples/case)");
+    let p = CircuitParams::cmos65nm();
+    let samples = if std::env::var("PIM_BENCH_FAST").is_ok() {
+        10_000
+    } else {
+        100_000
+    };
+    let mc = run_monte_carlo(&p, samples, 0xF1615);
+
+    for (inputs, hist) in &mc.histograms {
+        println!(
+            "case ({}) — pre-sense BL histogram (V):",
+            inputs.label()
+        );
+        println!("{}", hist.ascii(40));
+    }
+    for (inputs, s) in &mc.case_summaries {
+        println!(
+            "case ({}): mean {:.4} V, σ {:.4} V, [{:.4}, {:.4}]",
+            inputs.label(),
+            s.mean(),
+            s.std(),
+            s.min(),
+            s.max()
+        );
+    }
+    println!(
+        "\nsense margin: {:.1} mV mean (paper: ≈200 mV); worst-case sample \
+         margin {:.1} mV; failures {} / {} ({:.2e})",
+        mc.sense_margin_v * 1e3,
+        mc.worst_margin_v * 1e3,
+        mc.failures,
+        samples * 4,
+        mc.failure_rate()
+    );
+    assert!((mc.sense_margin_v - 0.2).abs() < 0.02, "margin off paper value");
+    assert_eq!(mc.failures, 0, "AND must be robust at nominal variation");
+
+    let mut b = Bencher::from_env();
+    b.bench_items("monte_carlo 4x10k samples", 40_000.0, || {
+        run_monte_carlo(&p, 10_000, 1).failures
+    });
+}

@@ -1,0 +1,56 @@
+//! E7 — Fig 17: execution time vs operand bit precision.
+//!
+//! The multiply cost is the paper's closed form (3n² + 4(n-1)³ + 4(n-1)
+//! AAPs for n > 2), so per-image time should grow ≈ cubically in n. The
+//! bench prints per-network steady-state time for n ∈ {2, 4, 8, 16} and
+//! checks the growth exponent.
+
+use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::primitives::paper_mul_aaps;
+use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::util::table::{Align, Table};
+use pim_dram::workloads::nets::all_networks;
+
+fn main() {
+    banner("Fig 17", "runtime vs operand bit precision");
+    let bits = [2usize, 4, 8, 16];
+
+    let mut t = Table::new(&["network", "2-bit", "4-bit", "8-bit", "16-bit"])
+        .aligns(&[
+            Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        ]);
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for net in all_networks() {
+        let mut row = vec![net.name.clone()];
+        let mut times = Vec::new();
+        for &n in &bits {
+            let r = simulate(&net, &SimConfig::paper_favorable(n)).unwrap();
+            let ms = r.pipeline.cycle_ns / 1e6;
+            times.push(ms);
+            row.push(format!("{ms:.3} ms"));
+        }
+        t.row(&row);
+        series.push((net.name.clone(), times));
+    }
+    println!("{}", t.render());
+    println!("multiply AAP counts: {:?}", bits.map(|n| paper_mul_aaps(n as u64)));
+
+    // Shape: monotone growth; 16b/8b ratio should approach the AAP ratio
+    // (the multiply dominates at high n).
+    let aap_ratio = paper_mul_aaps(16) as f64 / paper_mul_aaps(8) as f64;
+    for (name, times) in &series {
+        assert!(
+            times.windows(2).all(|w| w[1] > w[0]),
+            "{name}: time must grow with precision"
+        );
+        let r = times[3] / times[2];
+        println!("{name}: 16b/8b time ratio {r:.2} (AAP ratio {aap_ratio:.2})");
+        assert!(r > 2.0, "{name}: growth too flat ({r:.2})");
+    }
+
+    let mut b = Bencher::from_env();
+    let alex = pim_dram::workloads::nets::alexnet();
+    b.bench("simulate(alexnet) 16-bit", || {
+        simulate(&alex, &SimConfig::paper_favorable(16)).unwrap().total_aaps
+    });
+}

@@ -1,0 +1,83 @@
+//! §Perf — wall-clock benchmarks of the simulator hot paths (the L3
+//! optimization targets in DESIGN.md §8). These are the numbers the
+//! EXPERIMENTS.md §Perf before/after table tracks.
+//!
+//! Targets:
+//!   * `simulate()` full networks: the per-experiment unit of work — the
+//!     fig16/fig17 sweeps call it dozens of times.
+//!   * `in_dram_mul`: the functional bit-level multiply (tests + examples).
+//!   * `maj5`: the inner bit-parallel majority kernel.
+//!   * Monte Carlo sample rate (fig15 calls 400k samples).
+//!   * `BankPipeline::mvm`: the cross-validation path.
+
+use pim_dram::arch::{adder_tree::AdderTree, bank_pim::BankPipeline};
+use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::circuit::{run_monte_carlo, CircuitParams};
+use pim_dram::dram::BitRow;
+use pim_dram::mapping::{map_network, MapConfig};
+use pim_dram::primitives::{mul::in_dram_mul, PimSubarray};
+use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::util::rng::Rng;
+use pim_dram::workloads::nets::{resnet18, vgg16};
+
+fn main() {
+    banner("Perf", "simulator hot-path wall-clock benchmarks");
+    let mut b = Bencher::from_env();
+
+    // Full-network simulation (the experiment unit).
+    let vgg = vgg16();
+    let res = resnet18();
+    b.bench("simulate(vgg16, favorable)", || {
+        simulate(&vgg, &SimConfig::paper_favorable(8)).unwrap().total_aaps
+    });
+    b.bench("simulate(resnet18, conservative)", || {
+        simulate(&res, &SimConfig::conservative(8)).unwrap().total_aaps
+    });
+    b.bench("map_network(vgg16)", || {
+        map_network(
+            &vgg,
+            &MapConfig::uniform(pim_dram::dram::DramGeometry::paper_ideal(), 8, 1),
+        )
+        .unwrap()
+        .layers
+        .len()
+    });
+
+    // Bit-level functional multiply, 4096 columns (one subarray row-width).
+    let mut pim = PimSubarray::new(8, 4096, 1);
+    let mut rng = Rng::new(3);
+    for col in 0..4096 {
+        pim.write_pair(col, 0, rng.int_range(0, 255) as u64, rng.int_range(0, 255) as u64);
+    }
+    b.bench_items("in_dram_mul 8b x 4096 cols", 4096.0, || {
+        let mut p = pim.clone();
+        in_dram_mul(&mut p, 0);
+        p.stats.total_aaps()
+    });
+
+    // maj5 over a full row.
+    let rows: Vec<BitRow> = (0..5)
+        .map(|r| BitRow::from_fn(4096, |c| (c * 31 + r * 17) % 3 == 0))
+        .collect();
+    b.bench_items("maj5 4096 columns", 4096.0, || {
+        BitRow::maj5([&rows[0], &rows[1], &rows[2], &rows[3], &rows[4]]).count_ones()
+    });
+
+    // Monte Carlo sample rate.
+    let p = CircuitParams::cmos65nm();
+    b.bench_items("monte_carlo 40k samples", 40_000.0, || {
+        run_monte_carlo(&p, 10_000, 9).failures
+    });
+
+    // Cross-validation MVM (subarray multiply + tree + accumulate).
+    let bp = BankPipeline::new(AdderTree::new(1024), 8);
+    let x: Vec<u64> = (0..64).map(|_| rng.int_range(0, 255) as u64).collect();
+    let w: Vec<Vec<i64>> = (0..64)
+        .map(|_| (0..16).map(|_| rng.int_range(-128, 127)).collect())
+        .collect();
+    b.bench_items("bank_pipeline mvm 64x16 (8b)", (64 * 16) as f64, || {
+        bp.mvm(&x, &w).len()
+    });
+
+    println!("\n(record these in EXPERIMENTS.md §Perf)");
+}

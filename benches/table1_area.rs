@@ -1,0 +1,38 @@
+//! E4 — Table I: area breakdown of the bank peripheral logic at 65 nm,
+//! calibrated to the paper's published absolute numbers (the adder tree
+//! dominates with ≈99.5 % of component area).
+
+use pim_dram::bench_harness::banner;
+use pim_dram::energy;
+
+fn main() {
+    banner("Table I", "Area breakdown (65 nm, 4096-input adder tree)");
+    println!("{}", energy::render_area_table(4096));
+
+    let comps = energy::bank_components(4096);
+    let total: f64 = comps.iter().map(|c| c.area_um2).sum();
+    println!("total component area: {total:.0} µm²");
+    println!(
+        "transpose unit (256×8 SRAM): {:.3} µm² (paper §IV-A.6)",
+        energy::transpose_area_um2(256, 8)
+    );
+    println!(
+        "whole-bank peripheral area: {:.0} µm²",
+        energy::bank_peripheral_area_um2(4096)
+    );
+
+    // Paper-exact absolute values.
+    assert_eq!(comps[0].area_um2, 514_877.0);
+    assert_eq!(comps[1].area_um2, 804.0);
+    assert_eq!(comps[5].area_um2, 91.0);
+    let adder_pct = 100.0 * comps[0].area_um2 / total;
+    assert!(
+        (adder_pct - 99.47).abs() < 0.05,
+        "adder area share {adder_pct:.3}% (paper: 99.47373%)"
+    );
+    println!("\nvalues match Table I; adder share {adder_pct:.3}%");
+    println!(
+        "(note: the paper's printed percentages are internally inconsistent \
+         by ~0.02% — DESIGN.md §7)"
+    );
+}

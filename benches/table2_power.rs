@@ -1,0 +1,31 @@
+//! E5 — Table II: power breakdown of the bank peripheral logic,
+//! calibrated to the paper's published numbers (adder tree ≈95.9 %).
+
+use pim_dram::bench_harness::banner;
+use pim_dram::energy;
+
+fn main() {
+    banner("Table II", "Power breakdown (65 nm, 4096-input adder tree)");
+    println!("{}", energy::render_power_table(4096));
+
+    let comps = energy::bank_components(4096);
+    let total: f64 = comps.iter().map(|c| c.power_nw).sum();
+    println!("total component power: {:.1} µW", total / 1e3);
+    println!(
+        "derated logic clock: {:.2} ns/cycle (nominal {:.0} MHz × {:.3} \
+         DRAM-process factor [17])",
+        energy::logic_cycle_ns(),
+        energy::LOGIC_CLOCK_GHZ * 1e3,
+        energy::DRAM_PROCESS_DELAY_FACTOR
+    );
+
+    assert!((comps[0].power_nw - 13_200_190.9).abs() < 0.1);
+    assert!((comps[1].power_nw - 177_765.864).abs() < 1e-6);
+    assert!((comps[5].power_nw - 28_366.738).abs() < 1e-6);
+    let adder_pct = 100.0 * comps[0].power_nw / total;
+    assert!(
+        (adder_pct - 95.9014).abs() < 0.01,
+        "adder power share {adder_pct:.4}% (paper: 95.9014%)"
+    );
+    println!("\nvalues match Table II; adder share {adder_pct:.4}%");
+}

@@ -1,0 +1,120 @@
+//! End-to-end driver (the required full-system demo): serve batched
+//! classification requests over the AOT artifacts through the L3
+//! coordinator, report latency/throughput + accuracy, and put the same
+//! workload through the PIM timing model for the DRAM-side cost.
+//!
+//! This proves all layers compose: Pallas kernel (L1) → jax graph (L2) →
+//! HLO artifacts → PJRT runtime → coordinator batching (L3), with the
+//! paper's architecture simulator pricing the identical computation.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_inference [N]`
+
+use std::time::Instant;
+
+use pim_dram::coordinator::{InferenceServer, ServerConfig};
+use pim_dram::gpu::GpuModel;
+use pim_dram::runtime::{
+    artifacts_available, artifacts_dir, ArtifactManifest, DigitsDataset,
+};
+use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::util::stats::Summary;
+use pim_dram::workloads::nets;
+
+fn main() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        artifacts_available(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(256);
+
+    let dir = artifacts_dir();
+    let manifest = ArtifactManifest::load(&dir)?;
+    let ds = DigitsDataset::load(&dir, &manifest)?;
+    println!(
+        "artifacts: {} layers, batch {}, {}-bit quant, {} test images",
+        manifest.layers.len(),
+        manifest.batch,
+        manifest.wa,
+        ds.count
+    );
+
+    // ---- serve batched requests through the coordinator ----------------
+    let server = InferenceServer::start(ServerConfig::default())?;
+    println!("server up (batch={}), sending {n_requests} requests...", server.batch_size());
+
+    let mut latencies = Summary::new();
+    let mut correct = 0usize;
+    let t0 = Instant::now();
+    // Concurrent clients: 4 threads hammer the server so batches fill.
+    let results: Vec<(bool, f64)> = std::thread::scope(|scope| {
+        let server = &server;
+        let ds = &ds;
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                for i in (t..n_requests).step_by(4) {
+                    let (img, lbl) = ds.batch(i, 1);
+                    let resp = server.classify(img).expect("classify");
+                    out.push((
+                        resp.class == lbl[0] as usize,
+                        resp.latency.as_secs_f64() * 1e6,
+                    ));
+                }
+                out
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+    for (ok, lat_us) in results {
+        correct += ok as usize;
+        latencies.push(lat_us);
+    }
+
+    println!("\n== serving results ==");
+    println!(
+        "throughput: {:.1} img/s   wall: {:.1} ms for {n_requests} requests",
+        n_requests as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "latency: mean {:.0} µs, p50 {:.0} µs, p99 {:.0} µs",
+        latencies.mean(),
+        latencies.percentile(50.0),
+        latencies.percentile(99.0)
+    );
+    println!(
+        "accuracy: {:.1}% ({} / {n_requests}); python quant reference {:.1}%",
+        100.0 * correct as f64 / n_requests as f64,
+        correct,
+        100.0 * manifest.quant_test_accuracy
+    );
+    println!("coordinator: {}", server.metrics().report());
+
+    // ---- the same workload on the PIM timing model ----------------------
+    println!("\n== PIM-DRAM timing model for the same network ==");
+    let net = nets::pimnet();
+    let gpu = GpuModel::titan_xp();
+    for (label, cfg) in [
+        ("paper-favorable", SimConfig::paper_favorable(manifest.wa)),
+        ("conservative   ", SimConfig::conservative(manifest.wa)),
+    ] {
+        let r = simulate(&net, &cfg)?;
+        println!(
+            "  {label}: {:.1} µs/image steady-state ({:.0} img/s), \
+             {} AAPs/image, DRAM energy {:.2} µJ, speedup vs ideal GPU {:.2}x",
+            r.pipeline.cycle_ns / 1e3,
+            r.throughput_ips(),
+            r.total_aaps,
+            r.total_dram_energy_nj / 1e3,
+            r.speedup_vs(&gpu, &net)
+        );
+    }
+    server.shutdown();
+    Ok(())
+}

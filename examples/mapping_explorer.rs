@@ -1,0 +1,81 @@
+//! Mapping explorer: walk Algorithm 1 over every layer of a network and
+//! print the placement the paper's Fig 12 illustrates — MACs per subarray,
+//! stacked pairs, waves, wasted columns, and the parallelism ↔ footprint
+//! trade-off (§IV-B).
+//!
+//! Run: `cargo run --release --example mapping_explorer [network] [k]`
+
+use pim_dram::dram::DramGeometry;
+use pim_dram::mapping::{footprint, map_network, MapConfig};
+use pim_dram::util::si;
+use pim_dram::util::table::{Align, Table};
+use pim_dram::workloads::nets;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
+    let k: usize = std::env::args()
+        .nth(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    let net = nets::by_name(&name)?;
+
+    for (label, geometry) in [
+        ("paper-ideal", DramGeometry::paper_ideal()),
+        ("real DDR3  ", DramGeometry::paper_default()),
+    ] {
+        let cfg = MapConfig::uniform(geometry.clone(), 8, k);
+        let m = map_network(&net, &cfg)?;
+        let mut t = Table::new(&[
+            "layer", "mac", "macs", "k", "macs/sub", "sub(ideal)", "sub(used)",
+            "waves", "stack", "util%",
+        ])
+        .aligns(&[
+            Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+            Align::Right, Align::Right, Align::Right, Align::Right, Align::Right,
+        ]);
+        for l in &m.layers {
+            t.row(&[
+                l.name.clone(),
+                l.mac_size.to_string(),
+                l.macs_total.to_string(),
+                l.k.to_string(),
+                l.macs_per_subarray.to_string(),
+                l.subarrays_ideal.to_string(),
+                l.subarrays_used.to_string(),
+                l.waves.to_string(),
+                l.stacked_pairs.to_string(),
+                format!("{:.1}", l.utilization * 100.0),
+            ]);
+        }
+        println!(
+            "== {} on {} (k={k}, {} banks of {} subarrays) ==",
+            net.name,
+            label,
+            geometry.total_banks(),
+            geometry.subarrays_per_bank
+        );
+        println!("{}", t.render());
+        println!(
+            "banks used: {} (+{} residual reserves)  fully resident: {}\n",
+            m.layers.len(),
+            m.residual_banks,
+            m.fully_resident()
+        );
+    }
+
+    // Footprint trade-off for the fattest layer (§IV-B discussion).
+    let fat = net
+        .layers
+        .iter()
+        .max_by_key(|l| l.num_macs() * l.mac_size())
+        .unwrap();
+    println!("== footprint vs parallelism for `{}` ==", fat.name);
+    for kk in [1usize, 2, 4, 8, 16] {
+        println!(
+            "  k={kk:>2}: resident {}bit",
+            si(footprint::resident_bits_at_k(fat, 8, kk) as f64)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Quickstart: the PIM-DRAM stack in one file.
+//!
+//! 1. Multiply two operands *inside the DRAM subarray model* (the paper's
+//!    §III primitive) and see its AAP cost.
+//! 2. Run a matrix-vector product through the full bank pipeline
+//!    (subarray multiply → adder tree → accumulator → zero-point fixup).
+//! 3. If `make artifacts` has run: execute the same MVM through the
+//!    AOT-compiled Pallas kernel via PJRT and check all three agree.
+//! 4. Price AlexNet on the timing simulator vs the Titan Xp roofline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use pim_dram::arch::{adder_tree::AdderTree, bank_pim::BankPipeline};
+use pim_dram::gpu::GpuModel;
+use pim_dram::primitives::{self, PimSubarray};
+use pim_dram::runtime::{
+    artifacts_available, artifacts_dir, ArtifactManifest, Runtime, Tensor,
+};
+use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::util::rng::Rng;
+use pim_dram::workloads::nets;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. One in-DRAM multiplication, column-parallel ------------------
+    println!("== 1. In-subarray multiply (§III-B) ==");
+    let mut pim = PimSubarray::new(8, 4, 1);
+    for (col, (a, w)) in [(23u64, 71u64), (255, 255), (0, 200), (128, 3)]
+        .into_iter()
+        .enumerate()
+    {
+        pim.write_pair(col, 0, a, w);
+    }
+    primitives::mul::in_dram_mul(&mut pim, 0);
+    for col in 0..4 {
+        println!("  column {col}: product = {}", pim.read_product(col));
+    }
+    println!(
+        "  cost: {} AAPs (paper closed form for n=8: {})",
+        pim.stats.total_aaps(),
+        primitives::paper_mul_aaps(8)
+    );
+
+    // --- 2. Bank-pipeline MVM --------------------------------------------
+    println!("\n== 2. Bank pipeline MVM (multiply → tree → accumulate) ==");
+    let mut rng = Rng::new(7);
+    let k = 16;
+    let outs = 4;
+    let x: Vec<u64> = (0..k).map(|_| rng.int_range(0, 255) as u64).collect();
+    let w: Vec<Vec<i64>> = (0..k)
+        .map(|_| (0..outs).map(|_| rng.int_range(-128, 127)).collect())
+        .collect();
+    let bp = BankPipeline::new(AdderTree::new(64), 8);
+    let y = bp.mvm(&x, &w);
+    let want: Vec<i64> = (0..outs)
+        .map(|o| x.iter().zip(&w).map(|(&a, r)| a as i64 * r[o]).sum())
+        .collect();
+    println!("  PIM pipeline: {y:?}");
+    println!("  reference   : {want:?}  (match: {})", y == want);
+    assert_eq!(y, want);
+
+    // --- 3. Cross-check against the AOT Pallas kernel via PJRT -----------
+    if artifacts_available() {
+        println!("\n== 3. AOT Pallas kernel via PJRT ==");
+        let dir = artifacts_dir();
+        let manifest = ArtifactManifest::load(&dir)?;
+        let rt = Runtime::cpu()?;
+        let module = rt.load_hlo_text(&dir.join(&manifest.mvm_hlo))?;
+        let (m, kk, n) = manifest.mvm_shape;
+        let xs: Vec<i32> =
+            (0..m * kk).map(|_| rng.int_range(0, 255) as i32).collect();
+        let ws: Vec<i32> =
+            (0..kk * n).map(|_| rng.int_range(-128, 127) as i32).collect();
+        let out = module.run1(&[
+            Tensor::i32(xs.clone(), &[m, kk]),
+            Tensor::i32(ws.clone(), &[kk, n]),
+        ])?;
+        let got = out.as_i32()?;
+        // Compare first row against the DRAM-model pipeline.
+        let x0: Vec<u64> = xs[..kk].iter().map(|&v| v as u64).collect();
+        let wmat: Vec<Vec<i64>> = (0..kk)
+            .map(|r| (0..n).map(|c| ws[r * n + c] as i64).collect())
+            .collect();
+        let sim = bp.mvm(&x0, &wmat);
+        let agree = (0..n).all(|j| sim[j] == got[j] as i64);
+        println!("  PJRT({m}×{kk}×{n}) row0 == DRAM-model row0: {agree}");
+        assert!(agree);
+    } else {
+        println!("\n== 3. (skipped — run `make artifacts` for the PJRT check) ==");
+    }
+
+    // --- 4. System-level timing vs GPU -----------------------------------
+    println!("\n== 4. AlexNet on the timing simulator ==");
+    let net = nets::alexnet();
+    let gpu = GpuModel::titan_xp();
+    for (label, cfg) in [
+        ("paper-favorable", SimConfig::paper_favorable(8)),
+        ("conservative   ", SimConfig::conservative(8)),
+    ] {
+        let r = simulate(&net, &cfg)?;
+        println!(
+            "  {label}: {:.3} ms/image, speedup over ideal {}: {:.2}x",
+            r.pipeline.cycle_ns / 1e6,
+            gpu.name,
+            r.speedup_vs(&gpu, &net)
+        );
+    }
+    Ok(())
+}

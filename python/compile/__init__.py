@@ -1,0 +1,14 @@
+"""Build-time compile path (L1 kernels + L2 model + AOT lowering).
+
+Nothing in this package is imported at runtime; `make artifacts` runs it once
+and the Rust coordinator consumes `artifacts/` from then on.
+"""
+
+import jax
+
+# The SFU quantize unit models its internal datapath with 64-bit integers
+# (acc × fixed-point multiplier). jax silently truncates i64 → i32 unless
+# x64 is enabled, which would corrupt the requantization — enable globally
+# for the whole build path. All float tensors pin dtype explicitly.
+jax.config.update("jax_enable_x64", True)
+

@@ -1,0 +1,273 @@
+"""AOT build: train → quantize → lower to HLO text artifacts.
+
+This is the *only* entry point that runs Python; it executes once at
+``make artifacts`` and produces everything the Rust coordinator needs:
+
+  artifacts/
+    manifest.json          — artifact index: shapes, dtypes, quant params
+    model.hlo.txt          — full quantized PimNet forward (batch B)
+    mvm.hlo.txt            — standalone bit-serial MVM (quickstart/validation)
+    layers/l{i}_{name}.hlo.txt — one artifact per layer == per PIM bank,
+                             chained by the Rust pipeline (§IV-B dataflow)
+    digits_test.bin        — int32-LE quantized test images
+    digits_labels.bin      — u8 labels
+    testvectors.json       — shared vectors for the Rust functional
+                             primitives (bit-level subarray sim) to replay
+
+Interchange format is **HLO text**, not serialized protos: jax ≥ 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .datasets import make_digits
+from .kernels import bitserial_matmul
+from .kernels.ref import matmul_ref
+
+__all__ = ["to_hlo_text", "lower_to_hlo_text", "build_artifacts"]
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation → XLA HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default HLO printer
+    elides big literals as ``constant({...})``, which the text parser on
+    the Rust side silently "reparses" into garbage — baked weights would
+    be corrupted (this bit us; see EXPERIMENTS.md §Debugging).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_to_hlo_text(fn, *example_args) -> str:
+    """jit-lower ``fn`` at the example shapes and return HLO text."""
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def _write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def _layer_artifact(qp, lq, in_shape):
+    """Build the single-bank function for one layer and lower it."""
+
+    def bank_fn(x):
+        return (M.quant_layer_apply(lq, qp, x),)
+
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.int32)
+    return lower_to_hlo_text(bank_fn, spec)
+
+
+def _mac_geometry(lq, in_shape):
+    """MAC count/size for the manifest (cross-checked by rust mapping)."""
+    if lq.kind == "conv":
+        kh, kw, ci, co = lq.weights_q.shape
+        h, w = in_shape[1], in_shape[2]
+        oh = (h - kh + 2 * lq.pad) // lq.stride + 1
+        ow = (w - kw + 2 * lq.pad) // lq.stride + 1
+        return kh * kw * ci, oh * ow * co
+    k, n = lq.weights_q.shape
+    return k, n
+
+
+def _test_vectors(seed: int = 7):
+    """Small exact-matmul vectors the Rust bit-level simulator replays."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for wa, ww, m, k, n in [
+        (2, 2, 2, 3, 2),
+        (4, 4, 3, 5, 4),
+        (8, 8, 4, 6, 3),
+        (8, 4, 2, 9, 4),
+        (3, 7, 3, 4, 2),
+    ]:
+        x = rng.integers(0, 2**wa, size=(m, k), dtype=np.int64)
+        w = rng.integers(-(2 ** (ww - 1)), 2 ** (ww - 1), size=(k, n), dtype=np.int64)
+        y_kernel = np.asarray(
+            bitserial_matmul(jnp.asarray(x, jnp.int32), jnp.asarray(w, jnp.int32),
+                             wa=wa, ww=ww)
+        )
+        y_ref = np.asarray(matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+        assert (y_kernel == y_ref).all(), "kernel/oracle mismatch in testvectors"
+        cases.append(
+            {
+                "wa": wa, "ww": ww, "m": m, "k": k, "n": n,
+                "x": x.flatten().tolist(),
+                "w": w.flatten().tolist(),
+                "y": y_ref.flatten().tolist(),
+            }
+        )
+    return {"matmul_cases": cases}
+
+
+def build_artifacts(outdir: str, *, steps=400, n_train=2048, n_test=256,
+                    batch=8, wa=8, ww=8, seed=0, quick=False):
+    if quick:
+        steps, n_train, n_test = 60, 512, 64
+
+    print(f"[aot] dataset: {n_train} train / {n_test} test")
+    train_x, train_y = make_digits(n_train, seed=seed)
+    test_x, test_y = make_digits(n_test, seed=seed + 1)
+
+    print(f"[aot] training PimNet ({steps} steps)...")
+    params = M.init_params(jax.random.PRNGKey(seed))
+    params, loss_log = M.train(params, train_x, train_y, steps=steps, seed=seed)
+    float_acc = M.accuracy(M.apply_float(params, jnp.asarray(test_x)), test_y)
+    print(f"[aot] float test accuracy: {float_acc:.3f} "
+          f"(loss {loss_log[0]:.3f} -> {loss_log[-1]:.3f})")
+
+    print(f"[aot] quantizing (wa={wa}, ww={ww})...")
+    qp = M.quantize_model(params, train_x[:256], wa=wa, ww=ww)
+
+    # Quantized accuracy on a bounded subset (interpret-mode kernels).
+    n_eval = min(n_test, 64)
+    xq_eval = M.quantize_input(test_x[:n_eval], qp)
+    quant_fwd = jax.jit(lambda x: M.apply_quant(qp, x))
+    logits_q = np.concatenate(
+        [np.asarray(quant_fwd(xq_eval[i : i + batch]))
+         for i in range(0, n_eval, batch)]
+    )
+    quant_acc = M.accuracy(jnp.asarray(logits_q), test_y[:n_eval])
+    print(f"[aot] quant test accuracy ({n_eval} imgs): {quant_acc:.3f}")
+
+    # ---- lower artifacts -------------------------------------------------
+    print("[aot] lowering HLO artifacts...")
+    layers_meta = []
+    in_shape = (batch, 16, 16, 1)
+    for i, lq in enumerate(qp.layers):
+        hlo = _layer_artifact(qp, lq, in_shape)
+        rel = f"layers/l{i}_{lq.name}.hlo.txt"
+        _write(os.path.join(outdir, rel), hlo)
+        # output shape by abstract evaluation
+        out_aval = jax.eval_shape(
+            lambda x: M.quant_layer_apply(lq, qp, x),
+            jax.ShapeDtypeStruct(in_shape, jnp.int32),
+        )
+        mac_size, num_macs = _mac_geometry(lq, in_shape)
+        layers_meta.append(
+            {
+                "name": lq.name,
+                "file": rel,
+                "kind": lq.kind,
+                "in_shape": list(in_shape),
+                "out_shape": list(out_aval.shape),
+                "out_dtype": "f32" if out_aval.dtype == jnp.float32 else "i32",
+                "mac_size": int(mac_size),
+                "num_macs": int(num_macs),
+                "relu": bool(lq.relu),
+                "pool": bool(lq.pool),
+                "w_scale": float(lq.w_scale),
+                "in_scale": float(lq.in_scale),
+                "out_scale": float(lq.out_scale),
+            }
+        )
+        in_shape = tuple(out_aval.shape)
+
+    full_hlo = lower_to_hlo_text(
+        lambda x: (M.apply_quant(qp, x),),
+        jax.ShapeDtypeStruct((batch, 16, 16, 1), jnp.int32),
+    )
+    _write(os.path.join(outdir, "model.hlo.txt"), full_hlo)
+
+    # Standalone parametric MVM (both operands runtime inputs).
+    mvm_m, mvm_k, mvm_n = 8, 64, 64
+    mvm_hlo = lower_to_hlo_text(
+        lambda x, w: (bitserial_matmul(x, w, wa=wa, ww=ww),),
+        jax.ShapeDtypeStruct((mvm_m, mvm_k), jnp.int32),
+        jax.ShapeDtypeStruct((mvm_k, mvm_n), jnp.int32),
+    )
+    _write(os.path.join(outdir, "mvm.hlo.txt"), mvm_hlo)
+
+    # ---- per-layer debug activations (cross-layer validation) -----------
+    # The Rust runtime replays the first batch through the per-layer
+    # artifacts and must reproduce these exactly (layout-sensitive!).
+    dbg_x = M.quantize_input(test_x[:batch], qp)
+    act = dbg_x
+    for i, lq in enumerate(qp.layers):
+        act = M.quant_layer_apply(lq, qp, act)
+        arr = np.asarray(act)
+        fname = f"debug_act_l{i}.bin"
+        if arr.dtype.kind == "f":
+            arr.astype("<f4").tofile(os.path.join(outdir, fname))
+        else:
+            arr.astype("<i4").tofile(os.path.join(outdir, fname))
+    dbg_x_np = np.asarray(dbg_x, dtype="<i4")
+    dbg_x_np.tofile(os.path.join(outdir, "debug_input.bin"))
+    print("  wrote debug_input.bin / debug_act_l*.bin")
+
+    # ---- datasets (raw LE binary; parsed by rust/src/runtime) -----------
+    xq_all = np.asarray(M.quantize_input(test_x, qp), dtype="<i4")
+    with open(os.path.join(outdir, "digits_test.bin"), "wb") as f:
+        f.write(xq_all.tobytes())
+    with open(os.path.join(outdir, "digits_labels.bin"), "wb") as f:
+        f.write(test_y.astype(np.uint8).tobytes())
+    print(f"  wrote digits_test.bin / digits_labels.bin ({n_test} images)")
+
+    with open(os.path.join(outdir, "testvectors.json"), "w") as f:
+        json.dump(_test_vectors(), f)
+
+    manifest = {
+        "version": 1,
+        "wa": wa, "ww": ww, "batch": batch,
+        "input_scale": qp.layers[0].in_scale,
+        "model_hlo": "model.hlo.txt",
+        "mvm_hlo": "mvm.hlo.txt",
+        "mvm_shape": [mvm_m, mvm_k, mvm_n],
+        "test_images": {
+            "file": "digits_test.bin", "count": int(n_test),
+            "shape": [16, 16, 1], "dtype": "i32",
+        },
+        "test_labels": {"file": "digits_labels.bin", "count": int(n_test)},
+        "float_test_accuracy": float(float_acc),
+        "quant_test_accuracy": float(quant_acc),
+        "train_loss_first": float(loss_log[0]),
+        "train_loss_last": float(loss_log[-1]),
+        "layers": layers_meta,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written; {len(layers_meta)} layer artifacts")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--wa", type=int, default=8)
+    ap.add_argument("--ww", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="fast build for CI/tests (fewer steps, less data)")
+    # legacy flag kept for Makefile compatibility
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out:
+        outdir = os.path.dirname(os.path.abspath(args.out))
+    build_artifacts(
+        outdir, steps=args.steps, batch=args.batch,
+        wa=args.wa, ww=args.ww, seed=args.seed, quick=args.quick,
+    )
+
+
+if __name__ == "__main__":
+    main()

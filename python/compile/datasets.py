@@ -1,0 +1,66 @@
+"""Synthetic 16×16 digits dataset (build-time only).
+
+The paper evaluates on ImageNet-scale networks; the timing experiments in
+this repo need only layer *shapes* (public), but the end-to-end numeric
+driver needs real data + weights we can generate deterministically offline.
+This module renders a 10-class digit dataset from a 5×7 bitmap font with
+random shifts, per-image contrast jitter and Gaussian noise — small enough
+to train in seconds, hard enough that accuracy is a meaningful signal.
+
+Substitution recorded in DESIGN.md §2 (ImageNet → synthetic digits).
+"""
+
+import numpy as np
+
+__all__ = ["make_digits", "GLYPHS", "IMG", "NUM_CLASSES"]
+
+IMG = 16  #: image side
+NUM_CLASSES = 10
+
+# 5x7 bitmap font, digits 0..9 (one string row per scanline).
+_FONT = [
+    ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],  # 0
+    ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],  # 1
+    ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],  # 2
+    ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],  # 3
+    ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],  # 4
+    ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],  # 5
+    ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],  # 6
+    ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],  # 7
+    ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],  # 8
+    ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],  # 9
+]
+
+#: 10 glyphs, each a (7, 5) float array in {0, 1}.
+GLYPHS = np.array(
+    [[[float(c) for c in row] for row in glyph] for glyph in _FONT],
+    dtype=np.float32,
+)
+
+
+def _render(rng: np.random.Generator, digit: int) -> np.ndarray:
+    """Render one digit: 2× upscale, random offset, jitter, noise."""
+    glyph = GLYPHS[digit]
+    up = np.kron(glyph, np.ones((2, 2), dtype=np.float32))  # (14, 10)
+    img = np.zeros((IMG, IMG), dtype=np.float32)
+    dy = rng.integers(0, IMG - up.shape[0] + 1)
+    dx = rng.integers(0, IMG - up.shape[1] + 1)
+    img[dy : dy + up.shape[0], dx : dx + up.shape[1]] = up
+    contrast = rng.uniform(0.6, 1.0)
+    img *= contrast
+    img += rng.normal(0.0, 0.08, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def make_digits(n: int, seed: int = 0):
+    """Generate ``n`` images, balanced across classes.
+
+    Returns:
+      images: ``[n, IMG, IMG, 1]`` float32 in [0, 1]
+      labels: ``[n]`` int32
+    """
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n, dtype=np.int32) % NUM_CLASSES
+    rng.shuffle(labels)
+    images = np.stack([_render(rng, int(d)) for d in labels])
+    return images[..., None].astype(np.float32), labels

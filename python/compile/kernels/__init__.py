@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (bit-serial matmul, SFU chain) and their jnp oracles."""
+
+from . import ref  # noqa: F401
+from .bitserial_matmul import bitserial_matmul, bits_required, max_abs_acc  # noqa: F401
+from .sfu import fused_sfu, maxpool2x2, quantize_fixedpoint_params  # noqa: F401

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: bit-serial integer matmul — the functional analogue of
+PIM-DRAM's in-subarray multiplication + intra-bank adder-tree accumulation.
+
+PIM-DRAM (§III) multiplies n-bit operands column-parallel in a DRAM subarray
+by ANDing operand bits and majority-adding partial products; the per-bank
+reconfigurable adder tree (§IV-A.1) then reduces the product bits of all
+columns belonging to one MAC, and the accumulator (§IV-A.2) shift-adds the
+bit-position partial sums.
+
+On this substrate the same decomposition becomes:
+
+  * split activations (unsigned, ``wa`` bits) and weights (two's-complement,
+    ``ww`` bits) into bit planes;
+  * the AND of a pair of bit planes *is* their 0/1 product, so the per-plane
+    partial product reduction is a plain (0/1) matmul — mapping the paper's
+    adder tree onto the MXU/ALU reduction;
+  * the accumulator applies the ``2^(i+j)`` bit-position weight, with the
+    weight MSB plane carrying ``-2^(ww-1)`` (two's complement);
+  * the Pallas grid iterates over (activation-bit, weight-bit) plane pairs,
+    holding exactly one plane pair in VMEM per grid step — the analogue of
+    "operands copied into the compute rows" (§III-B).
+
+Hardware adaptation (DESIGN.md §3): the paper tiles work over DRAM subarray
+columns; we tile over (M, N) output blocks via BlockSpec so each grid step is
+a VMEM-resident block matmul. ``interpret=True`` everywhere — see aot_recipe.
+
+Exactness: for inputs in range, the kernel computes the *exact* integer
+matmul (verified against ``ref.matmul_ref`` by pytest + hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitserial_matmul", "max_abs_acc", "bits_required"]
+
+
+def _bitserial_kernel(x_ref, w_ref, o_ref, *, wa: int, ww: int):
+    """One grid step: partial product of activation bit-plane ``i`` and
+    weight bit-plane ``j``, accumulated into the output block.
+
+    Grid layout is ``(gm, gn, wa, ww)`` with the bit indices innermost so the
+    (M, N) output block stays resident while its ``wa*ww`` plane pairs are
+    reduced — mirroring one subarray's multiply before the adder-tree pass.
+    """
+    i = pl.program_id(2)  # activation bit index (LSB = 0)
+    j = pl.program_id(3)  # weight bit index
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Bit-plane extraction. Arithmetic shift keeps two's-complement weight
+    # bits correct for j < ww (the paper stores operands bit-transposed in
+    # DRAM rows; here a plane is a VMEM-resident 0/1 matrix).
+    x_plane = ((x_ref[...] >> i) & 1).astype(jnp.int32)
+    w_plane = ((w_ref[...] >> j) & 1).astype(jnp.int32)
+
+    # AND of two bit planes == their elementwise product; the contraction is
+    # the adder-tree reduction over one MAC's columns.
+    partial = jax.lax.dot_general(
+        x_plane,
+        w_plane,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    # Two's complement: the weight MSB plane carries -2^(ww-1).
+    sign = jnp.where(j == ww - 1, jnp.int32(-1), jnp.int32(1))
+    o_ref[...] += partial * sign * jnp.left_shift(jnp.int32(1), i + j)
+
+
+def bits_required(k: int, wa: int, ww: int) -> int:
+    """Bits needed to hold a K-deep MAC of wa-bit × ww-bit products.
+
+    Mirrors the accumulator sizing rule of §IV-A.2 (accumulate till the
+    2n-th bit arrives, plus log2(K) growth from the adder tree).
+    """
+    max_acc = max_abs_acc(k, wa, ww)
+    return max(1, int(max_acc).bit_length() + 1)  # +1 sign bit
+
+
+def max_abs_acc(k: int, wa: int, ww: int) -> int:
+    """Worst-case |accumulator| value for a K-deep MAC."""
+    return k * (2**wa - 1) * (2 ** (ww - 1))
+
+
+def bitserial_matmul(
+    x,
+    w,
+    *,
+    wa: int = 8,
+    ww: int = 8,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = True,
+):
+    """Exact integer matmul ``x @ w`` via bit-serial plane decomposition.
+
+    Args:
+      x: ``[M, K]`` int32, unsigned values in ``[0, 2**wa)`` (quantized,
+        post-ReLU activations — the paper's activation operand).
+      w: ``[K, N]`` int32, two's-complement values in
+        ``[-2**(ww-1), 2**(ww-1))``.
+      wa/ww: operand bit widths (the paper's ``n``; Fig 17 sweeps this).
+      block_m/block_n: output tile sizes (default: whole matrix). M and N
+        must be divisible by them; `aot`/model code pads to multiples.
+      interpret: must stay True on CPU PJRT (Mosaic custom-calls cannot run
+        on the CPU plugin); kept as a parameter for TPU builds.
+
+    Returns:
+      ``[M, N]`` int32, exactly equal to the integer matmul. Overflow-safe
+      while ``max_abs_acc(K, wa, ww) < 2**31`` (checked).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x[{m},{k}] @ w[{k2},{n}]")
+    if not (1 <= wa <= 15 and 1 <= ww <= 15):
+        raise ValueError(f"bit widths out of range: wa={wa} ww={ww}")
+    if max_abs_acc(k, wa, ww) >= 2**31:
+        raise ValueError(
+            f"int32 accumulator overflow risk: K={k} wa={wa} ww={ww}"
+        )
+
+    bm = block_m or m
+    bn = block_n or n
+    if m % bm or n % bn:
+        raise ValueError(f"M={m}, N={n} not divisible by blocks ({bm},{bn})")
+
+    grid = (m // bm, n // bn, wa, ww)
+    kernel = functools.partial(_bitserial_kernel, wa=wa, ww=ww)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda gm, gn, i, j: (gm, 0)),
+            pl.BlockSpec((k, bn), lambda gm, gn, i, j: (0, gn)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda gm, gn, i, j: (gm, gn)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))

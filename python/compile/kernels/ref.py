@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+Every Pallas kernel in this package has an exact reference here; pytest (and
+hypothesis sweeps) assert bit-exact agreement. These are also the "golden"
+semantics the Rust functional simulator (`rust/src/primitives/`) is tested
+against, via shared test vectors emitted by `aot.py`.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "matmul_ref",
+    "fused_sfu_ref",
+    "maxpool2x2_ref",
+    "im2col",
+    "conv2d_int_ref",
+]
+
+
+def matmul_ref(x, w):
+    """Exact integer matmul oracle for `bitserial_matmul`."""
+    return x.astype(jnp.int32) @ w.astype(jnp.int32)
+
+
+def fused_sfu_ref(acc, bias, *, mult: int, shift: int, bits: int, relu: bool):
+    """Oracle for `fused_sfu`, given the already-encoded fixed-point params."""
+    acc = acc.astype(jnp.int64) + bias.astype(jnp.int64)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    rounded = (acc * mult + (1 << (shift - 1))) >> shift
+    hi = (1 << bits) - 1
+    lo = 0 if relu else -(1 << (bits - 1))
+    return jnp.clip(rounded, lo, hi).astype(jnp.int32)
+
+
+def maxpool2x2_ref(x):
+    """Oracle for `maxpool2x2` (NHWC, 2×2, stride 2)."""
+    b, h, w, c = x.shape
+    return jnp.max(
+        x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4)
+    ).astype(jnp.int32)
+
+
+def im2col(x, kh: int, kw: int, stride: int = 1, pad: int = 0):
+    """Unfold NHWC into MAC rows: ``[B*OH*OW, KH*KW*C]``.
+
+    This is exactly the paper's conv→MAC flattening (§IV-B): each output
+    pixel of each filter is one MAC of size KH*KW*I, mapped to consecutive
+    subarray columns. Padding uses zeros (quantized zero-point is 0).
+    """
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h - kh + 2 * pad) // stride + 1
+    ow = (w - kw + 2 * pad) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            cols.append(patch.reshape(b * oh * ow, c))
+    return jnp.concatenate(cols, axis=1), (b, oh, ow)
+
+
+def conv2d_int_ref(x, w, stride: int = 1, pad: int = 0):
+    """Exact integer conv oracle (NHWC × HWIO → NHWC) via im2col + matmul."""
+    kh, kw, ci, co = w.shape
+    cols, (b, oh, ow) = im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(kh * kw * ci, co)
+    out = matmul_ref(cols, wmat)
+    return out.reshape(b, oh, ow, co)

@@ -1,0 +1,118 @@
+"""L1 Pallas kernels for the PIM-DRAM Special Function Units (§IV-A.3–5).
+
+Each DRAM bank's peripheral pipeline is accumulator → ReLU → BatchNorm →
+Quantize → (MaxPool) → Transpose. For inference the BatchNorm parameters are
+constants (§IV-A.4), so ReLU + BN + Quantize fold into a single fixed-point
+affine requantization, which is what the fused kernel below computes:
+
+    y = clamp( (max(acc + bias, 0) * mult + round) >> shift, 0, 2**bits - 1 )
+
+``mult``/``shift`` encode the float scale ``s = s_a * s_w / s_out`` (and the
+BN scale) as a fixed-point multiplier, exactly like the hardware's shift-add
+quantize unit. The MaxPool kernel implements the §IV-A.5 running-max unit
+over 2×2 windows.
+
+All kernels run ``interpret=True`` (CPU PJRT; see aot_recipe).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_sfu", "maxpool2x2", "quantize_fixedpoint_params"]
+
+#: Fixed-point fraction bits used by the quantize unit's multiplier.
+_FIXED_SHIFT = 16
+
+
+def quantize_fixedpoint_params(scale: float, shift: int = _FIXED_SHIFT):
+    """Encode a float requant scale as (mult, shift) for the quantize unit.
+
+    ``y ≈ (x * mult) >> shift`` with rounding; mult is a non-negative int32.
+    """
+    if scale < 0:
+        raise ValueError(f"requant scale must be >= 0, got {scale}")
+    mult = int(round(scale * (1 << shift)))
+    if mult >= 2**31:
+        raise ValueError(f"scale {scale} too large for fixed-point encoding")
+    return mult, shift
+
+
+def _fused_sfu_kernel(acc_ref, bias_ref, o_ref, *, mult, shift, bits, relu):
+    """ReLU → (folded BN) → fixed-point quantize, one output block."""
+    acc = acc_ref[...] + bias_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    # Quantize unit: widen to i64 for the fixed-point product, round to
+    # nearest, arithmetic shift back down. (The hardware uses a shifter and
+    # an adder; i64 here only to model the wider internal datapath.)
+    prod = acc.astype(jnp.int64) * jnp.int64(mult)
+    rounded = (prod + jnp.int64(1 << (shift - 1))) >> shift
+    hi = jnp.int64((1 << bits) - 1)
+    lo = jnp.int64(0) if relu else jnp.int64(-(1 << (bits - 1)))
+    o_ref[...] = jnp.clip(rounded, lo, hi).astype(jnp.int32)
+
+
+def fused_sfu(acc, bias, *, scale: float, bits: int = 8, relu: bool = True,
+              interpret: bool = True):
+    """Apply the bank SFU chain to an accumulator tensor.
+
+    Args:
+      acc: ``[M, N]`` int32 MAC accumulator outputs (adder tree results).
+      bias: ``[N]`` int32 per-output-channel bias in accumulator scale
+        (conv bias + BN shift folded).
+      scale: float requantization scale (s_a*s_w*bn_gamma / s_out).
+      bits: output activation bit width (the paper's ``n``).
+      relu: apply ReLU (paper's ReLU unit); False for the logits layer.
+
+    Returns:
+      ``[M, N]`` int32 quantized activations in ``[0, 2**bits)`` (or the
+      signed range when ``relu=False``).
+    """
+    m, n = acc.shape
+    if bias.shape != (n,):
+        raise ValueError(f"bias shape {bias.shape} != ({n},)")
+    mult, shift = quantize_fixedpoint_params(scale)
+    kernel = functools.partial(
+        _fused_sfu_kernel, mult=mult, shift=shift, bits=bits, relu=relu
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda _: (0, 0)),
+            pl.BlockSpec((n,), lambda _: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda _: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(acc.astype(jnp.int32), bias.astype(jnp.int32))
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    """2×2/stride-2 max pool — the SFU pooling unit's running max."""
+    x = x_ref[...]
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(jnp.max(x, axis=4), axis=2)
+
+
+def maxpool2x2(x, *, interpret: bool = True):
+    """Max-pool NHWC int32 activations with a 2×2 window, stride 2.
+
+    H and W must be even (model code pads). Matches the §IV-A.5 pooling
+    unit: a counter walks the window, a register keeps the running max.
+    """
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"H={h}, W={w} must be even for 2x2 pooling")
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, h, w, c), lambda _: (0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((b, h // 2, w // 2, c), lambda _: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32))

@@ -1,0 +1,249 @@
+"""L2: the JAX compute graph — float training model + quantized PIM graph.
+
+Two views of the same network ("PimNet", a small quantized CNN):
+
+  * **Float path** (`init_params` / `apply_float` / `train`): standard JAX
+    fwd/bwd used once at build time to obtain trained weights. Runs in
+    seconds on CPU.
+  * **Quantized PIM path** (`quant_layer_apply` / `apply_quant`): the graph
+    the Rust coordinator actually executes — integer activations, bit-serial
+    Pallas matmuls (L1), fused SFU chain, maxpool — mirroring one PIM-DRAM
+    bank per layer (§IV). `aot.py` lowers each layer (bank) and the full
+    graph to HLO text artifacts.
+
+PimNet (input 16×16×1, ~72k params):
+  conv1 3×3×1→16 pad1 + ReLU + pool  → 8×8×16
+  conv2 3×3×16→32 pad1 + ReLU + pool → 4×4×32
+  fc1   512→128 + ReLU
+  fc2   128→10 (logits, dequantized)
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bitserial_matmul, fused_sfu, maxpool2x2
+from .kernels.ref import im2col
+from .quantize import LayerQuant, QuantParams, act_scale, quantize_weights
+
+__all__ = [
+    "LAYER_DEFS",
+    "init_params",
+    "apply_float",
+    "float_layer_activations",
+    "train",
+    "quantize_model",
+    "quant_layer_apply",
+    "apply_quant",
+    "accuracy",
+]
+
+
+@dataclass(frozen=True)
+class LayerDef:
+    """Static shape description of one PimNet layer (= one PIM bank)."""
+
+    name: str
+    kind: str  # "conv" | "linear"
+    in_shape: tuple  # activation shape per-image, NHWC sans batch / [K]
+    out_shape: tuple
+    kshape: tuple  # HWIO for conv, [K, N] for linear
+    relu: bool
+    pool: bool
+    stride: int = 1
+    pad: int = 1
+
+
+LAYER_DEFS = [
+    LayerDef("conv1", "conv", (16, 16, 1), (8, 8, 16), (3, 3, 1, 16), True, True),
+    LayerDef("conv2", "conv", (8, 8, 16), (4, 4, 32), (3, 3, 16, 32), True, True),
+    LayerDef("fc1", "linear", (512,), (128,), (512, 128), True, False),
+    LayerDef("fc2", "linear", (128,), (10,), (128, 10), False, False),
+]
+
+
+# --------------------------------------------------------------------------
+# Float path (training only)
+# --------------------------------------------------------------------------
+
+
+def init_params(key) -> dict:
+    """He-init float parameters keyed by layer name -> (w, b)."""
+    params = {}
+    for ld in LAYER_DEFS:
+        key, sub = jax.random.split(key)
+        fan_in = int(np.prod(ld.kshape[:-1]))
+        w = jax.random.normal(sub, ld.kshape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((ld.kshape[-1],), jnp.float32)
+        params[ld.name] = (w, b)
+    return params
+
+
+def _float_layer(ld: LayerDef, params, x):
+    w, b = params[ld.name]
+    if ld.kind == "conv":
+        x = jax.lax.conv_general_dilated(
+            x, w,
+            window_strides=(ld.stride, ld.stride),
+            padding=[(ld.pad, ld.pad)] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    else:
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        x = x @ w
+    x = x + b
+    if ld.relu:
+        x = jax.nn.relu(x)
+    if ld.pool:
+        x = -jax.lax.reduce_window(
+            -x, jnp.inf, jax.lax.min, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    return x
+
+
+def apply_float(params, x):
+    """Float forward pass: [B,16,16,1] -> [B,10] logits."""
+    for ld in LAYER_DEFS:
+        x = _float_layer(ld, params, x)
+    return x
+
+
+def float_layer_activations(params, x):
+    """Per-layer float *inputs* (pre-layer activations) for calibration."""
+    acts = [x]
+    for ld in LAYER_DEFS:
+        x = _float_layer(ld, params, x)
+        acts.append(x)
+    return acts
+
+
+def _loss(params, x, y):
+    logits = apply_float(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train(params, images, labels, *, steps=400, batch=128, lr=2e-3, seed=0):
+    """Minimal Adam training loop (optax is unavailable offline)."""
+    flat, tree = jax.tree_util.tree_flatten(params)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    grad_fn = jax.jit(jax.value_and_grad(_loss))
+    rng = np.random.default_rng(seed)
+    n = images.shape[0]
+    loss_log = []
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        xb = jnp.asarray(images[idx])
+        yb = jnp.asarray(labels[idx])
+        loss, grads = grad_fn(tree.unflatten(flat), xb, yb)
+        gflat = jax.tree_util.tree_leaves(grads)
+        for i, g in enumerate(gflat):
+            m[i] = b1 * m[i] + (1 - b1) * g
+            v[i] = b2 * v[i] + (1 - b2) * g * g
+            mhat = m[i] / (1 - b1**t)
+            vhat = v[i] / (1 - b2**t)
+            flat[i] = flat[i] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        loss_log.append(float(loss))
+    return tree.unflatten(flat), loss_log
+
+
+def accuracy(logits, labels) -> float:
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == labels))
+
+
+# --------------------------------------------------------------------------
+# Quantized PIM path
+# --------------------------------------------------------------------------
+
+
+def quantize_model(params, calib_images, *, wa=8, ww=8) -> QuantParams:
+    """Post-training quantization calibrated on `calib_images`."""
+    acts = float_layer_activations(params, jnp.asarray(calib_images))
+    qp = QuantParams(wa=wa, ww=ww)
+    # Per-layer input activation scales (unsigned wa-bit).
+    scales = [act_scale(np.asarray(a), wa) for a in acts]
+    for i, ld in enumerate(LAYER_DEFS):
+        w, b = params[ld.name]
+        wq, sw = quantize_weights(np.asarray(w), ww)
+        s_in = scales[i]
+        s_out = 0.0 if i == len(LAYER_DEFS) - 1 else scales[i + 1]
+        bq = np.round(np.asarray(b) / (s_in * sw)).astype(np.int32)
+        qp.layers.append(
+            LayerQuant(
+                name=ld.name, kind=ld.kind,
+                weights_q=wq, bias_q=bq,
+                w_scale=sw, in_scale=s_in, out_scale=s_out,
+                relu=ld.relu, pool=ld.pool, stride=ld.stride, pad=ld.pad,
+            )
+        )
+    return qp
+
+
+def quantize_input(images, qp: QuantParams):
+    """Float [B,16,16,1] -> unsigned wa-bit int32 activations."""
+    s0 = qp.layers[0].in_scale
+    return jnp.clip(
+        jnp.round(jnp.asarray(images) / s0), 0, 2**qp.wa - 1
+    ).astype(jnp.int32)
+
+
+def quant_layer_apply(lq: LayerQuant, qp: QuantParams, x, *, interpret=True):
+    """One PIM bank's worth of compute on integer activations.
+
+    conv: im2col → bit-serial matmul → +bias/ReLU/BN/quantize (fused SFU)
+    → optional 2×2 maxpool. linear: matmul → SFU. The final layer
+    dequantizes to float logits instead of requantizing.
+
+    This function *is* the dataflow of §IV-B within one bank; `aot.py`
+    lowers it per-layer so the Rust side can pipeline banks explicitly.
+    """
+    batch = x.shape[0]
+    if lq.kind == "conv":
+        kh, kw, ci, co = lq.weights_q.shape
+        cols, (b, oh, ow) = im2col(x, kh, kw, lq.stride, lq.pad)
+        wmat = jnp.asarray(lq.weights_q.reshape(kh * kw * ci, co))
+        acc = bitserial_matmul(cols, wmat, wa=qp.wa, ww=qp.ww, interpret=interpret)
+    else:
+        if x.ndim > 2:
+            x = x.reshape(batch, -1)
+        acc = bitserial_matmul(
+            x, jnp.asarray(lq.weights_q), wa=qp.wa, ww=qp.ww, interpret=interpret
+        )
+
+    bias = jnp.asarray(lq.bias_q)
+    if lq.out_scale == 0.0:
+        # Final layer: dequantize to float logits (host side of the pipe).
+        return (acc + bias[None, :]).astype(jnp.float32) * lq.dequant_scale
+
+    y = fused_sfu(
+        acc, bias, scale=lq.requant_scale, bits=qp.wa, relu=lq.relu,
+        interpret=interpret,
+    )
+    if lq.kind == "conv":
+        kh, kw, ci, co = lq.weights_q.shape
+        y = y.reshape(batch, *_conv_out_hw(x, lq), co)
+    if lq.pool:
+        y = maxpool2x2(y, interpret=interpret)
+    return y
+
+
+def _conv_out_hw(x, lq: LayerQuant):
+    h, w = x.shape[1], x.shape[2]
+    kh, kw = lq.weights_q.shape[:2]
+    oh = (h - kh + 2 * lq.pad) // lq.stride + 1
+    ow = (w - kw + 2 * lq.pad) // lq.stride + 1
+    return oh, ow
+
+
+def apply_quant(qp: QuantParams, x_int, *, interpret=True):
+    """Full quantized forward: int32 [B,16,16,1] -> float32 [B,10] logits."""
+    x = x_int
+    for lq in qp.layers:
+        x = quant_layer_apply(lq, qp, x, interpret=interpret)
+    return x

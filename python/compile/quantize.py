@@ -1,0 +1,81 @@
+"""Post-training quantization for the PIM-DRAM numeric path.
+
+PIM-DRAM computes with n-bit integer operands stored bit-transposed in DRAM
+columns (§III-B); activations are unsigned (post-ReLU), weights are
+two's-complement. This module converts a trained float model into exactly
+that representation:
+
+  * activations: ``a_q = clamp(round(a / s_a), 0, 2**wa - 1)`` with per-layer
+    scales calibrated from training-set percentiles;
+  * weights: symmetric per-tensor, ``w_q = clamp(round(w / s_w), -2**(ww-1),
+    2**(ww-1) - 1)``;
+  * biases: accumulated scale, ``b_q = round(b / (s_in * s_w))``;
+  * requantization between banks: fixed-point multiplier + shift (the
+    quantize SFU), computed by `kernels.sfu.quantize_fixedpoint_params`.
+"""
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["QuantParams", "LayerQuant", "quantize_weights", "act_scale"]
+
+
+def act_scale(samples: np.ndarray, bits: int, percentile: float = 99.9) -> float:
+    """Calibrate an unsigned activation scale from observed float values."""
+    hi = float(np.percentile(np.maximum(samples, 0.0), percentile))
+    hi = max(hi, 1e-6)
+    return hi / (2**bits - 1)
+
+
+def quantize_weights(w: np.ndarray, bits: int):
+    """Symmetric per-tensor weight quantization → (int32 weights, scale)."""
+    m = float(np.max(np.abs(w)))
+    m = max(m, 1e-8)
+    scale = m / (2 ** (bits - 1) - 1)
+    wq = np.clip(np.round(w / scale), -(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+    return wq.astype(np.int32), scale
+
+
+@dataclass
+class LayerQuant:
+    """Quantized parameters for one bank/layer."""
+
+    name: str
+    kind: str  # "conv" | "linear"
+    weights_q: np.ndarray  # int32, HWIO (conv) or [K, N] (linear)
+    bias_q: np.ndarray  # int32 [N], in s_in * s_w scale
+    w_scale: float
+    in_scale: float
+    out_scale: float  # 0.0 for the final (dequantized) layer
+    relu: bool
+    pool: bool  # 2x2 maxpool after SFU chain
+    stride: int = 1
+    pad: int = 0
+
+    @property
+    def requant_scale(self) -> float:
+        """Scale applied by the quantize SFU: s_in*s_w / s_out."""
+        if self.out_scale == 0.0:
+            raise ValueError(f"{self.name}: final layer has no requant scale")
+        return self.in_scale * self.w_scale / self.out_scale
+
+    @property
+    def dequant_scale(self) -> float:
+        """Scale to float for the final layer: s_in * s_w."""
+        return self.in_scale * self.w_scale
+
+
+@dataclass
+class QuantParams:
+    """Whole-model quantization: per-layer params + operand bit widths."""
+
+    wa: int
+    ww: int
+    layers: list = field(default_factory=list)
+
+    def layer(self, name: str) -> LayerQuant:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)

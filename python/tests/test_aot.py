@@ -1,0 +1,120 @@
+"""AOT lowering tests: HLO text interchange + manifest/test-vector sanity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels import bitserial_matmul
+
+ARTIFACTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "artifacts",
+)
+
+
+class TestLowering:
+    def test_hlo_text_header(self):
+        hlo = aot.lower_to_hlo_text(
+            lambda x: (x + 1,), jax.ShapeDtypeStruct((2, 2), jnp.int32)
+        )
+        assert hlo.startswith("HloModule")
+
+    def test_hlo_text_tuple_root(self):
+        """return_tuple=True: the root must be a tuple (rust uses to_tuple1)."""
+        hlo = aot.lower_to_hlo_text(
+            lambda x: (x * 2,), jax.ShapeDtypeStruct((3,), jnp.float32)
+        )
+        assert "tuple" in hlo
+
+    def test_pallas_kernel_lowers(self):
+        """The bit-serial kernel must lower to plain HLO (interpret mode)."""
+        hlo = aot.lower_to_hlo_text(
+            lambda x, w: (bitserial_matmul(x, w, wa=4, ww=4),),
+            jax.ShapeDtypeStruct((2, 4), jnp.int32),
+            jax.ShapeDtypeStruct((4, 2), jnp.int32),
+        )
+        assert hlo.startswith("HloModule")
+        assert "custom-call" not in hlo.lower(), (
+            "interpret=True must not emit Mosaic custom-calls"
+        )
+
+    def test_deterministic_lowering(self):
+        f = lambda x: (x - 3,)
+        spec = jax.ShapeDtypeStruct((2,), jnp.int32)
+        assert aot.lower_to_hlo_text(f, spec) == aot.lower_to_hlo_text(f, spec)
+
+    def test_large_baked_constants_not_elided(self):
+        """Regression: the default HLO printer elides big literals as
+        `constant({...})`, silently corrupting baked weights on the Rust
+        side (EXPERIMENTS.md §Debugging). Every weight value must survive
+        into the text."""
+        w = jnp.asarray(np.arange(1024, dtype=np.int32).reshape(32, 32))
+        hlo = aot.lower_to_hlo_text(
+            lambda x: (x @ w,), jax.ShapeDtypeStruct((2, 32), jnp.int32)
+        )
+        assert "{...}" not in hlo
+        # Spot-check some payload values actually present.
+        assert "1023" in hlo and "517" in hlo
+
+
+class TestTestVectors:
+    def test_vectors_internally_consistent(self):
+        tv = aot._test_vectors()
+        assert len(tv["matmul_cases"]) >= 5
+        for case in tv["matmul_cases"]:
+            x = np.array(case["x"]).reshape(case["m"], case["k"])
+            w = np.array(case["w"]).reshape(case["k"], case["n"])
+            y = np.array(case["y"]).reshape(case["m"], case["n"])
+            np.testing.assert_array_equal(x @ w, y)
+            assert x.min() >= 0 and x.max() < 2 ** case["wa"]
+            assert w.min() >= -(2 ** (case["ww"] - 1))
+            assert w.max() < 2 ** (case["ww"] - 1)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    """Validate whatever `make artifacts` actually produced."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_layer_chain_shapes(self, manifest):
+        layers = manifest["layers"]
+        for prev, nxt in zip(layers, layers[1:]):
+            assert int(np.prod(prev["out_shape"])) == int(np.prod(nxt["in_shape"]))
+
+    def test_files_exist(self, manifest):
+        for l in manifest["layers"]:
+            assert os.path.exists(os.path.join(ARTIFACTS, l["file"]))
+        assert os.path.exists(os.path.join(ARTIFACTS, manifest["model_hlo"]))
+        assert os.path.exists(os.path.join(ARTIFACTS, manifest["mvm_hlo"]))
+
+    def test_dataset_sizes(self, manifest):
+        ti = manifest["test_images"]
+        img_bytes = os.path.getsize(os.path.join(ARTIFACTS, ti["file"]))
+        assert img_bytes == ti["count"] * int(np.prod(ti["shape"])) * 4
+        lbl_bytes = os.path.getsize(
+            os.path.join(ARTIFACTS, manifest["test_labels"]["file"])
+        )
+        assert lbl_bytes == manifest["test_labels"]["count"]
+
+    def test_quant_accuracy_recorded(self, manifest):
+        assert manifest["quant_test_accuracy"] > 0.5
+
+    def test_mac_geometry_matches_known_shapes(self, manifest):
+        by_name = {l["name"]: l for l in manifest["layers"]}
+        assert by_name["conv1"]["mac_size"] == 9
+        assert by_name["conv2"]["mac_size"] == 144
+        assert by_name["fc1"]["mac_size"] == 512
+        assert by_name["fc2"]["mac_size"] == 128
+        assert by_name["fc1"]["num_macs"] == 128

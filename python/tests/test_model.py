@@ -1,0 +1,160 @@
+"""L2 model tests: float training, quantization, quantized PIM graph."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.datasets import IMG, NUM_CLASSES, make_digits
+from compile.kernels.ref import conv2d_int_ref, im2col
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    return make_digits(256, seed=11)
+
+
+@pytest.fixture(scope="module")
+def trained(tiny_data):
+    images, labels = tiny_data
+    params = M.init_params(jax.random.PRNGKey(0))
+    params, log = M.train(params, images, labels, steps=80, batch=64)
+    return params, log
+
+
+@pytest.fixture(scope="module")
+def quantized(trained, tiny_data):
+    params, _ = trained
+    images, _ = tiny_data
+    return M.quantize_model(params, images[:128], wa=8, ww=8)
+
+
+class TestDataset:
+    def test_shapes_and_range(self, tiny_data):
+        images, labels = tiny_data
+        assert images.shape == (256, IMG, IMG, 1)
+        assert images.min() >= 0.0 and images.max() <= 1.0
+        assert labels.min() >= 0 and labels.max() < NUM_CLASSES
+
+    def test_balanced_classes(self, tiny_data):
+        _, labels = tiny_data
+        counts = np.bincount(labels, minlength=NUM_CLASSES)
+        assert counts.min() >= 20  # 256/10 ± shuffle
+
+    def test_deterministic(self):
+        a, la = make_digits(16, seed=5)
+        b, lb = make_digits(16, seed=5)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+    def test_seed_changes_data(self):
+        a, _ = make_digits(16, seed=5)
+        b, _ = make_digits(16, seed=6)
+        assert not np.array_equal(a, b)
+
+
+class TestFloatModel:
+    def test_forward_shape(self):
+        params = M.init_params(jax.random.PRNGKey(1))
+        x = jnp.zeros((4, IMG, IMG, 1), jnp.float32)
+        assert M.apply_float(params, x).shape == (4, NUM_CLASSES)
+
+    def test_layer_defs_chain(self):
+        """Each layer's out_shape must equal the next layer's in_shape
+        (modulo the conv→fc flatten)."""
+        for prev, nxt in zip(M.LAYER_DEFS, M.LAYER_DEFS[1:]):
+            prev_elems = int(np.prod(prev.out_shape))
+            nxt_elems = int(np.prod(nxt.in_shape))
+            assert prev_elems == nxt_elems, (prev.name, nxt.name)
+
+    def test_training_reduces_loss(self, trained):
+        _, log = trained
+        assert log[-1] < log[0] * 0.5
+
+    def test_trained_accuracy(self, trained, tiny_data):
+        params, _ = trained
+        images, labels = tiny_data
+        acc = M.accuracy(M.apply_float(params, jnp.asarray(images[:128])),
+                         labels[:128])
+        assert acc > 0.8
+
+
+class TestIm2col:
+    def test_conv_equals_lax(self):
+        """im2col+matmul conv must equal lax.conv on random ints."""
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(0, 16, size=(2, 8, 8, 3)), jnp.int32)
+        w = jnp.asarray(rng.integers(-8, 8, size=(3, 3, 3, 5)), jnp.int32)
+        got = conv2d_int_ref(x, w, stride=1, pad=1)
+        want = jax.lax.conv_general_dilated(
+            x.astype(jnp.float32), w.astype(jnp.float32),
+            (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_stride_two(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.integers(0, 4, size=(1, 6, 6, 2)), jnp.int32)
+        w = jnp.asarray(rng.integers(-2, 2, size=(2, 2, 2, 3)), jnp.int32)
+        got = conv2d_int_ref(x, w, stride=2, pad=0)
+        assert got.shape == (1, 3, 3, 3)
+
+    def test_geometry(self):
+        x = jnp.zeros((2, 16, 16, 1), jnp.int32)
+        cols, (b, oh, ow) = im2col(x, 3, 3, 1, 1)
+        assert (b, oh, ow) == (2, 16, 16)
+        assert cols.shape == (2 * 16 * 16, 9)
+
+
+class TestQuantModel:
+    def test_scales_positive(self, quantized):
+        for lq in quantized.layers:
+            assert lq.w_scale > 0 and lq.in_scale > 0
+
+    def test_weight_range(self, quantized):
+        for lq in quantized.layers:
+            assert lq.weights_q.max() < 2 ** (quantized.ww - 1)
+            assert lq.weights_q.min() >= -(2 ** (quantized.ww - 1))
+
+    def test_final_layer_dequantizes(self, quantized):
+        assert quantized.layers[-1].out_scale == 0.0
+        with pytest.raises(ValueError):
+            _ = quantized.layers[-1].requant_scale
+
+    def test_quant_input_range(self, quantized, tiny_data):
+        images, _ = tiny_data
+        xq = M.quantize_input(images[:8], quantized)
+        assert int(xq.min()) >= 0
+        assert int(xq.max()) <= 2**quantized.wa - 1
+
+    def test_full_equals_layer_composition(self, quantized, tiny_data):
+        """apply_quant == folding quant_layer_apply — the property that lets
+        the Rust pipeline execute per-bank artifacts independently."""
+        images, _ = tiny_data
+        x = M.quantize_input(images[:4], quantized)
+        full = np.asarray(M.apply_quant(quantized, x))
+        y = x
+        for lq in quantized.layers:
+            y = M.quant_layer_apply(lq, quantized, y)
+        np.testing.assert_array_equal(full, np.asarray(y))
+
+    def test_quant_matches_float_argmax(self, quantized, trained, tiny_data):
+        params, _ = trained
+        images, labels = tiny_data
+        x = M.quantize_input(images[:16], quantized)
+        logits_q = np.asarray(M.apply_quant(quantized, x))
+        logits_f = np.asarray(M.apply_float(params, jnp.asarray(images[:16])))
+        agree = (logits_q.argmax(1) == logits_f.argmax(1)).mean()
+        assert agree >= 0.85
+
+    def test_intermediate_dtypes(self, quantized, tiny_data):
+        images, _ = tiny_data
+        x = M.quantize_input(images[:2], quantized)
+        for lq in quantized.layers[:-1]:
+            x = M.quant_layer_apply(lq, quantized, x)
+            assert x.dtype == jnp.int32
+            assert int(x.min()) >= 0
+            assert int(x.max()) <= 2**quantized.wa - 1
+        logits = M.quant_layer_apply(quantized.layers[-1], quantized, x)
+        assert logits.dtype == jnp.float32

@@ -1,0 +1,110 @@
+"""SFU kernels (ReLU → BN → quantize chain, maxpool) vs jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_sfu, maxpool2x2, quantize_fixedpoint_params
+from compile.kernels.ref import fused_sfu_ref, maxpool2x2_ref
+
+
+class TestQuantizeParams:
+    def test_roundtrip_precision(self):
+        for scale in [1.0, 0.5, 0.01, 3.7e-4]:
+            mult, shift = quantize_fixedpoint_params(scale)
+            assert abs(mult / (1 << shift) - scale) < 2 ** -(shift - 1)
+
+    def test_zero_scale(self):
+        mult, _ = quantize_fixedpoint_params(0.0)
+        assert mult == 0
+
+    def test_negative_scale_rejected(self):
+        with pytest.raises(ValueError):
+            quantize_fixedpoint_params(-1.0)
+
+    def test_huge_scale_rejected(self):
+        with pytest.raises(ValueError):
+            quantize_fixedpoint_params(1e6)
+
+
+class TestFusedSfu:
+    def _check(self, acc, bias, scale, bits, relu):
+        got = np.asarray(fused_sfu(acc, bias, scale=scale, bits=bits, relu=relu))
+        mult, shift = quantize_fixedpoint_params(scale)
+        want = np.asarray(
+            fused_sfu_ref(acc, bias, mult=mult, shift=shift, bits=bits, relu=relu)
+        )
+        np.testing.assert_array_equal(got, want)
+
+    def test_relu_zeroes_negative(self):
+        acc = jnp.array([[-100, 0, 100]], jnp.int32)
+        bias = jnp.zeros((3,), jnp.int32)
+        out = np.asarray(fused_sfu(acc, bias, scale=1.0, bits=8, relu=True))
+        assert out[0, 0] == 0 and out[0, 1] == 0 and out[0, 2] == 100
+
+    def test_clamp_to_bits(self):
+        acc = jnp.array([[10_000]], jnp.int32)
+        bias = jnp.zeros((1,), jnp.int32)
+        out = np.asarray(fused_sfu(acc, bias, scale=1.0, bits=8, relu=True))
+        assert out[0, 0] == 255
+
+    def test_no_relu_signed_range(self):
+        acc = jnp.array([[-10_000, 10_000]], jnp.int32)
+        bias = jnp.zeros((2,), jnp.int32)
+        out = np.asarray(fused_sfu(acc, bias, scale=1.0, bits=8, relu=False))
+        assert out[0, 0] == -128 and out[0, 1] == 255
+
+    def test_bias_applied_before_relu(self):
+        acc = jnp.array([[-5]], jnp.int32)
+        bias = jnp.array([10], jnp.int32)
+        out = np.asarray(fused_sfu(acc, bias, scale=1.0, bits=8, relu=True))
+        assert out[0, 0] == 5
+
+    def test_bias_shape_guard(self):
+        with pytest.raises(ValueError, match="bias shape"):
+            fused_sfu(jnp.zeros((2, 3), jnp.int32), jnp.zeros((2,), jnp.int32),
+                      scale=1.0)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 5),
+        n=st.integers(1, 6),
+        bits=st.integers(2, 10),
+        relu=st.booleans(),
+        scale=st.floats(1e-5, 2.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, m, n, bits, relu, scale, seed):
+        rng = np.random.default_rng(seed)
+        acc = jnp.asarray(rng.integers(-(2**20), 2**20, size=(m, n)), jnp.int32)
+        bias = jnp.asarray(rng.integers(-(2**10), 2**10, size=(n,)), jnp.int32)
+        self._check(acc, bias, scale, bits, relu)
+
+
+class TestMaxpool:
+    def test_simple(self):
+        x = jnp.arange(16, dtype=jnp.int32).reshape(1, 4, 4, 1)
+        out = np.asarray(maxpool2x2(x))
+        np.testing.assert_array_equal(
+            out[0, :, :, 0], np.array([[5, 7], [13, 15]])
+        )
+
+    def test_odd_size_rejected(self):
+        with pytest.raises(ValueError, match="even"):
+            maxpool2x2(jnp.zeros((1, 3, 4, 1), jnp.int32))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.sampled_from([2, 4, 8]),
+        w=st.sampled_from([2, 4, 6]),
+        c=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, b, h, w, c, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.integers(-1000, 1000, size=(b, h, w, c)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(maxpool2x2(x)), np.asarray(maxpool2x2_ref(x))
+        )

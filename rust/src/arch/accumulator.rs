@@ -1,0 +1,149 @@
+//! The shift-add accumulator (§IV-A.2): collects the adder tree's per-bit
+//! partial sums, left-shifting by the bit position (a counter tracks it)
+//! until the 2n-th plane has arrived, then forwards the MAC value to the
+//! SFU chain.
+//!
+//! Weight sign handling: operands are stored unsigned with a zero-point of
+//! 2^(n-1) (asymmetric quantization); the coordinator applies the
+//! correction `Σ a·w = Σ a·w_u − z·Σ a`. The accumulator itself also
+//! supports a negatively-weighted plane (two's-complement MSB), matching
+//! the L1 Pallas kernel — both paths are exercised by tests.
+
+/// Shift-add accumulator for one MAC lane.
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    acc: i64,
+    planes_seen: u32,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one bit-plane partial sum at bit position `bit`, optionally
+    /// negatively weighted (two's-complement weight MSB plane).
+    pub fn add_plane(&mut self, plane_sum: i64, bit: u32, negative: bool) {
+        let contribution = plane_sum << bit;
+        if negative {
+            self.acc -= contribution;
+        } else {
+            self.acc += contribution;
+        }
+        self.planes_seen += 1;
+    }
+
+    pub fn value(&self) -> i64 {
+        self.acc
+    }
+
+    pub fn planes_seen(&self) -> u32 {
+        self.planes_seen
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+        self.planes_seen = 0;
+    }
+
+    /// Cycles for one accumulation step (shift+add is single-cycle).
+    pub const CYCLES_PER_PLANE: u64 = 1;
+}
+
+/// Reconstruct MAC values from product bit-planes: `plane_sums[b][m]` is
+/// the adder-tree sum of product bit `b` for MAC `m`. Products are
+/// unsigned (the in-DRAM primitive multiplies unsigned operands).
+pub fn accumulate_planes(plane_sums: &[Vec<i64>]) -> Vec<i64> {
+    if plane_sums.is_empty() {
+        return Vec::new();
+    }
+    let num_macs = plane_sums[0].len();
+    let mut accs = vec![Accumulator::new(); num_macs];
+    for (bit, sums) in plane_sums.iter().enumerate() {
+        assert_eq!(sums.len(), num_macs, "ragged plane at bit {bit}");
+        for (a, &s) in accs.iter_mut().zip(sums) {
+            a.add_plane(s, bit as u32, false);
+        }
+    }
+    accs.iter().map(|a| a.value()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+
+    #[test]
+    fn shift_add_reconstructs_value() {
+        // Product 13 = 0b1101 split into planes, one lane.
+        let mut a = Accumulator::new();
+        for (bit, v) in [1i64, 0, 1, 1].into_iter().enumerate() {
+            a.add_plane(v, bit as u32, false);
+        }
+        assert_eq!(a.value(), 13);
+        assert_eq!(a.planes_seen(), 4);
+    }
+
+    #[test]
+    fn negative_msb_plane_twos_complement() {
+        // value = -128·b7 + Σ 2^i·b_i : reconstruct -3 = 0b11111101.
+        let bits = [1i64, 0, 1, 1, 1, 1, 1, 1];
+        let mut a = Accumulator::new();
+        for (bit, &v) in bits.iter().enumerate() {
+            a.add_plane(v, bit as u32, bit == 7);
+        }
+        assert_eq!(a.value(), -3);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut a = Accumulator::new();
+        a.add_plane(5, 3, false);
+        a.reset();
+        assert_eq!(a.value(), 0);
+        assert_eq!(a.planes_seen(), 0);
+    }
+
+    #[test]
+    fn accumulate_planes_matches_direct_dot_product() {
+        crate::testutil::check(40, |rng| {
+            let n = rng.int_range(1, 8) as u32; // operand bits
+            let k = rng.int_range(1, 16) as usize; // MAC depth
+            let m = rng.int_range(1, 6) as usize; // MACs
+            // Random operands per MAC lane.
+            let mut products: Vec<Vec<u64>> = Vec::new();
+            for _ in 0..m {
+                products.push(
+                    (0..k)
+                        .map(|_| {
+                            let a = rng.int_range(0, (1 << n) - 1) as u64;
+                            let w = rng.int_range(0, (1 << n) - 1) as u64;
+                            a * w
+                        })
+                        .collect(),
+                );
+            }
+            // Build plane sums: bit b of each product, summed per MAC.
+            let planes: Vec<Vec<i64>> = (0..2 * n)
+                .map(|b| {
+                    products
+                        .iter()
+                        .map(|macp| {
+                            macp.iter().map(|p| ((p >> b) & 1) as i64).sum()
+                        })
+                        .collect()
+                })
+                .collect();
+            let got = accumulate_planes(&planes);
+            for (g, macp) in got.iter().zip(&products) {
+                prop_assert_eq!(*g, macp.iter().sum::<u64>() as i64);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_planes() {
+        assert!(accumulate_planes(&[]).is_empty());
+    }
+}

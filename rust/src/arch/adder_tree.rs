@@ -1,0 +1,176 @@
+//! The reconfigurable adder tree (§IV-A.1).
+//!
+//! A binary tree whose first level has `inputs/2` two-input units; every
+//! node either *adds* its operands or *forwards* one of them, which is what
+//! lets one physical tree reduce several independent MACs per pass as long
+//! as each MAC occupies a contiguous, power-of-two-aligned span of the row
+//! buffer. The row buffer is as wide as the first level (§IV-A.1).
+//!
+//! In the PIM dataflow the tree consumes one *product bit-plane* per pass
+//! (the §IV dataflow: "the adder tree keeps on adding results of the
+//! products from 0th till the 2n-th bit"), so a full MAC needs 2n passes,
+//! accumulated by [`super::Accumulator`].
+
+use crate::util::{ceil_div, log2_ceil};
+
+/// A reconfigurable adder tree with `inputs` row-buffer inputs (power of 2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdderTree {
+    inputs: usize,
+}
+
+impl AdderTree {
+    /// The paper's Table I component is a 4096-input tree.
+    pub const PAPER_INPUTS: usize = 4096;
+
+    pub fn new(inputs: usize) -> Self {
+        assert!(inputs >= 2 && inputs.is_power_of_two(), "inputs={inputs}");
+        AdderTree { inputs }
+    }
+
+    pub fn paper_default() -> Self {
+        Self::new(Self::PAPER_INPUTS)
+    }
+
+    pub fn inputs(&self) -> usize {
+        self.inputs
+    }
+
+    /// Number of tree levels (pipeline depth).
+    pub fn levels(&self) -> u32 {
+        log2_ceil(self.inputs)
+    }
+
+    /// Total two-input adder units in the tree (2^L - 1).
+    pub fn units(&self) -> usize {
+        self.inputs - 1
+    }
+
+    /// Segment width used for a MAC of `mac_size` inputs: the smallest
+    /// power-of-two span that contains it (forwarding nodes pad the rest).
+    pub fn segment_for(&self, mac_size: usize) -> usize {
+        assert!(mac_size >= 1);
+        mac_size.next_power_of_two().min(self.inputs)
+    }
+
+    /// How many MACs of `mac_size` inputs one pass can reduce.
+    pub fn macs_per_pass(&self, mac_size: usize) -> usize {
+        if mac_size > self.inputs {
+            // MAC wider than the tree: needs multiple passes + external
+            // accumulation; exactly one MAC is in flight.
+            1
+        } else {
+            self.inputs / self.segment_for(mac_size)
+        }
+    }
+
+    /// Passes needed to reduce `num_macs` MACs of `mac_size` inputs over
+    /// one bit-plane.
+    pub fn passes(&self, num_macs: usize, mac_size: usize) -> usize {
+        if mac_size > self.inputs {
+            // Each MAC takes ceil(mac_size/inputs) partial passes.
+            num_macs * ceil_div(mac_size, self.inputs)
+        } else {
+            ceil_div(num_macs, self.macs_per_pass(mac_size))
+        }
+    }
+
+    /// Cycle count to stream `passes` pipelined passes: fill + drain.
+    pub fn cycles(&self, passes: usize) -> u64 {
+        if passes == 0 {
+            return 0;
+        }
+        self.levels() as u64 + passes as u64 - 1
+    }
+
+    /// Functional reduction: sum `values` in groups of `mac_size`,
+    /// returning one sum per MAC — exactly what the add/forward
+    /// configuration computes. (Independent of segment padding: forwarded
+    /// lanes contribute zero.)
+    pub fn reduce(&self, values: &[i64], mac_size: usize) -> Vec<i64> {
+        assert!(mac_size >= 1);
+        values.chunks(mac_size).map(|c| c.iter().sum()).collect()
+    }
+
+    /// Functional reduction of a product bit-plane (0/1 lanes): popcount
+    /// per MAC group. `plane[i]` is product bit `b` of column `i`.
+    pub fn reduce_plane(&self, plane: &[bool], mac_size: usize) -> Vec<i64> {
+        assert!(mac_size >= 1);
+        plane
+            .chunks(mac_size)
+            .map(|c| c.iter().filter(|&&b| b).count() as i64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+
+    #[test]
+    fn paper_tree_shape() {
+        let t = AdderTree::paper_default();
+        assert_eq!(t.inputs(), 4096);
+        assert_eq!(t.levels(), 12);
+        assert_eq!(t.units(), 4095);
+    }
+
+    #[test]
+    #[should_panic(expected = "inputs=")]
+    fn rejects_non_power_of_two() {
+        AdderTree::new(48);
+    }
+
+    #[test]
+    fn segmentation() {
+        let t = AdderTree::new(16);
+        assert_eq!(t.segment_for(3), 4);
+        assert_eq!(t.segment_for(4), 4);
+        assert_eq!(t.segment_for(5), 8);
+        assert_eq!(t.macs_per_pass(3), 4);
+        assert_eq!(t.macs_per_pass(16), 1);
+        assert_eq!(t.macs_per_pass(17), 1); // wider than tree
+    }
+
+    #[test]
+    fn passes_and_cycles() {
+        let t = AdderTree::new(8);
+        // 10 MACs of size 3 → 2 per pass... segment 4 → 2 MACs/pass → 5.
+        assert_eq!(t.passes(10, 3), 5);
+        // Wide MAC: 20 inputs over an 8-wide tree = 3 partial passes each.
+        assert_eq!(t.passes(2, 20), 6);
+        assert_eq!(t.cycles(5), 3 + 5 - 1);
+        assert_eq!(t.cycles(0), 0);
+    }
+
+    #[test]
+    fn reduce_groups() {
+        let t = AdderTree::new(8);
+        assert_eq!(t.reduce(&[1, 2, 3, 4, 5, 6], 3), vec![6, 15]);
+        assert_eq!(t.reduce(&[1, 2, 3, 4, 5], 2), vec![3, 7, 5]);
+    }
+
+    #[test]
+    fn reduce_plane_popcounts() {
+        let t = AdderTree::new(8);
+        let plane = [true, false, true, true, false, false];
+        assert_eq!(t.reduce_plane(&plane, 3), vec![2, 1]);
+    }
+
+    #[test]
+    fn reduce_matches_scalar_sum_property() {
+        crate::testutil::check(30, |rng| {
+            let t = AdderTree::new(1 << rng.int_range(1, 6) as usize);
+            let len = rng.int_range(1, 200) as usize;
+            let mac = rng.int_range(1, 32) as usize;
+            let vals: Vec<i64> =
+                (0..len).map(|_| rng.int_range(-1000, 1000)).collect();
+            let got = t.reduce(&vals, mac);
+            for (g, chunk) in got.iter().zip(vals.chunks(mac)) {
+                prop_assert_eq!(*g, chunk.iter().sum::<i64>());
+            }
+            Ok(())
+        });
+    }
+}

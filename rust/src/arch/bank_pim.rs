@@ -1,0 +1,254 @@
+//! The composed bank pipeline (§IV-A): subarray multiply → adder tree →
+//! accumulators → SFU chain → transpose, as one functional + timed unit.
+//!
+//! [`BankPipeline::mvm`] runs a complete matrix-vector product through the
+//! *actual* bit-level primitives — the same computation the AOT'd Pallas
+//! kernel performs — and is the cross-validation point between the Rust
+//! functional simulator and the PJRT artifacts (examples/quickstart.rs).
+//!
+//! Sign handling: the in-DRAM multiplier is unsigned, so signed weights are
+//! stored with zero-point `z = 2^(n-1)` (asymmetric quantization) and the
+//! coordinator applies `Σ a·w = Σ a·w_u − z·Σ a`; the activation-sum term
+//! reuses the same MVM machinery with unit weights.
+
+use super::accumulator::accumulate_planes;
+use super::adder_tree::AdderTree;
+use crate::dram::DramTiming;
+use crate::primitives::{self, PimSubarray};
+
+/// Per-phase cost of one layer pass through a bank (one multiply round).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BankCosts {
+    /// In-subarray multiply time (all subarrays in parallel; stacked pairs
+    /// are sequential).
+    pub multiply_ns: f64,
+    /// Adder-tree reduction cycles across all bit planes.
+    pub tree_cycles: u64,
+    /// Accumulator shift-add cycles.
+    pub acc_cycles: u64,
+    /// SFU chain cycles.
+    pub sfu_cycles: u64,
+    /// Transpose unit cycles.
+    pub transpose_cycles: u64,
+}
+
+impl BankCosts {
+    /// Total wall time in ns given the derated logic clock.
+    pub fn total_ns(&self, logic_cycle_ns: f64) -> f64 {
+        self.multiply_ns
+            + (self.tree_cycles + self.acc_cycles + self.sfu_cycles
+                + self.transpose_cycles) as f64
+                * logic_cycle_ns
+    }
+
+    pub fn logic_cycles(&self) -> u64 {
+        self.tree_cycles + self.acc_cycles + self.sfu_cycles + self.transpose_cycles
+    }
+}
+
+/// A bank's compute pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct BankPipeline {
+    pub tree: AdderTree,
+    /// Activation bit width.
+    pub wa: usize,
+    /// Weight bit width.
+    pub ww: usize,
+    /// Subarray multiply width: operands are stored n×n with
+    /// n = max(wa, ww) (the §III-B primitive is symmetric).
+    pub n: usize,
+}
+
+impl BankPipeline {
+    pub fn new(tree: AdderTree, n: usize) -> Self {
+        Self::asymmetric(tree, n, n)
+    }
+
+    /// Different activation/weight widths (Fig 17 sweeps these together,
+    /// but the kernels support asymmetry).
+    pub fn asymmetric(tree: AdderTree, wa: usize, ww: usize) -> Self {
+        assert!((1..=16).contains(&wa) && (1..=16).contains(&ww));
+        BankPipeline { tree, wa, ww, n: wa.max(ww) }
+    }
+
+    /// Functional MVM through the bit-level primitives:
+    /// `y[o] = Σ_k x[k] · w[k][o]` with unsigned activations (< 2^wa) and
+    /// signed weights (|w| < 2^(ww-1)). Returns raw accumulator values.
+    pub fn mvm(&self, x: &[u64], w: &[Vec<i64>]) -> Vec<i64> {
+        let k = x.len();
+        assert_eq!(w.len(), k, "weight rows != activation length");
+        let outputs = if k == 0 { 0 } else { w[0].len() };
+        if outputs == 0 {
+            return Vec::new();
+        }
+        let z = 1i64 << (self.ww - 1); // weight zero-point
+
+        // One column per (output, k) product; MACs are contiguous spans of
+        // k columns (§IV-B mapping rule), plus one trailing MAC of unit
+        // weights for the zero-point correction term Σx.
+        let cols = (outputs + 1) * k;
+        let mut pim = PimSubarray::new(self.n, cols, 1);
+        for o in 0..outputs {
+            for (ki, &a) in x.iter().enumerate() {
+                let wu = w[ki][o] + z;
+                assert!(
+                    (0..(1 << self.ww)).contains(&wu),
+                    "weight {} out of ww={} range",
+                    w[ki][o],
+                    self.ww
+                );
+                assert!(
+                    a < (1 << self.wa),
+                    "activation {a} out of wa={} range",
+                    self.wa
+                );
+                pim.write_pair(o * k + ki, 0, a, wu as u64);
+            }
+        }
+        for (ki, &a) in x.iter().enumerate() {
+            pim.write_pair(outputs * k + ki, 0, a, 1);
+        }
+
+        primitives::mul::in_dram_mul(&mut pim, 0);
+
+        // Adder tree consumes the product bit-planes; accumulator shift-adds.
+        let planes: Vec<Vec<i64>> = (0..2 * self.n)
+            .map(|bit| {
+                let row = pim.product_plane(bit);
+                let lanes: Vec<bool> = (0..cols).map(|c| row.get(c)).collect();
+                self.tree.reduce_plane(&lanes, k)
+            })
+            .collect();
+        let sums = accumulate_planes(&planes);
+
+        // Zero-point correction: y[o] = acc_u[o] − z·Σx.
+        let sum_x = sums[outputs];
+        (0..outputs).map(|o| sums[o] - z * sum_x).collect()
+    }
+
+    /// Cost of one multiply round in a bank:
+    /// `subarrays` subarrays multiply in parallel (`stacked_pairs`
+    /// sequential rounds each), then the shared tree drains every
+    /// subarray's planes.
+    pub fn round_cost(
+        &self,
+        timing: &DramTiming,
+        cost_model: primitives::CostModel,
+        subarrays: usize,
+        stacked_pairs: usize,
+        macs_per_subarray: usize,
+        mac_size: usize,
+        sfu_stages: u32,
+    ) -> BankCosts {
+        let mul_aaps = primitives::mul_aaps(cost_model, self.n as u64);
+        let multiply_ns =
+            stacked_pairs as f64 * mul_aaps as f64 * timing.aap_ns();
+
+        let planes = 2 * self.n as u64;
+        let passes_per_subarray = self.tree.passes(macs_per_subarray, mac_size);
+        let total_passes = passes_per_subarray as u64
+            * subarrays as u64
+            * planes
+            * stacked_pairs as u64;
+        let tree_cycles = self.tree.cycles(total_passes as usize);
+
+        let macs_total =
+            (macs_per_subarray * subarrays * stacked_pairs) as u64;
+        let acc_cycles = macs_total * planes; // one shift-add per plane/MAC
+        let sfu_cycles = if macs_total == 0 {
+            0
+        } else {
+            sfu_stages as u64 + macs_total - 1
+        };
+        let transpose_cycles = macs_total + self.n as u64;
+
+        BankCosts {
+            multiply_ns,
+            tree_cycles,
+            acc_cycles,
+            sfu_cycles,
+            transpose_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+    use crate::primitives::CostModel;
+
+    #[test]
+    fn mvm_matches_direct_dot_product() {
+        let bp = BankPipeline::new(AdderTree::new(64), 8);
+        let x = vec![3u64, 0, 255, 17];
+        let w = vec![
+            vec![5i64, -128],
+            vec![-3, 127],
+            vec![100, -1],
+            vec![0, 64],
+        ];
+        let got = bp.mvm(&x, &w);
+        let want: Vec<i64> = (0..2)
+            .map(|o| x.iter().zip(&w).map(|(&a, r)| a as i64 * r[o]).sum())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mvm_empty_output() {
+        let bp = BankPipeline::new(AdderTree::new(8), 4);
+        assert!(bp.mvm(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn mvm_random_property() {
+        crate::testutil::check(25, |rng| {
+            let n = rng.int_range(2, 8) as usize;
+            let k = rng.int_range(1, 8) as usize;
+            let o = rng.int_range(1, 5) as usize;
+            let bp = BankPipeline::new(AdderTree::new(64), n);
+            let x: Vec<u64> =
+                (0..k).map(|_| rng.int_range(0, (1 << n) - 1) as u64).collect();
+            let w: Vec<Vec<i64>> = (0..k)
+                .map(|_| {
+                    (0..o)
+                        .map(|_| {
+                            rng.int_range(-(1 << (n - 1)), (1 << (n - 1)) - 1)
+                        })
+                        .collect()
+                })
+                .collect();
+            let got = bp.mvm(&x, &w);
+            for oi in 0..o {
+                let want: i64 =
+                    x.iter().zip(&w).map(|(&a, r)| a as i64 * r[oi]).sum();
+                prop_assert_eq!(got[oi], want);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn round_cost_components() {
+        let bp = BankPipeline::new(AdderTree::new(4096), 8);
+        let t = DramTiming::ddr3_1600();
+        let c = bp.round_cost(&t, CostModel::Paper, 4, 1, 256, 9, 4);
+        // Multiply: one stacked pair → paper 8-bit count × 48.75 ns.
+        let want_mul =
+            crate::primitives::paper_mul_aaps(8) as f64 * t.aap_ns();
+        assert!((c.multiply_ns - want_mul).abs() < 1e-9);
+        assert!(c.tree_cycles > 0 && c.acc_cycles > 0);
+        assert!(c.total_ns(2.43) > c.multiply_ns);
+    }
+
+    #[test]
+    fn stacked_pairs_scale_multiply_time() {
+        let bp = BankPipeline::new(AdderTree::new(1024), 8);
+        let t = DramTiming::ddr3_1600();
+        let c1 = bp.round_cost(&t, CostModel::Paper, 2, 1, 64, 16, 4);
+        let c4 = bp.round_cost(&t, CostModel::Paper, 2, 4, 64, 16, 4);
+        assert!((c4.multiply_ns / c1.multiply_ns - 4.0).abs() < 1e-9);
+        assert!(c4.tree_cycles > c1.tree_cycles);
+    }
+}

@@ -1,0 +1,20 @@
+//! PIM-DRAM bank peripheral architecture (§IV-A, DESIGN.md S7–S8): the
+//! reconfigurable adder tree, shift-add accumulators, special function
+//! units (ReLU / BatchNorm / Quantize / MaxPool) and the SRAM transpose
+//! unit, each with a bit-exact functional model and a cycle model.
+//!
+//! Functional semantics are kept identical to the L1 Pallas kernels
+//! (`python/compile/kernels/`), so the Rust pipeline, the HLO artifacts and
+//! the jnp oracles all agree bit-for-bit.
+
+pub mod accumulator;
+pub mod adder_tree;
+pub mod bank_pim;
+pub mod sfu;
+pub mod transpose;
+
+pub use accumulator::Accumulator;
+pub use adder_tree::AdderTree;
+pub use bank_pim::BankPipeline;
+pub use sfu::{fused_sfu, FixedPointScale, SfuChain};
+pub use transpose::TransposeUnit;

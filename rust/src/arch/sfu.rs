@@ -1,0 +1,205 @@
+//! Special Function Units (§IV-A.3–5): ReLU, BatchNorm (folded affine),
+//! Quantize and MaxPool, chained after the accumulators in each bank.
+//!
+//! Semantics are *bit-identical* to the L1 Pallas `fused_sfu` kernel
+//! (python/compile/kernels/sfu.py): inference-time BatchNorm is constant,
+//! so ReLU + BN + Quantize fold into one fixed-point affine requantization
+//!
+//!   y = clamp((max(acc + bias, 0) · mult + 2^(shift-1)) >> shift, lo, hi)
+//!
+//! with `mult`/`shift` the fixed-point encoding of the float scale.
+
+/// Fixed-point scale used by the Quantize unit (matches
+/// `quantize_fixedpoint_params` on the Python side: 16 fraction bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedPointScale {
+    pub mult: i64,
+    pub shift: u32,
+}
+
+impl FixedPointScale {
+    pub const FRACTION_BITS: u32 = 16;
+
+    /// Encode a float scale. Errors on negative or overflowing scales,
+    /// mirroring the Python builder.
+    pub fn encode(scale: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(scale >= 0.0, "requant scale must be >= 0, got {scale}");
+        let mult = (scale * f64::from(1u32 << Self::FRACTION_BITS)).round() as i64;
+        anyhow::ensure!(mult < (1 << 31), "scale {scale} too large for fixed point");
+        Ok(FixedPointScale { mult, shift: Self::FRACTION_BITS })
+    }
+
+    pub fn apply(&self, v: i64) -> i64 {
+        (v * self.mult + (1i64 << (self.shift - 1))) >> self.shift
+    }
+}
+
+/// The fused ReLU → BN → Quantize datapath for one MAC value.
+pub fn fused_sfu(
+    acc: i64,
+    bias: i64,
+    scale: FixedPointScale,
+    bits: u32,
+    relu: bool,
+) -> i32 {
+    let mut v = acc + bias;
+    if relu {
+        v = v.max(0);
+    }
+    let rounded = scale.apply(v);
+    let hi = (1i64 << bits) - 1;
+    let lo = if relu { 0 } else { -(1i64 << (bits - 1)) };
+    rounded.clamp(lo, hi) as i32
+}
+
+/// The pooling unit (§IV-A.5): a counter walks the window, a register
+/// keeps the running max. 2×2/stride-2 over an (h, w) channel plane laid
+/// out row-major.
+pub fn maxpool2x2(plane: &[i32], h: usize, w: usize) -> Vec<i32> {
+    assert_eq!(plane.len(), h * w, "plane shape mismatch");
+    assert!(h % 2 == 0 && w % 2 == 0, "H={h}, W={w} must be even");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![i32::MIN; oh * ow];
+    for y in 0..h {
+        for x in 0..w {
+            let o = (y / 2) * ow + (x / 2);
+            out[o] = out[o].max(plane[y * w + x]);
+        }
+    }
+    out
+}
+
+/// SFU chain configuration for one bank/layer, plus its cycle model.
+#[derive(Debug, Clone)]
+pub struct SfuChain {
+    pub scale: FixedPointScale,
+    pub bits: u32,
+    pub relu: bool,
+    pub pool: bool,
+    /// Units operate element-streamed; each stage is single-cycle, so the
+    /// chain is pipelined with depth = number of active stages.
+    pub stages: u32,
+}
+
+impl SfuChain {
+    pub fn new(scale: FixedPointScale, bits: u32, relu: bool, pool: bool) -> Self {
+        let stages = 2 + u32::from(relu) + u32::from(pool); // BN+Quant always
+        SfuChain { scale, bits, relu, pool, stages }
+    }
+
+    /// Apply the (non-pool part of the) chain to a slice of MAC values.
+    pub fn apply(&self, accs: &[i64], bias: &[i64]) -> Vec<i32> {
+        assert_eq!(accs.len() % bias.len(), 0, "bias broadcast mismatch");
+        accs.iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                fused_sfu(a, bias[i % bias.len()], self.scale, self.bits, self.relu)
+            })
+            .collect()
+    }
+
+    /// Cycles to stream `elements` values through the pipelined chain.
+    pub fn cycles(&self, elements: u64) -> u64 {
+        if elements == 0 {
+            0
+        } else {
+            self.stages as u64 + elements - 1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+
+    #[test]
+    fn fixed_point_encoding_precision() {
+        for scale in [1.0, 0.5, 0.01, 3.7e-4] {
+            let f = FixedPointScale::encode(scale).unwrap();
+            let approx = f.mult as f64 / f64::from(1u32 << f.shift);
+            assert!((approx - scale).abs() < 1e-4, "scale {scale}");
+        }
+        assert!(FixedPointScale::encode(-1.0).is_err());
+        assert!(FixedPointScale::encode(1e6).is_err());
+    }
+
+    #[test]
+    fn fused_sfu_matches_python_reference_semantics() {
+        // Mirror of python/tests/test_sfu.py fixed cases.
+        let unit = FixedPointScale::encode(1.0).unwrap();
+        assert_eq!(fused_sfu(-100, 0, unit, 8, true), 0);
+        assert_eq!(fused_sfu(100, 0, unit, 8, true), 100);
+        assert_eq!(fused_sfu(10_000, 0, unit, 8, true), 255);
+        assert_eq!(fused_sfu(-10_000, 0, unit, 8, false), -128);
+        assert_eq!(fused_sfu(10_000, 0, unit, 8, false), 255);
+        assert_eq!(fused_sfu(-5, 10, unit, 8, true), 5); // bias pre-ReLU
+    }
+
+    #[test]
+    fn rounding_is_round_half_up() {
+        let half = FixedPointScale::encode(0.5).unwrap();
+        assert_eq!(fused_sfu(3, 0, half, 8, true), 2); // 1.5 → 2
+        assert_eq!(fused_sfu(1, 0, half, 8, true), 1); // 0.5 → 1
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let plane: Vec<i32> = (0..16).collect();
+        let out = maxpool2x2(&plane, 4, 4);
+        assert_eq!(out, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be even")]
+    fn maxpool_rejects_odd() {
+        maxpool2x2(&[1, 2, 3], 1, 3);
+    }
+
+    #[test]
+    fn chain_stages_and_cycles() {
+        let s = FixedPointScale::encode(0.1).unwrap();
+        let full = SfuChain::new(s, 8, true, true);
+        assert_eq!(full.stages, 4);
+        let lean = SfuChain::new(s, 8, false, false);
+        assert_eq!(lean.stages, 2);
+        assert_eq!(full.cycles(100), 4 + 99);
+        assert_eq!(full.cycles(0), 0);
+    }
+
+    #[test]
+    fn chain_apply_broadcasts_bias() {
+        let s = FixedPointScale::encode(1.0).unwrap();
+        let chain = SfuChain::new(s, 8, true, false);
+        let out = chain.apply(&[1, 2, 3, 4], &[10, 20]);
+        assert_eq!(out, vec![11, 22, 13, 24]);
+    }
+
+    #[test]
+    fn fused_sfu_property_vs_float_model() {
+        // Fixed-point requant must track the float computation within 1 LSB
+        // (plus clamping) for in-range values.
+        crate::testutil::check(60, |rng| {
+            let scale = rng.range(1e-4, 1.5);
+            let f = FixedPointScale::encode(scale).unwrap();
+            let acc = rng.int_range(-(1 << 20), 1 << 20);
+            let bias = rng.int_range(-(1 << 10), 1 << 10);
+            let bits = rng.int_range(2, 10) as u32;
+            let relu = rng.bool(0.5);
+            let got = fused_sfu(acc, bias, f, bits, relu) as f64;
+            let mut v = (acc + bias) as f64;
+            if relu {
+                v = v.max(0.0);
+            }
+            let want = (v * scale).round();
+            let hi = ((1i64 << bits) - 1) as f64;
+            let lo = if relu { 0.0 } else { -((1i64 << (bits - 1)) as f64) };
+            let want = want.clamp(lo, hi);
+            crate::prop_assert!(
+                (got - want).abs() <= 1.0,
+                "scale={scale} acc={acc} bias={bias} got={got} want={want}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,138 @@
+//! The transpose unit (§IV-A.6): a dual-ported SRAM array written
+//! row-wise and read column-wise, converting the SFU's word-oriented
+//! outputs back into the bit-transposed layout the next bank's subarrays
+//! require (and vice versa).
+
+/// Dual-port SRAM transpose buffer of `rows` words × `bits` bit columns.
+#[derive(Debug, Clone)]
+pub struct TransposeUnit {
+    rows: usize,
+    bits: usize,
+    data: Vec<u64>, // one word per row, low `bits` significant
+    written: usize,
+}
+
+impl TransposeUnit {
+    /// Paper example dimensions: 256 × 8 (area 30 534.894 µm² at 65 nm).
+    pub const PAPER_ROWS: usize = 256;
+    pub const PAPER_BITS: usize = 8;
+
+    pub fn new(rows: usize, bits: usize) -> Self {
+        assert!(bits <= 64 && bits >= 1 && rows >= 1);
+        TransposeUnit { rows, bits, data: vec![0; rows], written: 0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Write one word horizontally (row-major fill).
+    pub fn write_word(&mut self, value: u64) {
+        assert!(self.written < self.rows, "transpose buffer full");
+        assert!(
+            value < (1u64 << self.bits) || self.bits == 64,
+            "value {value} exceeds {} bits",
+            self.bits
+        );
+        self.data[self.written] = value;
+        self.written += 1;
+    }
+
+    /// Read bit-plane `bit` vertically: bit `bit` of every written word.
+    pub fn read_plane(&self, bit: usize) -> Vec<bool> {
+        assert!(bit < self.bits);
+        self.data[..self.written]
+            .iter()
+            .map(|w| (w >> bit) & 1 == 1)
+            .collect()
+    }
+
+    /// Transpose a batch in one call: words in, bit-planes out.
+    pub fn transpose(words: &[u64], bits: usize) -> Vec<Vec<bool>> {
+        (0..bits)
+            .map(|b| words.iter().map(|w| (w >> b) & 1 == 1).collect())
+            .collect()
+    }
+
+    /// Inverse: bit-planes in, words out.
+    pub fn untranspose(planes: &[Vec<bool>]) -> Vec<u64> {
+        if planes.is_empty() {
+            return Vec::new();
+        }
+        let n = planes[0].len();
+        let mut words = vec![0u64; n];
+        for (b, plane) in planes.iter().enumerate() {
+            assert_eq!(plane.len(), n, "ragged plane {b}");
+            for (w, &bit) in words.iter_mut().zip(plane) {
+                *w |= (bit as u64) << b;
+            }
+        }
+        words
+    }
+
+    pub fn reset(&mut self) {
+        self.written = 0;
+    }
+
+    /// Cycle model: dual-ported, one word written per cycle, one bit-plane
+    /// (of up to `rows` bits) read per cycle.
+    pub fn write_cycles(&self, words: u64) -> u64 {
+        words
+    }
+
+    pub fn read_cycles(&self, planes: u64) -> u64 {
+        planes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+
+    #[test]
+    fn write_then_read_planes() {
+        let mut t = TransposeUnit::new(4, 4);
+        for v in [0b1010u64, 0b0110, 0b1111, 0b0001] {
+            t.write_word(v);
+        }
+        assert_eq!(t.read_plane(0), vec![false, false, true, true]);
+        assert_eq!(t.read_plane(1), vec![true, true, true, false]);
+        assert_eq!(t.read_plane(3), vec![true, false, true, false]);
+    }
+
+    #[test]
+    #[should_panic(expected = "full")]
+    fn overflow_rejected() {
+        let mut t = TransposeUnit::new(1, 4);
+        t.write_word(1);
+        t.write_word(2);
+    }
+
+    #[test]
+    fn transpose_roundtrip_property() {
+        crate::testutil::check(30, |rng| {
+            let bits = rng.int_range(1, 16) as usize;
+            let n = rng.int_range(1, 64) as usize;
+            let words: Vec<u64> = (0..n)
+                .map(|_| rng.int_range(0, (1i64 << bits) - 1) as u64)
+                .collect();
+            let planes = TransposeUnit::transpose(&words, bits);
+            prop_assert_eq!(planes.len(), bits);
+            let back = TransposeUnit::untranspose(&planes);
+            prop_assert_eq!(back, words);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cycle_model() {
+        let t = TransposeUnit::new(256, 8);
+        assert_eq!(t.write_cycles(256), 256);
+        assert_eq!(t.read_cycles(8), 8);
+    }
+}

@@ -1,0 +1,214 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Cargo bench targets in `benches/` are `harness = false` binaries that
+//! use this module: warmup, repeated timed runs, robust summary stats, and
+//! the shared `Table` renderer so every paper-figure bench prints uniform
+//! rows. Wall-clock timing only — the DRAM/GPU numbers the benches report
+//! come from the *simulators*, which are deterministic; the harness timing
+//! is for the §Perf optimization pass of the simulator hot paths themselves.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// Items/second if `items_per_iter` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|items| items / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) => format!("  {}/s", crate::util::si(t)),
+            None => String::new(),
+        };
+        format!(
+            "{:<40} {:>12?} ±{:>10?}  (median {:?}, {} iters){}",
+            self.name, self.mean, self.std, self.median, self.iters, tp
+        )
+    }
+}
+
+/// Benchmark runner with warmup + adaptive iteration count.
+pub struct Bencher {
+    /// Target total measurement time per benchmark.
+    pub target_time: Duration,
+    /// Number of warmup invocations.
+    pub warmup_iters: u64,
+    /// Minimum timed iterations regardless of duration.
+    pub min_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            target_time: Duration::from_millis(500),
+            warmup_iters: 3,
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for CI / smoke runs (`PIM_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("PIM_BENCH_FAST").is_ok() {
+            Bencher {
+                target_time: Duration::from_millis(50),
+                warmup_iters: 1,
+                min_iters: 3,
+                results: Vec::new(),
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f`, which must do one full unit of work per call. The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Like `bench` but records a throughput denominator.
+    pub fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &Measurement {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        // Estimate per-iter cost to size the run.
+        let probe_start = Instant::now();
+        black_box(f());
+        let probe = probe_start.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.target_time.as_secs_f64() / probe.as_secs_f64()) as u64)
+            .clamp(self.min_iters, 1_000_000);
+
+        let mut samples = Summary::new();
+        let mut min = Duration::MAX;
+        let mut max = Duration::ZERO;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            black_box(f());
+            let dt = t0.elapsed();
+            samples.push(dt.as_secs_f64());
+            min = min.min(dt);
+            max = max.max(dt);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(samples.mean()),
+            median: Duration::from_secs_f64(samples.median()),
+            std: Duration::from_secs_f64(samples.std()),
+            min,
+            max,
+            items_per_iter: items,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box stabilized in 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard bench preamble: prints the figure/table banner.
+pub fn banner(id: &str, caption: &str) {
+    println!("\n=== {} — {} ===", id, caption);
+    println!(
+        "(simulated substrate; compare *shape* with the paper, not absolutes)\n"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_measurement() {
+        let mut b = Bencher {
+            target_time: Duration::from_millis(5),
+            warmup_iters: 1,
+            min_iters: 3,
+            results: Vec::new(),
+        };
+        let m = b.bench("noop", || 1 + 1).clone();
+        assert!(m.iters >= 3);
+        assert!(m.mean > Duration::ZERO);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bencher {
+            target_time: Duration::from_millis(2),
+            warmup_iters: 0,
+            min_iters: 3,
+            results: Vec::new(),
+        };
+        let m = b.bench_items("items", 100.0, || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn mean_between_min_max() {
+        let mut b = Bencher {
+            target_time: Duration::from_millis(2),
+            warmup_iters: 0,
+            min_iters: 5,
+            results: Vec::new(),
+        };
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        }).clone();
+        assert!(m.min <= m.mean && m.mean <= m.max);
+    }
+}

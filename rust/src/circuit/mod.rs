@@ -1,0 +1,137 @@
+//! Circuit-level substrate (DESIGN.md S6): first-order transient and Monte
+//! Carlo simulation of the proposed AND primitive's bitline behaviour.
+//!
+//! The paper validates the 3-transistor AND with HSPICE at 65 nm (Fig 14)
+//! plus 100 000-sample Monte Carlo (Fig 15, sense margin ≈ 200 mV mean).
+//! HSPICE and the Rambus netlists are not available here, so this module
+//! implements the minimal physics that produces those observables:
+//!
+//!   * precharge:     BL driven to VDD/2;
+//!   * charge share:  the AND-WL connects exactly one cell capacitor to the
+//!     bitline (cell A-1 through the NMOS when A = 1, cell A through the
+//!     PMOS when A = 0); RC relaxation toward the charge-conservation value;
+//!   * sense:         latch-type amplifier regenerates exponentially toward
+//!     the rail selected by comparison with VDD/2;
+//!   * restore:       both compute-row cells track the regenerated bitline
+//!     (they store the AND result — §III-A).
+//!
+//! All voltages in volts, times in nanoseconds, capacitances in femtofarads.
+
+pub mod montecarlo;
+pub mod transient;
+pub mod waveform;
+
+pub use montecarlo::{run_monte_carlo, MonteCarloResult};
+pub use transient::{simulate_and, AndInputs, Phase};
+pub use waveform::Waveform;
+
+/// Electrical parameters of the subarray bitline structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CircuitParams {
+    /// Supply voltage (V). DRAM core at 65 nm.
+    pub vdd: f64,
+    /// Cell storage capacitance (fF).
+    pub c_cell_ff: f64,
+    /// Bitline parasitic capacitance (fF).
+    pub c_bl_ff: f64,
+    /// Access-path resistance during charge sharing (kΩ).
+    pub r_access_kohm: f64,
+    /// Sense-amp regeneration time constant (ns).
+    pub tau_sense_ns: f64,
+    /// Simulation timestep (ns).
+    pub dt_ns: f64,
+    /// Phase durations (ns).
+    pub t_precharge_ns: f64,
+    pub t_share_ns: f64,
+    pub t_sense_ns: f64,
+    pub t_restore_ns: f64,
+    // Monte Carlo variation (1σ, relative unless noted):
+    /// Cell capacitance variation.
+    pub sigma_c_cell: f64,
+    /// Bitline capacitance variation.
+    pub sigma_c_bl: f64,
+    /// Stored cell voltage offset σ in volts (leakage/retention noise).
+    pub sigma_v_cell: f64,
+    /// Sense-amp input-referred offset σ in volts.
+    pub sigma_sa_offset: f64,
+}
+
+impl CircuitParams {
+    /// 65 nm-class defaults calibrated so the nominal pre-sense separation
+    /// between the (1,1) case and the 0-cases is ≈ 200 mV (paper Fig 15:
+    /// "large enough sense margin of BL between all input cases (mean is
+    /// 200 mV)"): transfer ratio C_cell/(C_cell+C_BL) = 1/6, VDD = 1.2 V →
+    /// full separation VDD/6 = 200 mV.
+    pub fn cmos65nm() -> Self {
+        CircuitParams {
+            vdd: 1.2,
+            c_cell_ff: 20.0,
+            c_bl_ff: 100.0,
+            r_access_kohm: 8.0,
+            tau_sense_ns: 0.35,
+            dt_ns: 0.01,
+            t_precharge_ns: 2.0,
+            t_share_ns: 3.0,
+            t_sense_ns: 3.0,
+            t_restore_ns: 4.0,
+            sigma_c_cell: 0.05,
+            sigma_c_bl: 0.03,
+            sigma_v_cell: 0.02,
+            sigma_sa_offset: 0.01,
+        }
+    }
+
+    /// Charge-sharing transfer ratio C_cell / (C_cell + C_BL).
+    pub fn transfer_ratio(&self) -> f64 {
+        self.c_cell_ff / (self.c_cell_ff + self.c_bl_ff)
+    }
+
+    /// Nominal post-share bitline voltage when a cell storing `v_cell`
+    /// shares with the precharged bitline.
+    pub fn shared_voltage(&self, v_cell: f64) -> f64 {
+        let half = self.vdd / 2.0;
+        half + (v_cell - half) * self.transfer_ratio()
+    }
+
+    /// RC time constant of the share phase (ns): R_on · (C_cell ∥ C_BL).
+    pub fn tau_share_ns(&self) -> f64 {
+        let c_series =
+            self.c_cell_ff * self.c_bl_ff / (self.c_cell_ff + self.c_bl_ff);
+        // kΩ · fF = ps; convert to ns.
+        self.r_access_kohm * c_series / 1000.0
+    }
+}
+
+impl Default for CircuitParams {
+    fn default() -> Self {
+        Self::cmos65nm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_ratio_one_sixth() {
+        let p = CircuitParams::cmos65nm();
+        assert!((p.transfer_ratio() - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_voltage_signs() {
+        let p = CircuitParams::cmos65nm();
+        assert!(p.shared_voltage(p.vdd) > p.vdd / 2.0);
+        assert!(p.shared_voltage(0.0) < p.vdd / 2.0);
+        // Nominal separation: exactly VDD * ratio = 200 mV.
+        let sep = p.shared_voltage(p.vdd) - p.shared_voltage(0.0);
+        assert!((sep - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_share_fast_relative_to_phase() {
+        let p = CircuitParams::cmos65nm();
+        // Charge sharing must settle well within the share phase.
+        assert!(p.tau_share_ns() * 5.0 < p.t_share_ns);
+    }
+}

@@ -1,0 +1,156 @@
+//! Monte Carlo robustness analysis of the AND primitive (Fig 15
+//! reproduction): 100 000 samples per input case with C/V/offset variation,
+//! pre-sense bitline histograms, sense-margin statistics and failure rate.
+
+use super::transient::{AndInputs, VariationSample};
+use super::CircuitParams;
+use crate::util::rng::Rng;
+use crate::util::stats::{Histogram, Summary};
+
+/// Result of a Monte Carlo run for all four input cases.
+#[derive(Debug, Clone)]
+pub struct MonteCarloResult {
+    pub samples_per_case: usize,
+    /// Pre-sense BL summaries, indexed like `AndInputs::all_cases()`.
+    pub case_summaries: Vec<(AndInputs, Summary)>,
+    /// Pre-sense BL histograms per case.
+    pub histograms: Vec<(AndInputs, Histogram)>,
+    /// Sense margin: separation between the (1,1) distribution mean and the
+    /// closest 0-case mean (the paper reports ≈ 200 mV mean margin).
+    pub sense_margin_v: f64,
+    /// Worst-case margin: min over samples of distance to VDD/2, signed
+    /// positive when on the correct side.
+    pub worst_margin_v: f64,
+    /// Samples whose sensed value (incl. SA offset) was wrong.
+    pub failures: u64,
+}
+
+impl MonteCarloResult {
+    pub fn failure_rate(&self) -> f64 {
+        self.failures as f64 / (self.samples_per_case * 4) as f64
+    }
+}
+
+/// Run the Monte Carlo analysis. Uses the analytic pre-sense fast path
+/// (validated against the transient integrator in `transient::tests`), so
+/// 400 000 total samples complete in well under a second.
+pub fn run_monte_carlo(
+    p: &CircuitParams,
+    samples_per_case: usize,
+    seed: u64,
+) -> MonteCarloResult {
+    let half = p.vdd / 2.0;
+    let mut case_summaries = Vec::new();
+    let mut histograms = Vec::new();
+    let mut failures = 0u64;
+    let mut worst_margin = f64::INFINITY;
+
+    for (case_idx, inputs) in AndInputs::all_cases().into_iter().enumerate() {
+        let mut rng = Rng::new(seed ^ (case_idx as u64).wrapping_mul(0x9E37));
+        let mut summary = Summary::new();
+        let mut hist = Histogram::new(half - 0.25, half + 0.25, 60);
+        for _ in 0..samples_per_case {
+            let s = VariationSample::sampled(p, inputs, &mut rng);
+            let v = s.presense_bl(p, inputs);
+            summary.push(v);
+            hist.add(v);
+            let sensed = v + s.sa_offset > half;
+            if sensed != inputs.expected() {
+                failures += 1;
+            }
+            let margin = if inputs.expected() { v - half } else { half - v };
+            worst_margin = worst_margin.min(margin);
+        }
+        case_summaries.push((inputs, summary));
+        histograms.push((inputs, hist));
+    }
+
+    // Mean separation: (1,1) vs closest 0-case.
+    let mean_11 = case_summaries
+        .iter()
+        .find(|(i, _)| i.expected())
+        .map(|(_, s)| s.mean())
+        .unwrap();
+    let closest_zero = case_summaries
+        .iter()
+        .filter(|(i, _)| !i.expected())
+        .map(|(_, s)| s.mean())
+        .fold(f64::NEG_INFINITY, f64::max);
+    MonteCarloResult {
+        samples_per_case,
+        sense_margin_v: mean_11 - closest_zero,
+        worst_margin_v: worst_margin,
+        failures,
+        case_summaries,
+        histograms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_mc() -> MonteCarloResult {
+        run_monte_carlo(&CircuitParams::cmos65nm(), 5_000, 42)
+    }
+
+    #[test]
+    fn sense_margin_near_200mv() {
+        // The paper's headline Fig 15 number: mean sense margin ≈ 200 mV.
+        let r = quick_mc();
+        assert!(
+            (r.sense_margin_v - 0.2).abs() < 0.02,
+            "margin {}",
+            r.sense_margin_v
+        );
+    }
+
+    #[test]
+    fn no_failures_at_nominal_variation() {
+        let r = quick_mc();
+        assert_eq!(r.failures, 0, "failure rate {}", r.failure_rate());
+        assert!(r.worst_margin_v > 0.0);
+    }
+
+    #[test]
+    fn one_one_distribution_above_half() {
+        let p = CircuitParams::cmos65nm();
+        let r = quick_mc();
+        for (inputs, s) in &r.case_summaries {
+            if inputs.expected() {
+                assert!(s.mean() > p.vdd / 2.0 + 0.05);
+            } else {
+                assert!(s.mean() < p.vdd / 2.0 - 0.05);
+            }
+            assert_eq!(s.len(), 5_000);
+        }
+    }
+
+    #[test]
+    fn histograms_capture_all_samples() {
+        let r = quick_mc();
+        for (_, h) in &r.histograms {
+            assert_eq!(h.total(), 5_000);
+            // All samples should be within the plotting window.
+            assert_eq!(h.underflow + h.overflow, 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_monte_carlo(&CircuitParams::cmos65nm(), 1_000, 7);
+        let b = run_monte_carlo(&CircuitParams::cmos65nm(), 1_000, 7);
+        assert_eq!(a.sense_margin_v, b.sense_margin_v);
+        assert_eq!(a.failures, b.failures);
+    }
+
+    #[test]
+    fn excessive_variation_causes_failures() {
+        // Failure-injection: crank σ(V_cell) until the margin collapses.
+        let mut p = CircuitParams::cmos65nm();
+        p.sigma_v_cell = 0.5;
+        p.sigma_sa_offset = 0.15;
+        let r = run_monte_carlo(&p, 5_000, 3);
+        assert!(r.failures > 0, "expected failures under extreme variation");
+    }
+}

@@ -1,0 +1,251 @@
+//! Transient simulation of the AND operation (Fig 14 reproduction).
+//!
+//! Nodes: `BL` (bitline), `S1` (top plate of cell A), `S2` (top plate of
+//! cell A-1). Four phases — precharge, charge-share, sense, restore — per
+//! the §III-A sequence. For the (1,1) input case BL/S1/S2 regenerate to
+//! VDD; every other case collapses to GND, exactly the waveform families
+//! the paper shows.
+
+use super::waveform::Waveform;
+use super::CircuitParams;
+
+/// Input case for the AND: logical values stored in compute rows A and A-1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AndInputs {
+    pub a: bool,
+    pub b: bool,
+}
+
+impl AndInputs {
+    pub fn all_cases() -> [AndInputs; 4] {
+        [
+            AndInputs { a: false, b: false },
+            AndInputs { a: false, b: true },
+            AndInputs { a: true, b: false },
+            AndInputs { a: true, b: true },
+        ]
+    }
+
+    pub fn expected(&self) -> bool {
+        self.a && self.b
+    }
+
+    pub fn label(&self) -> String {
+        format!("{},{}", self.a as u8, self.b as u8)
+    }
+}
+
+/// Simulation phase boundaries (returned for annotation/plotting).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Phase {
+    pub share_start_ns: f64,
+    pub sense_start_ns: f64,
+    pub restore_start_ns: f64,
+    pub end_ns: f64,
+}
+
+/// Simulate the full AND transient for one input case. Optional `vary`
+/// callback perturbs (c_cell, c_bl, v_cell_a, v_cell_b, sa_offset) for
+/// Monte Carlo reuse; `None` runs nominal.
+pub fn simulate_and(
+    p: &CircuitParams,
+    inputs: AndInputs,
+    vary: Option<&VariationSample>,
+) -> (Waveform, Phase) {
+    let nominal = VariationSample::nominal(p, inputs);
+    let var = vary.unwrap_or(&nominal);
+
+    let half = p.vdd / 2.0;
+    let mut v_bl = 0.0; // bitline starts discharged pre-precharge
+    let mut s1 = var.v_cell_a; // plate of cell A (stores operand a)
+    let mut s2 = var.v_cell_b; // plate of cell A-1 (stores operand b)
+
+    let phase = Phase {
+        share_start_ns: p.t_precharge_ns,
+        sense_start_ns: p.t_precharge_ns + p.t_share_ns,
+        restore_start_ns: p.t_precharge_ns + p.t_share_ns + p.t_sense_ns,
+        end_ns: p.t_precharge_ns + p.t_share_ns + p.t_sense_ns + p.t_restore_ns,
+    };
+
+    let mut wf = Waveform::new(&["BL", "S1", "S2"]);
+    let tau_pre = 0.2; // precharge driver is strong
+    let tau_share = p.tau_share_ns().max(p.dt_ns);
+    let ratio = var.c_cell / (var.c_cell + var.c_bl);
+
+    // Which cell the AND-WL connects (see module docs): A=1 → cell A-1
+    // (NMOS), A=0 → cell A (PMOS).
+    let connects_s2 = inputs.a;
+
+    let mut t = 0.0;
+    let mut sensed_decided: Option<bool> = None;
+    while t <= phase.end_ns + 1e-9 {
+        wf.push(t, &[v_bl, s1, s2]);
+        let dt = p.dt_ns;
+        if t < phase.share_start_ns {
+            // Precharge: BL → VDD/2 (cells isolated).
+            v_bl += (half - v_bl) * (dt / tau_pre).min(1.0);
+        } else if t < phase.sense_start_ns {
+            // Charge share: connected cell and BL relax toward the common
+            // charge-conservation voltage.
+            let vc: &mut f64 = if connects_s2 { &mut s2 } else { &mut s1 };
+            let v_final = v_bl * (1.0 - ratio) + *vc * ratio;
+            let k = (dt / tau_share).min(1.0);
+            v_bl += (v_final - v_bl) * k;
+            *vc += (v_final - *vc) * k;
+        } else if t < phase.restore_start_ns {
+            // Sense: decide once at enable (offset applied), then regenerate.
+            let target = *sensed_decided.get_or_insert_with(|| {
+                v_bl + var.sa_offset > half
+            });
+            let rail = if target { p.vdd } else { 0.0 };
+            let k = (dt / p.tau_sense_ns).min(1.0);
+            v_bl += (rail - v_bl) * k;
+            // Connected cell keeps tracking the bitline during regeneration.
+            if connects_s2 {
+                s2 += (rail - s2) * k;
+            } else {
+                s1 += (rail - s1) * k;
+            }
+        } else {
+            // Restore: both compute-row wordlines open; both cells are
+            // driven to the sensed rail (they store the AND result).
+            let rail = if sensed_decided.unwrap_or(false) { p.vdd } else { 0.0 };
+            let k = (dt / p.tau_sense_ns).min(1.0);
+            v_bl += (rail - v_bl) * k;
+            s1 += (rail - s1) * k;
+            s2 += (rail - s2) * k;
+        }
+        t += dt;
+    }
+    (wf, phase)
+}
+
+/// One Monte Carlo variation sample (also used for the nominal run).
+#[derive(Debug, Clone)]
+pub struct VariationSample {
+    pub c_cell: f64,
+    pub c_bl: f64,
+    pub v_cell_a: f64,
+    pub v_cell_b: f64,
+    pub sa_offset: f64,
+}
+
+impl VariationSample {
+    pub fn nominal(p: &CircuitParams, inputs: AndInputs) -> Self {
+        VariationSample {
+            c_cell: p.c_cell_ff,
+            c_bl: p.c_bl_ff,
+            v_cell_a: if inputs.a { p.vdd } else { 0.0 },
+            v_cell_b: if inputs.b { p.vdd } else { 0.0 },
+            sa_offset: 0.0,
+        }
+    }
+
+    pub fn sampled(
+        p: &CircuitParams,
+        inputs: AndInputs,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Self {
+        let clamp01 = |v: f64| v.clamp(0.0, p.vdd);
+        VariationSample {
+            c_cell: p.c_cell_ff * (1.0 + p.sigma_c_cell * rng.normal()),
+            c_bl: p.c_bl_ff * (1.0 + p.sigma_c_bl * rng.normal()),
+            v_cell_a: clamp01(
+                if inputs.a { p.vdd } else { 0.0 } + p.sigma_v_cell * rng.normal(),
+            ),
+            v_cell_b: clamp01(
+                if inputs.b { p.vdd } else { 0.0 } + p.sigma_v_cell * rng.normal(),
+            ),
+            sa_offset: p.sigma_sa_offset * rng.normal(),
+        }
+    }
+
+    /// Analytic pre-sense bitline voltage for this sample (fast path for
+    /// Monte Carlo — avoids full transient integration).
+    pub fn presense_bl(&self, p: &CircuitParams, inputs: AndInputs) -> f64 {
+        let half = p.vdd / 2.0;
+        let ratio = self.c_cell / (self.c_cell + self.c_bl);
+        let v_cell = if inputs.a { self.v_cell_b } else { self.v_cell_a };
+        half + (v_cell - half) * ratio
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn and_truth_table_from_transients() {
+        let p = CircuitParams::cmos65nm();
+        for inputs in AndInputs::all_cases() {
+            let (wf, _) = simulate_and(&p, inputs, None);
+            let v_final = wf.final_value("BL").unwrap();
+            let sensed = v_final > p.vdd / 2.0;
+            assert_eq!(sensed, inputs.expected(), "case {}", inputs.label());
+            // Rail-to-rail regeneration.
+            if sensed {
+                assert!(v_final > 0.95 * p.vdd, "case {}: {v_final}", inputs.label());
+            } else {
+                assert!(v_final < 0.05 * p.vdd, "case {}: {v_final}", inputs.label());
+            }
+        }
+    }
+
+    #[test]
+    fn cells_store_result_after_restore() {
+        // §III-A: after the AND, both compute rows hold the result.
+        let p = CircuitParams::cmos65nm();
+        for inputs in AndInputs::all_cases() {
+            let (wf, _) = simulate_and(&p, inputs, None);
+            let rail = if inputs.expected() { p.vdd } else { 0.0 };
+            assert!((wf.final_value("S1").unwrap() - rail).abs() < 0.05 * p.vdd);
+            assert!((wf.final_value("S2").unwrap() - rail).abs() < 0.05 * p.vdd);
+        }
+    }
+
+    #[test]
+    fn presense_voltage_direction() {
+        let p = CircuitParams::cmos65nm();
+        for inputs in AndInputs::all_cases() {
+            let s = VariationSample::nominal(&p, inputs);
+            let v = s.presense_bl(&p, inputs);
+            if inputs.expected() {
+                assert!(v > p.vdd / 2.0);
+            } else {
+                assert!(v < p.vdd / 2.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn presense_matches_transient_share_value() {
+        // The analytic MC fast path must agree with the integrated transient
+        // at the sense instant (within integration tolerance).
+        let p = CircuitParams::cmos65nm();
+        for inputs in AndInputs::all_cases() {
+            let (wf, phase) = simulate_and(&p, inputs, None);
+            let idx = wf
+                .t_ns
+                .iter()
+                .position(|&t| t >= phase.sense_start_ns - p.dt_ns / 2.0)
+                .unwrap();
+            let v_transient = wf.node("BL").unwrap()[idx - 1];
+            let s = VariationSample::nominal(&p, inputs);
+            let v_analytic = s.presense_bl(&p, inputs);
+            assert!(
+                (v_transient - v_analytic).abs() < 0.01,
+                "case {}: transient {v_transient} vs analytic {v_analytic}",
+                inputs.label()
+            );
+        }
+    }
+
+    #[test]
+    fn phases_ordered() {
+        let p = CircuitParams::cmos65nm();
+        let (_, ph) = simulate_and(&p, AndInputs { a: true, b: true }, None);
+        assert!(ph.share_start_ns < ph.sense_start_ns);
+        assert!(ph.sense_start_ns < ph.restore_start_ns);
+        assert!(ph.restore_start_ns < ph.end_ns);
+    }
+}

@@ -1,0 +1,135 @@
+//! Waveform container for transient results (Fig 14 reproduction): named
+//! node traces over a shared time base, CSV export and simple ASCII plots.
+
+/// A set of node voltage traces over time.
+#[derive(Debug, Clone, Default)]
+pub struct Waveform {
+    pub t_ns: Vec<f64>,
+    pub nodes: Vec<(String, Vec<f64>)>,
+}
+
+impl Waveform {
+    pub fn new(node_names: &[&str]) -> Self {
+        Waveform {
+            t_ns: Vec::new(),
+            nodes: node_names
+                .iter()
+                .map(|n| (n.to_string(), Vec::new()))
+                .collect(),
+        }
+    }
+
+    /// Append one sample: time plus a voltage per node (ordered).
+    pub fn push(&mut self, t_ns: f64, voltages: &[f64]) {
+        assert_eq!(voltages.len(), self.nodes.len(), "node count mismatch");
+        self.t_ns.push(t_ns);
+        for (slot, &v) in self.nodes.iter_mut().zip(voltages) {
+            slot.1.push(v);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t_ns.is_empty()
+    }
+
+    pub fn node(&self, name: &str) -> Option<&[f64]> {
+        self.nodes
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+    }
+
+    /// Final value of a node.
+    pub fn final_value(&self, name: &str) -> Option<f64> {
+        self.node(name).and_then(|v| v.last().copied())
+    }
+
+    /// CSV export: `t_ns,node1,node2,...`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_ns");
+        for (name, _) in &self.nodes {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        for i in 0..self.t_ns.len() {
+            out.push_str(&format!("{:.4}", self.t_ns[i]));
+            for (_, vs) in &self.nodes {
+                out.push_str(&format!(",{:.5}", vs[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Coarse ASCII strip chart of one node (for bench output).
+    pub fn ascii(&self, name: &str, rows: usize, cols: usize) -> String {
+        let Some(vs) = self.node(name) else {
+            return format!("(no node {name})");
+        };
+        if vs.is_empty() {
+            return String::new();
+        }
+        let vmin = vs.iter().copied().fold(f64::INFINITY, f64::min);
+        let vmax = vs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let span = (vmax - vmin).max(1e-9);
+        let mut grid = vec![vec![b' '; cols]; rows];
+        for (i, &v) in vs.iter().enumerate() {
+            let x = i * (cols - 1) / (vs.len() - 1).max(1);
+            let y = ((vmax - v) / span * (rows - 1) as f64).round() as usize;
+            grid[y.min(rows - 1)][x] = b'*';
+        }
+        let mut out = format!("{name}: [{vmin:.3} V .. {vmax:.3} V]\n");
+        for row in grid {
+            out.push_str(std::str::from_utf8(&row).unwrap());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_lookup() {
+        let mut w = Waveform::new(&["BL", "S1"]);
+        w.push(0.0, &[0.6, 1.2]);
+        w.push(0.1, &[0.65, 1.2]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.node("BL").unwrap(), &[0.6, 0.65]);
+        assert_eq!(w.final_value("S1"), Some(1.2));
+        assert!(w.node("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "node count mismatch")]
+    fn push_checks_arity() {
+        let mut w = Waveform::new(&["BL"]);
+        w.push(0.0, &[0.1, 0.2]);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut w = Waveform::new(&["a"]);
+        w.push(1.0, &[0.5]);
+        let csv = w.to_csv();
+        assert!(csv.starts_with("t_ns,a\n"));
+        assert!(csv.contains("1.0000,0.50000"));
+    }
+
+    #[test]
+    fn ascii_plot_has_stars() {
+        let mut w = Waveform::new(&["x"]);
+        for i in 0..50 {
+            w.push(i as f64, &[(i as f64 / 50.0).sin()]);
+        }
+        let plot = w.ascii("x", 8, 40);
+        assert!(plot.contains('*'));
+    }
+}

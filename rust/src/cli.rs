@@ -1,0 +1,411 @@
+//! CLI argument parsing and subcommand implementations (clap is
+//! unavailable offline — DESIGN.md S17).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::circuit::{run_monte_carlo, simulate_and, AndInputs, CircuitParams};
+use crate::config;
+use crate::gpu::{roofline::roofline_points, GpuModel};
+use crate::mapping::{map_network, MapConfig};
+use crate::sim::{simulate, SimConfig};
+use crate::util::si;
+use crate::util::table::{Align, Table};
+use crate::workloads::nets;
+
+/// Parsed command line: subcommand, positionals, `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                args.flags.insert(key.to_string(), val);
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn flag_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+pim-dram — PIM-DRAM system simulator + coordinator (paper reproduction)
+
+USAGE: pim-dram <COMMAND> [flags]
+
+COMMANDS:
+  simulate   Run the PIM timing simulator on a network
+             --network <alexnet|vgg16|resnet18|pimnet>  --bits <n>  --k <k>
+             --preset <paper_favorable|conservative>
+  map        Print the Algorithm-1 mapping for a network (same flags)
+  optimize   Plan the per-layer parallelism vector (mapping optimizer)
+             --network <name>  --bits <n>  --preset <...>  --balanced
+  roofline   Fig 1: Titan Xp roofline for a network  --network <name>
+  circuit    Fig 14/15: AND transient + Monte Carlo  --samples <n>
+  tables     Tables I/II: bank peripheral area & power
+  config     Run an experiment from a TOML file: pim-dram config <file>
+  serve      End-to-end inference demo over the AOT artifacts
+             --images <n>  (requires `make artifacts`)
+  help       Show this help
+";
+
+/// Entry point used by main.rs.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "map" => cmd_map(&args),
+        "optimize" => cmd_optimize(&args),
+        "roofline" => cmd_roofline(&args),
+        "circuit" => cmd_circuit(&args),
+        "tables" => cmd_tables(),
+        "config" => cmd_config(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn sim_config_from(args: &Args) -> Result<SimConfig> {
+    let bits = args.flag_usize("bits", 8)?;
+    let mut cfg = match args.flag("preset", "paper_favorable").as_str() {
+        "paper_favorable" => SimConfig::paper_favorable(bits),
+        "conservative" => SimConfig::conservative(bits),
+        other => anyhow::bail!("unknown preset `{other}`"),
+    };
+    cfg.ks = vec![args.flag_usize("k", 1)?.max(1)];
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let net = nets::by_name(&args.flag("network", "pimnet"))?;
+    let cfg = sim_config_from(args)?;
+    let r = simulate(&net, &cfg)?;
+    let gpu = GpuModel::titan_xp();
+
+    let mut t = Table::new(&[
+        "layer", "k", "waves", "multiply", "logic", "restage", "transfer", "stage",
+    ])
+    .aligns(&[
+        Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        Align::Right, Align::Right, Align::Right,
+    ]);
+    for l in &r.layers {
+        t.row(&[
+            l.name.clone(),
+            l.mapping.k.to_string(),
+            l.mapping.waves.to_string(),
+            format!("{:.1}us", l.multiply_ns / 1e3),
+            format!("{:.1}us", l.logic_ns / 1e3),
+            format!("{:.1}us", l.restage_ns / 1e3),
+            format!("{:.1}us", l.transfer_ns / 1e3),
+            format!("{:.1}us", l.stage_ns() / 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "latency/image: {:.3} ms   steady-state: {:.3} ms/image ({:.1} img/s)",
+        r.latency_ns() / 1e6,
+        r.pipeline.cycle_ns / 1e6,
+        r.throughput_ips()
+    );
+    println!(
+        "bottleneck stage: {}   total AAPs/image: {}   DRAM energy: {:.2} uJ",
+        r.pipeline.stages[r.pipeline.bottleneck].name,
+        si(r.total_aaps as f64),
+        r.total_dram_energy_nj / 1e3
+    );
+    println!(
+        "ideal-GPU ({}) time: {:.3} ms  →  PIM speedup: {:.2}x",
+        gpu.name,
+        gpu.network_time_s(&net, 4) * 1e3,
+        r.speedup_vs(&gpu, &net)
+    );
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let net = nets::by_name(&args.flag("network", "pimnet"))?;
+    let cfg = sim_config_from(args)?;
+    let mc = MapConfig {
+        geometry: cfg.geometry.clone(),
+        n_bits: cfg.n_bits,
+        ks: cfg.ks.clone(),
+    };
+    let m = map_network(&net, &mc)?;
+    let mut t = Table::new(&[
+        "layer", "mac_size", "macs", "k", "sub/grp(ideal)", "sub(used)", "waves",
+        "util%", "footprint",
+    ])
+    .aligns(&[
+        Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        Align::Right, Align::Right, Align::Right, Align::Right,
+    ]);
+    for l in &m.layers {
+        t.row(&[
+            l.name.clone(),
+            l.mac_size.to_string(),
+            l.macs_total.to_string(),
+            l.k.to_string(),
+            l.subarrays_ideal.to_string(),
+            l.subarrays_used.to_string(),
+            l.waves.to_string(),
+            format!("{:.1}", l.utilization * 100.0),
+            format!("{}b", si(l.footprint_bits as f64)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "banks: {} (+{} residual reserves), mean utilization {:.1}%, resident: {}",
+        m.layers.len(),
+        m.residual_banks,
+        m.mean_utilization() * 100.0,
+        m.fully_resident()
+    );
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    use crate::mapping::optimizer::{plan_ks, Objective};
+    let net = nets::by_name(&args.flag("network", "pimnet"))?;
+    let cfg = sim_config_from(args)?;
+    let objective = if args.flags.contains_key("balanced") {
+        Objective::Balanced
+    } else {
+        Objective::MinResidentK
+    };
+    let plan = plan_ks(&net, &cfg.geometry, cfg.n_bits, objective);
+
+    let mut t = Table::new(&["layer", "k", "resident"])
+        .aligns(&[Align::Left, Align::Right, Align::Right]);
+    for (l, &k) in net.layers.iter().zip(&plan.ks) {
+        t.row(&[
+            l.name.clone(),
+            k.to_string(),
+            (!plan.overflow_layers.contains(&l.name)).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    if !plan.overflow_layers.is_empty() {
+        println!(
+            "overflow (no resident k exists — weights exceed bank capacity): {:?}",
+            plan.overflow_layers
+        );
+    }
+    // Simulate the plan vs the naive k=1 vector.
+    let naive = simulate(&net, &cfg)?;
+    let planned = simulate(&net, &cfg.clone().with_ks(plan.ks.clone()))?;
+    println!(
+        "naive k=1: {:.3} ms/img   planned: {:.3} ms/img ({:+.1}%)",
+        naive.pipeline.cycle_ns / 1e6,
+        planned.pipeline.cycle_ns / 1e6,
+        100.0 * (planned.pipeline.cycle_ns - naive.pipeline.cycle_ns)
+            / naive.pipeline.cycle_ns
+    );
+    Ok(())
+}
+
+fn cmd_roofline(args: &Args) -> Result<()> {
+    let net = nets::by_name(&args.flag("network", "vgg16"))?;
+    let gpu = GpuModel::titan_xp();
+    let mut t = Table::new(&["layer", "FLOP/byte", "attainable GF/s", "bound"])
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Left]);
+    for p in roofline_points(&gpu, &net, 4) {
+        t.row(&[
+            p.layer.clone(),
+            format!("{:.2}", p.op_intensity),
+            format!("{:.1}", p.attainable_gflops),
+            if p.memory_bound { "memory".into() } else { "compute".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{}: peak {} FLOP/s, BW {} B/s, ridge at {:.1} FLOP/byte",
+        gpu.name,
+        si(gpu.peak_flops),
+        si(gpu.mem_bw),
+        gpu.ridge_intensity()
+    );
+    Ok(())
+}
+
+fn cmd_circuit(args: &Args) -> Result<()> {
+    let p = CircuitParams::cmos65nm();
+    println!("== AND transients (Fig 14) ==");
+    for inputs in AndInputs::all_cases() {
+        let (wf, _) = simulate_and(&p, inputs, None);
+        println!(
+            "case ({}) -> BL={:.3}V S1={:.3}V S2={:.3}V",
+            inputs.label(),
+            wf.final_value("BL").unwrap(),
+            wf.final_value("S1").unwrap(),
+            wf.final_value("S2").unwrap()
+        );
+    }
+    let samples = args.flag_usize("samples", 100_000)?;
+    println!("\n== Monte Carlo, {samples} samples/case (Fig 15) ==");
+    let mc = run_monte_carlo(&p, samples, 0xC0FFEE);
+    for (inputs, s) in &mc.case_summaries {
+        println!(
+            "case ({}): BL mean {:.4} V  σ {:.4} V",
+            inputs.label(),
+            s.mean(),
+            s.std()
+        );
+    }
+    println!(
+        "sense margin: {:.1} mV mean ({} failures, rate {:.2e})",
+        mc.sense_margin_v * 1e3,
+        mc.failures,
+        mc.failure_rate()
+    );
+    Ok(())
+}
+
+fn cmd_tables() -> Result<()> {
+    println!("TABLE I: Area Breakdown\n{}", crate::energy::render_area_table(4096));
+    println!("TABLE II: Power Breakdown\n{}", crate::energy::render_power_table(4096));
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("usage: pim-dram config <file.toml>")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let e = config::load_experiment(&text)?;
+    let r = simulate(&e.network, &e.sim)?;
+    let gpu = GpuModel::titan_xp();
+    println!(
+        "{}: latency {:.3} ms, {:.1} img/s, makespan({} imgs) {:.3} ms, speedup {:.2}x",
+        e.network.name,
+        r.latency_ns() / 1e6,
+        r.throughput_ips(),
+        e.images,
+        r.pipeline.makespan_ns(e.images) / 1e6,
+        r.speedup_vs(&gpu, &e.network)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::{InferenceServer, ServerConfig};
+    use crate::runtime::{artifacts_dir, ArtifactManifest, DigitsDataset};
+
+    anyhow::ensure!(
+        crate::runtime::artifacts_available(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let dir = artifacts_dir();
+    let manifest = ArtifactManifest::load(&dir)?;
+    let ds = DigitsDataset::load(&dir, &manifest)?;
+    let n = args.flag_usize("images", 64)?.min(ds.count);
+
+    println!("starting inference server over {} ...", dir.display());
+    let server = InferenceServer::start(ServerConfig::default())?;
+    let mut correct = 0;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let (img, lbl) = ds.batch(i, 1);
+        let resp = server.classify(img)?;
+        if resp.class == lbl[0] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n} images in {:.1} ms ({:.1} img/s), accuracy {:.1}% \
+         (quantized reference: {:.1}%)",
+        dt.as_secs_f64() * 1e3,
+        n as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / n as f64,
+        100.0 * manifest.quant_test_accuracy
+    );
+    println!("{}", server.metrics().report());
+    server.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse("simulate --network vgg16 --bits 4 extra --verbose");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.flag("network", ""), "vgg16");
+        assert_eq!(a.flag_usize("bits", 8).unwrap(), 4);
+        assert_eq!(a.flag("verbose", "false"), "true");
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn bad_int_flag_errors() {
+        let a = parse("simulate --bits abc");
+        assert!(a.flag_usize("bits", 8).is_err());
+    }
+
+    #[test]
+    fn subcommands_run() {
+        for cmd in [
+            "simulate --network pimnet",
+            "simulate --network alexnet --preset conservative --bits 4 --k 2",
+            "map --network resnet18",
+            "optimize --network pimnet --preset conservative",
+            "optimize --network alexnet --preset conservative --balanced",
+            "roofline --network vgg16",
+            "circuit --samples 2000",
+            "tables",
+            "help",
+        ] {
+            let v: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+            run(&v).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let v = vec!["frobnicate".to_string()];
+        assert!(run(&v).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Configuration system (DESIGN.md S16): a TOML-subset parser plus the
+//! typed experiment configuration the CLI and benches consume.
+//!
+//! A config file looks like:
+//!
+//! ```toml
+//! preset = "paper_favorable"   # or "conservative"
+//! network = "vgg16"
+//! n_bits = 8
+//!
+//! [map]
+//! ks = [1, 1, 1, 1]            # per-layer parallelism (or single value)
+//!
+//! [dram]
+//! subarrays_per_bank = 32
+//! cols = 4096
+//! internal_bus_bits = 64
+//!
+//! [arch]
+//! adder_inputs = 4096
+//! tree_per_subarray = false
+//! ```
+//!
+//! Every key is optional; unspecified keys inherit from the preset.
+
+pub mod toml;
+
+use crate::sim::SimConfig;
+use crate::workloads::{nets, Network};
+
+pub use toml::{Toml, TomlError, Value};
+
+/// A fully-resolved experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub network: Network,
+    pub sim: SimConfig,
+    /// Batch of images for makespan reporting.
+    pub images: usize,
+}
+
+/// Resolve an experiment from config text.
+pub fn load_experiment(text: &str) -> anyhow::Result<Experiment> {
+    let t = Toml::parse(text)?;
+    let preset = t.get_str("preset", "paper_favorable");
+    let n_bits = t.get_usize("n_bits", 8);
+    let mut sim = match preset {
+        "paper_favorable" => SimConfig::paper_favorable(n_bits),
+        "conservative" => SimConfig::conservative(n_bits),
+        other => anyhow::bail!("unknown preset `{other}`"),
+    };
+
+    let network = nets::by_name(t.get_str("network", "pimnet"))?;
+
+    if let Some(ks) = t.get("map.ks").and_then(Value::as_int_array) {
+        anyhow::ensure!(
+            ks.len() == 1 || ks.len() == network.layers.len(),
+            "map.ks must have 1 or {} entries, got {}",
+            network.layers.len(),
+            ks.len()
+        );
+        sim.ks = ks.iter().map(|&v| v.max(1) as usize).collect();
+    }
+
+    sim.geometry.subarrays_per_bank =
+        t.get_usize("dram.subarrays_per_bank", sim.geometry.subarrays_per_bank);
+    sim.geometry.cols = t.get_usize("dram.cols", sim.geometry.cols);
+    sim.geometry.rows = t.get_usize("dram.rows", sim.geometry.rows);
+    sim.timing.internal_bus_bits =
+        t.get_usize("dram.internal_bus_bits", sim.timing.internal_bus_bits);
+    sim.adder_inputs = t.get_usize("arch.adder_inputs", sim.adder_inputs);
+    sim.tree_per_subarray =
+        t.get_bool("arch.tree_per_subarray", sim.tree_per_subarray);
+    sim.geometry.validate()?;
+    anyhow::ensure!(
+        sim.adder_inputs.is_power_of_two(),
+        "arch.adder_inputs must be a power of two"
+    );
+
+    Ok(Experiment {
+        network,
+        sim,
+        images: t.get_usize("images", 64),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_resolve() {
+        let e = load_experiment("").unwrap();
+        assert_eq!(e.network.name, "pimnet");
+        assert_eq!(e.sim.n_bits, 8);
+        assert!(e.sim.tree_per_subarray); // paper_favorable default
+    }
+
+    #[test]
+    fn preset_and_overrides() {
+        let e = load_experiment(
+            "preset = \"conservative\"\nnetwork = \"alexnet\"\nn_bits = 4\n\
+             [map]\nks = [2]\n[arch]\nadder_inputs = 1024\n",
+        )
+        .unwrap();
+        assert_eq!(e.network.name, "alexnet");
+        assert_eq!(e.sim.n_bits, 4);
+        assert_eq!(e.sim.ks, vec![2]);
+        assert_eq!(e.sim.adder_inputs, 1024);
+        assert!(!e.sim.tree_per_subarray);
+    }
+
+    #[test]
+    fn per_layer_ks_length_checked() {
+        let err = load_experiment(
+            "network = \"alexnet\"\n[map]\nks = [1, 2]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("map.ks"));
+    }
+
+    #[test]
+    fn bad_preset_rejected() {
+        assert!(load_experiment("preset = \"nope\"").is_err());
+    }
+
+    #[test]
+    fn geometry_validated() {
+        let err =
+            load_experiment("[dram]\nrows = 4\n").unwrap_err();
+        assert!(err.to_string().contains("rows"));
+    }
+
+    #[test]
+    fn experiment_simulates() {
+        let e = load_experiment("network = \"pimnet\"").unwrap();
+        let r = crate::sim::simulate(&e.network, &e.sim).unwrap();
+        assert!(r.throughput_ips() > 0.0);
+    }
+}

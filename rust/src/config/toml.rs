@@ -1,0 +1,243 @@
+//! Minimal TOML-subset parser (serde/toml unavailable offline).
+//!
+//! Supports what the experiment configs need: `[section]` headers,
+//! `key = value` with integer, float, boolean, string and flat-array
+//! values, `#` comments, and blank lines. Keys are namespaced as
+//! `section.key` in the resulting map.
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    IntArray(Vec<i64>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_array(&self) -> Option<&[i64]> {
+        match self {
+            Value::IntArray(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: flat map of `section.key` → value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Toml {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.into() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?;
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err("expected `key = value`"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            entries.insert(full_key, value);
+        }
+        Ok(Toml { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let items = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse::<i64>().map_err(|_| format!("bad int `{t}`")))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::IntArray(items));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig16"
+[dram]
+cols = 4096        # per subarray
+aap_scale = 1.5
+wide_bus = true
+[map]
+ks = [1, 2, 4]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        assert_eq!(t.get_str("name", ""), "fig16");
+        assert_eq!(t.get_usize("dram.cols", 0), 4096);
+        assert_eq!(t.get_f64("dram.aap_scale", 0.0), 1.5);
+        assert!(t.get_bool("dram.wide_bus", false));
+        assert_eq!(
+            t.get("map.ks").unwrap().as_int_array().unwrap(),
+            &[1, 2, 4]
+        );
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let t = Toml::parse("").unwrap();
+        assert_eq!(t.get_usize("nope", 7), 7);
+        assert_eq!(t.get_str("nope", "d"), "d");
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let t = Toml::parse("k = \"a#b\"").unwrap();
+        assert_eq!(t.get_str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Toml::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err2 = Toml::parse("[unterminated\n").unwrap_err();
+        assert_eq!(err2.line, 1);
+        assert!(Toml::parse("k = [1, x]").is_err());
+        assert!(Toml::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn int_parses_before_float() {
+        let t = Toml::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(t.get("a"), Some(&Value::Int(3)));
+        assert_eq!(t.get("b"), Some(&Value::Float(3.5)));
+        // Ints coerce to float on request.
+        assert_eq!(t.get_f64("a", 0.0), 3.0);
+    }
+}

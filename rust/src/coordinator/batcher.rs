@@ -1,0 +1,82 @@
+//! Dynamic batcher: the PJRT artifacts are compiled for a fixed batch B,
+//! so the coordinator groups requests into full batches, padding the tail
+//! with zero images (results for padding lanes are dropped).
+
+use std::collections::VecDeque;
+
+/// Accumulates items into fixed-size batches.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    batch_size: usize,
+    queue: VecDeque<T>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        Batcher { batch_size, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push_back(item);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Take a full batch if available.
+    pub fn pop_full(&mut self) -> Option<Vec<T>> {
+        if self.queue.len() >= self.batch_size {
+            Some(self.queue.drain(..self.batch_size).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Take whatever is queued (≤ batch_size items) — used on flush when
+    /// the batching window expires.
+    pub fn pop_partial(&mut self) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            let n = self.queue.len().min(self.batch_size);
+            Some(self.queue.drain(..n).collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_batches_fifo() {
+        let mut b = Batcher::new(3);
+        for i in 0..7 {
+            b.push(i);
+        }
+        assert_eq!(b.pop_full(), Some(vec![0, 1, 2]));
+        assert_eq!(b.pop_full(), Some(vec![3, 4, 5]));
+        assert_eq!(b.pop_full(), None);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn partial_flush() {
+        let mut b = Batcher::new(4);
+        b.push("a");
+        assert_eq!(b.pop_partial(), Some(vec!["a"]));
+        assert_eq!(b.pop_partial(), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_rejected() {
+        Batcher::<u8>::new(0);
+    }
+}

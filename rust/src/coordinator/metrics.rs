@@ -1,0 +1,98 @@
+//! Serving metrics: request counts, latency distribution, batch fill.
+
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// Mutable metrics accumulator (lives behind the server's mutex).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_lanes: u64,
+    latencies_us: Summary,
+    batch_exec_us: Summary,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&mut self, latency: Duration) {
+        self.requests += 1;
+        self.latencies_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_batch(&mut self, exec: Duration, fill: usize, batch_size: usize) {
+        self.batches += 1;
+        self.padded_lanes += (batch_size - fill) as u64;
+        self.batch_exec_us.push(exec.as_secs_f64() * 1e6);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests,
+            batches: self.batches,
+            padded_lanes: self.padded_lanes,
+            latency_p50_us: self.latencies_us.percentile(50.0),
+            latency_p99_us: self.latencies_us.percentile(99.0),
+            latency_mean_us: self.latencies_us.mean(),
+            batch_exec_mean_us: self.batch_exec_us.mean(),
+        }
+    }
+}
+
+/// Immutable metrics view returned to clients.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_lanes: u64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_mean_us: f64,
+    pub batch_exec_mean_us: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} padded={} latency(mean/p50/p99)=\
+             {:.0}/{:.0}/{:.0} µs batch_exec_mean={:.0} µs",
+            self.requests,
+            self.batches,
+            self.padded_lanes,
+            self.latency_mean_us,
+            self.latency_p50_us,
+            self.latency_p99_us,
+            self.batch_exec_mean_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_snapshots() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(100));
+        m.record_request(Duration::from_micros(300));
+        m.record_batch(Duration::from_micros(250), 6, 8);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.padded_lanes, 2);
+        assert!((s.latency_mean_us - 200.0).abs() < 1e-9);
+        assert!(s.report().contains("requests=2"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_nan_latency() {
+        let s = Metrics::new().snapshot();
+        assert!(s.latency_mean_us.is_nan());
+        assert_eq!(s.requests, 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator (DESIGN.md S15): the serving front of PIM-DRAM.
+//!
+//! The paper's system contribution is the architecture + mapping +
+//! dataflow; the coordinator operationalizes it as a request loop: an
+//! inference server owns the PJRT executables (one per bank/layer),
+//! batches incoming requests to the artifact batch size, executes the
+//! bank chain, and reports both measured wall-clock latency and the PIM
+//! timing model's per-image cost for the same work.
+//!
+//! PJRT handles are not `Send`, so the executor lives on a dedicated
+//! worker thread; clients talk to it over channels (std::sync::mpsc — the
+//! offline registry has no tokio, and a simulator coordinator needs no
+//! async I/O).
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{Device, Policy, Router};
+pub use server::{ClassifyResponse, InferenceServer, ServerConfig};

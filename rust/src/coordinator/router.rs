@@ -1,0 +1,187 @@
+//! Multi-device request router: when several PIM-DRAM modules (DIMMs) are
+//! attached, the coordinator load-balances inference streams across them —
+//! the vLLM-router-shaped piece of the L3 layer. Devices here are
+//! abstract workers with a known per-image service time (from the timing
+//! simulator) and a queue depth; routing is least-loaded with
+//! power-of-two-choices sampling for O(1) decisions at scale.
+
+use crate::util::rng::Rng;
+
+/// One attached PIM device (e.g. a DIMM running a pipelined network).
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    /// Steady-state service time per image (ns) from the simulator.
+    pub service_ns: f64,
+    /// Outstanding images (queue + in flight).
+    pub in_flight: u64,
+}
+
+impl Device {
+    pub fn new(name: &str, service_ns: f64) -> Self {
+        Device { name: name.into(), service_ns, in_flight: 0 }
+    }
+
+    /// Expected completion delay for a newly-enqueued image.
+    pub fn backlog_ns(&self) -> f64 {
+        (self.in_flight + 1) as f64 * self.service_ns
+    }
+}
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    /// Pick the smaller backlog of two uniformly-sampled devices.
+    TwoChoices,
+    /// Scan all devices for the minimum backlog.
+    LeastLoaded,
+}
+
+/// The router: owns device states and dispatch accounting.
+#[derive(Debug)]
+pub struct Router {
+    devices: Vec<Device>,
+    policy: Policy,
+    rr_next: usize,
+    rng: Rng,
+    pub dispatched: u64,
+}
+
+impl Router {
+    pub fn new(devices: Vec<Device>, policy: Policy, seed: u64) -> Self {
+        assert!(!devices.is_empty(), "router needs at least one device");
+        Router { devices, policy, rr_next: 0, rng: Rng::new(seed), dispatched: 0 }
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    /// Route one image; returns the chosen device index.
+    pub fn route(&mut self) -> usize {
+        let idx = match self.policy {
+            Policy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.devices.len();
+                i
+            }
+            Policy::TwoChoices => {
+                let a = self.rng.below(self.devices.len());
+                let b = self.rng.below(self.devices.len());
+                if self.devices[a].backlog_ns() <= self.devices[b].backlog_ns() {
+                    a
+                } else {
+                    b
+                }
+            }
+            Policy::LeastLoaded => self
+                .devices
+                .iter()
+                .enumerate()
+                .min_by(|x, y| {
+                    x.1.backlog_ns().partial_cmp(&y.1.backlog_ns()).unwrap()
+                })
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.devices[idx].in_flight += 1;
+        self.dispatched += 1;
+        idx
+    }
+
+    /// Mark one image completed on `device`.
+    pub fn complete(&mut self, device: usize) {
+        let d = &mut self.devices[device];
+        assert!(d.in_flight > 0, "completion without dispatch on {}", d.name);
+        d.in_flight -= 1;
+    }
+
+    /// Simulate dispatching `images` with completions as devices drain
+    /// (discrete, service-time ordered); returns the makespan in ns.
+    pub fn simulate_makespan(&mut self, images: u64) -> f64 {
+        let mut finish: Vec<f64> = vec![0.0; self.devices.len()];
+        for _ in 0..images {
+            let idx = self.route();
+            finish[idx] += self.devices[idx].service_ns;
+            self.complete(idx);
+        }
+        finish.into_iter().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+
+    fn devs(times: &[f64]) -> Vec<Device> {
+        times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Device::new(&format!("dimm{i}"), t))
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(devs(&[1.0, 1.0, 1.0]), Policy::RoundRobin, 0);
+        assert_eq!((0..6).map(|_| r.route()).collect::<Vec<_>>(), vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_fast_device() {
+        let mut r = Router::new(devs(&[100.0, 1.0]), Policy::LeastLoaded, 0);
+        let mut counts = [0u64; 2];
+        for _ in 0..100 {
+            let i = r.route();
+            counts[i] += 1;
+        }
+        assert!(counts[1] > counts[0] * 5, "{counts:?}");
+    }
+
+    #[test]
+    fn heterogeneous_makespan_beats_round_robin() {
+        // A 4x-faster device should absorb proportionally more load.
+        let lb = Router::new(devs(&[4.0, 1.0]), Policy::LeastLoaded, 0)
+            .simulate_makespan(1000);
+        let rr = Router::new(devs(&[4.0, 1.0]), Policy::RoundRobin, 0)
+            .simulate_makespan(1000);
+        assert!(lb < rr, "least-loaded {lb} vs round-robin {rr}");
+    }
+
+    #[test]
+    fn completion_without_dispatch_panics() {
+        let mut r = Router::new(devs(&[1.0]), Policy::RoundRobin, 0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            r.complete(0);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn two_choices_balances_property() {
+        crate::testutil::check(10, |rng| {
+            let n = 2 + rng.below(6);
+            let mut r = Router::new(
+                devs(&vec![1.0; n]),
+                Policy::TwoChoices,
+                rng.next_u64(),
+            );
+            for _ in 0..200 {
+                r.route();
+            }
+            let max = r.devices().iter().map(|d| d.in_flight).max().unwrap();
+            let min = r.devices().iter().map(|d| d.in_flight).min().unwrap();
+            // Two-choices keeps the imbalance logarithmic; generous bound.
+            prop_assert!(max - min <= 200 / n as u64 / 2 + 8, "max={max} min={min}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one device")]
+    fn empty_router_rejected() {
+        Router::new(vec![], Policy::RoundRobin, 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! The inference server: a worker thread owns the PJRT executor (PJRT
+//! handles are not Send); clients submit requests over a channel and block
+//! on per-request response channels. Requests are batched to the artifact
+//! batch size within a bounded window.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::Batcher;
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::runtime::{artifacts_dir, PimNetExecutor, Runtime};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts: PathBuf,
+    /// Max time a request waits for the batch to fill before a partial
+    /// batch is flushed.
+    pub batch_window: Duration,
+    /// Use the per-layer chain (true, the bank pipeline) or the fused
+    /// full-model module (false).
+    pub per_layer_chain: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifacts: artifacts_dir(),
+            batch_window: Duration::from_millis(5),
+            per_layer_chain: true,
+        }
+    }
+}
+
+/// Result of one classify request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassifyResponse {
+    pub class: usize,
+    pub logits: Vec<f32>,
+    /// End-to-end wall-clock latency of the request (queue + execute).
+    pub latency: Duration,
+}
+
+struct Request {
+    image: Vec<i32>,
+    enqueued: Instant,
+    resp: Sender<Result<ClassifyResponse>>,
+}
+
+enum Control {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle to the running server.
+pub struct InferenceServer {
+    tx: SyncSender<Control>,
+    metrics: Arc<Mutex<Metrics>>,
+    worker: Option<JoinHandle<()>>,
+    image_elems: usize,
+    batch: usize,
+}
+
+impl InferenceServer {
+    /// Start the worker and wait until the artifacts are compiled.
+    pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
+        let (tx, rx) = mpsc::sync_channel::<Control>(1024);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let metrics_worker = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+
+        let worker = std::thread::Builder::new()
+            .name("pim-serve".into())
+            .spawn(move || {
+                worker_main(cfg, rx, metrics_worker, ready_tx);
+            })
+            .context("spawning server worker")?;
+
+        let (image_elems, batch) = ready_rx
+            .recv()
+            .context("server worker died during startup")??;
+        Ok(InferenceServer {
+            tx,
+            metrics,
+            worker: Some(worker),
+            image_elems,
+            batch,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Blocking single-image classification.
+    pub fn classify(&self, image: Vec<i32>) -> Result<ClassifyResponse> {
+        anyhow::ensure!(
+            image.len() == self.image_elems,
+            "image must have {} elements, got {}",
+            self.image_elems,
+            image.len()
+        );
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(Control::Req(Request {
+                image,
+                enqueued: Instant::now(),
+                resp: resp_tx,
+            }))
+            .map_err(|_| anyhow::anyhow!("server is down"))?;
+        resp_rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    cfg: ServerConfig,
+    rx: Receiver<Control>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready: Sender<Result<(usize, usize)>>,
+) {
+    // Compile everything on the worker (PJRT handles stay on this thread).
+    let exec = match Runtime::cpu()
+        .and_then(|rt| PimNetExecutor::load(&rt, &cfg.artifacts))
+    {
+        Ok(e) => {
+            let elems: usize =
+                e.manifest.layers[0].in_shape.iter().skip(1).product();
+            let _ = ready.send(Ok((elems, e.batch_size())));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let batch_size = exec.batch_size();
+    let image_elems: usize =
+        exec.manifest.layers[0].in_shape.iter().skip(1).product();
+    let mut batcher: Batcher<Request> = Batcher::new(batch_size);
+    let mut open = true;
+
+    while open {
+        // Fill the batch or time out on the window.
+        let deadline = Instant::now() + cfg.batch_window;
+        while batcher.pending() < batch_size {
+            let now = Instant::now();
+            let timeout = deadline.saturating_duration_since(now);
+            match rx.recv_timeout(timeout) {
+                Ok(Control::Req(r)) => batcher.push(r),
+                Ok(Control::Shutdown) => {
+                    open = false;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+            if batcher.pending() == 0 {
+                // Nothing queued: keep waiting without burning the window.
+                continue;
+            }
+        }
+
+        let Some(reqs) = batcher
+            .pop_full()
+            .or_else(|| batcher.pop_partial())
+        else {
+            continue;
+        };
+
+        // Pad to the compiled batch size.
+        let fill = reqs.len();
+        let mut images = Vec::with_capacity(batch_size * image_elems);
+        for r in &reqs {
+            images.extend_from_slice(&r.image);
+        }
+        images.resize(batch_size * image_elems, 0);
+
+        let t0 = Instant::now();
+        let result = if cfg.per_layer_chain {
+            exec.run_chain(images)
+        } else {
+            exec.run_full(images)
+        };
+        let exec_time = t0.elapsed();
+
+        match result.and_then(|logits| {
+            let classes = PimNetExecutor::classify(&logits)?;
+            let flat = logits.as_f32()?.to_vec();
+            let ncls = flat.len() / batch_size;
+            Ok((classes, flat, ncls))
+        }) {
+            Ok((classes, flat, ncls)) => {
+                let mut m = metrics.lock().unwrap();
+                m.record_batch(exec_time, fill, batch_size);
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let latency = r.enqueued.elapsed();
+                    m.record_request(latency);
+                    let _ = r.resp.send(Ok(ClassifyResponse {
+                        class: classes[i],
+                        logits: flat[i * ncls..(i + 1) * ncls].to_vec(),
+                        latency,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch execution failed: {e:#}");
+                for r in reqs {
+                    let _ = r.resp.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+// Integration tests (need artifacts) live in rust/tests/serve_integration.rs.

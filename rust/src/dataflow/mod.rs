@@ -1,0 +1,10 @@
+//! Dataflow substrate (§IV-B, DESIGN.md S11): inter-bank transfers, the
+//! layer-per-bank image pipeline, and residual-connection handling.
+
+pub mod pipeline;
+pub mod residual;
+pub mod transfer;
+
+pub use pipeline::{schedule, PipelineReport, StageCost};
+pub use residual::residual_cost_ns;
+pub use transfer::{transfer_ns, transfer_rows};

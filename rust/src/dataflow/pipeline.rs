@@ -1,0 +1,156 @@
+//! The layer-per-bank image pipeline (§IV-B): every bank works on a
+//! different image simultaneously; inter-bank transfers serialize on the
+//! shared internal bus between compute phases.
+
+/// Cost of one pipeline stage (= one bank = one layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageCost {
+    pub name: String,
+    /// In-bank compute time per image (multiply rounds + peripheral logic
+    /// + restaging + residual adds attributed to this stage).
+    pub compute_ns: f64,
+    /// Outbound transfer to the next bank (serialized bus).
+    pub transfer_ns: f64,
+}
+
+/// Steady-state pipeline characteristics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineReport {
+    pub stages: Vec<StageCost>,
+    /// Single-image end-to-end latency (fill): Σ (compute + transfer).
+    pub latency_ns: f64,
+    /// Steady-state initiation interval: banks compute concurrently, so
+    /// the compute term is the slowest stage, but transfers share one bus
+    /// and serialize (§IV-B "banks transfer data sequentially").
+    pub cycle_ns: f64,
+    /// Index of the bottleneck (slowest compute) stage.
+    pub bottleneck: usize,
+}
+
+impl PipelineReport {
+    /// Images per second in steady state.
+    pub fn throughput_ips(&self) -> f64 {
+        1e9 / self.cycle_ns
+    }
+
+    /// Total time to push `images` through (fill + steady drains).
+    pub fn makespan_ns(&self, images: usize) -> f64 {
+        if images == 0 {
+            return 0.0;
+        }
+        self.latency_ns + (images as f64 - 1.0) * self.cycle_ns
+    }
+}
+
+/// Build the pipeline report from per-stage costs.
+///
+/// `overlapped_transfers = false`: one shared internal bus, every
+/// inter-bank copy serializes between compute phases (conservative) —
+/// `cycle = max(compute) + Σ transfer`. `true`: adjacent banks have
+/// dedicated links (LISA-style, the paper-favorable reading of §IV-B) and
+/// a stage's outbound copy overlaps other stages' compute —
+/// `cycle = max(compute + transfer)`.
+pub fn schedule(stages: Vec<StageCost>, overlapped_transfers: bool) -> PipelineReport {
+    assert!(!stages.is_empty(), "pipeline needs at least one stage");
+    let latency_ns = stages.iter().map(|s| s.compute_ns + s.transfer_ns).sum();
+    let cycle_ns = if overlapped_transfers {
+        stages
+            .iter()
+            .map(|s| s.compute_ns + s.transfer_ns)
+            .fold(f64::NEG_INFINITY, f64::max)
+    } else {
+        let max_compute = stages
+            .iter()
+            .map(|s| s.compute_ns)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let total_transfer: f64 = stages.iter().map(|s| s.transfer_ns).sum();
+        max_compute + total_transfer
+    };
+    let bottleneck = stages
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.compute_ns.partial_cmp(&b.1.compute_ns).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    PipelineReport { latency_ns, cycle_ns, bottleneck, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(name: &str, c: f64, t: f64) -> StageCost {
+        StageCost { name: name.into(), compute_ns: c, transfer_ns: t }
+    }
+
+    #[test]
+    fn single_stage() {
+        let r = schedule(vec![stage("a", 100.0, 10.0)], false);
+        assert_eq!(r.latency_ns, 110.0);
+        assert_eq!(r.cycle_ns, 110.0);
+        assert_eq!(r.bottleneck, 0);
+    }
+
+    #[test]
+    fn cycle_is_max_compute_plus_all_transfers() {
+        let r = schedule(
+            vec![
+                stage("a", 100.0, 5.0),
+                stage("b", 300.0, 10.0),
+                stage("c", 50.0, 5.0),
+            ],
+            false,
+        );
+        assert_eq!(r.latency_ns, 470.0);
+        assert_eq!(r.cycle_ns, 300.0 + 20.0);
+        assert_eq!(r.bottleneck, 1);
+    }
+
+    #[test]
+    fn overlapped_cycle_is_max_stage() {
+        let r = schedule(
+            vec![stage("a", 100.0, 50.0), stage("b", 120.0, 10.0)],
+            true,
+        );
+        assert_eq!(r.cycle_ns, 150.0);
+        // Overlap can only help.
+        let serial = schedule(
+            vec![stage("a", 100.0, 50.0), stage("b", 120.0, 10.0)],
+            false,
+        );
+        assert!(r.cycle_ns <= serial.cycle_ns);
+    }
+
+    #[test]
+    fn makespan_fill_plus_steady() {
+        let r = schedule(vec![stage("a", 10.0, 0.0), stage("b", 20.0, 0.0)], false);
+        assert_eq!(r.makespan_ns(1), r.latency_ns);
+        assert_eq!(r.makespan_ns(11), r.latency_ns + 10.0 * r.cycle_ns);
+        assert_eq!(r.makespan_ns(0), 0.0);
+    }
+
+    #[test]
+    fn throughput_inverse_of_cycle() {
+        let r = schedule(vec![stage("a", 1e6, 0.0)], false);
+        assert!((r.throughput_ips() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one stage")]
+    fn empty_pipeline_rejected() {
+        schedule(vec![], false);
+    }
+
+    #[test]
+    fn pipelining_beats_serial_for_multiple_images() {
+        // The whole point of the §IV-B dataflow.
+        let stages = vec![
+            stage("l1", 100.0, 1.0),
+            stage("l2", 100.0, 1.0),
+            stage("l3", 100.0, 1.0),
+        ];
+        let r = schedule(stages, false);
+        let serial = 100.0 * 3.0 + 3.0;
+        assert!(r.makespan_ns(100) < 100.0 * serial);
+    }
+}

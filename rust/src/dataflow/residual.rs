@@ -1,0 +1,64 @@
+//! Residual-connection dataflow (§IV-B, Fig 13): shortcut activations are
+//! RowClone'd to a Reserved Bank; after the main path produces its output,
+//! it is copied to the same bank, added with the in-DRAM adder [5], and
+//! forwarded to the destination bank.
+
+use crate::dram::DramTiming;
+use crate::primitives::cost::add_aaps;
+use crate::util::ceil_div;
+
+use super::transfer::transfer_ns;
+
+/// Time to execute one residual edge over `elems` n-bit activations in a
+/// reserved bank with `cols`-wide subarrays:
+/// shortcut copy-in + main copy-in + column-parallel ADD chunks + copy-out.
+pub fn residual_cost_ns(
+    elems: usize,
+    n_bits: usize,
+    cols: usize,
+    timing: &DramTiming,
+) -> f64 {
+    if elems == 0 {
+        return 0.0;
+    }
+    let copies = 3.0 * transfer_ns(elems, n_bits, cols, timing);
+    // Each cols-wide chunk adds in parallel across columns; chunks are
+    // sequential. (The sum may carry into n+1 bits; the SFU requantizes.)
+    let chunks = ceil_div(elems, cols) as f64;
+    let add = chunks * add_aaps(n_bits as u64) as f64 * timing.aap_ns();
+    copies + add
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_elems_free() {
+        let t = DramTiming::ddr3_1600();
+        assert_eq!(residual_cost_ns(0, 8, 4096, &t), 0.0);
+    }
+
+    #[test]
+    fn one_chunk_cost() {
+        let t = DramTiming::ddr3_1600();
+        let c = residual_cost_ns(4096, 8, 4096, &t);
+        let copies = 3.0 * transfer_ns(4096, 8, 4096, &t);
+        let add = 33.0 * t.aap_ns();
+        assert!((c - (copies + add)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_scales_with_elems() {
+        let t = DramTiming::ddr3_1600();
+        let small = residual_cost_ns(4096, 8, 4096, &t);
+        let big = residual_cost_ns(16 * 4096, 8, 4096, &t);
+        assert!((big / small - 16.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn add_uses_published_formula() {
+        // ResNet residual at 8 bits: 4·8+1 = 33 AAPs per column chunk.
+        assert_eq!(add_aaps(8), 33);
+    }
+}

@@ -1,0 +1,69 @@
+//! Inter-bank activation transfer (§IV-B: "the banks transfer data
+//! sequentially using RowClone to the destination banks").
+//!
+//! Activations leave a bank through the transpose unit in bit-transposed
+//! layout: `n` bit-plane rows per `cols`-wide slab, RowClone'd over the
+//! internal bus one row at a time.
+
+use crate::dram::DramTiming;
+use crate::util::ceil_div;
+
+/// DRAM rows needed to ship `values` n-bit values (transposed layout).
+pub fn transfer_rows(values: usize, n_bits: usize, cols: usize) -> usize {
+    if values == 0 {
+        return 0;
+    }
+    n_bits * ceil_div(values, cols)
+}
+
+/// Serialized transfer time in ns.
+pub fn transfer_ns(
+    values: usize,
+    n_bits: usize,
+    cols: usize,
+    timing: &DramTiming,
+) -> f64 {
+    transfer_rows(values, n_bits, cols) as f64 * timing.interbank_copy_ns(cols)
+}
+
+/// Bits moved (for bus-energy accounting).
+pub fn transfer_bits(values: usize, n_bits: usize, cols: usize) -> u64 {
+    (transfer_rows(values, n_bits, cols) * cols) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_count_rounds_up() {
+        assert_eq!(transfer_rows(0, 8, 4096), 0);
+        assert_eq!(transfer_rows(1, 8, 4096), 8);
+        assert_eq!(transfer_rows(4096, 8, 4096), 8);
+        assert_eq!(transfer_rows(4097, 8, 4096), 16);
+    }
+
+    #[test]
+    fn time_scales_with_rows() {
+        let t = DramTiming::ddr3_1600();
+        let one_slab = transfer_ns(4096, 8, 4096, &t);
+        let two_slabs = transfer_ns(8000, 8, 4096, &t);
+        assert!((two_slabs / one_slab - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wider_bus_is_faster() {
+        let mut fast = DramTiming::ddr3_1600();
+        fast.internal_bus_bits = 4096; // row-wide links (paper-favorable)
+        let slow = DramTiming::ddr3_1600();
+        assert!(
+            transfer_ns(10_000, 8, 4096, &fast)
+                < transfer_ns(10_000, 8, 4096, &slow)
+        );
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert_eq!(transfer_bits(4096, 8, 4096), 8 * 4096);
+    }
+}

@@ -1,0 +1,166 @@
+//! DRAM command accounting: the primitives log every operation here and the
+//! timing model prices the totals. Counters (not a full trace) keep the
+//! simulator hot path allocation-free; an optional bounded trace ring is
+//! available for debugging.
+
+use super::timing::DramTiming;
+
+/// A DRAM-level operation issued by the PIM primitives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Command {
+    /// ACTIVATE-ACTIVATE-PRECHARGE compound op with `rows` simultaneously
+    /// activated rows in the second activation (1 = copy, 3 = majority-3,
+    /// 5 = majority-5).
+    Aap { rows: u8 },
+    /// Plain row activate + precharge (read/write access).
+    RowCycle,
+    /// Intra-subarray RowClone copy (priced as one AAP).
+    RowCloneIntra,
+    /// Inter-bank RowClone of one row over the internal bus.
+    RowCloneInter { row_bits: u32 },
+}
+
+/// Aggregated command counts + derived time/energy.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommandStats {
+    pub aap_single: u64,
+    pub aap_triple: u64,
+    pub aap_quint: u64,
+    pub row_cycles: u64,
+    pub rowclone_intra: u64,
+    pub rowclone_inter: u64,
+    pub rowclone_inter_bits: u64,
+}
+
+impl CommandStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, cmd: Command) {
+        match cmd {
+            Command::Aap { rows: 1 } => self.aap_single += 1,
+            Command::Aap { rows: 3 } => self.aap_triple += 1,
+            Command::Aap { rows: 5 } => self.aap_quint += 1,
+            Command::Aap { rows } => {
+                debug_assert!(false, "unexpected AAP row count {rows}");
+                self.aap_single += 1;
+            }
+            Command::RowCycle => self.row_cycles += 1,
+            Command::RowCloneIntra => self.rowclone_intra += 1,
+            Command::RowCloneInter { row_bits } => {
+                self.rowclone_inter += 1;
+                self.rowclone_inter_bits += row_bits as u64;
+            }
+        }
+    }
+
+    /// Total AAP-class operations (what the paper's formulas count).
+    pub fn total_aaps(&self) -> u64 {
+        self.aap_single + self.aap_triple + self.aap_quint + self.rowclone_intra
+    }
+
+    /// Latency in nanoseconds under `timing`, assuming the commands of one
+    /// stats block are serialized (one subarray's command stream).
+    pub fn latency_ns(&self, timing: &DramTiming) -> f64 {
+        let aap = self.total_aaps() as f64 * timing.aap_ns();
+        let rc = self.row_cycles as f64 * timing.trc_ns();
+        let inter = if self.rowclone_inter > 0 {
+            // Bus beats + two row cycles per copied row.
+            let beats = crate::util::ceil_div(
+                self.rowclone_inter_bits as usize,
+                timing.internal_bus_bits,
+            );
+            2.0 * self.rowclone_inter as f64 * timing.trc_ns()
+                + beats as f64 * timing.tck_ns
+        } else {
+            0.0
+        };
+        aap + rc + inter
+    }
+
+    /// Energy in nanojoules under `timing`.
+    pub fn energy_nj(&self, timing: &DramTiming) -> f64 {
+        // Each AAP = two activations (the second possibly multi-row) + PRE.
+        let single = self.aap_single as f64
+            * (timing.act_pre_energy_nj + timing.multi_act_energy(1));
+        let triple = self.aap_triple as f64
+            * (timing.act_pre_energy_nj + timing.multi_act_energy(3));
+        let quint = self.aap_quint as f64
+            * (timing.act_pre_energy_nj + timing.multi_act_energy(5));
+        let rc = self.row_cycles as f64 * timing.act_pre_energy_nj;
+        let intra = self.rowclone_intra as f64 * 2.0 * timing.act_pre_energy_nj;
+        let inter = self.rowclone_inter as f64 * 2.0 * timing.act_pre_energy_nj
+            + self.rowclone_inter_bits as f64 * timing.bus_energy_pj_per_bit / 1000.0;
+        single + triple + quint + rc + intra + inter
+    }
+
+    /// Merge another stats block (e.g. per-subarray → per-bank totals).
+    pub fn merge(&mut self, other: &CommandStats) {
+        self.aap_single += other.aap_single;
+        self.aap_triple += other.aap_triple;
+        self.aap_quint += other.aap_quint;
+        self.row_cycles += other.row_cycles;
+        self.rowclone_intra += other.rowclone_intra;
+        self.rowclone_inter += other.rowclone_inter;
+        self.rowclone_inter_bits += other.rowclone_inter_bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_total() {
+        let mut s = CommandStats::new();
+        s.record(Command::Aap { rows: 1 });
+        s.record(Command::Aap { rows: 3 });
+        s.record(Command::Aap { rows: 5 });
+        s.record(Command::RowCloneIntra);
+        s.record(Command::RowCycle);
+        assert_eq!(s.total_aaps(), 4);
+        assert_eq!(s.row_cycles, 1);
+    }
+
+    #[test]
+    fn latency_counts_aaps() {
+        let t = DramTiming::ddr3_1600();
+        let mut s = CommandStats::new();
+        for _ in 0..10 {
+            s.record(Command::Aap { rows: 3 });
+        }
+        assert!((s.latency_ns(&t) - 10.0 * t.aap_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interbank_latency_includes_bus() {
+        let t = DramTiming::ddr3_1600();
+        let mut s = CommandStats::new();
+        s.record(Command::RowCloneInter { row_bits: 4096 });
+        let expect = 2.0 * t.trc_ns() + (4096 / 64) as f64 * t.tck_ns;
+        assert!((s.latency_ns(&t) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_multi_row_costs_more() {
+        let t = DramTiming::ddr3_1600();
+        let mut s1 = CommandStats::new();
+        s1.record(Command::Aap { rows: 1 });
+        let mut s5 = CommandStats::new();
+        s5.record(Command::Aap { rows: 5 });
+        assert!(s5.energy_nj(&t) > s1.energy_nj(&t));
+    }
+
+    #[test]
+    fn merge_sums_fields() {
+        let mut a = CommandStats::new();
+        a.record(Command::Aap { rows: 1 });
+        let mut b = CommandStats::new();
+        b.record(Command::Aap { rows: 3 });
+        b.record(Command::RowCloneInter { row_bits: 128 });
+        a.merge(&b);
+        assert_eq!(a.total_aaps(), 2);
+        assert_eq!(a.rowclone_inter_bits, 128);
+    }
+}

@@ -1,0 +1,160 @@
+//! DRAM organization: channels → ranks → banks → subarrays → rows × cols
+//! (paper Fig 2/3). The evaluation uses 4096×4096 subarrays (§V-B).
+
+/// Device geometry. All counts are per the level above.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DramGeometry {
+    pub channels: usize,
+    pub ranks_per_channel: usize,
+    pub banks_per_rank: usize,
+    pub subarrays_per_bank: usize,
+    /// Rows per subarray (wordlines).
+    pub rows: usize,
+    /// Columns per subarray (bitlines).
+    pub cols: usize,
+    /// Reserved compute rows per subarray (paper: 9 + intermediate rows).
+    pub compute_rows: usize,
+}
+
+impl DramGeometry {
+    /// The paper's evaluation configuration: DDR3 with 4096×4096 subarrays.
+    /// Four ranks (32 banks) — the minimum that fits ResNet18's 18 layer
+    /// banks + 8 residual reserve banks (§IV-B assumes one bank per layer;
+    /// a 2-rank module's 16 banks cannot host it — DESIGN.md §7).
+    pub fn paper_default() -> Self {
+        DramGeometry {
+            channels: 1,
+            ranks_per_channel: 4,
+            banks_per_rank: 8,
+            subarrays_per_bank: 32,
+            rows: 4096,
+            cols: 4096,
+            compute_rows: 9,
+        }
+    }
+
+    /// The configuration the paper's simulator implicitly assumes: enough
+    /// subarrays per bank that every layer's operand expansion is resident
+    /// at P1 (see DESIGN.md §7 and `mapping` module docs). Unphysical for
+    /// a DDR3 die — used to reproduce Fig 16's shape; compare with
+    /// `paper_default` via the ablation_subarray bench.
+    pub fn paper_ideal() -> Self {
+        DramGeometry {
+            subarrays_per_bank: 1 << 20,
+            ..Self::paper_default()
+        }
+    }
+
+    pub fn total_banks(&self) -> usize {
+        self.channels * self.ranks_per_channel * self.banks_per_rank
+    }
+
+    pub fn total_subarrays(&self) -> usize {
+        self.total_banks() * self.subarrays_per_bank
+    }
+
+    /// Data rows usable for operand storage in one subarray, once compute
+    /// rows and the `n-1` intermediate rows for n-bit multiply are reserved.
+    pub fn data_rows(&self, operand_bits: usize) -> usize {
+        let reserved = self.compute_rows + operand_bits.saturating_sub(1);
+        self.rows.saturating_sub(reserved)
+    }
+
+    /// Capacity of one subarray in bits (data rows only, n-bit operands).
+    pub fn subarray_data_bits(&self, operand_bits: usize) -> usize {
+        self.data_rows(operand_bits) * self.cols
+    }
+
+    /// How many operand *pairs* (activation, weight — 2n rows per pair,
+    /// §IV-B) fit stacked in one column of a subarray.
+    pub fn pairs_per_column(&self, operand_bits: usize) -> usize {
+        self.data_rows(operand_bits) / (2 * operand_bits)
+    }
+
+    /// Total device capacity in bytes (raw, ignoring compute rows).
+    pub fn capacity_bytes(&self) -> usize {
+        self.total_subarrays() * self.rows * self.cols / 8
+    }
+
+    /// Area overhead fraction of the reserved compute rows + the 3 extra
+    /// AND transistors ("three extra transistors is equivalent to three
+    /// extra rows", §III-A) — the paper claims < 1 %.
+    pub fn compute_area_overhead(&self) -> f64 {
+        (self.compute_rows + 3) as f64 / self.rows as f64
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.channels > 0, "channels must be > 0");
+        anyhow::ensure!(self.ranks_per_channel > 0, "ranks must be > 0");
+        anyhow::ensure!(self.banks_per_rank > 0, "banks must be > 0");
+        anyhow::ensure!(self.subarrays_per_bank > 0, "subarrays must be > 0");
+        anyhow::ensure!(
+            self.rows > self.compute_rows + 16,
+            "rows ({}) must exceed compute rows + headroom",
+            self.rows
+        );
+        anyhow::ensure!(self.cols >= 64, "cols ({}) too small", self.cols);
+        Ok(())
+    }
+}
+
+impl Default for DramGeometry {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_valid() {
+        let g = DramGeometry::paper_default();
+        g.validate().unwrap();
+        assert_eq!(g.total_banks(), 32);
+        assert_eq!(g.total_subarrays(), 1024);
+    }
+
+    #[test]
+    fn area_overhead_below_one_percent() {
+        // The paper's headline claim: < 1 % overhead at 4096 rows.
+        let g = DramGeometry::paper_default();
+        assert!(g.compute_area_overhead() < 0.01);
+    }
+
+    #[test]
+    fn pairs_per_column_8bit() {
+        let g = DramGeometry::paper_default();
+        // (4096 - 9 - 7) / 16 = 255 pairs per column at 8-bit.
+        assert_eq!(g.pairs_per_column(8), 255);
+    }
+
+    #[test]
+    fn data_rows_reserves_intermediates() {
+        let g = DramGeometry::paper_default();
+        assert_eq!(g.data_rows(8), 4096 - 9 - 7);
+        assert_eq!(g.data_rows(2), 4096 - 9 - 1);
+    }
+
+    #[test]
+    fn capacity() {
+        let g = DramGeometry::paper_default();
+        // 1024 subarrays × 16 Mib = 2 GiB.
+        assert_eq!(g.capacity_bytes(), 1 << 31);
+    }
+
+    #[test]
+    fn invalid_geometries_rejected() {
+        let mut g = DramGeometry::paper_default();
+        g.rows = 8;
+        assert!(g.validate().is_err());
+        let mut g2 = DramGeometry::paper_default();
+        g2.cols = 8;
+        assert!(g2.validate().is_err());
+        let mut g3 = DramGeometry::paper_default();
+        g3.channels = 0;
+        assert!(g3.validate().is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! DRAM device substrate (DESIGN.md S1): geometry, DDR3-1600 timing,
+//! command accounting, and a bit-exact functional subarray model with
+//! multi-row-activation (charge-sharing majority) semantics.
+//!
+//! Everything the paper's in-house simulator assumed about the memory is
+//! explicit here: the in-DRAM compute primitives (`crate::primitives`)
+//! drive a [`Subarray`] and log commands into [`CommandStats`]; the timing
+//! model prices those commands in nanoseconds; the architecture simulator
+//! (`crate::sim`) composes banks into the full device.
+
+pub mod command;
+pub mod geometry;
+pub mod refresh;
+pub mod subarray;
+pub mod timing;
+
+pub use command::{Command, CommandStats};
+pub use geometry::DramGeometry;
+pub use refresh::RefreshParams;
+pub use subarray::{BitRow, Subarray};
+pub use timing::DramTiming;

@@ -1,0 +1,89 @@
+//! DRAM refresh overhead model — a real-DRAM constraint the paper never
+//! mentions, needed for an honest system claim: PIM compute streams AAPs
+//! back-to-back, but every tREFI the bank must still refresh, stealing
+//! tRFC. Long multiplies are therefore stretched by the refresh duty
+//! factor, and data held in compute rows survives because every AAP is a
+//! full restore.
+
+/// Refresh parameters (DDR3-1600, 2 Gb-class die).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RefreshParams {
+    /// Average refresh interval (ns). DDR3: 7.8 µs.
+    pub trefi_ns: f64,
+    /// Refresh cycle time (ns). DDR3 2 Gb: 160 ns.
+    pub trfc_ns: f64,
+}
+
+impl RefreshParams {
+    pub fn ddr3_1600() -> Self {
+        RefreshParams { trefi_ns: 7_800.0, trfc_ns: 160.0 }
+    }
+
+    /// Fraction of time stolen by refresh.
+    pub fn duty(&self) -> f64 {
+        self.trfc_ns / self.trefi_ns
+    }
+
+    /// Stretch a busy interval by the refresh duty: the controller must
+    /// interleave `ceil(busy/tREFI)` refreshes into it.
+    pub fn stretch_ns(&self, busy_ns: f64) -> f64 {
+        if busy_ns <= 0.0 {
+            return 0.0;
+        }
+        let refreshes = (busy_ns / self.trefi_ns).ceil();
+        busy_ns + refreshes * self.trfc_ns
+    }
+
+    /// Refresh-aware effective AAP rate multiplier (≥ 1).
+    pub fn slowdown(&self) -> f64 {
+        1.0 + self.duty()
+    }
+}
+
+impl Default for RefreshParams {
+    fn default() -> Self {
+        Self::ddr3_1600()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+
+    #[test]
+    fn ddr3_duty_about_two_percent() {
+        let r = RefreshParams::ddr3_1600();
+        assert!((r.duty() - 0.0205).abs() < 0.001);
+        assert!(r.slowdown() > 1.0 && r.slowdown() < 1.05);
+    }
+
+    #[test]
+    fn stretch_adds_at_least_one_refresh() {
+        let r = RefreshParams::ddr3_1600();
+        // A short burst still crosses at most one refresh boundary.
+        assert_eq!(r.stretch_ns(1000.0), 1000.0 + 160.0);
+        // An 8-bit multiply (1592 AAPs ≈ 77.6 µs) spans ~10 tREFI.
+        let mult = 1592.0 * 48.75;
+        let stretched = r.stretch_ns(mult);
+        assert!((stretched - mult - 10.0 * 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stretch_zero_is_zero() {
+        assert_eq!(RefreshParams::ddr3_1600().stretch_ns(0.0), 0.0);
+    }
+
+    #[test]
+    fn stretch_monotone_property() {
+        crate::testutil::check(40, |rng| {
+            let r = RefreshParams::ddr3_1600();
+            let a = rng.range(0.0, 1e7);
+            let b = rng.range(0.0, 1e7);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            prop_assert!(r.stretch_ns(lo) <= r.stretch_ns(hi) + 1e-9);
+            prop_assert!(r.stretch_ns(hi) >= hi);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,425 @@
+//! Bit-exact functional model of a DRAM subarray with PIM extensions:
+//! multi-row activation (charge-sharing majority), dual-contact-cell
+//! complements, RowClone copies, and the 3-transistor AND wordline (§III-A).
+//!
+//! Rows are packed `u64` words so every operation is column-parallel, like
+//! the real array: one `maj5` call computes 4096 majority functions.
+
+/// A packed row of bits (one wordline's cells across all bitlines).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitRow {
+    words: Vec<u64>,
+    cols: usize,
+}
+
+impl BitRow {
+    pub fn zeros(cols: usize) -> Self {
+        BitRow { words: vec![0; cols.div_ceil(64)], cols }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, col: usize) -> bool {
+        debug_assert!(col < self.cols);
+        (self.words[col / 64] >> (col % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, col: usize, v: bool) {
+        debug_assert!(col < self.cols);
+        let mask = 1u64 << (col % 64);
+        if v {
+            self.words[col / 64] |= mask;
+        } else {
+            self.words[col / 64] &= !mask;
+        }
+    }
+
+    /// Build from a predicate over column indices.
+    pub fn from_fn(cols: usize, f: impl Fn(usize) -> bool) -> Self {
+        let mut row = BitRow::zeros(cols);
+        for c in 0..cols {
+            if f(c) {
+                row.set(c, true);
+            }
+        }
+        row
+    }
+
+    /// Mask of valid bits in the last word.
+    fn tail_mask(&self) -> u64 {
+        let rem = self.cols % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    /// Bitwise complement (dual-contact-cell read).
+    pub fn not(&self) -> BitRow {
+        let mut out = self.clone();
+        for w in &mut out.words {
+            *w = !*w;
+        }
+        if let Some(last) = out.words.last_mut() {
+            *last &= self.tail_mask();
+        }
+        out
+    }
+
+    pub fn and(&self, other: &BitRow) -> BitRow {
+        self.zip(other, |a, b| a & b)
+    }
+
+    pub fn or(&self, other: &BitRow) -> BitRow {
+        self.zip(other, |a, b| a | b)
+    }
+
+    pub fn xor(&self, other: &BitRow) -> BitRow {
+        self.zip(other, |a, b| a ^ b)
+    }
+
+    fn zip(&self, other: &BitRow, f: impl Fn(u64, u64) -> u64) -> BitRow {
+        assert_eq!(self.cols, other.cols, "column count mismatch");
+        BitRow {
+            words: self
+                .words
+                .iter()
+                .zip(&other.words)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+            cols: self.cols,
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fast zero test (hot path: ripple-carry early exit).
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// `self ^= other`, allocation-free (hot path).
+    #[inline]
+    pub fn xor_assign(&mut self, other: &BitRow) {
+        debug_assert_eq!(self.cols, other.cols);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// `out = self & other`, reusing `out`'s buffer (hot path).
+    #[inline]
+    pub fn and_into(&self, other: &BitRow, out: &mut BitRow) {
+        debug_assert_eq!(self.cols, other.cols);
+        debug_assert_eq!(self.cols, out.cols);
+        for ((o, a), b) in out.words.iter_mut().zip(&self.words).zip(&other.words)
+        {
+            *o = a & b;
+        }
+    }
+
+    /// Column-parallel 3-input majority (triple-row activation result).
+    pub fn maj3(a: &BitRow, b: &BitRow, c: &BitRow) -> BitRow {
+        assert!(a.cols == b.cols && b.cols == c.cols);
+        BitRow {
+            words: (0..a.words.len())
+                .map(|i| {
+                    let (x, y, z) = (a.words[i], b.words[i], c.words[i]);
+                    (x & y) | (y & z) | (x & z)
+                })
+                .collect(),
+            cols: a.cols,
+        }
+    }
+
+    /// Column-parallel 5-input majority (quintuple-row activation, Fig 4).
+    pub fn maj5(rows: [&BitRow; 5]) -> BitRow {
+        let cols = rows[0].cols;
+        assert!(rows.iter().all(|r| r.cols == cols));
+        let n_words = rows[0].words.len();
+        let mut words = vec![0u64; n_words];
+        for (i, word) in words.iter_mut().enumerate() {
+            let v: [u64; 5] = [
+                rows[0].words[i],
+                rows[1].words[i],
+                rows[2].words[i],
+                rows[3].words[i],
+                rows[4].words[i],
+            ];
+            // Bit-parallel counting via carry-save: count = sum of 5 bits,
+            // majority when count >= 3.
+            let (s01, c01) = (v[0] ^ v[1], v[0] & v[1]);
+            let (s23, c23) = (v[2] ^ v[3], v[2] & v[3]);
+            let s = s01 ^ s23 ^ v[4]; // bit 0 of count
+            let carry1 = (s01 & s23) | ((s01 ^ s23) & v[4]); // carries into bit1
+            // bit1 = c01 ^ c23 ^ carry1; bit2 = majority of those carries
+            let b1 = c01 ^ c23 ^ carry1;
+            let b2 = (c01 & c23) | ((c01 ^ c23) & carry1);
+            // count >= 3  <=>  bit2 | (bit1 & bit0)
+            *word = b2 | (b1 & s);
+        }
+        let mut out = BitRow { words, cols };
+        if let Some(last) = out.words.last_mut() {
+            let rem = cols % 64;
+            if rem != 0 {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+        out
+    }
+}
+
+/// Source term for a multi-row activation: a row index, optionally read
+/// through the dual-contact cell's complementary wordline.
+#[derive(Debug, Clone, Copy)]
+pub struct ActRow {
+    pub row: usize,
+    pub complement: bool,
+}
+
+impl ActRow {
+    pub fn plain(row: usize) -> Self {
+        ActRow { row, complement: false }
+    }
+    pub fn neg(row: usize) -> Self {
+        ActRow { row, complement: true }
+    }
+}
+
+/// Functional subarray: `rows` wordlines × `cols` bitlines.
+#[derive(Debug, Clone)]
+pub struct Subarray {
+    rows: Vec<BitRow>,
+    cols: usize,
+}
+
+impl Subarray {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Subarray { rows: vec![BitRow::zeros(cols); rows], cols }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, r: usize) -> &BitRow {
+        &self.rows[r]
+    }
+
+    pub fn write_row(&mut self, r: usize, data: &BitRow) {
+        assert_eq!(data.cols(), self.cols);
+        self.rows[r] = data.clone();
+    }
+
+    pub fn set_bit(&mut self, r: usize, c: usize, v: bool) {
+        self.rows[r].set(c, v);
+    }
+
+    pub fn get_bit(&self, r: usize, c: usize) -> bool {
+        self.rows[r].get(c)
+    }
+
+    /// RowClone intra-subarray copy (functional part; cost logged by caller).
+    pub fn copy_row(&mut self, src: usize, dst: usize) {
+        let data = self.rows[src].clone();
+        self.rows[dst] = data;
+    }
+
+    /// Multi-row activation: charge-share the listed rows (with optional
+    /// DCC complement), sense the majority, and drive the result back into
+    /// every activated cell (complemented cells store the complement).
+    /// Returns the sensed value. Panics unless 3 or 5 rows are activated.
+    pub fn multi_activate(&mut self, sources: &[ActRow]) -> BitRow {
+        let read = |s: &ActRow| -> BitRow {
+            if s.complement {
+                self.rows[s.row].not()
+            } else {
+                self.rows[s.row].clone()
+            }
+        };
+        let sensed = match sources.len() {
+            3 => BitRow::maj3(&read(&sources[0]), &read(&sources[1]), &read(&sources[2])),
+            5 => {
+                let vals: Vec<BitRow> = sources.iter().map(read).collect();
+                BitRow::maj5([&vals[0], &vals[1], &vals[2], &vals[3], &vals[4]])
+            }
+            n => panic!("multi_activate supports 3 or 5 rows, got {n}"),
+        };
+        // Charge restoration overwrites all activated cells.
+        let negated = sensed.not();
+        for s in sources {
+            self.rows[s.row] = if s.complement { negated.clone() } else { sensed.clone() };
+        }
+        sensed
+    }
+
+    /// The proposed AND operation (§III-A): operands already sit in the two
+    /// compute rows `a` and `a1`; activating AND-WL connects, per column,
+    /// cell `a1` to the bitline when `a` stores 1 (NMOS) and cell `a` (a 0)
+    /// when `a` stores 0 (PMOS). Sensed value = `a AND a1`, then driven into
+    /// the rows listed in `store_to`.
+    pub fn and_wl(&mut self, a: usize, a1: usize, store_to: &[usize]) -> BitRow {
+        let sensed = self.rows[a].and(&self.rows[a1]);
+        for &dst in store_to {
+            self.rows[dst] = sensed.clone();
+        }
+        sensed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row_of(bits: &[u8]) -> BitRow {
+        BitRow::from_fn(bits.len(), |i| bits[i] == 1)
+    }
+
+    #[test]
+    fn bitrow_get_set() {
+        let mut r = BitRow::zeros(100);
+        r.set(0, true);
+        r.set(63, true);
+        r.set(64, true);
+        r.set(99, true);
+        assert!(r.get(0) && r.get(63) && r.get(64) && r.get(99));
+        assert!(!r.get(1) && !r.get(65));
+        assert_eq!(r.count_ones(), 4);
+        r.set(0, false);
+        assert!(!r.get(0));
+    }
+
+    #[test]
+    fn not_respects_tail() {
+        let r = BitRow::zeros(70);
+        let n = r.not();
+        assert_eq!(n.count_ones(), 70);
+    }
+
+    #[test]
+    fn maj3_truth_table() {
+        for mask in 0..8u32 {
+            let a = row_of(&[(mask & 1) as u8]);
+            let b = row_of(&[((mask >> 1) & 1) as u8]);
+            let c = row_of(&[((mask >> 2) & 1) as u8]);
+            let want = (mask & 1) + ((mask >> 1) & 1) + ((mask >> 2) & 1) >= 2;
+            assert_eq!(BitRow::maj3(&a, &b, &c).get(0), want, "mask={mask}");
+        }
+    }
+
+    #[test]
+    fn maj5_truth_table_exhaustive() {
+        for mask in 0..32u32 {
+            let rows: Vec<BitRow> =
+                (0..5).map(|i| row_of(&[((mask >> i) & 1) as u8])).collect();
+            let want = (0..5).map(|i| (mask >> i) & 1).sum::<u32>() >= 3;
+            let got =
+                BitRow::maj5([&rows[0], &rows[1], &rows[2], &rows[3], &rows[4]]);
+            assert_eq!(got.get(0), want, "mask={mask:05b}");
+        }
+    }
+
+    #[test]
+    fn maj5_column_parallel_wide() {
+        // Cross-check the bit-parallel formula against per-column counting
+        // on a wide random-ish pattern spanning word boundaries.
+        let cols = 257;
+        let rows: Vec<BitRow> = (0..5)
+            .map(|r| BitRow::from_fn(cols, |c| (c * 7 + r * 13) % 3 == 0))
+            .collect();
+        let got = BitRow::maj5([&rows[0], &rows[1], &rows[2], &rows[3], &rows[4]]);
+        for c in 0..cols {
+            let count = rows.iter().filter(|r| r.get(c)).count();
+            assert_eq!(got.get(c), count >= 3, "col {c}");
+        }
+    }
+
+    #[test]
+    fn adder_identities() {
+        // Ambit/paper equations (1)-(2): Cout = MAJ3(A,B,Cin);
+        // Sum = MAJ5(A,B,Cin,!Cout,!Cout) must equal A^B^Cin.
+        for mask in 0..8u32 {
+            let a = row_of(&[(mask & 1) as u8]);
+            let b = row_of(&[((mask >> 1) & 1) as u8]);
+            let cin = row_of(&[((mask >> 2) & 1) as u8]);
+            let cout = BitRow::maj3(&a, &b, &cin);
+            let ncout = cout.not();
+            let sum = BitRow::maj5([&a, &b, &cin, &ncout, &ncout]);
+            let want_sum = a.xor(&b).xor(&cin);
+            assert_eq!(sum.get(0), want_sum.get(0), "mask={mask}");
+        }
+    }
+
+    #[test]
+    fn multi_activate_writes_back() {
+        let mut sa = Subarray::new(8, 4);
+        sa.write_row(0, &row_of(&[1, 1, 0, 0]));
+        sa.write_row(1, &row_of(&[1, 0, 1, 0]));
+        sa.write_row(2, &row_of(&[1, 0, 0, 0]));
+        let sensed = sa.multi_activate(&[
+            ActRow::plain(0),
+            ActRow::plain(1),
+            ActRow::plain(2),
+        ]);
+        assert_eq!(sensed, row_of(&[1, 0, 0, 0]));
+        // Charge restoration: all three rows now hold the majority.
+        assert_eq!(sa.row(0), &row_of(&[1, 0, 0, 0]));
+        assert_eq!(sa.row(1), &row_of(&[1, 0, 0, 0]));
+        assert_eq!(sa.row(2), &row_of(&[1, 0, 0, 0]));
+    }
+
+    #[test]
+    fn multi_activate_complement_writeback() {
+        let mut sa = Subarray::new(8, 1);
+        sa.write_row(0, &row_of(&[1]));
+        sa.write_row(1, &row_of(&[1]));
+        sa.write_row(2, &row_of(&[0]));
+        // rows: 1,1,!0=1 -> majority 1; DCC row 2 stores complement (0... wait,
+        // complement of sensed 1 is 0, and row2 participated complemented).
+        let sensed = sa.multi_activate(&[
+            ActRow::plain(0),
+            ActRow::plain(1),
+            ActRow::neg(2),
+        ]);
+        assert!(sensed.get(0));
+        assert!(!sa.get_bit(2, 0), "DCC cell stores complement of sensed");
+    }
+
+    #[test]
+    fn and_wl_all_combinations() {
+        let mut sa = Subarray::new(8, 4);
+        // columns encode (A, B) = (0,0), (0,1), (1,0), (1,1)
+        sa.write_row(0, &row_of(&[0, 0, 1, 1])); // A
+        sa.write_row(1, &row_of(&[0, 1, 0, 1])); // A-1 (= B)
+        let sensed = sa.and_wl(0, 1, &[3]);
+        assert_eq!(sensed, row_of(&[0, 0, 0, 1]));
+        assert_eq!(sa.row(3), &row_of(&[0, 0, 0, 1]));
+    }
+
+    #[test]
+    fn copy_row_clones_data() {
+        let mut sa = Subarray::new(4, 8);
+        sa.write_row(0, &BitRow::from_fn(8, |c| c % 2 == 0));
+        sa.copy_row(0, 3);
+        assert_eq!(sa.row(3), sa.row(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "3 or 5 rows")]
+    fn multi_activate_rejects_even_counts() {
+        let mut sa = Subarray::new(4, 4);
+        sa.multi_activate(&[ActRow::plain(0), ActRow::plain(1)]);
+    }
+}

@@ -1,0 +1,127 @@
+//! DDR3-1600 timing and energy parameters (§V-B evaluates DDR3-1600).
+//!
+//! The AAP (ACTIVATE-ACTIVATE-PRECHARGE) compound command is the unit the
+//! in-DRAM primitives are priced in, following Ambit/RowClone: an AAP keeps
+//! the row cycle going for `tRAS + tRP`. Energy constants are adapted from
+//! the Rambus DRAM power model the paper cites ([16]) — order-of-magnitude
+//! calibrated, and only *relative* energies matter for the experiments.
+
+/// DRAM timing parameters in nanoseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramTiming {
+    /// Clock period (DDR3-1600: 1.25 ns, 800 MHz I/O clock).
+    pub tck_ns: f64,
+    /// ACTIVATE to internal read/write delay.
+    pub trcd_ns: f64,
+    /// ACTIVATE to PRECHARGE minimum.
+    pub tras_ns: f64,
+    /// PRECHARGE period.
+    pub trp_ns: f64,
+    /// Column access strobe latency.
+    pub tcas_ns: f64,
+    /// Internal bus width in bits for inter-bank RowClone (global I/O).
+    pub internal_bus_bits: usize,
+    /// Energy per ACTIVATE+PRECHARGE of one row (nJ).
+    pub act_pre_energy_nj: f64,
+    /// Extra energy per additional simultaneously-activated row (nJ).
+    pub multi_act_energy_nj: f64,
+    /// Energy per bit moved over the internal bus (pJ/bit).
+    pub bus_energy_pj_per_bit: f64,
+}
+
+impl DramTiming {
+    /// DDR3-1600 (11-11-11) — the paper's evaluation configuration.
+    pub fn ddr3_1600() -> Self {
+        DramTiming {
+            tck_ns: 1.25,
+            trcd_ns: 13.75,
+            tras_ns: 35.0,
+            trp_ns: 13.75,
+            tcas_ns: 13.75,
+            internal_bus_bits: 64,
+            act_pre_energy_nj: 2.5,
+            multi_act_energy_nj: 0.9,
+            bus_energy_pj_per_bit: 4.0,
+        }
+    }
+
+    /// DDR4-2400-ish variant for ablations.
+    pub fn ddr4_2400() -> Self {
+        DramTiming {
+            tck_ns: 0.833,
+            trcd_ns: 12.5,
+            tras_ns: 32.0,
+            trp_ns: 12.5,
+            tcas_ns: 12.5,
+            internal_bus_bits: 64,
+            act_pre_energy_nj: 2.1,
+            multi_act_energy_nj: 0.8,
+            bus_energy_pj_per_bit: 3.2,
+        }
+    }
+
+    /// Latency of one AAP (ACTIVATE–ACTIVATE–PRECHARGE) compound op.
+    ///
+    /// Following Ambit, back-to-back activates overlap with the row cycle;
+    /// an AAP costs one full row cycle `tRAS + tRP`.
+    pub fn aap_ns(&self) -> f64 {
+        self.tras_ns + self.trp_ns
+    }
+
+    /// Latency of a plain ACTIVATE + PRECHARGE (row cycle, tRC).
+    pub fn trc_ns(&self) -> f64 {
+        self.tras_ns + self.trp_ns
+    }
+
+    /// Latency to RowClone one row of `row_bits` across banks: source row
+    /// cycle + destination row cycle + serialized bus transfer.
+    pub fn interbank_copy_ns(&self, row_bits: usize) -> f64 {
+        let beats = crate::util::ceil_div(row_bits, self.internal_bus_bits);
+        2.0 * self.trc_ns() + beats as f64 * self.tck_ns
+    }
+
+    /// Energy of a multi-row activation with `rows` simultaneous rows (nJ).
+    pub fn multi_act_energy(&self, rows: usize) -> f64 {
+        self.act_pre_energy_nj
+            + self.multi_act_energy_nj * rows.saturating_sub(1) as f64
+    }
+}
+
+impl Default for DramTiming {
+    fn default() -> Self {
+        Self::ddr3_1600()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr3_aap_is_row_cycle() {
+        let t = DramTiming::ddr3_1600();
+        assert!((t.aap_ns() - 48.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interbank_copy_scales_with_row_width() {
+        let t = DramTiming::ddr3_1600();
+        let narrow = t.interbank_copy_ns(64);
+        let wide = t.interbank_copy_ns(8192);
+        assert!(wide > narrow);
+        // 8192/64 = 128 beats at 1.25ns = 160ns on top of 2*48.75.
+        assert!((wide - (97.5 + 160.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ddr4_is_faster() {
+        assert!(DramTiming::ddr4_2400().aap_ns() < DramTiming::ddr3_1600().aap_ns());
+    }
+
+    #[test]
+    fn multi_act_energy_grows() {
+        let t = DramTiming::ddr3_1600();
+        assert!(t.multi_act_energy(5) > t.multi_act_energy(3));
+        assert!((t.multi_act_energy(1) - t.act_pre_energy_nj).abs() < 1e-12);
+    }
+}

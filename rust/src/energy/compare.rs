@@ -1,0 +1,96 @@
+//! Energy comparison: PIM-DRAM vs GPU per inference — the natural
+//! extension of the paper's evaluation (it reports performance only; the
+//! PIM literature's other headline is energy).
+//!
+//! GPU energy model: board power × ideal execution time (optimistic for
+//! the GPU — idle/static power excluded, matching the "ideal GPU" stance
+//! of Fig 16). PIM energy: DRAM command + bus energy from the command
+//! stream plus peripheral-logic busy energy from the Table II power model.
+
+use crate::gpu::GpuModel;
+use crate::sim::SimResult;
+use crate::workloads::Network;
+
+/// Board power of the GPU baseline (Titan Xp TDP, W).
+pub const TITAN_XP_TDP_W: f64 = 250.0;
+
+/// Energy-per-image comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyComparison {
+    pub net: String,
+    /// PIM DRAM-array + bus energy (mJ/image).
+    pub pim_dram_mj: f64,
+    /// PIM peripheral logic energy (mJ/image).
+    pub pim_logic_mj: f64,
+    /// GPU energy at TDP × ideal time (mJ/image).
+    pub gpu_mj: f64,
+}
+
+impl EnergyComparison {
+    pub fn pim_total_mj(&self) -> f64 {
+        self.pim_dram_mj + self.pim_logic_mj
+    }
+
+    /// Energy-efficiency ratio (>1 ⇒ PIM uses less energy).
+    pub fn efficiency_ratio(&self) -> f64 {
+        self.gpu_mj / self.pim_total_mj()
+    }
+}
+
+/// Build the comparison from a simulation result.
+pub fn compare(result: &SimResult, net: &Network, gpu: &GpuModel) -> EnergyComparison {
+    let gpu_s = gpu.network_time_s(net, 4);
+    EnergyComparison {
+        net: net.name.clone(),
+        pim_dram_mj: result.total_dram_energy_nj / 1e6,
+        pim_logic_mj: result.logic_energy_nj / 1e6,
+        gpu_mj: TITAN_XP_TDP_W * gpu_s * 1e3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, SimConfig};
+    use crate::workloads::nets::{alexnet, vgg16};
+
+    #[test]
+    fn components_positive() {
+        let net = alexnet();
+        let r = simulate(&net, &SimConfig::paper_favorable(8)).unwrap();
+        let c = compare(&r, &net, &GpuModel::titan_xp());
+        assert!(c.pim_dram_mj > 0.0 && c.pim_logic_mj > 0.0 && c.gpu_mj > 0.0);
+        assert!(c.efficiency_ratio().is_finite());
+    }
+
+    #[test]
+    fn gpu_energy_tracks_time() {
+        let gpu = GpuModel::titan_xp();
+        let (a, v) = (alexnet(), vgg16());
+        let ra = simulate(&a, &SimConfig::paper_favorable(8)).unwrap();
+        let rv = simulate(&v, &SimConfig::paper_favorable(8)).unwrap();
+        let ca = compare(&ra, &a, &gpu);
+        let cv = compare(&rv, &v, &gpu);
+        // VGG16 is ~6x more GPU time than AlexNet → ~6x the energy.
+        let ratio = cv.gpu_mj / ca.gpu_mj;
+        let time_ratio = gpu.network_time_s(&v, 4) / gpu.network_time_s(&a, 4);
+        assert!((ratio - time_ratio).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_precision_uses_less_pim_energy() {
+        let net = alexnet();
+        let gpu = GpuModel::titan_xp();
+        let e4 = compare(
+            &simulate(&net, &SimConfig::paper_favorable(4)).unwrap(),
+            &net,
+            &gpu,
+        );
+        let e8 = compare(
+            &simulate(&net, &SimConfig::paper_favorable(8)).unwrap(),
+            &net,
+            &gpu,
+        );
+        assert!(e4.pim_dram_mj < e8.pim_dram_mj);
+    }
+}

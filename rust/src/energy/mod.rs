@@ -1,0 +1,199 @@
+//! Area / power / delay models for the bank peripheral logic (DESIGN.md S9)
+//! — reproduces Tables I and II and scales for the ablation studies.
+//!
+//! The paper synthesizes the RTL with Cadence RTL Compiler to TSMC 65 nm
+//! and adds a 21.5 % delay penalty for DRAM-process logic ([17]). Neither
+//! tool is available offline, so each component is an analytical model
+//! *calibrated to the paper's published totals* (Table I area, Table II
+//! power at the 4096-input adder tree design point) and scaled by gate
+//! count for other configurations.
+
+pub mod compare;
+
+use crate::util::table::{Align, Table};
+
+/// Delay derate for logic implemented in a DRAM process (§V-B, [17]).
+pub const DRAM_PROCESS_DELAY_FACTOR: f64 = 1.215;
+
+/// Peripheral logic clock before DRAM-process derating (GHz).
+pub const LOGIC_CLOCK_GHZ: f64 = 0.5;
+
+/// Effective logic cycle time in ns including the 21.5 % derate.
+pub fn logic_cycle_ns() -> f64 {
+    (1.0 / LOGIC_CLOCK_GHZ) * DRAM_PROCESS_DELAY_FACTOR
+}
+
+/// Calibration anchors from Tables I and II (65 nm, 4096-input tree).
+pub const PAPER_ADDER_INPUTS: usize = 4096;
+pub const PAPER_ADDER_AREA_UM2: f64 = 514_877.0;
+pub const PAPER_ADDER_POWER_NW: f64 = 13_200_190.9;
+pub const PAPER_ACCUM_AREA_UM2: f64 = 804.0;
+pub const PAPER_ACCUM_POWER_NW: f64 = 177_765.864;
+pub const PAPER_RELU_AREA_UM2: f64 = 431.0;
+pub const PAPER_RELU_POWER_NW: f64 = 109_913.671;
+pub const PAPER_MAXPOOL_AREA_UM2: f64 = 983.0;
+pub const PAPER_MAXPOOL_POWER_NW: f64 = 127_562.373;
+pub const PAPER_BATCHNORM_AREA_UM2: f64 = 506.0;
+pub const PAPER_BATCHNORM_POWER_NW: f64 = 120_541.29;
+pub const PAPER_QUANTIZE_AREA_UM2: f64 = 91.0;
+pub const PAPER_QUANTIZE_POWER_NW: f64 = 28_366.738;
+/// §IV-A.6: example 256×8 SRAM transpose unit area.
+pub const PAPER_TRANSPOSE_AREA_UM2: f64 = 30_534.894;
+
+/// One peripheral component's modeled area and power.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Component {
+    pub name: &'static str,
+    pub area_um2: f64,
+    pub power_nw: f64,
+}
+
+/// Adder-tree area scaled by unit count ((inputs−1) two-input adders),
+/// calibrated at the paper's 4096-input point.
+pub fn adder_tree_area_um2(inputs: usize) -> f64 {
+    assert!(inputs >= 2);
+    PAPER_ADDER_AREA_UM2 * (inputs as f64 - 1.0) / (PAPER_ADDER_INPUTS as f64 - 1.0)
+}
+
+/// Adder-tree power scaled the same way.
+pub fn adder_tree_power_nw(inputs: usize) -> f64 {
+    assert!(inputs >= 2);
+    PAPER_ADDER_POWER_NW * (inputs as f64 - 1.0) / (PAPER_ADDER_INPUTS as f64 - 1.0)
+}
+
+/// Transpose-unit area scaled by SRAM bit count from the 256×8 anchor.
+pub fn transpose_area_um2(rows: usize, bits: usize) -> f64 {
+    PAPER_TRANSPOSE_AREA_UM2 * (rows * bits) as f64 / (256.0 * 8.0)
+}
+
+/// The Table I / Table II component set for a bank with an `inputs`-wide
+/// adder tree (paper order).
+pub fn bank_components(inputs: usize) -> Vec<Component> {
+    vec![
+        Component {
+            name: "4096 Adder",
+            area_um2: adder_tree_area_um2(inputs),
+            power_nw: adder_tree_power_nw(inputs),
+        },
+        Component {
+            name: "Accumulator",
+            area_um2: PAPER_ACCUM_AREA_UM2,
+            power_nw: PAPER_ACCUM_POWER_NW,
+        },
+        Component {
+            name: "Relu",
+            area_um2: PAPER_RELU_AREA_UM2,
+            power_nw: PAPER_RELU_POWER_NW,
+        },
+        Component {
+            name: "Maxpool",
+            area_um2: PAPER_MAXPOOL_AREA_UM2,
+            power_nw: PAPER_MAXPOOL_POWER_NW,
+        },
+        Component {
+            name: "Batchnorm",
+            area_um2: PAPER_BATCHNORM_AREA_UM2,
+            power_nw: PAPER_BATCHNORM_POWER_NW,
+        },
+        Component {
+            name: "Quantize",
+            area_um2: PAPER_QUANTIZE_AREA_UM2,
+            power_nw: PAPER_QUANTIZE_POWER_NW,
+        },
+    ]
+}
+
+/// Render the Table I reproduction (area + relative %).
+pub fn render_area_table(inputs: usize) -> String {
+    let comps = bank_components(inputs);
+    let total: f64 = comps.iter().map(|c| c.area_um2).sum();
+    let mut t = Table::new(&["Component", "Area(um^2)", "Relative Percentage"])
+        .aligns(&[Align::Left, Align::Right, Align::Right]);
+    for c in &comps {
+        t.row(&[
+            c.name.to_string(),
+            format!("{:.3}", c.area_um2),
+            format!("{:.5}", 100.0 * c.area_um2 / total),
+        ]);
+    }
+    t.render()
+}
+
+/// Render the Table II reproduction (power + relative %).
+pub fn render_power_table(inputs: usize) -> String {
+    let comps = bank_components(inputs);
+    let total: f64 = comps.iter().map(|c| c.power_nw).sum();
+    let mut t = Table::new(&["Component", "Power(nW)", "Relative Percentage"])
+        .aligns(&[Align::Left, Align::Right, Align::Right]);
+    for c in &comps {
+        t.row(&[
+            c.name.to_string(),
+            format!("{:.3}", c.power_nw),
+            format!("{:.4}", 100.0 * c.power_nw / total),
+        ]);
+    }
+    t.render()
+}
+
+/// Total peripheral area per bank (µm²), incl. the transpose unit.
+pub fn bank_peripheral_area_um2(inputs: usize) -> f64 {
+    bank_components(inputs).iter().map(|c| c.area_um2).sum::<f64>()
+        + transpose_area_um2(256, 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_adder_dominates_area() {
+        // Paper Table I prints 99.47373 %, but its own absolute numbers
+        // give 514877/517692 = 99.456 % — the published percentages are
+        // internally inconsistent by ~0.02 % (DESIGN.md §7). We reproduce
+        // the absolute areas exactly and accept either percentage.
+        let comps = bank_components(4096);
+        let total: f64 = comps.iter().map(|c| c.area_um2).sum();
+        let adder_pct = 100.0 * comps[0].area_um2 / total;
+        assert!((adder_pct - 99.47373).abs() < 0.05, "adder% = {adder_pct}");
+    }
+
+    #[test]
+    fn table2_adder_dominates_power() {
+        // Paper Table II: 95.9014 % of power.
+        let comps = bank_components(4096);
+        let total: f64 = comps.iter().map(|c| c.power_nw).sum();
+        let adder_pct = 100.0 * comps[0].power_nw / total;
+        assert!((adder_pct - 95.9014).abs() < 0.01, "adder% = {adder_pct}");
+    }
+
+    #[test]
+    fn calibration_point_exact() {
+        assert_eq!(adder_tree_area_um2(4096), PAPER_ADDER_AREA_UM2);
+        assert_eq!(adder_tree_power_nw(4096), PAPER_ADDER_POWER_NW);
+        assert_eq!(transpose_area_um2(256, 8), PAPER_TRANSPOSE_AREA_UM2);
+    }
+
+    #[test]
+    fn adder_scaling_linear_in_units() {
+        let half = adder_tree_area_um2(2048);
+        // 2047 units vs 4095 units.
+        assert!((half / PAPER_ADDER_AREA_UM2 - 2047.0 / 4095.0).abs() < 1e-12);
+        assert!(adder_tree_power_nw(8192) > PAPER_ADDER_POWER_NW * 1.9);
+    }
+
+    #[test]
+    fn derated_logic_clock() {
+        // 500 MHz nominal → 2 ns × 1.215 = 2.43 ns per cycle.
+        assert!((logic_cycle_ns() - 2.43).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tables_render_paper_rows() {
+        let a = render_area_table(4096);
+        assert!(a.contains("514877.000"));
+        assert!(a.contains("99.4"));
+        let p = render_power_table(4096);
+        assert!(p.contains("13200190.9"));
+        assert!(p.contains("95.90"));
+    }
+}

@@ -1,0 +1,11 @@
+//! GPU baseline (DESIGN.md S13): a roofline model of the NVIDIA Titan Xp
+//! the paper compares against (§V-B: 3840 CUDA cores, 547.7 GB/s).
+//!
+//! Fig 16 compares PIM-DRAM against the *ideal* GPU — i.e. every layer
+//! runs at its roofline-attainable rate — which is exactly what this model
+//! computes: `t_layer = max(FLOPs / peak, bytes / BW)`. Fig 1 plots the
+//! same roofline with VGG16's layers as points.
+
+pub mod roofline;
+
+pub use roofline::{GpuModel, RooflinePoint};

@@ -1,0 +1,162 @@
+//! Roofline model (Fig 1) and ideal-GPU layer timing (Fig 16 baseline).
+
+use crate::workloads::{LayerDesc, Network};
+
+/// A peak-rate GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuModel {
+    pub name: String,
+    /// Peak arithmetic throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// Memory bandwidth (bytes/s).
+    pub mem_bw: f64,
+    /// Achieved fraction of roofline (1.0 = the paper's "ideal GPU").
+    pub efficiency: f64,
+}
+
+impl GpuModel {
+    /// NVIDIA Titan Xp: 3840 CUDA cores × 1.582 GHz × 2 FLOP ≈ 12.15
+    /// TFLOP/s fp32; 547.7 GB/s (the paper's §V-B numbers).
+    pub fn titan_xp() -> Self {
+        GpuModel {
+            name: "TITAN Xp".into(),
+            peak_flops: 12.15e12,
+            mem_bw: 547.7e9,
+            efficiency: 1.0,
+        }
+    }
+
+    /// Ridge point: operational intensity where compute == memory bound.
+    pub fn ridge_intensity(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+
+    /// Attainable FLOP/s at operational intensity `oi` (the roofline).
+    pub fn attainable(&self, oi: f64) -> f64 {
+        (oi * self.mem_bw).min(self.peak_flops) * self.efficiency
+    }
+
+    /// Ideal execution time of one layer for one input (seconds).
+    pub fn layer_time_s(&self, layer: &LayerDesc, bytes_per_elem: usize) -> f64 {
+        let compute = layer.flops() as f64 / self.peak_flops;
+        let memory = layer.bytes(bytes_per_elem) as f64 / self.mem_bw;
+        compute.max(memory) / self.efficiency
+    }
+
+    /// Ideal end-to-end time for one input through the network (seconds).
+    pub fn network_time_s(&self, net: &Network, bytes_per_elem: usize) -> f64 {
+        net.layers
+            .iter()
+            .map(|l| self.layer_time_s(l, bytes_per_elem))
+            .sum()
+    }
+
+    /// Is the layer memory-bound on this GPU?
+    pub fn memory_bound(&self, layer: &LayerDesc, bytes_per_elem: usize) -> bool {
+        layer.op_intensity(bytes_per_elem) < self.ridge_intensity()
+    }
+}
+
+/// One point on the roofline plot (a layer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflinePoint {
+    pub layer: String,
+    pub op_intensity: f64,
+    pub attainable_gflops: f64,
+    pub achieved_gflops: f64,
+    pub memory_bound: bool,
+}
+
+/// Fig 1 data: every layer of `net` placed on `gpu`'s roofline.
+pub fn roofline_points(
+    gpu: &GpuModel,
+    net: &Network,
+    bytes_per_elem: usize,
+) -> Vec<RooflinePoint> {
+    net.layers
+        .iter()
+        .map(|l| {
+            let oi = l.op_intensity(bytes_per_elem);
+            let att = gpu.attainable(oi);
+            let t = gpu.layer_time_s(l, bytes_per_elem);
+            RooflinePoint {
+                layer: l.name.clone(),
+                op_intensity: oi,
+                attainable_gflops: att / 1e9,
+                achieved_gflops: (l.flops() as f64 / t) / 1e9,
+                memory_bound: gpu.memory_bound(l, bytes_per_elem),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::nets::vgg16;
+
+    #[test]
+    fn titan_xp_ridge_point() {
+        let gpu = GpuModel::titan_xp();
+        // 12.15 TF / 547.7 GB/s ≈ 22.2 FLOP/byte.
+        assert!((gpu.ridge_intensity() - 22.18).abs() < 0.2);
+    }
+
+    #[test]
+    fn attainable_clamps_at_peak() {
+        let gpu = GpuModel::titan_xp();
+        assert_eq!(gpu.attainable(1e6), gpu.peak_flops);
+        assert!((gpu.attainable(1.0) - gpu.mem_bw).abs() < 1.0);
+    }
+
+    #[test]
+    fn vgg16_fc_layers_memory_bound() {
+        // Fig 1's claim: some VGG16 layers are memory bound on Titan Xp.
+        let gpu = GpuModel::titan_xp();
+        let net = vgg16();
+        let points = roofline_points(&gpu, &net, 4);
+        let bound: Vec<&str> = points
+            .iter()
+            .filter(|p| p.memory_bound)
+            .map(|p| p.layer.as_str())
+            .collect();
+        assert!(bound.contains(&"fc6"), "memory-bound set: {bound:?}");
+        assert!(bound.contains(&"fc7"));
+        // And the big convs are compute bound.
+        assert!(!points.iter().find(|p| p.layer == "conv3_2").unwrap().memory_bound);
+    }
+
+    #[test]
+    fn memory_bound_layer_time_set_by_bandwidth() {
+        let gpu = GpuModel::titan_xp();
+        let net = vgg16();
+        let fc6 = net.layers.iter().find(|l| l.name == "fc6").unwrap();
+        let t = gpu.layer_time_s(fc6, 4);
+        let t_mem = fc6.bytes(4) as f64 / gpu.mem_bw;
+        assert!((t - t_mem).abs() / t_mem < 1e-9);
+    }
+
+    #[test]
+    fn achieved_equals_attainable_for_ideal_gpu() {
+        let gpu = GpuModel::titan_xp();
+        for p in roofline_points(&gpu, &vgg16(), 4) {
+            assert!(
+                (p.achieved_gflops - p.attainable_gflops).abs()
+                    / p.attainable_gflops
+                    < 1e-9,
+                "{}",
+                p.layer
+            );
+        }
+    }
+
+    #[test]
+    fn efficiency_scales_time() {
+        let mut gpu = GpuModel::titan_xp();
+        let net = vgg16();
+        let t1 = gpu.network_time_s(&net, 4);
+        gpu.efficiency = 0.5;
+        let t2 = gpu.network_time_s(&net, 4);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,38 @@
+//! # PIM-DRAM
+//!
+//! Full-system reproduction of *PIM-DRAM: Accelerating Machine Learning
+//! Workloads using Processing in Commodity DRAM* (Roy, Ali, Raghunathan, 2021).
+//!
+//! The crate is the Layer-3 (coordinator) half of a three-layer stack:
+//!
+//! * **L1** — Pallas bit-serial matmul kernel (`python/compile/kernels/`),
+//!   the functional analogue of the paper's in-subarray multiplication.
+//! * **L2** — JAX quantized-CNN graph (`python/compile/model.py`), lowered
+//!   once (AOT) to HLO text artifacts.
+//! * **L3** — this crate: the DRAM PIM *system* — device/timing model,
+//!   in-DRAM compute primitives, circuit-level bitline simulation, bank
+//!   peripheral architecture, the paper's mapping algorithm and pipelined
+//!   dataflow, a GPU roofline baseline, and a request coordinator that
+//!   executes the AOT artifacts via PJRT while the timing model prices the
+//!   same work in DRAM cycles.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for reproduction results.
+
+pub mod arch;
+pub mod bench_harness;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dram;
+pub mod energy;
+pub mod gpu;
+pub mod mapping;
+pub mod primitives;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,11 @@
+//! PIM-DRAM launcher: see `pim-dram help` (or `cli::USAGE`).
+
+use pim_dram::cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

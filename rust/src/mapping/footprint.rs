@@ -1,0 +1,70 @@
+//! Memory-footprint formulas (§IV-B): the paper's worst-case expressions
+//! and the parallelism ↔ footprint trade-off curve.
+
+use crate::workloads::{LayerDesc, LayerKind};
+
+/// Worst-case footprint of a conv layer in bits (paper §IV-B):
+/// `O · ((H-K+2p)/s+1) · ((W-L+2p)/s+1) · (I·L·K) · 2 · n`.
+pub fn conv_worstcase_bits(layer: &LayerDesc, n: usize) -> u64 {
+    match layer.kind {
+        LayerKind::Conv { .. } => {
+            // O · OH · OW · (I·L·K) · 2 · n — which is exactly
+            // num_macs · mac_size · 2 · n since num_macs = O·OH·OW.
+            layer.num_macs() as u64 * layer.mac_size() as u64 * 2 * n as u64
+        }
+        _ => panic!("conv_worstcase_bits on non-conv layer"),
+    }
+}
+
+/// Worst-case footprint of a linear layer in bits: `w1 · w2 · 2 · n`.
+pub fn linear_worstcase_bits(layer: &LayerDesc, n: usize) -> u64 {
+    match layer.kind {
+        LayerKind::Linear { in_features, out_features } => {
+            (in_features as u64) * (out_features as u64) * 2 * n as u64
+        }
+        _ => panic!("linear_worstcase_bits on non-linear layer"),
+    }
+}
+
+/// Footprint at parallelism divisor `k`: operands shared across the k
+/// groups stack into the same columns, so resident bits shrink ≈ k×
+/// (until restaging kicks in).
+pub fn resident_bits_at_k(layer: &LayerDesc, n: usize, k: usize) -> u64 {
+    let full = layer.num_macs() as u64 * layer.mac_size() as u64 * 2 * n as u64;
+    full.div_ceil(k as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::nets::{alexnet, vgg16};
+
+    #[test]
+    fn linear_formula_matches_paper() {
+        let net = vgg16();
+        let fc7 = net.layers.iter().find(|l| l.name == "fc7").unwrap();
+        // w1*w2*2*n = 4096*4096*2*8
+        assert_eq!(linear_worstcase_bits(fc7, 8), 4096 * 4096 * 16);
+    }
+
+    #[test]
+    fn conv_formula_matches_mac_expansion() {
+        // The §IV-B conv expression is exactly num_macs · mac_size · 2n.
+        let net = alexnet();
+        let conv2 = &net.layers[1];
+        let want =
+            conv2.num_macs() as u64 * conv2.mac_size() as u64 * 2 * 8;
+        assert_eq!(conv_worstcase_bits(conv2, 8), want);
+    }
+
+    #[test]
+    fn parallelism_footprint_tradeoff() {
+        // Fig 12 discussion: higher k → smaller resident footprint.
+        let net = alexnet();
+        let l = &net.layers[1];
+        let f1 = resident_bits_at_k(l, 8, 1);
+        let f4 = resident_bits_at_k(l, 8, 4);
+        assert!(f4 < f1);
+        assert_eq!(f1.div_ceil(4), f4);
+    }
+}

@@ -1,0 +1,391 @@
+//! Algorithm 1: mapping a DNN onto PIM-DRAM banks (§IV-B, DESIGN.md S10).
+//!
+//! Every layer gets one bank. Within a bank, each MAC's multiplications
+//! occupy *consecutive columns of a single subarray* (so one adder-tree
+//! pass can reduce them); a MAC that would not fit in the remaining columns
+//! starts at column 1 of the next subarray and the tail columns are wasted.
+//! The parallelism divisor `k` folds the output filters/neurons into `k`
+//! groups that reuse the same columns at increasing stack depth — k× less
+//! area, k× more sequential rounds (the paper's parallelism ↔ footprint
+//! trade-off, and the P1..P4 sweep of Fig 16).
+//!
+//! Divergences from the printed algorithm (DESIGN.md §7):
+//!   * **Wide MACs.** Algorithm 1 loops forever when `MAC_size >
+//!     column_size` (every large FC layer, e.g. VGG16 fc6: 25088 > 4096).
+//!     Extension: a wide MAC spans `ceil(mac_size/cols)` whole subarrays
+//!     and the adder tree reduces it in that many passes.
+//!   * **Capacity.** The paper's worst-case footprint exceeds any real
+//!     bank for large conv layers at P1 (VGG16 conv1_2 alone needs ≈ 451k
+//!     subarrays of operand expansion); the paper's simulator implicitly
+//!     assumes capacity. We model both: when a group exceeds the bank's
+//!     subarray budget it is processed in sequential `waves` over the
+//!     budget, each wave paying an operand re-staging cost. The
+//!     `paper_ideal` geometry preset makes the budget effectively
+//!     unbounded, reproducing the paper's assumption (Fig 16); the default
+//!     geometry shows what a real DDR3 die does (ablation_subarray bench).
+
+pub mod footprint;
+pub mod optimizer;
+
+use crate::dram::DramGeometry;
+use crate::util::ceil_div;
+use crate::workloads::{LayerDesc, LayerKind, Network};
+
+/// Mapping configuration for one network instance.
+#[derive(Debug, Clone)]
+pub struct MapConfig {
+    pub geometry: DramGeometry,
+    /// Operand bit width n.
+    pub n_bits: usize,
+    /// Per-layer parallelism divisors (the paper's P vectors). Length must
+    /// equal the layer count, or be a single value broadcast to all.
+    pub ks: Vec<usize>,
+}
+
+impl MapConfig {
+    pub fn uniform(geometry: DramGeometry, n_bits: usize, k: usize) -> Self {
+        MapConfig { geometry, n_bits, ks: vec![k] }
+    }
+
+    pub fn k_for(&self, layer_idx: usize) -> usize {
+        if self.ks.len() == 1 {
+            self.ks[0]
+        } else {
+            self.ks[layer_idx]
+        }
+    }
+}
+
+/// Result of mapping one layer to one bank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMapping {
+    pub layer_idx: usize,
+    pub name: String,
+    /// Bank index hosting this layer.
+    pub bank: usize,
+    pub mac_size: usize,
+    pub macs_total: usize,
+    /// Parallelism divisor (clamped to the outer-loop count).
+    pub k: usize,
+    /// MACs mapped per group (one sequential round each).
+    pub macs_per_group: usize,
+    /// MACs that fit one subarray (0 if the MAC is wider than a subarray).
+    pub macs_per_subarray: usize,
+    /// Subarrays a wide MAC spans (1 if it fits).
+    pub subarrays_per_mac: usize,
+    /// Subarrays one group *wants* (before capping at the bank budget).
+    pub subarrays_ideal: usize,
+    /// Subarrays actually used concurrently (≤ bank budget).
+    pub subarrays_used: usize,
+    /// Sequential waves over the budget to cover one group (≥ 1).
+    pub waves: usize,
+    /// Operand pairs stacked per column (= k groups, capped by row budget).
+    pub stacked_pairs: usize,
+    /// Rounds whose operands must be re-staged between rounds because the
+    /// column stack capacity is exceeded.
+    pub restaged_rounds: usize,
+    /// Fraction of allocated columns actually holding operands.
+    pub utilization: f64,
+    /// Total operand storage in bits (both operands of every mult).
+    pub footprint_bits: u64,
+}
+
+impl LayerMapping {
+    /// Total sequential multiply rounds per image: k groups × waves.
+    pub fn rounds(&self) -> usize {
+        self.k * self.waves
+    }
+
+    /// Whether the layer's operand expansion is resident (no waves, no
+    /// restaging) — the paper's implicit assumption.
+    pub fn fully_resident(&self) -> bool {
+        self.waves == 1 && self.restaged_rounds == 0
+    }
+}
+
+/// Mapping failure modes.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MapError {
+    #[error("network {net}: needs {banks} banks (layers + residual reserves) \
+             but device has {avail}")]
+    BankOverflow { net: String, banks: usize, avail: usize },
+    #[error("layer {layer}: k={k} exceeds outer loop count {outer}")]
+    KTooLarge { layer: String, k: usize, outer: usize },
+}
+
+/// The outer-loop count k divides (output filters / output neurons).
+pub fn outer_count(layer: &LayerDesc) -> usize {
+    match layer.kind {
+        LayerKind::Conv { out_ch, .. } => out_ch,
+        LayerKind::Linear { out_features, .. } => out_features,
+    }
+}
+
+/// Map one layer onto one bank (Algorithm 1 + the extensions above).
+pub fn map_layer(
+    layer_idx: usize,
+    bank: usize,
+    layer: &LayerDesc,
+    cfg: &MapConfig,
+) -> Result<LayerMapping, MapError> {
+    let g = &cfg.geometry;
+    let n = cfg.n_bits;
+    let k = cfg.k_for(layer_idx);
+    let mac_size = layer.mac_size();
+    let macs_total = layer.num_macs();
+    let outer = outer_count(layer);
+
+    if k > outer {
+        return Err(MapError::KTooLarge { layer: layer.name.clone(), k, outer });
+    }
+    let max_pairs = g.pairs_per_column(n).max(1);
+
+    // Outer units per group → MACs per group.
+    let macs_per_outer = macs_total / outer;
+    let outer_per_group = ceil_div(outer, k);
+    let macs_per_group = outer_per_group * macs_per_outer;
+
+    let (macs_per_subarray, subarrays_per_mac, subarrays_ideal) =
+        if mac_size <= g.cols {
+            let per_sub = g.cols / mac_size;
+            (per_sub, 1, ceil_div(macs_per_group, per_sub))
+        } else {
+            let span = ceil_div(mac_size, g.cols);
+            (0, span, macs_per_group * span)
+        };
+
+    let subarrays_used = subarrays_ideal.min(g.subarrays_per_bank);
+    let waves = ceil_div(subarrays_ideal, g.subarrays_per_bank).max(1);
+
+    let used_cols = (macs_total * mac_size) as f64;
+    let alloc_cols = (subarrays_ideal * g.cols * k) as f64;
+    Ok(LayerMapping {
+        layer_idx,
+        name: layer.name.clone(),
+        bank,
+        mac_size,
+        macs_total,
+        k,
+        macs_per_group,
+        macs_per_subarray,
+        subarrays_per_mac,
+        subarrays_ideal,
+        subarrays_used,
+        waves,
+        stacked_pairs: k.min(max_pairs),
+        restaged_rounds: k.saturating_sub(max_pairs),
+        utilization: (used_cols / alloc_cols).min(1.0),
+        footprint_bits: 2 * (n as u64) * macs_total as u64 * mac_size as u64,
+    })
+}
+
+/// A full network mapped onto the device: layer-per-bank plus one reserved
+/// bank per residual edge (§IV-B, Fig 13).
+#[derive(Debug, Clone)]
+pub struct NetworkMapping {
+    pub net_name: String,
+    pub layers: Vec<LayerMapping>,
+    /// Reserved banks for residual adds, indexed after the layer banks.
+    pub residual_banks: usize,
+    pub total_banks: usize,
+}
+
+impl NetworkMapping {
+    /// Device-level summary: fraction of banks' subarrays in use.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|m| m.utilization).sum::<f64>()
+            / self.layers.len() as f64
+    }
+
+    pub fn fully_resident(&self) -> bool {
+        self.layers.iter().all(|m| m.fully_resident())
+    }
+}
+
+pub fn map_network(net: &Network, cfg: &MapConfig) -> Result<NetworkMapping, MapError> {
+    let banks_needed = net.layers.len() + net.residuals.len();
+    if banks_needed > cfg.geometry.total_banks() {
+        return Err(MapError::BankOverflow {
+            net: net.name.clone(),
+            banks: banks_needed,
+            avail: cfg.geometry.total_banks(),
+        });
+    }
+    let layers = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            // Clamp the requested k at the layer's outer count (a uniform
+            // P vector like (4,4,…) can exceed a small head layer's
+            // channel count).
+            let k = cfg.k_for(i).min(outer_count(l));
+            let c = MapConfig {
+                geometry: cfg.geometry.clone(),
+                n_bits: cfg.n_bits,
+                ks: vec![k],
+            };
+            map_layer(i, i, l, &c)
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(NetworkMapping {
+        net_name: net.name.clone(),
+        layers,
+        residual_banks: net.residuals.len(),
+        total_banks: banks_needed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::workloads::nets::{alexnet, pimnet, resnet18, vgg16};
+
+    fn cfg(k: usize) -> MapConfig {
+        MapConfig::uniform(DramGeometry::paper_default(), 8, k)
+    }
+
+    fn ideal_cfg(k: usize) -> MapConfig {
+        MapConfig::uniform(DramGeometry::paper_ideal(), 8, k)
+    }
+
+    #[test]
+    fn pimnet_conv1_mapping() {
+        let net = pimnet();
+        let m = map_layer(0, 0, &net.layers[0], &cfg(1)).unwrap();
+        // mac_size 9 → 455 MACs per 4096-col subarray; 4096 MACs total.
+        assert_eq!(m.macs_per_subarray, 455);
+        assert_eq!(m.subarrays_ideal, ceil_div(16 * 16 * 16, 455));
+        assert_eq!(m.waves, 1);
+        assert_eq!(m.stacked_pairs, 1);
+        assert!(m.utilization > 0.85);
+        assert!(m.fully_resident());
+    }
+
+    #[test]
+    fn wide_fc_layer_spans_subarrays() {
+        // VGG16 fc6: mac_size 25088 > 4096 columns — the printed Algorithm 1
+        // cannot place it; our extension spans ceil(25088/4096)=7 subarrays.
+        let net = vgg16();
+        let fc6 = net.layers.iter().position(|l| l.name == "fc6").unwrap();
+        let m = map_layer(fc6, fc6, &net.layers[fc6], &cfg(1)).unwrap();
+        assert_eq!(m.subarrays_per_mac, 7);
+        assert_eq!(m.macs_per_subarray, 0);
+        assert_eq!(m.subarrays_ideal, 4096 * 7);
+        // Real bank: 32 subarrays → waves cover the rest sequentially.
+        assert_eq!(m.subarrays_used, 32);
+        assert_eq!(m.waves, ceil_div(4096 * 7, 32));
+    }
+
+    #[test]
+    fn ideal_geometry_makes_vgg_resident_at_p1() {
+        // The paper's implicit assumption (Fig 16 P1).
+        let net = vgg16();
+        let mapping = map_network(&net, &ideal_cfg(1)).unwrap();
+        assert!(mapping.fully_resident(), "vgg16 not resident on ideal geometry");
+    }
+
+    #[test]
+    fn k_reduces_subarrays_linearly() {
+        let net = alexnet();
+        let l = &net.layers[2]; // conv3
+        let m1 = map_layer(2, 2, l, &ideal_cfg(1)).unwrap();
+        let m4 = map_layer(2, 2, l, &ideal_cfg(4)).unwrap();
+        assert!(m4.subarrays_ideal <= ceil_div(m1.subarrays_ideal, 4) + 1);
+        assert_eq!(m4.stacked_pairs, 4);
+        assert_eq!(m4.rounds(), 4);
+    }
+
+    #[test]
+    fn k_larger_than_outer_rejected() {
+        let net = pimnet();
+        let err = map_layer(3, 3, &net.layers[3], &cfg(64)).unwrap_err();
+        assert!(matches!(err, MapError::KTooLarge { .. }));
+    }
+
+    #[test]
+    fn map_network_clamps_uniform_k() {
+        // pimnet fc2 has only 10 output neurons; uniform k=16 must clamp.
+        let net = pimnet();
+        let m = map_network(&net, &cfg(16)).unwrap();
+        assert_eq!(m.layers[3].k, 10);
+        assert_eq!(m.layers[0].k, 16);
+    }
+
+    #[test]
+    fn stack_capacity_triggers_restaging() {
+        // 256 stacked groups > 255 pairs/column at 8 bits.
+        let net = alexnet();
+        let l = &net.layers[1]; // conv2: 256 output filters ≥ k
+        let m = map_layer(1, 1, l, &ideal_cfg(256)).unwrap();
+        assert_eq!(m.stacked_pairs, 255);
+        assert_eq!(m.restaged_rounds, 1);
+        let m2 = map_layer(1, 1, l, &ideal_cfg(4)).unwrap();
+        assert_eq!(m2.restaged_rounds, 0);
+    }
+
+    #[test]
+    fn all_networks_map_on_both_geometries() {
+        for net in [alexnet(), vgg16(), resnet18(), pimnet()] {
+            for c in [cfg(1), ideal_cfg(1), cfg(4), ideal_cfg(4)] {
+                let m = map_network(&net, &c)
+                    .unwrap_or_else(|e| panic!("{}: {e}", net.name));
+                assert_eq!(m.layers.len(), net.layers.len());
+            }
+        }
+    }
+
+    #[test]
+    fn bank_overflow_detected() {
+        let mut g = DramGeometry::paper_default();
+        g.banks_per_rank = 2;
+        g.ranks_per_channel = 1; // 2 banks total
+        let cfg = MapConfig::uniform(g, 8, 1);
+        let err = map_network(&vgg16(), &cfg).unwrap_err();
+        assert!(matches!(err, MapError::BankOverflow { .. }));
+    }
+
+    #[test]
+    fn mac_never_split_within_subarray_rule() {
+        crate::testutil::check(30, |rng| {
+            let mac_size = rng.int_range(1, 4096) as usize;
+            let g = DramGeometry::paper_default();
+            let per_sub = g.cols / mac_size;
+            prop_assert!(per_sub * mac_size <= g.cols);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn footprint_matches_formula() {
+        // §IV-B worst-case footprint: macs · mac_size · 2 · n bits.
+        let net = alexnet();
+        let m = map_layer(0, 0, &net.layers[0], &cfg(1)).unwrap();
+        let l = &net.layers[0];
+        assert_eq!(
+            m.footprint_bits,
+            2 * 8 * (l.num_macs() as u64) * (l.mac_size() as u64)
+        );
+    }
+
+    #[test]
+    fn rounds_scale_with_waves_and_k() {
+        crate::testutil::check(25, |rng| {
+            let nets = [alexnet(), vgg16(), resnet18(), pimnet()];
+            let net = &nets[rng.below(4)];
+            let li = rng.below(net.layers.len());
+            let l = &net.layers[li];
+            let k = 1 + rng.below(outer_count(l).min(8));
+            let c = MapConfig::uniform(DramGeometry::paper_default(), 8, k);
+            let m = map_layer(li, li, l, &c).map_err(|e| e.to_string())?;
+            prop_assert!(m.rounds() == m.k * m.waves);
+            prop_assert!(m.subarrays_used <= 32);
+            prop_assert!(m.waves >= 1);
+            Ok(())
+        });
+    }
+}

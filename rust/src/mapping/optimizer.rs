@@ -1,0 +1,211 @@
+//! Mapping optimizer: choose the per-layer parallelism vector.
+//!
+//! §V-B: "Our simulator maps the workload layers to the DRAM based on
+//! layer size to optimize performance." The printed Algorithm 1 takes k as
+//! an input; this module closes the loop — for each layer it picks the
+//! smallest k (most parallelism) whose operand expansion fits the bank's
+//! residency budget, optionally balancing the pipeline so no single bank
+//! dominates the initiation interval.
+
+use crate::dram::DramGeometry;
+use crate::workloads::{LayerDesc, Network};
+
+use super::{map_layer, outer_count, MapConfig};
+
+/// Optimization objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Max parallelism that stays resident (no waves, no restaging).
+    MinResidentK,
+    /// Balance stage times: allow folding fat layers further as long as the
+    /// pipeline bottleneck does not move (saves footprint for free).
+    Balanced,
+}
+
+/// The chosen per-layer parallelism plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KPlan {
+    pub ks: Vec<usize>,
+    /// Layers that cannot be made resident at any k ≤ outer (their weights
+    /// exceed bank capacity; they will pay waves/restaging regardless).
+    pub overflow_layers: Vec<String>,
+}
+
+/// Smallest k at which `layer` is fully resident, or None if no k works.
+pub fn min_resident_k(
+    layer: &LayerDesc,
+    geometry: &DramGeometry,
+    n_bits: usize,
+) -> Option<usize> {
+    let outer = outer_count(layer);
+    let max_pairs = geometry.pairs_per_column(n_bits).max(1);
+    // fits(k) is monotone in k → binary search the boundary.
+    let fits = |k: usize| -> bool {
+        let cfg = MapConfig::uniform(geometry.clone(), n_bits, k);
+        match map_layer(0, 0, layer, &cfg) {
+            Ok(m) => m.fully_resident(),
+            Err(_) => false,
+        }
+    };
+    let hi_limit = outer.min(max_pairs);
+    if fits(1) {
+        return Some(1);
+    }
+    if !fits(hi_limit) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1usize, hi_limit); // lo fails, hi fits
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// Rough per-layer cost proxy used for balancing: sequential rounds ×
+/// multiply cost dominates, so rounds(k) = k × waves(k) works.
+fn rounds_at(layer: &LayerDesc, geometry: &DramGeometry, n_bits: usize, k: usize) -> usize {
+    let cfg = MapConfig::uniform(geometry.clone(), n_bits, k);
+    map_layer(0, 0, layer, &cfg).map(|m| m.rounds()).unwrap_or(usize::MAX)
+}
+
+/// Plan the parallelism vector for a network.
+pub fn plan_ks(
+    net: &Network,
+    geometry: &DramGeometry,
+    n_bits: usize,
+    objective: Objective,
+) -> KPlan {
+    let mut ks = Vec::with_capacity(net.layers.len());
+    let mut overflow = Vec::new();
+    for layer in &net.layers {
+        match min_resident_k(layer, geometry, n_bits) {
+            Some(k) => ks.push(k),
+            None => {
+                overflow.push(layer.name.clone());
+                ks.push(outer_count(layer).min(geometry.pairs_per_column(n_bits).max(1)));
+            }
+        }
+    }
+
+    if objective == Objective::Balanced {
+        // The bottleneck layer's round count sets the pipeline cycle; any
+        // other layer may fold further (freeing footprint) while staying
+        // at or below that round count.
+        let bottleneck_rounds = net
+            .layers
+            .iter()
+            .zip(&ks)
+            .map(|(l, &k)| rounds_at(l, geometry, n_bits, k))
+            .max()
+            .unwrap_or(1);
+        for (i, layer) in net.layers.iter().enumerate() {
+            let outer = outer_count(layer);
+            let mut k = ks[i];
+            while k < outer {
+                let next = (k * 2).min(outer);
+                if rounds_at(layer, geometry, n_bits, next) <= bottleneck_rounds {
+                    k = next;
+                } else {
+                    break;
+                }
+            }
+            ks[i] = k;
+        }
+    }
+    KPlan { ks, overflow_layers: overflow }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::workloads::nets::{alexnet, pimnet, vgg16};
+
+    #[test]
+    fn pimnet_resident_plan_on_real_ddr3() {
+        // conv2 expands to 74 subarrays of operands at k=1 (> 32/bank), so
+        // the optimizer folds it to k=3; everything else stays at k=1.
+        let g = DramGeometry::paper_default();
+        let plan = plan_ks(&pimnet(), &g, 8, Objective::MinResidentK);
+        assert_eq!(plan.ks, vec![1, 3, 1, 1]);
+        assert!(plan.overflow_layers.is_empty());
+    }
+
+    #[test]
+    fn min_resident_k_is_minimal() {
+        let g = DramGeometry::paper_default();
+        for layer in alexnet().layers.iter() {
+            if let Some(k) = min_resident_k(layer, &g, 8) {
+                if k > 1 {
+                    let cfg = MapConfig::uniform(g.clone(), 8, k - 1);
+                    let m = map_layer(0, 0, layer, &cfg).unwrap();
+                    assert!(!m.fully_resident(), "{}: k-1 also fits", layer.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vgg_fat_layers_overflow_real_ddr3() {
+        let g = DramGeometry::paper_default();
+        let plan = plan_ks(&vgg16(), &g, 8, Objective::MinResidentK);
+        // conv1_2's expansion (1.85 G columns) cannot fit 32 subarrays at
+        // any k ≤ 64 — it must be reported as overflow.
+        assert!(
+            plan.overflow_layers.iter().any(|n| n == "conv1_2"),
+            "overflow: {:?}",
+            plan.overflow_layers
+        );
+    }
+
+    #[test]
+    fn ideal_geometry_everything_resident() {
+        let g = DramGeometry::paper_ideal();
+        let plan = plan_ks(&vgg16(), &g, 8, Objective::MinResidentK);
+        assert!(plan.overflow_layers.is_empty());
+        assert!(plan.ks.iter().all(|&k| k == 1));
+    }
+
+    #[test]
+    fn balanced_never_slower_than_bottleneck() {
+        let g = DramGeometry::paper_default();
+        let net = alexnet();
+        let base = plan_ks(&net, &g, 8, Objective::MinResidentK);
+        let bal = plan_ks(&net, &g, 8, Objective::Balanced);
+        let rounds = |ks: &[usize]| -> usize {
+            net.layers
+                .iter()
+                .zip(ks)
+                .map(|(l, &k)| rounds_at(l, &g, 8, k))
+                .max()
+                .unwrap()
+        };
+        assert!(rounds(&bal.ks) <= rounds(&base.ks));
+        // Balanced folds at least as much everywhere.
+        for (b, m) in bal.ks.iter().zip(&base.ks) {
+            assert!(b >= m);
+        }
+    }
+
+    #[test]
+    fn planned_ks_are_valid_property() {
+        crate::testutil::check(12, |rng| {
+            let nets = [alexnet(), vgg16(), pimnet()];
+            let net = &nets[rng.below(3)];
+            let n_bits = [2usize, 4, 8][rng.below(3)];
+            let g = DramGeometry::paper_default();
+            let plan = plan_ks(net, &g, n_bits, Objective::MinResidentK);
+            for (layer, &k) in net.layers.iter().zip(&plan.ks) {
+                prop_assert!(k >= 1 && k <= outer_count(layer));
+                let cfg = MapConfig::uniform(g.clone(), n_bits, k);
+                prop_assert!(map_layer(0, 0, layer, &cfg).is_ok());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,184 @@
+//! Majority-based bit-serial in-DRAM ADD (Ali et al. [5], adopted in §II-B):
+//!
+//!   Cout = MAJ3(A, B, Cin)                     — triple-row activation
+//!   Sum  = MAJ5(A, B, Cin, !Cout, !Cout)       — quintuple-row activation
+//!
+//! Operands are bit-transposed (one row per bit). Per bit: two dual-copies
+//! stage the operand bits into (A, A-1) / (B, B-1), a TRA produces the
+//! carry (captured into Cout/Cout-1 through the dual-contact cells), and a
+//! quintuple activation produces the sum bit. The carry for the next bit is
+//! the TRA's own restore value in Cin; the paper notes "Cin is copied to
+//! Cin-1 for storing the same value" — [5]'s row decoder folds that refresh
+//! into the same AAPs, so the charged total is the published `4n + 1`.
+
+use super::PimSubarray;
+use crate::dram::subarray::ActRow;
+use crate::dram::Command;
+
+/// Add two n-bit transposed operands: `dst_rows` receives n+1 result bits
+/// (LSB first; the final carry lands in `dst_rows[n]`). Charges `4n + 1`
+/// AAPs. Rows must all be distinct from the compute rows.
+pub fn in_dram_add(
+    p: &mut PimSubarray,
+    a_rows: &[usize],
+    b_rows: &[usize],
+    dst_rows: &[usize],
+) {
+    let n = a_rows.len();
+    assert_eq!(b_rows.len(), n, "operand width mismatch");
+    assert_eq!(dst_rows.len(), n + 1, "dst must have n+1 rows");
+    let l = p.layout;
+
+    // Init: zero the carry rows (dual RowClone from row0) — the "+1".
+    p.sa.copy_row(l.row0, l.cin);
+    p.sa.copy_row(l.row0, l.cin1);
+    p.charge(Command::RowCloneIntra);
+
+    for i in 0..n {
+        // Stage operand bits (split decoder writes both copies per AAP).
+        p.sa.copy_row(a_rows[i], l.a);
+        p.sa.copy_row(a_rows[i], l.a1);
+        p.charge(Command::RowCloneIntra);
+        p.sa.copy_row(b_rows[i], l.b);
+        p.sa.copy_row(b_rows[i], l.b1);
+        p.charge(Command::RowCloneIntra);
+
+        // TRA: carry out. Restore overwrites A, B, Cin with MAJ3; the DCC
+        // rows capture (Cout, !Cout) in the same AAP; the final bit also
+        // drops the carry into dst[n] during the second activation.
+        let cout = p.sa.multi_activate(&[
+            ActRow::plain(l.a),
+            ActRow::plain(l.b),
+            ActRow::plain(l.cin),
+        ]);
+        p.sa.write_row(l.cout, &cout);
+        p.sa.write_row(l.cout1, &cout.not());
+        if i == n - 1 {
+            p.sa.write_row(dst_rows[n], &cout);
+        }
+        p.charge(Command::Aap { rows: 3 });
+
+        // Quintuple activation: Sum = MAJ5(A-1, B-1, Cin-1, !Cout, !Cout).
+        // Both complement terms come from the DCC pair (Cout read negated,
+        // Cout-1 read plain).
+        let sum = p.sa.multi_activate(&[
+            ActRow::plain(l.a1),
+            ActRow::plain(l.b1),
+            ActRow::plain(l.cin1),
+            ActRow::neg(l.cout),
+            ActRow::plain(l.cout1),
+        ]);
+        p.sa.write_row(dst_rows[i], &sum);
+        p.charge(Command::Aap { rows: 5 });
+
+        // Carry maintenance folded into the decoder writes: Cin already
+        // holds Cout via the TRA restore; refresh Cin-1 to match.
+        p.sa.copy_row(l.cin, l.cin1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+    use crate::primitives::cost::add_aaps;
+
+    /// Write value `v` bit-transposed into rows `rows` at column `col`.
+    fn write_val(p: &mut PimSubarray, rows: &[usize], col: usize, v: u64) {
+        for (i, &r) in rows.iter().enumerate() {
+            p.sa.set_bit(r, col, (v >> i) & 1 == 1);
+        }
+    }
+
+    fn read_val(p: &PimSubarray, rows: &[usize], col: usize) -> u64 {
+        rows.iter()
+            .enumerate()
+            .map(|(i, &r)| (p.sa.get_bit(r, col) as u64) << i)
+            .sum()
+    }
+
+    /// Helper: allocate disjoint row groups in the data region.
+    fn rows_at(p: &PimSubarray, group: usize, n: usize) -> Vec<usize> {
+        let base = p.layout.data_base + group * n.max(1);
+        (0..n).map(|i| base + i).collect()
+    }
+
+    fn add_case(n: usize, pairs: &[(u64, u64)]) {
+        let cols = pairs.len();
+        // Generous subarray: 3 groups of up to n+1 rows.
+        let mut p = PimSubarray::new(n.min(16), cols, 8);
+        let a_rows = rows_at(&p, 0, n);
+        let b_rows: Vec<usize> = rows_at(&p, 1, n);
+        let dst: Vec<usize> = rows_at(&p, 2, n + 1);
+        for (col, &(a, b)) in pairs.iter().enumerate() {
+            write_val(&mut p, &a_rows, col, a);
+            write_val(&mut p, &b_rows, col, b);
+        }
+        in_dram_add(&mut p, &a_rows, &b_rows, &dst);
+        for (col, &(a, b)) in pairs.iter().enumerate() {
+            assert_eq!(
+                read_val(&p, &dst, col),
+                a + b,
+                "col {col}: {a} + {b} (n={n})"
+            );
+        }
+        assert_eq!(p.stats.total_aaps(), add_aaps(n as u64));
+    }
+
+    #[test]
+    fn exhaustive_4bit() {
+        // All 256 (a, b) combinations, packed 16 columns at a time.
+        let all: Vec<(u64, u64)> =
+            (0..16).flat_map(|a| (0..16).map(move |b| (a, b))).collect();
+        for chunk in all.chunks(16) {
+            add_case(4, chunk);
+        }
+    }
+
+    #[test]
+    fn exhaustive_1bit() {
+        add_case(1, &[(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn wide_operands() {
+        add_case(16, &[(0xFFFF, 0xFFFF), (0x8000, 0x8000), (0x1234, 0x0FED)]);
+    }
+
+    #[test]
+    fn cost_matches_published_formula() {
+        for n in [1usize, 2, 4, 8, 12] {
+            let mut p = PimSubarray::new(8, 4, 8);
+            let a_rows = rows_at(&p, 0, n);
+            let b_rows = rows_at(&p, 1, n);
+            let dst = rows_at(&p, 2, n + 1);
+            in_dram_add(&mut p, &a_rows, &b_rows, &dst);
+            assert_eq!(p.stats.total_aaps(), 4 * n as u64 + 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn random_additions_property() {
+        crate::testutil::check(40, |rng| {
+            let n = rng.int_range(1, 16) as usize;
+            let cols = rng.int_range(1, 32) as usize;
+            let mut p = PimSubarray::new(n.min(16), cols, 8);
+            let a_rows = rows_at(&p, 0, n);
+            let b_rows = rows_at(&p, 1, n);
+            let dst = rows_at(&p, 2, n + 1);
+            let mut expect = Vec::new();
+            for col in 0..cols {
+                let a = rng.int_range(0, (1i64 << n) - 1) as u64;
+                let b = rng.int_range(0, (1i64 << n) - 1) as u64;
+                write_val(&mut p, &a_rows, col, a);
+                write_val(&mut p, &b_rows, col, b);
+                expect.push(a + b);
+            }
+            in_dram_add(&mut p, &a_rows, &b_rows, &dst);
+            for (col, &want) in expect.iter().enumerate() {
+                prop_assert_eq!(read_val(&p, &dst, col), want);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,85 @@
+//! The proposed in-subarray AND (§III-A): the paper's new primitive.
+//!
+//! Three stages, each one AAP:
+//!   1. RowClone operand 1 → compute row A
+//!   2. RowClone operand 2 → compute row A-1
+//!   3. Activate AND-WL: per column, the stored value of A gates which cell
+//!      charge-shares with the bitline (NMOS connects A-1 when A=1, PMOS
+//!      connects A when A=0), so the sensed value is `A AND A-1`; the
+//!      destination row(s) are activated while the sense amps hold it.
+
+use super::PimSubarray;
+use crate::dram::Command;
+
+/// Full 3-AAP AND of two stored rows into `dst_rows` (1 or 2 destinations —
+/// two via the split decoder, as the multiply uses for (A, A-1) and (B, B-1)
+/// writebacks).
+pub fn in_dram_and(p: &mut PimSubarray, src1: usize, src2: usize, dst_rows: &[usize]) {
+    assert!(!dst_rows.is_empty() && dst_rows.len() <= 2);
+    let l = p.layout;
+    p.sa.copy_row(src1, l.a);
+    p.charge(Command::RowCloneIntra);
+    p.sa.copy_row(src2, l.a1);
+    p.charge(Command::RowCloneIntra);
+    p.sa.and_wl(l.a, l.a1, dst_rows);
+    p.charge(Command::Aap { rows: 1 });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::BitRow;
+
+    #[test]
+    fn and_truth_table_column_parallel() {
+        let mut p = PimSubarray::new(2, 4, 1);
+        let (r1, r2) = (p.layout.act_row(0, 0), p.layout.wgt_row(0, 0));
+        // columns: (0,0) (0,1) (1,0) (1,1)
+        p.sa.write_row(r1, &BitRow::from_fn(4, |c| c >= 2));
+        p.sa.write_row(r2, &BitRow::from_fn(4, |c| c % 2 == 1));
+        let dst = p.layout.p_row(0);
+        in_dram_and(&mut p, r1, r2, &[dst]);
+        assert!(!p.sa.get_bit(dst, 0));
+        assert!(!p.sa.get_bit(dst, 1));
+        assert!(!p.sa.get_bit(dst, 2));
+        assert!(p.sa.get_bit(dst, 3));
+    }
+
+    #[test]
+    fn and_costs_three_aaps() {
+        let mut p = PimSubarray::new(2, 8, 1);
+        let (r1, r2) = (p.layout.act_row(0, 0), p.layout.wgt_row(0, 0));
+        let dst0 = p.layout.p_row(0);
+        in_dram_and(&mut p, r1, r2, &[dst0]);
+        assert_eq!(p.stats.total_aaps(), super::super::cost::AND_AAPS);
+    }
+
+    #[test]
+    fn and_preserves_original_operands() {
+        // The whole point of the compute-row copies (§III-A): source data
+        // must survive the destructive sensing.
+        let mut p = PimSubarray::new(2, 4, 1);
+        let (r1, r2) = (p.layout.act_row(0, 0), p.layout.wgt_row(0, 0));
+        let pat1 = BitRow::from_fn(4, |c| c == 1 || c == 3);
+        let pat2 = BitRow::from_fn(4, |c| c >= 1);
+        p.sa.write_row(r1, &pat1);
+        p.sa.write_row(r2, &pat2);
+        let dst0 = p.layout.p_row(0);
+        in_dram_and(&mut p, r1, r2, &[dst0]);
+        assert_eq!(p.sa.row(r1), &pat1);
+        assert_eq!(p.sa.row(r2), &pat2);
+    }
+
+    #[test]
+    fn and_dual_destination() {
+        let mut p = PimSubarray::new(2, 2, 1);
+        let (r1, r2) = (p.layout.act_row(0, 0), p.layout.wgt_row(0, 0));
+        p.sa.write_row(r1, &BitRow::from_fn(2, |_| true));
+        p.sa.write_row(r2, &BitRow::from_fn(2, |c| c == 0));
+        let (d1, d2) = (p.layout.b, p.layout.b1);
+        in_dram_and(&mut p, r1, r2, &[d1, d2]);
+        assert!(p.sa.get_bit(d1, 0) && p.sa.get_bit(d2, 0));
+        assert!(!p.sa.get_bit(d1, 1) && !p.sa.get_bit(d2, 1));
+        assert_eq!(p.stats.total_aaps(), 3);
+    }
+}

@@ -1,0 +1,170 @@
+//! Ambit-style bulk bitwise operations (§II-B background, Seshadri et al.
+//! [14]) — the substrate the paper's AND builds on. Exposed as first-class
+//! primitives because ternary/binary networks (the DRISA/DrAcc lineage the
+//! paper compares against in §I) run directly on them.
+//!
+//! Costs follow Ambit's accounting: each op stages its operands into
+//! compute rows with dual-write RowClones, performs one triple-row
+//! activation, and lands the result via the second activation of the AAP.
+
+use super::PimSubarray;
+use crate::dram::subarray::ActRow;
+use crate::dram::{BitRow, Command};
+
+/// Bulk AND of two stored rows → `dst` (Ambit: MAJ3(a, b, 0)). 4 AAPs:
+/// two dual-copies, zero-init of the control row, one TRA.
+pub fn bulk_and(p: &mut PimSubarray, src1: usize, src2: usize, dst: usize) {
+    maj3_with_control(p, src1, src2, dst, false)
+}
+
+/// Bulk OR of two stored rows → `dst` (Ambit: MAJ3(a, b, 1)). 4 AAPs.
+pub fn bulk_or(p: &mut PimSubarray, src1: usize, src2: usize, dst: usize) {
+    maj3_with_control(p, src1, src2, dst, true)
+}
+
+/// Bulk NOT via the dual-contact cell: read `src` through the DCC's
+/// complementary wordline into `dst`. 2 AAPs (copy into the DCC row, AAP
+/// out of its negated port).
+pub fn bulk_not(p: &mut PimSubarray, src: usize, dst: usize) {
+    let l = p.layout;
+    p.sa.copy_row(src, l.cout);
+    p.charge(Command::RowCloneIntra);
+    let neg = p.sa.row(l.cout).not();
+    p.sa.write_row(dst, &neg);
+    p.charge(Command::Aap { rows: 1 });
+}
+
+/// Bulk 3-input majority (the raw TRA) of three stored rows → `dst`.
+/// 4 AAPs: three copies (one dual) + the TRA.
+pub fn bulk_maj3(
+    p: &mut PimSubarray,
+    src1: usize,
+    src2: usize,
+    src3: usize,
+    dst: usize,
+) {
+    let l = p.layout;
+    p.sa.copy_row(src1, l.a);
+    p.charge(Command::RowCloneIntra);
+    p.sa.copy_row(src2, l.b);
+    p.charge(Command::RowCloneIntra);
+    p.sa.copy_row(src3, l.cin);
+    p.charge(Command::RowCloneIntra);
+    let sensed = p.sa.multi_activate(&[
+        ActRow::plain(l.a),
+        ActRow::plain(l.b),
+        ActRow::plain(l.cin),
+    ]);
+    p.sa.write_row(dst, &sensed);
+    p.charge(Command::Aap { rows: 3 });
+}
+
+fn maj3_with_control(
+    p: &mut PimSubarray,
+    src1: usize,
+    src2: usize,
+    dst: usize,
+    control: bool,
+) {
+    let l = p.layout;
+    p.sa.copy_row(src1, l.a);
+    p.charge(Command::RowCloneIntra);
+    p.sa.copy_row(src2, l.b);
+    p.charge(Command::RowCloneIntra);
+    // Control row: 0 for AND, 1 for OR (row0 or its DCC complement).
+    let ctrl = if control {
+        BitRow::zeros(p.sa.cols()).not()
+    } else {
+        BitRow::zeros(p.sa.cols())
+    };
+    p.sa.write_row(l.cin, &ctrl);
+    p.charge(Command::RowCloneIntra);
+    let sensed = p.sa.multi_activate(&[
+        ActRow::plain(l.a),
+        ActRow::plain(l.b),
+        ActRow::plain(l.cin),
+    ]);
+    p.sa.write_row(dst, &sensed);
+    p.charge(Command::Aap { rows: 3 });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+
+    fn setup(cols: usize) -> (PimSubarray, usize, usize, usize) {
+        let p = PimSubarray::new(2, cols, 4);
+        let base = p.layout.data_base;
+        (p, base, base + 1, base + 2)
+    }
+
+    fn pattern(cols: usize, seed: usize) -> BitRow {
+        BitRow::from_fn(cols, |c| (c * 7 + seed * 13) % 3 == 0)
+    }
+
+    #[test]
+    fn and_or_not_truth() {
+        let cols = 130; // crosses word boundaries
+        let (mut p, r1, r2, dst) = setup(cols);
+        let a = pattern(cols, 1);
+        let b = pattern(cols, 2);
+        p.sa.write_row(r1, &a);
+        p.sa.write_row(r2, &b);
+
+        bulk_and(&mut p, r1, r2, dst);
+        assert_eq!(p.sa.row(dst), &a.and(&b));
+
+        bulk_or(&mut p, r1, r2, dst);
+        // Sources were re-staged from r1/r2 which survive (copies used).
+        assert_eq!(p.sa.row(dst), &a.or(&b));
+
+        bulk_not(&mut p, r1, dst);
+        assert_eq!(p.sa.row(dst), &a.not());
+    }
+
+    #[test]
+    fn sources_preserved() {
+        let cols = 64;
+        let (mut p, r1, r2, dst) = setup(cols);
+        let a = pattern(cols, 3);
+        let b = pattern(cols, 4);
+        p.sa.write_row(r1, &a);
+        p.sa.write_row(r2, &b);
+        bulk_and(&mut p, r1, r2, dst);
+        assert_eq!(p.sa.row(r1), &a);
+        assert_eq!(p.sa.row(r2), &b);
+    }
+
+    #[test]
+    fn aap_costs() {
+        let (mut p, r1, r2, dst) = setup(32);
+        bulk_and(&mut p, r1, r2, dst);
+        assert_eq!(p.stats.total_aaps(), 4);
+        let (mut p2, r1, _, dst) = setup(32);
+        bulk_not(&mut p2, r1, dst);
+        assert_eq!(p2.stats.total_aaps(), 2);
+    }
+
+    #[test]
+    fn maj3_ternary_dot_product_property() {
+        // The DrAcc-style use: ternary weights via majority votes.
+        crate::testutil::check(25, |rng| {
+            let cols = 1 + rng.below(100);
+            let mut p = PimSubarray::new(2, cols, 6);
+            let base = p.layout.data_base;
+            let rows: Vec<BitRow> =
+                (0..3).map(|s| pattern(cols, rng.below(64) + s)).collect();
+            for (i, r) in rows.iter().enumerate() {
+                p.sa.write_row(base + i, r);
+            }
+            bulk_maj3(&mut p, base, base + 1, base + 2, base + 3);
+            for c in 0..cols {
+                let votes =
+                    rows.iter().filter(|r| r.get(c)).count();
+                prop_assert_eq!(p.sa.get_bit(base + 3, c), votes >= 2);
+            }
+            Ok(())
+        });
+    }
+}

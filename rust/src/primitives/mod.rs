@@ -1,0 +1,215 @@
+//! In-DRAM compute primitives (DESIGN.md S2–S5): RowClone, the proposed
+//! 3-transistor AND, majority-based bit-serial ADD, and the paper's
+//! n-bit column-parallel multiplication, all operating on the functional
+//! [`crate::dram::Subarray`] with AAP-level cost accounting.
+//!
+//! Layout of a PIM-enabled subarray (rows, top to bottom):
+//!
+//! ```text
+//! 0            row0 (all zeros)
+//! 1..=8        A, A-1, B, B-1, Cin, Cin-1, Cout, Cout-1   (compute rows)
+//! 9..9+n-1     I0..In-2 (intermediate ADD results, n > 2)
+//! then         P0..P(2n-1)   product rows for the active pair
+//! then         operand pairs, bit-transposed: pair p occupies 2n rows
+//!              (n activation bits, then n weight bits)
+//! ```
+
+pub mod add;
+pub mod and_op;
+pub mod bulk;
+pub mod cost;
+pub mod mul;
+pub mod rowclone;
+
+pub use cost::{CostModel, add_aaps, mul_aaps, paper_mul_aaps};
+
+use crate::dram::{BitRow, Command, CommandStats, Subarray};
+
+/// Row-index layout for a PIM subarray configured for n-bit operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout {
+    pub n: usize,
+    pub row0: usize,
+    pub a: usize,
+    pub a1: usize,
+    pub b: usize,
+    pub b1: usize,
+    pub cin: usize,
+    pub cin1: usize,
+    pub cout: usize,
+    pub cout1: usize,
+    /// First intermediate row (I0); n-1 rows follow.
+    pub i_base: usize,
+    /// First product row (P0); 2n rows follow.
+    pub p_base: usize,
+    /// First operand data row.
+    pub data_base: usize,
+}
+
+impl Layout {
+    pub fn new(n: usize) -> Self {
+        assert!((1..=16).contains(&n), "operand bits {n} out of range");
+        let i_base = 9;
+        let p_base = i_base + n.saturating_sub(1);
+        let data_base = p_base + 2 * n;
+        Layout {
+            n,
+            row0: 0,
+            a: 1,
+            a1: 2,
+            b: 3,
+            b1: 4,
+            cin: 5,
+            cin1: 6,
+            cout: 7,
+            cout1: 8,
+            i_base,
+            p_base,
+            data_base,
+        }
+    }
+
+    /// Row of activation bit `bit` of pair `pair`.
+    pub fn act_row(&self, pair: usize, bit: usize) -> usize {
+        debug_assert!(bit < self.n);
+        self.data_base + pair * 2 * self.n + bit
+    }
+
+    /// Row of weight bit `bit` of pair `pair`.
+    pub fn wgt_row(&self, pair: usize, bit: usize) -> usize {
+        debug_assert!(bit < self.n);
+        self.data_base + pair * 2 * self.n + self.n + bit
+    }
+
+    /// Product row for bit `bit` (0..2n).
+    pub fn p_row(&self, bit: usize) -> usize {
+        debug_assert!(bit < 2 * self.n);
+        self.p_base + bit
+    }
+
+    /// Rows needed to hold `pairs` stacked operand pairs.
+    pub fn rows_needed(&self, pairs: usize) -> usize {
+        self.data_base + pairs * 2 * self.n
+    }
+}
+
+/// A PIM-enabled subarray: functional array + layout + command accounting.
+#[derive(Debug, Clone)]
+pub struct PimSubarray {
+    pub sa: Subarray,
+    pub layout: Layout,
+    pub stats: CommandStats,
+    pub cost_model: CostModel,
+}
+
+impl PimSubarray {
+    /// Create with enough rows for `pairs` stacked operand pairs of n bits,
+    /// `cols` columns (one multiplication per column).
+    pub fn new(n: usize, cols: usize, pairs: usize) -> Self {
+        let layout = Layout::new(n);
+        let rows = layout.rows_needed(pairs.max(1));
+        PimSubarray {
+            sa: Subarray::new(rows, cols),
+            layout,
+            stats: CommandStats::new(),
+            cost_model: CostModel::Paper,
+        }
+    }
+
+    /// Store an (activation, weight) operand pair bit-transposed into
+    /// `col` at stack position `pair`. Values must fit in n bits.
+    pub fn write_pair(&mut self, col: usize, pair: usize, act: u64, wgt: u64) {
+        let n = self.layout.n;
+        assert!(act < (1 << n), "activation {act} exceeds {n} bits");
+        assert!(wgt < (1 << n), "weight {wgt} exceeds {n} bits");
+        for bit in 0..n {
+            self.sa
+                .set_bit(self.layout.act_row(pair, bit), col, (act >> bit) & 1 == 1);
+            self.sa
+                .set_bit(self.layout.wgt_row(pair, bit), col, (wgt >> bit) & 1 == 1);
+        }
+    }
+
+    /// Read back the 2n-bit product of `col` from the product rows.
+    pub fn read_product(&self, col: usize) -> u64 {
+        let mut v = 0u64;
+        for bit in 0..2 * self.layout.n {
+            if self.sa.get_bit(self.layout.p_row(bit), col) {
+                v |= 1 << bit;
+            }
+        }
+        v
+    }
+
+    /// Read product bit-plane `bit` across all columns (what the adder tree
+    /// consumes, one bit position at a time — §IV dataflow).
+    pub fn product_plane(&self, bit: usize) -> &BitRow {
+        self.sa.row(self.layout.p_row(bit))
+    }
+
+    pub(crate) fn charge(&mut self, cmd: Command) {
+        self.stats.record(cmd);
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_rows_disjoint() {
+        for n in [1, 2, 4, 8, 16] {
+            let l = Layout::new(n);
+            let mut seen = std::collections::HashSet::new();
+            let mut rows = vec![
+                l.row0, l.a, l.a1, l.b, l.b1, l.cin, l.cin1, l.cout, l.cout1,
+            ];
+            for i in 0..n.saturating_sub(1) {
+                rows.push(l.i_base + i);
+            }
+            for b in 0..2 * n {
+                rows.push(l.p_row(b));
+            }
+            rows.push(l.act_row(0, 0));
+            rows.push(l.wgt_row(0, n - 1));
+            for r in rows {
+                assert!(seen.insert(r), "duplicate row {r} at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pair_rows_stack() {
+        let l = Layout::new(8);
+        assert_eq!(l.act_row(1, 0) - l.act_row(0, 0), 16);
+        assert_eq!(l.wgt_row(0, 0) - l.act_row(0, 0), 8);
+        assert_eq!(l.rows_needed(255), l.data_base + 255 * 16);
+    }
+
+    #[test]
+    fn write_read_pair_roundtrip() {
+        let mut p = PimSubarray::new(8, 16, 2);
+        p.write_pair(3, 1, 0xAB, 0x5F);
+        let n = p.layout.n;
+        let mut act = 0u64;
+        let mut wgt = 0u64;
+        for bit in 0..n {
+            if p.sa.get_bit(p.layout.act_row(1, bit), 3) {
+                act |= 1 << bit;
+            }
+            if p.sa.get_bit(p.layout.wgt_row(1, bit), 3) {
+                wgt |= 1 << bit;
+            }
+        }
+        assert_eq!(act, 0xAB);
+        assert_eq!(wgt, 0x5F);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn write_pair_range_checked() {
+        let mut p = PimSubarray::new(4, 8, 1);
+        p.write_pair(0, 0, 16, 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! The paper's core contribution: n-bit column-parallel multiplication in a
+//! DRAM subarray (§III-B).
+//!
+//! Schoolbook decomposition: n² partial products, each an in-subarray AND
+//! of one activation bit-plane and one weight bit-plane (rows, so every
+//! column multiplies in parallel), accumulated into the product rows
+//! P0..P(2n-1) with the majority-based adder:
+//!
+//!   sum  = a XOR pp  == MAJ5(a, pp, row0, !carry, !carry)
+//!   cout = a AND pp  == MAJ3(a, pp, row0)
+//!
+//! (with row0 ≡ 0, MAJ3 degenerates to AND and MAJ5 to XOR — the same
+//! identity the §III-B walkthrough uses when it copies row0 into B/B-1
+//! before the final column). The functional result is exact for all
+//! operands; the AAP cost charged is the paper's closed form
+//! ([`cost::mul_aaps`]), with the derived count available for comparison.
+
+use super::{cost, PimSubarray};
+use crate::dram::{BitRow, Command};
+
+/// Multiply the stacked operand pair `pair` in every column simultaneously.
+/// Products land in the P rows (read back with
+/// [`PimSubarray::read_product`]); original operands are preserved.
+pub fn in_dram_mul(p: &mut PimSubarray, pair: usize) {
+    let n = p.layout.n;
+    let cols = p.sa.cols();
+    let zero = BitRow::zeros(cols);
+
+    // Zero the product rows (RowClone from row0; charged in the closed
+    // form's initialization term).
+    let mut acc: Vec<BitRow> = vec![zero.clone(); 2 * n];
+
+    // Scratch rows reused across all n² partial products — the inner loop
+    // is allocation-free (§Perf: 2.4× over the allocating version).
+    let mut carry = zero.clone();
+    let mut tmp = zero;
+
+    for i in 0..n {
+        for j in 0..n {
+            // Partial product: AND of activation bit-plane i and weight
+            // bit-plane j (the 3-transistor AND-WL, column-parallel).
+            p.sa
+                .row(p.layout.act_row(pair, i))
+                .and_into(p.sa.row(p.layout.wgt_row(pair, j)), &mut carry);
+
+            // Ripple the 1-bit plane into the accumulator rows starting at
+            // bit position i+j (majority-adder identities above):
+            //   tmp   = slot AND carry   (MAJ3(a, c, 0) — next carry)
+            //   slot ^= carry            (MAJ5(a, c, 0, !k, !k) — sum)
+            for slot in acc.iter_mut().skip(i + j) {
+                if carry.is_zero() {
+                    break;
+                }
+                slot.and_into(&carry, &mut tmp);
+                slot.xor_assign(&carry);
+                std::mem::swap(&mut carry, &mut tmp);
+            }
+            debug_assert!(carry.is_zero(), "product overflowed 2n bits");
+        }
+    }
+
+    // Drive the accumulated planes into the physical product rows.
+    for (bit, plane) in acc.iter().enumerate() {
+        p.sa.write_row(p.layout.p_row(bit), plane);
+    }
+
+    charge_mul(p, n as u64);
+}
+
+/// Charge the closed-form AAP cost of one n-bit multiply, split into the
+/// command classes it is composed of (3 AAPs per AND = two staging
+/// RowClones + the AND-WL activation; the remainder are the adder's
+/// TRA/quintuple activations, split evenly for energy accounting).
+fn charge_mul(p: &mut PimSubarray, n: u64) {
+    let total = cost::mul_aaps(p.cost_model, n);
+    let and_ops = cost::mul_and_ops(n);
+    for _ in 0..and_ops {
+        p.charge(Command::RowCloneIntra);
+        p.charge(Command::RowCloneIntra);
+        p.charge(Command::Aap { rows: 1 });
+    }
+    let remaining = total.saturating_sub(and_ops * cost::AND_AAPS);
+    for k in 0..remaining {
+        p.charge(Command::Aap { rows: if k % 2 == 0 { 3 } else { 5 } });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_eq;
+    use crate::primitives::cost::{paper_mul_aaps, CostModel};
+
+    fn mul_case(n: usize, pairs_vals: &[(u64, u64)]) {
+        let cols = pairs_vals.len();
+        let mut p = PimSubarray::new(n, cols, 1);
+        for (col, &(a, w)) in pairs_vals.iter().enumerate() {
+            p.write_pair(col, 0, a, w);
+        }
+        in_dram_mul(&mut p, 0);
+        for (col, &(a, w)) in pairs_vals.iter().enumerate() {
+            assert_eq!(p.read_product(col), a * w, "col {col}: {a} * {w} (n={n})");
+        }
+    }
+
+    #[test]
+    fn exhaustive_2bit() {
+        // The paper's worked example size: all 16 combinations at once.
+        let all: Vec<(u64, u64)> =
+            (0..4).flat_map(|a| (0..4).map(move |b| (a, b))).collect();
+        mul_case(2, &all);
+    }
+
+    #[test]
+    fn exhaustive_4bit() {
+        let all: Vec<(u64, u64)> =
+            (0..16).flat_map(|a| (0..16).map(move |b| (a, b))).collect();
+        for chunk in all.chunks(64) {
+            mul_case(4, chunk);
+        }
+    }
+
+    #[test]
+    fn eight_bit_corners() {
+        mul_case(
+            8,
+            &[
+                (0, 0),
+                (255, 255),
+                (255, 1),
+                (1, 255),
+                (128, 128),
+                (170, 85),
+                (0, 255),
+                (255, 0),
+            ],
+        );
+    }
+
+    #[test]
+    fn one_bit_is_and() {
+        mul_case(1, &[(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn charged_aaps_match_paper_closed_form() {
+        for n in [1usize, 2, 3, 4, 8, 12, 16] {
+            let mut p = PimSubarray::new(n, 8, 1);
+            p.write_pair(0, 0, 1, 1);
+            in_dram_mul(&mut p, 0);
+            assert_eq!(
+                p.stats.total_aaps(),
+                paper_mul_aaps(n as u64),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn derived_cost_model_switch() {
+        let mut p = PimSubarray::new(8, 8, 1);
+        p.cost_model = CostModel::Derived;
+        in_dram_mul(&mut p, 0);
+        assert_eq!(
+            p.stats.total_aaps(),
+            cost::derived_mul_aaps(8),
+        );
+    }
+
+    #[test]
+    fn operands_preserved_after_multiply() {
+        let mut p = PimSubarray::new(4, 4, 1);
+        p.write_pair(2, 0, 13, 11);
+        in_dram_mul(&mut p, 0);
+        // Re-run: operands must still be in place (non-destructive compute).
+        in_dram_mul(&mut p, 0);
+        assert_eq!(p.read_product(2), 143);
+    }
+
+    #[test]
+    fn stacked_pairs_multiply_independently() {
+        let mut p = PimSubarray::new(4, 2, 3);
+        p.write_pair(0, 0, 3, 5);
+        p.write_pair(0, 1, 7, 7);
+        p.write_pair(0, 2, 15, 15);
+        in_dram_mul(&mut p, 1);
+        assert_eq!(p.read_product(0), 49);
+        in_dram_mul(&mut p, 2);
+        assert_eq!(p.read_product(0), 225);
+        in_dram_mul(&mut p, 0);
+        assert_eq!(p.read_product(0), 15);
+    }
+
+    #[test]
+    fn random_products_property() {
+        crate::testutil::check(60, |rng| {
+            let n = rng.int_range(1, 12) as usize;
+            let cols = rng.int_range(1, 24) as usize;
+            let mut p = PimSubarray::new(n, cols, 1);
+            let mut expect = Vec::new();
+            for col in 0..cols {
+                let a = rng.int_range(0, (1i64 << n) - 1) as u64;
+                let w = rng.int_range(0, (1i64 << n) - 1) as u64;
+                p.write_pair(col, 0, a, w);
+                expect.push(a * w);
+            }
+            in_dram_mul(&mut p, 0);
+            for (col, &want) in expect.iter().enumerate() {
+                prop_assert_eq!(p.read_product(col), want);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,87 @@
+//! RowClone (Seshadri et al. [15]) — bulk row copy, the data-movement
+//! primitive the paper adopts for operand staging and inter-bank transfer.
+
+use crate::dram::{Command, CommandStats, Subarray};
+
+/// Intra-subarray copy: source activation, destination activation while the
+/// sense amps still hold the data — one AAP.
+pub fn copy_intra(
+    sa: &mut Subarray,
+    stats: &mut CommandStats,
+    src: usize,
+    dst: usize,
+) {
+    sa.copy_row(src, dst);
+    stats.record(Command::RowCloneIntra);
+}
+
+/// Intra-subarray copy into *two* destination rows in one AAP — the
+/// split-row decoder activates both targets (how [5] achieves 4n+1 adds and
+/// how operands land in (A, A-1) pairs).
+pub fn copy_intra_dual(
+    sa: &mut Subarray,
+    stats: &mut CommandStats,
+    src: usize,
+    dst1: usize,
+    dst2: usize,
+) {
+    sa.copy_row(src, dst1);
+    sa.copy_row(src, dst2);
+    stats.record(Command::RowCloneIntra);
+}
+
+/// Inter-bank copy of one row over the internal bus (RowClone PSM): the
+/// functional part moves the row between two subarray models; the cost is
+/// serialized bus beats plus two row cycles.
+pub fn copy_inter_bank(
+    src: &Subarray,
+    src_row: usize,
+    dst: &mut Subarray,
+    dst_row: usize,
+    stats: &mut CommandStats,
+) {
+    let data = src.row(src_row).clone();
+    let bits = data.cols() as u32;
+    dst.write_row(dst_row, &data);
+    stats.record(Command::RowCloneInter { row_bits: bits });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::BitRow;
+
+    #[test]
+    fn intra_copy_one_aap() {
+        let mut sa = Subarray::new(8, 32);
+        let mut stats = CommandStats::new();
+        sa.write_row(2, &BitRow::from_fn(32, |c| c % 3 == 0));
+        copy_intra(&mut sa, &mut stats, 2, 5);
+        assert_eq!(sa.row(5), sa.row(2));
+        assert_eq!(stats.rowclone_intra, 1);
+        assert_eq!(stats.total_aaps(), 1);
+    }
+
+    #[test]
+    fn dual_copy_one_aap_two_rows() {
+        let mut sa = Subarray::new(8, 16);
+        let mut stats = CommandStats::new();
+        sa.write_row(0, &BitRow::from_fn(16, |c| c < 8));
+        copy_intra_dual(&mut sa, &mut stats, 0, 3, 4);
+        assert_eq!(sa.row(3), sa.row(0));
+        assert_eq!(sa.row(4), sa.row(0));
+        assert_eq!(stats.total_aaps(), 1);
+    }
+
+    #[test]
+    fn inter_bank_copy_moves_data_and_counts_bits() {
+        let mut src = Subarray::new(4, 128);
+        let mut dst = Subarray::new(4, 128);
+        let mut stats = CommandStats::new();
+        src.write_row(1, &BitRow::from_fn(128, |c| c % 2 == 1));
+        copy_inter_bank(&src, 1, &mut dst, 2, &mut stats);
+        assert_eq!(dst.row(2), src.row(1));
+        assert_eq!(stats.rowclone_inter, 1);
+        assert_eq!(stats.rowclone_inter_bits, 128);
+    }
+}

@@ -1,0 +1,161 @@
+//! Thin, typed wrapper over the `xla` crate's PJRT CPU client.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    I32(Vec<i32>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32(data, shape.to_vec())
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::I32(_, s) | Tensor::F32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::I32(d, _) => d.len(),
+            Tensor::F32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            Tensor::F32(..) => anyhow::bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            Tensor::I32(..) => anyhow::bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::I32(d, _) => xla::Literal::vec1(d.as_slice()),
+            Tensor::F32(d, _) => xla::Literal::vec1(d.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::S32 => Ok(Tensor::I32(lit.to_vec::<i32>()?, dims)),
+            xla::ElementType::F32 => Ok(Tensor::F32(lit.to_vec::<f32>()?, dims)),
+            other => anyhow::bail!("unsupported artifact output dtype {other:?}"),
+        }
+    }
+}
+
+/// The PJRT CPU runtime. Compilation happens once per module; execution is
+/// reentrant.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+}
+
+/// A compiled executable (one per model/layer variant).
+pub struct LoadedModule {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModule {
+    /// Execute with host tensors. The AOT path lowers with
+    /// `return_tuple=True`, so the root is always a tuple; its elements are
+    /// returned in order.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute expecting exactly one output tensor.
+    pub fn run1(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        let mut out = self.run(inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::i32(vec![1, 2, 3, 4, 5, 6], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_size_mismatch_panics() {
+        Tensor::f32(vec![1.0], &[2, 2]);
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs so
+    // they can share one client (creating many CPU clients is slow).
+}

@@ -1,0 +1,87 @@
+//! Test-set loader: the quantized digits images (`digits_test.bin`,
+//! int32 LE) and labels (`digits_labels.bin`, u8) emitted by `aot.py`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::ArtifactManifest;
+
+/// The synthetic digits evaluation set, already quantized to wa-bit ints.
+#[derive(Debug, Clone)]
+pub struct DigitsDataset {
+    /// All images, flattened `[count, 16, 16, 1]`.
+    pub images: Vec<i32>,
+    pub labels: Vec<u8>,
+    pub count: usize,
+    /// Elements per image.
+    pub image_elems: usize,
+}
+
+impl DigitsDataset {
+    pub fn load(dir: &Path, manifest: &ArtifactManifest) -> Result<DigitsDataset> {
+        let img_path = dir.join(&manifest.test_images_file);
+        let bytes = std::fs::read(&img_path)
+            .with_context(|| format!("reading {}", img_path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "image file not i32-aligned");
+        let images: Vec<i32> = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let lbl_path = dir.join(&manifest.test_labels_file);
+        let labels = std::fs::read(&lbl_path)
+            .with_context(|| format!("reading {}", lbl_path.display()))?;
+
+        let count = manifest.test_count;
+        anyhow::ensure!(labels.len() == count, "label count mismatch");
+        anyhow::ensure!(
+            images.len() % count == 0,
+            "image elements not divisible by count"
+        );
+        let image_elems = images.len() / count;
+        Ok(DigitsDataset { images, labels, count, image_elems })
+    }
+
+    /// Slice one batch of `batch` images starting at `start` (wraps).
+    pub fn batch(&self, start: usize, batch: usize) -> (Vec<i32>, Vec<u8>) {
+        let mut imgs = Vec::with_capacity(batch * self.image_elems);
+        let mut lbls = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let idx = (start + i) % self.count;
+            let off = idx * self.image_elems;
+            imgs.extend_from_slice(&self.images[off..off + self.image_elems]);
+            lbls.push(self.labels[idx]);
+        }
+        (imgs, lbls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    #[test]
+    fn loads_if_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let ds = DigitsDataset::load(&dir, &m).unwrap();
+        assert_eq!(ds.count, m.test_count);
+        assert_eq!(ds.image_elems, 16 * 16);
+        // Quantized range check.
+        let max = *ds.images.iter().max().unwrap();
+        let min = *ds.images.iter().min().unwrap();
+        assert!(min >= 0 && max < (1 << m.wa));
+        // Batch wrap-around.
+        let (imgs, lbls) = ds.batch(ds.count - 2, 4);
+        assert_eq!(imgs.len(), 4 * ds.image_elems);
+        assert_eq!(lbls.len(), 4);
+        assert_eq!(lbls[0], ds.labels[ds.count - 2]);
+        assert_eq!(lbls[2], ds.labels[0]);
+    }
+}

@@ -1,0 +1,91 @@
+//! PimNet executor: compiles every per-layer artifact (= per-bank
+//! executable) once, then runs batches through the chain. This is the
+//! numeric payload the coordinator pipelines — each stage here corresponds
+//! to one PIM bank in the timing model.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::client::{LoadedModule, Runtime, Tensor};
+use super::manifest::ArtifactManifest;
+
+/// Compiled PimNet: per-layer executables + the fused full-model module.
+pub struct PimNetExecutor {
+    pub manifest: ArtifactManifest,
+    layers: Vec<LoadedModule>,
+    full_model: LoadedModule,
+}
+
+impl PimNetExecutor {
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<PimNetExecutor> {
+        let manifest = ArtifactManifest::load(dir)?;
+        manifest.validate()?;
+        let layers = manifest
+            .layers
+            .iter()
+            .map(|l| rt.load_hlo_text(&dir.join(&l.file)))
+            .collect::<Result<Vec<_>>>()
+            .context("loading layer artifacts")?;
+        let full_model = rt.load_hlo_text(&dir.join(&manifest.model_hlo))?;
+        Ok(PimNetExecutor { manifest, layers, full_model })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.batch
+    }
+
+    /// Run one layer (bank stage) on its input activations.
+    pub fn run_layer(&self, idx: usize, input: Tensor) -> Result<Tensor> {
+        anyhow::ensure!(idx < self.layers.len(), "layer index {idx}");
+        let meta = &self.manifest.layers[idx];
+        anyhow::ensure!(
+            input.shape() == meta.in_shape.as_slice(),
+            "layer {} expects shape {:?}, got {:?}",
+            meta.name,
+            meta.in_shape,
+            input.shape()
+        );
+        self.layers[idx].run1(&[input])
+    }
+
+    /// Run a full batch layer-by-layer (the per-bank path the coordinator
+    /// pipelines). Input: quantized i32 `[batch, 16, 16, 1]`.
+    pub fn run_chain(&self, images: Vec<i32>) -> Result<Tensor> {
+        let shape = &self.manifest.layers[0].in_shape;
+        let mut act = Tensor::i32(images, shape);
+        for idx in 0..self.layers.len() {
+            act = self.run_layer(idx, act)?;
+        }
+        Ok(act)
+    }
+
+    /// Run the fused single-module forward (cross-check for the chain).
+    pub fn run_full(&self, images: Vec<i32>) -> Result<Tensor> {
+        let shape = &self.manifest.layers[0].in_shape;
+        self.full_model.run1(&[Tensor::i32(images, shape)])
+    }
+
+    /// Argmax over the logits tensor `[batch, 10]`.
+    pub fn classify(logits: &Tensor) -> Result<Vec<usize>> {
+        let data = logits.as_f32()?;
+        let classes = *logits.shape().last().unwrap();
+        Ok(data
+            .chunks(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect())
+    }
+}
+
+// Integration tests (need artifacts + a PJRT client) live in
+// rust/tests/runtime_integration.rs.

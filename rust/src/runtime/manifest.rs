@@ -1,0 +1,192 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-layer artifact metadata (one PIM bank's executable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub out_dtype: String,
+    pub mac_size: usize,
+    pub num_macs: usize,
+    pub relu: bool,
+    pub pool: bool,
+    pub w_scale: f64,
+    pub in_scale: f64,
+    pub out_scale: f64,
+}
+
+/// The whole artifact bundle description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    pub wa: usize,
+    pub ww: usize,
+    pub batch: usize,
+    pub input_scale: f64,
+    pub model_hlo: String,
+    pub mvm_hlo: String,
+    pub mvm_shape: (usize, usize, usize),
+    pub test_count: usize,
+    pub test_images_file: String,
+    pub test_labels_file: String,
+    pub float_test_accuracy: f64,
+    pub quant_test_accuracy: f64,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ArtifactManifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let usize_vec = |v: &Json| -> Result<Vec<usize>> {
+            Ok(v.i64_vec()?.into_iter().map(|x| x as usize).collect())
+        };
+        let layers = j
+            .req_arr("layers")?
+            .iter()
+            .map(|l| -> Result<LayerMeta> {
+                Ok(LayerMeta {
+                    name: l.req_str("name")?.to_string(),
+                    file: l.req_str("file")?.to_string(),
+                    kind: l.req_str("kind")?.to_string(),
+                    in_shape: usize_vec(
+                        l.get("in_shape").context("in_shape")?,
+                    )?,
+                    out_shape: usize_vec(
+                        l.get("out_shape").context("out_shape")?,
+                    )?,
+                    out_dtype: l.req_str("out_dtype")?.to_string(),
+                    mac_size: l.req_i64("mac_size")? as usize,
+                    num_macs: l.req_i64("num_macs")? as usize,
+                    relu: l.get("relu").and_then(Json::as_bool).unwrap_or(false),
+                    pool: l.get("pool").and_then(Json::as_bool).unwrap_or(false),
+                    w_scale: l.req_f64("w_scale")?,
+                    in_scale: l.req_f64("in_scale")?,
+                    out_scale: l.req_f64("out_scale")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mvm = j.req_arr("mvm_shape")?;
+        anyhow::ensure!(mvm.len() == 3, "mvm_shape must have 3 dims");
+        let ti = j.get("test_images").context("test_images")?;
+        let tl = j.get("test_labels").context("test_labels")?;
+
+        Ok(ArtifactManifest {
+            wa: j.req_i64("wa")? as usize,
+            ww: j.req_i64("ww")? as usize,
+            batch: j.req_i64("batch")? as usize,
+            input_scale: j.req_f64("input_scale")?,
+            model_hlo: j.req_str("model_hlo")?.to_string(),
+            mvm_hlo: j.req_str("mvm_hlo")?.to_string(),
+            mvm_shape: (
+                mvm[0].as_usize().context("mvm m")?,
+                mvm[1].as_usize().context("mvm k")?,
+                mvm[2].as_usize().context("mvm n")?,
+            ),
+            test_count: ti.req_i64("count")? as usize,
+            test_images_file: ti.req_str("file")?.to_string(),
+            test_labels_file: tl.req_str("file")?.to_string(),
+            float_test_accuracy: j.req_f64("float_test_accuracy")?,
+            quant_test_accuracy: j.req_f64("quant_test_accuracy")?,
+            layers,
+        })
+    }
+
+    /// Shape-chain check: each layer feeds the next.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "no layers in manifest");
+        for (a, b) in self.layers.iter().zip(self.layers.iter().skip(1)) {
+            let out: usize = a.out_shape.iter().product();
+            let inp: usize = b.in_shape.iter().product();
+            anyhow::ensure!(
+                out == inp,
+                "layer chain break: {} out {} != {} in {}",
+                a.name,
+                out,
+                b.name,
+                inp
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "wa": 8, "ww": 8, "batch": 8, "input_scale": 0.004,
+      "model_hlo": "model.hlo.txt", "mvm_hlo": "mvm.hlo.txt",
+      "mvm_shape": [8, 64, 64],
+      "test_images": {"file": "digits_test.bin", "count": 64,
+                       "shape": [16,16,1], "dtype": "i32"},
+      "test_labels": {"file": "digits_labels.bin", "count": 64},
+      "float_test_accuracy": 1.0, "quant_test_accuracy": 0.98,
+      "train_loss_first": 2.6, "train_loss_last": 0.01,
+      "layers": [
+        {"name": "conv1", "file": "layers/l0_conv1.hlo.txt", "kind": "conv",
+         "in_shape": [8,16,16,1], "out_shape": [8,8,8,16], "out_dtype": "i32",
+         "mac_size": 9, "num_macs": 4096, "relu": true, "pool": true,
+         "w_scale": 0.01, "in_scale": 0.004, "out_scale": 0.02},
+        {"name": "fc", "file": "layers/l1_fc.hlo.txt", "kind": "linear",
+         "in_shape": [8,8,8,16], "out_shape": [8,10], "out_dtype": "f32",
+         "mac_size": 1024, "num_macs": 10, "relu": false, "pool": false,
+         "w_scale": 0.01, "in_scale": 0.02, "out_scale": 0.0}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.wa, 8);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].out_shape, vec![8, 8, 8, 16]);
+        assert_eq!(m.mvm_shape, (8, 64, 64));
+        assert!(m.layers[0].pool);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn chain_break_detected() {
+        let broken = SAMPLE.replace("\"in_shape\": [8,8,8,16]", "\"in_shape\": [8,4,4,16]");
+        let m = ArtifactManifest::parse(&broken).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(ArtifactManifest::parse("{}").is_err());
+        let no_wa = SAMPLE.replace("\"wa\": 8,", "");
+        assert!(ArtifactManifest::parse(&no_wa).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 4);
+        assert_eq!(m.layers[0].mac_size, 9);
+        assert!(m.quant_test_accuracy > 0.5);
+    }
+}

@@ -1,0 +1,40 @@
+//! PJRT runtime (DESIGN.md S14): loads the AOT HLO-text artifacts produced
+//! by `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them from the coordinator's hot path. Python never runs
+//! here — the interchange is HLO text (see /opt/xla-example/README.md for
+//! why text, not serialized protos).
+
+pub mod client;
+pub mod dataset;
+pub mod executor;
+pub mod manifest;
+
+pub use client::{LoadedModule, Runtime, Tensor};
+pub use dataset::DigitsDataset;
+pub use executor::PimNetExecutor;
+pub use manifest::{ArtifactManifest, LayerMeta};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$PIM_ARTIFACTS` or `./artifacts`
+/// relative to the crate root / current dir.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PIM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let candidates = [
+        PathBuf::from("artifacts"),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    for c in &candidates {
+        if c.join("manifest.json").exists() {
+            return c.clone();
+        }
+    }
+    candidates[0].clone()
+}
+
+/// True when `make artifacts` has been run.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

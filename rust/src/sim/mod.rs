@@ -1,0 +1,8 @@
+//! The system-level PIM-DRAM simulator (DESIGN.md S11): maps a network,
+//! prices every bank's compute/transfer phases, and produces the pipeline
+//! report plus the GPU comparison the paper's Fig 16/17 are built from.
+
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate, LayerSim, SimConfig, SimResult};

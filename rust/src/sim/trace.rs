@@ -1,0 +1,166 @@
+//! Pipeline timeline tracer: renders the §IV-B dataflow as an ASCII Gantt
+//! chart (banks × time) so mapping/schedule decisions are inspectable, and
+//! exports a CSV for plotting.
+
+use crate::sim::SimResult;
+
+/// One traced interval on a bank's timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub bank: String,
+    pub start_ns: f64,
+    pub end_ns: f64,
+    pub kind: SpanKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Multiply,
+    Logic,
+    Restage,
+    Transfer,
+}
+
+impl SpanKind {
+    fn glyph(self) -> char {
+        match self {
+            SpanKind::Multiply => 'M',
+            SpanKind::Logic => 'L',
+            SpanKind::Restage => 'R',
+            SpanKind::Transfer => 't',
+        }
+    }
+}
+
+/// Build the single-image (pipeline-fill) timeline from a sim result:
+/// stage i starts when stage i-1's transfer lands.
+pub fn fill_timeline(result: &SimResult) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let mut clock = 0.0;
+    for l in &result.layers {
+        let phases = [
+            (SpanKind::Multiply, l.multiply_ns),
+            (SpanKind::Logic, l.logic_ns),
+            (SpanKind::Restage, l.restage_ns),
+            (SpanKind::Transfer, l.transfer_ns),
+        ];
+        for (kind, dur) in phases {
+            if dur > 0.0 {
+                spans.push(Span {
+                    bank: l.name.clone(),
+                    start_ns: clock,
+                    end_ns: clock + dur,
+                    kind,
+                });
+                clock += dur;
+            }
+        }
+    }
+    spans
+}
+
+/// ASCII Gantt: one row per bank, `width` character columns over the fill.
+pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
+    if spans.is_empty() {
+        return String::new();
+    }
+    let total = spans.last().unwrap().end_ns.max(1e-9);
+    let mut banks: Vec<&str> = Vec::new();
+    for s in spans {
+        if banks.last() != Some(&s.bank.as_str()) {
+            banks.push(&s.bank);
+        }
+    }
+    let name_w = banks.iter().map(|b| b.len()).max().unwrap_or(4).max(4);
+    let mut out = String::new();
+    for bank in &banks {
+        let mut row = vec![b' '; width];
+        for s in spans.iter().filter(|s| s.bank == *bank) {
+            let a = ((s.start_ns / total) * width as f64) as usize;
+            let b = (((s.end_ns / total) * width as f64).ceil() as usize).min(width);
+            for cell in row.iter_mut().take(b).skip(a) {
+                *cell = s.kind.glyph() as u8;
+            }
+        }
+        out.push_str(&format!(
+            "{:>name_w$} |{}|\n",
+            bank,
+            String::from_utf8(row).unwrap(),
+            name_w = name_w
+        ));
+    }
+    out.push_str(&format!(
+        "{:>name_w$}  0 ns {:>w$.1} ns  (M=multiply L=tree/SFU R=restage t=transfer)\n",
+        "",
+        total,
+        name_w = name_w,
+        w = width.saturating_sub(8)
+    ));
+    out
+}
+
+/// CSV export: `bank,kind,start_ns,end_ns`.
+pub fn to_csv(spans: &[Span]) -> String {
+    let mut out = String::from("bank,kind,start_ns,end_ns\n");
+    for s in spans {
+        out.push_str(&format!(
+            "{},{:?},{:.1},{:.1}\n",
+            s.bank, s.kind, s.start_ns, s.end_ns
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, SimConfig};
+    use crate::workloads::nets::{pimnet, vgg16};
+
+    #[test]
+    fn timeline_is_contiguous_and_ordered() {
+        let r = simulate(&pimnet(), &SimConfig::paper_favorable(8)).unwrap();
+        let spans = fill_timeline(&r);
+        assert!(!spans.is_empty());
+        for w in spans.windows(2) {
+            assert!(w[0].end_ns <= w[1].start_ns + 1e-9);
+        }
+        let total: f64 = r
+            .layers
+            .iter()
+            .map(|l| l.compute_ns() + l.transfer_ns)
+            .sum();
+        assert!((spans.last().unwrap().end_ns - total).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gantt_renders_every_bank() {
+        let r = simulate(&pimnet(), &SimConfig::paper_favorable(8)).unwrap();
+        let g = ascii_gantt(&fill_timeline(&r), 60);
+        for l in &r.layers {
+            assert!(g.contains(&l.name), "missing {}", l.name);
+        }
+        assert!(g.contains('M'));
+    }
+
+    #[test]
+    fn restage_spans_appear_on_conservative_vgg() {
+        let r = simulate(&vgg16(), &SimConfig::conservative(8)).unwrap();
+        let spans = fill_timeline(&r);
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Restage));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = simulate(&pimnet(), &SimConfig::paper_favorable(8)).unwrap();
+        let spans = fill_timeline(&r);
+        let csv = to_csv(&spans);
+        assert!(csv.starts_with("bank,kind,"));
+        assert_eq!(csv.lines().count(), spans.len() + 1);
+    }
+
+    #[test]
+    fn empty_spans_render_empty() {
+        assert_eq!(ascii_gantt(&[], 40), "");
+    }
+}

@@ -1,0 +1,145 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! retries with a binary-search-style "shrink" over the case index space is
+//! not meaningful for seeded generation, so instead it reports the failing
+//! seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! testutil::check(200, |rng| {
+//!     let n = rng.int_range(1, 16) as u32;
+//!     let traced = mul_trace_aap_count(n);
+//!     prop_assert!(traced > 0);
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Property outcome: `Err(msg)` fails the case and reports the seed.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` deterministic seeds (0..cases), panicking with
+/// the first failing seed and message. Each case gets an independent RNG so
+/// failures replay exactly via `replay`.
+pub fn check<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at seed {seed} (replay: testutil::replay({seed}, prop)):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing seed (for debugging).
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed at seed {seed}:\n  {msg}");
+    }
+}
+
+/// Assert inside a property, returning `Err` instead of panicking so the
+/// harness can attach the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {} ({}:{})",
+                stringify!($cond),
+                file!(),
+                line!()
+            ));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {} — {} ({}:{})",
+                stringify!($cond),
+                format!($($fmt)+),
+                file!(),
+                line!()
+            ));
+        }
+    };
+}
+
+/// `prop_assert_eq!(a, b)` with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "assertion failed: {} == {} (left: {:?}, right: {:?}) ({}:{})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b,
+                file!(),
+                line!()
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(50, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn failing_property_reports_seed() {
+        check(10, |rng| {
+            let v = rng.int_range(0, 100);
+            prop_assert!(v < 0, "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_assert_eq_formats_values() {
+        let result: PropResult = (|| {
+            prop_assert_eq!(1 + 1, 3);
+            Ok(())
+        })();
+        let msg = result.unwrap_err();
+        assert!(msg.contains("left: 2"));
+        assert!(msg.contains("right: 3"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check(5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check(5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

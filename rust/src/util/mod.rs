@@ -1,0 +1,78 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The offline crate registry has no `serde`/`rand`/`prettytable`, so the
+//! JSON parser, RNG and table formatter live here as first-class substrates
+//! (DESIGN.md §4, S16–S19).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// `log2(ceil_pow2(n))`: number of adder-tree levels needed for `n` inputs.
+#[inline]
+pub fn log2_ceil(n: usize) -> u32 {
+    debug_assert!(n > 0);
+    usize::BITS - (n - 1).leading_zeros()
+}
+
+/// Format a float with engineering-style SI suffix (k, M, G, T).
+pub fn si(v: f64) -> String {
+    let (div, suffix) = match v.abs() {
+        x if x >= 1e12 => (1e12, "T"),
+        x if x >= 1e9 => (1e9, "G"),
+        x if x >= 1e6 => (1e6, "M"),
+        x if x >= 1e3 => (1e3, "k"),
+        _ => (1.0, ""),
+    };
+    format!("{:.3}{}", v / div, suffix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 1), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(10, 8), 16);
+        assert_eq!(round_up(16, 8), 16);
+        assert_eq!(round_up(0, 8), 0);
+    }
+
+    #[test]
+    fn log2_ceil_basics() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(4096), 12);
+        assert_eq!(log2_ceil(4097), 13);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(1500.0), "1.500k");
+        assert_eq!(si(2.5e9), "2.500G");
+        assert_eq!(si(12.0), "12.000");
+    }
+}

@@ -1,0 +1,136 @@
+//! ASCII table formatter for benches and CLI reports — every paper
+//! table/figure bench prints its rows through this so outputs align.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// Simple monospace table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            aligns: header.iter().map(|_| Align::Right).collect(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set all alignments at once (must match header length).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from display-ables.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+\n";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].chars().count();
+                let (l, r) = match self.aligns[i] {
+                    Align::Left => (0, pad),
+                    Align::Right => (pad, 0),
+                };
+                line.push_str(&format!(
+                    "| {}{}{} ",
+                    " ".repeat(l),
+                    cells[i],
+                    " ".repeat(r)
+                ));
+            }
+            line.push_str("|\n");
+            line
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]).aligns(&[Align::Left, Align::Right]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "12345".into()]);
+        let s = t.render();
+        assert!(s.contains("| name      | value |"));
+        assert!(s.contains("| a         |     1 |"));
+        assert!(s.contains("| long-name | 12345 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_wrong_width() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn rowf_displayables() {
+        let mut t = Table::new(&["x", "y"]);
+        t.rowf(&[&1.5f64, &"s"]);
+        assert!(t.render().contains("1.5"));
+    }
+
+    #[test]
+    fn empty_table_renders_header() {
+        let t = Table::new(&["h"]);
+        assert!(t.is_empty());
+        assert!(t.render().contains("| h |"));
+    }
+}

@@ -1,0 +1,230 @@
+//! Workload zoo (DESIGN.md S12): layer-shape descriptors for the paper's
+//! evaluation networks (AlexNet, VGG16, ResNet18 — §V-B) plus PimNet, the
+//! small quantized CNN whose AOT artifacts the end-to-end driver executes.
+//!
+//! Only *shapes* matter for the timing experiments; they are the public
+//! architectures. Every descriptor knows its MAC geometry (`mac_size`,
+//! `num_macs`), FLOPs and byte traffic — the quantities the mapper, the
+//! PIM simulator, and the GPU roofline baseline all consume.
+
+pub mod nets;
+
+pub use nets::{alexnet, pimnet, resnet18, vgg16, all_networks};
+
+/// One network layer (a PIM bank's worth of work).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: LayerKind,
+    /// 2×2/stride-2 max-pool after the layer's SFU chain.
+    pub pool: bool,
+    /// Global average pool before the next (linear) layer — the pooling
+    /// unit in running-average mode (ResNet head).
+    pub gap: bool,
+    /// ReLU in the SFU chain.
+    pub relu: bool,
+}
+
+/// Layer geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    Conv {
+        in_h: usize,
+        in_w: usize,
+        in_ch: usize,
+        out_ch: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+    Linear { in_features: usize, out_features: usize },
+}
+
+impl LayerDesc {
+    pub fn conv(
+        name: &str,
+        in_hw: (usize, usize),
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        pool: bool,
+    ) -> Self {
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Conv {
+                in_h: in_hw.0,
+                in_w: in_hw.1,
+                in_ch,
+                out_ch,
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+            },
+            pool,
+            gap: false,
+            relu: true,
+        }
+    }
+
+    pub fn linear(name: &str, in_features: usize, out_features: usize, relu: bool) -> Self {
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Linear { in_features, out_features },
+            pool: false,
+            gap: false,
+            relu,
+        }
+    }
+
+    /// Mark this layer as ending with a global average pool.
+    pub fn with_gap(mut self) -> Self {
+        self.gap = true;
+        self
+    }
+
+    /// Output spatial dims for conv layers (pre-pool): the paper's
+    /// `((H-K+2p)/s + 1, (W-L+2p)/s + 1)`.
+    pub fn conv_out_hw(&self) -> Option<(usize, usize)> {
+        match self.kind {
+            LayerKind::Conv { in_h, in_w, kh, kw, stride, pad, .. } => Some((
+                (in_h - kh + 2 * pad) / stride + 1,
+                (in_w - kw + 2 * pad) / stride + 1,
+            )),
+            LayerKind::Linear { .. } => None,
+        }
+    }
+
+    /// Multiplications per MAC (§IV-B: `K·L·I` for conv, fan-in for linear).
+    pub fn mac_size(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_ch, kh, kw, .. } => kh * kw * in_ch,
+            LayerKind::Linear { in_features, .. } => in_features,
+        }
+    }
+
+    /// Number of MACs (dot products) in the layer:
+    /// conv → `No_of_MAC · no_output_filter`; linear → output neurons.
+    pub fn num_macs(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { out_ch, .. } => {
+                let (oh, ow) = self.conv_out_hw().unwrap();
+                oh * ow * out_ch
+            }
+            LayerKind::Linear { out_features, .. } => out_features,
+        }
+    }
+
+    /// Output element count (post-pool if pooled; channels only after GAP).
+    pub fn out_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { out_ch, .. } => {
+                if self.gap {
+                    return out_ch;
+                }
+                let (oh, ow) = self.conv_out_hw().unwrap();
+                if self.pool {
+                    (oh / 2) * (ow / 2) * out_ch
+                } else {
+                    oh * ow * out_ch
+                }
+            }
+            LayerKind::Linear { out_features, .. } => out_features,
+        }
+    }
+
+    /// Input element count.
+    pub fn in_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_h, in_w, in_ch, .. } => in_h * in_w * in_ch,
+            LayerKind::Linear { in_features, .. } => in_features,
+        }
+    }
+
+    /// Weight count.
+    pub fn weight_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_ch, out_ch, kh, kw, .. } => kh * kw * in_ch * out_ch,
+            LayerKind::Linear { in_features, out_features } => {
+                in_features * out_features
+            }
+        }
+    }
+
+    /// Multiply-accumulate FLOPs (2 per MAC-mult) for one input.
+    pub fn flops(&self) -> u64 {
+        2 * self.num_macs() as u64 * self.mac_size() as u64
+    }
+
+    /// Byte traffic for one input at `bytes_per_elem` (weights + in + out),
+    /// the denominator of the roofline's operational intensity.
+    pub fn bytes(&self, bytes_per_elem: usize) -> u64 {
+        ((self.weight_elems() + self.in_elems() + self.out_elems())
+            * bytes_per_elem) as u64
+    }
+
+    /// Operational intensity in FLOP/byte.
+    pub fn op_intensity(&self, bytes_per_elem: usize) -> f64 {
+        self.flops() as f64 / self.bytes(bytes_per_elem) as f64
+    }
+}
+
+/// A residual (shortcut) connection: output of `from_layer` is added to the
+/// output of `into_layer` (§IV-B residual dataflow, Fig 13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Residual {
+    pub from_layer: usize,
+    pub into_layer: usize,
+}
+
+/// A whole network: ordered layers + residual edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+    pub residuals: Vec<Residual>,
+}
+
+impl Network {
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops()).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems() as u64).sum()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Shape-chain validation: each layer's input must match the previous
+    /// layer's output element count.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, pair) in self.layers.windows(2).enumerate() {
+            let out = pair[0].out_elems();
+            let inp = pair[1].in_elems();
+            anyhow::ensure!(
+                out == inp,
+                "{}: layer {} out {} != layer {} in {}",
+                self.name,
+                i,
+                out,
+                i + 1,
+                inp
+            );
+        }
+        for r in &self.residuals {
+            anyhow::ensure!(
+                r.from_layer < r.into_layer && r.into_layer < self.layers.len(),
+                "{}: bad residual {:?}",
+                self.name,
+                r
+            );
+        }
+        Ok(())
+    }
+}

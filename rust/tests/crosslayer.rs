@@ -1,0 +1,70 @@
+//! Cross-layer validation: the Rust runtime replays the first batch
+//! through every per-layer PJRT artifact and must reproduce the Python
+//! (jax/Pallas) activations bit-for-bit — the strongest L1↔L2↔L3
+//! consistency check in the repo.
+
+use pim_dram::runtime::{
+    artifacts_available, artifacts_dir, PimNetExecutor, Runtime, Tensor,
+};
+
+fn read_i32(path: &std::path::Path) -> Vec<i32> {
+    std::fs::read(path)
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn read_f32(path: &std::path::Path) -> Vec<f32> {
+    std::fs::read(path)
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[test]
+fn per_layer_outputs_match_python_bit_exactly() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let dir = artifacts_dir();
+    if !dir.join("debug_input.bin").exists() {
+        eprintln!("SKIP: debug activations not in artifacts (rebuild)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exec = PimNetExecutor::load(&rt, &dir).unwrap();
+
+    let input = read_i32(&dir.join("debug_input.bin"));
+    let mut act = Tensor::i32(input, &exec.manifest.layers[0].in_shape);
+
+    for (i, meta) in exec.manifest.layers.iter().enumerate() {
+        act = exec.run_layer(i, act).unwrap();
+        let dbg = dir.join(format!("debug_act_l{i}.bin"));
+        if meta.out_dtype == "i32" {
+            let want = read_i32(&dbg);
+            let got = act.as_i32().unwrap();
+            assert_eq!(got.len(), want.len(), "layer {i} size");
+            let diffs = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+            assert_eq!(
+                diffs, 0,
+                "layer {i} ({}): {diffs}/{} elements differ from python",
+                meta.name,
+                want.len()
+            );
+        } else {
+            let want = read_f32(&dbg);
+            let got = act.as_f32().unwrap();
+            assert_eq!(got.len(), want.len(), "layer {i} size");
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "layer {i} ({}) logit {j}: rust {a} vs python {b}",
+                    meta.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Coordinator end-to-end: server startup, batched classification,
+//! metrics, graceful shutdown. Skips when artifacts are missing.
+
+use std::time::Duration;
+
+use pim_dram::coordinator::{InferenceServer, ServerConfig};
+use pim_dram::runtime::{
+    artifacts_available, artifacts_dir, ArtifactManifest, DigitsDataset,
+};
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn load_dataset() -> DigitsDataset {
+    let dir = artifacts_dir();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    DigitsDataset::load(&dir, &m).unwrap()
+}
+
+#[test]
+fn serve_classifies_with_reasonable_accuracy() {
+    require_artifacts!();
+    let ds = load_dataset();
+    let server = InferenceServer::start(ServerConfig::default()).unwrap();
+    let n = ds.count.min(24);
+    let mut correct = 0;
+    for i in 0..n {
+        let (img, lbl) = ds.batch(i, 1);
+        let resp = server.classify(img).unwrap();
+        assert!(resp.logits.len() == 10);
+        assert!(resp.latency > Duration::ZERO);
+        correct += (resp.class == lbl[0] as usize) as usize;
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.6, "accuracy {acc}");
+
+    let m = server.metrics();
+    assert_eq!(m.requests, n as u64);
+    assert!(m.batches >= 1);
+    assert!(m.latency_mean_us > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn serve_batches_concurrent_clients() {
+    require_artifacts!();
+    let ds = load_dataset();
+    let server = std::sync::Arc::new(
+        InferenceServer::start(ServerConfig {
+            batch_window: Duration::from_millis(20),
+            ..ServerConfig::default()
+        })
+        .unwrap(),
+    );
+    let batch = server.batch_size();
+
+    // Submit a full batch concurrently: the batcher should coalesce them
+    // into few executions (padding makes the count exact only when the
+    // window aligns, so assert an upper bound).
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for i in 0..batch {
+            let server = std::sync::Arc::clone(&server);
+            let (img, _) = ds.batch(i, 1);
+            handles.push(scope.spawn(move || server.classify(img).unwrap()));
+        }
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(resp.class < 10);
+        }
+    });
+    let m = server.metrics();
+    assert_eq!(m.requests, batch as u64);
+    assert!(
+        m.batches <= batch as u64,
+        "no batching happened: {} batches",
+        m.batches
+    );
+}
+
+#[test]
+fn serve_rejects_wrong_image_size() {
+    require_artifacts!();
+    let server = InferenceServer::start(ServerConfig::default()).unwrap();
+    assert!(server.classify(vec![0; 3]).is_err());
+    server.shutdown();
+}
+
+#[test]
+fn server_startup_fails_cleanly_without_artifacts() {
+    let cfg = ServerConfig {
+        artifacts: std::path::PathBuf::from("/nonexistent/artifacts"),
+        ..ServerConfig::default()
+    };
+    assert!(InferenceServer::start(cfg).is_err());
+}
