@@ -35,7 +35,7 @@ fn main() {
             format!("{:.3}", energy::adder_tree_area_um2(inputs) / 1e6),
             format!("{:.2}", energy::adder_tree_power_nw(inputs) / 1e6),
             format!("{ms:.3}"),
-            format!("{:.2}x", r.speedup_vs(&gpu, &net)),
+            format!("{:.2}x", r.speedup_vs(&gpu, &net, 4)),
         ]);
         // Monotone up to the row-buffer width; beyond it the extra pipeline
         // level adds fill latency with no more lanes to feed.

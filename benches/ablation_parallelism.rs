@@ -40,7 +40,7 @@ fn main() {
                         .cmp(&(b.mapping.macs_total * b.mapping.mac_size))
                 })
                 .unwrap();
-            let ips = r.throughput_ips();
+            let ips = r.replica_throughput_ips();
             t.row(&[
                 k.to_string(),
                 format!("{ips:.0}"),

@@ -30,7 +30,7 @@ fn main() {
             let resident = r.layers.iter().all(|l| l.mapping.fully_resident());
             let max_waves =
                 r.layers.iter().map(|l| l.mapping.waves).max().unwrap();
-            let s = r.speedup_vs(&gpu, &net);
+            let s = r.speedup_vs(&gpu, &net, 4);
             speeds.push(s);
             t.row(&[
                 subs.to_string(),

@@ -32,7 +32,7 @@ fn main() {
             for &k in &p_factors {
                 let cfg = SimConfig::paper_favorable(bits).with_ks(vec![k]);
                 let r = simulate(&net, &cfg).expect("simulate");
-                let s = r.speedup_vs(&gpu, &net);
+                let s = r.speedup_vs(&gpu, &net, 4);
                 peak = peak.max(s);
                 row.push(format!("{s:.2}x"));
             }
@@ -49,10 +49,10 @@ fn main() {
     for net in all_networks() {
         let s1 = simulate(&net, &SimConfig::paper_favorable(8))
             .unwrap()
-            .speedup_vs(&gpu, &net);
+            .speedup_vs(&gpu, &net, 4);
         let s4 = simulate(&net, &SimConfig::paper_favorable(8).with_ks(vec![8]))
             .unwrap()
-            .speedup_vs(&gpu, &net);
+            .speedup_vs(&gpu, &net, 4);
         assert!(s1 > 1.0, "{}: PIM must beat the ideal GPU (got {s1:.2})", net.name);
         assert!(s1 >= s4, "{}: speedup must not grow with folding", net.name);
     }

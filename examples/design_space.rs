@@ -46,8 +46,8 @@ fn main() -> anyhow::Result<()> {
                 bits.to_string(),
                 k.to_string(),
                 format!("{:.3}", r.pipeline.cycle_ns / 1e6),
-                format!("{:.0}", r.throughput_ips()),
-                format!("{:.2}x", r.speedup_vs(&gpu, &net)),
+                format!("{:.0}", r.replica_throughput_ips()),
+                format!("{:.2}x", r.speedup_vs(&gpu, &net, 4)),
                 resident.to_string(),
             ]);
         }
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             subs.to_string(),
             tps.to_string(),
             format!("{:.3}", r.pipeline.cycle_ns / 1e6),
-            format!("{:.2}x", r.speedup_vs(&gpu, &net)),
+            format!("{:.2}x", r.speedup_vs(&gpu, &net, 4)),
         ]);
     }
     println!(

@@ -109,10 +109,10 @@ fn main() -> anyhow::Result<()> {
             "  {label}: {:.1} µs/image steady-state ({:.0} img/s), \
              {} AAPs/image, DRAM energy {:.2} µJ, speedup vs ideal GPU {:.2}x",
             r.pipeline.cycle_ns / 1e3,
-            r.throughput_ips(),
+            r.replica_throughput_ips(),
             r.total_aaps,
             r.total_dram_energy_nj / 1e3,
-            r.speedup_vs(&gpu, &net)
+            r.speedup_vs(&gpu, &net, 4)
         );
     }
     server.shutdown();

@@ -13,9 +13,6 @@
 use pim_dram::arch::{adder_tree::AdderTree, bank_pim::BankPipeline};
 use pim_dram::gpu::GpuModel;
 use pim_dram::primitives::{self, PimSubarray};
-use pim_dram::runtime::{
-    artifacts_available, artifacts_dir, ArtifactManifest, Runtime, Tensor,
-};
 use pim_dram::sim::{simulate, SimConfig};
 use pim_dram::util::rng::Rng;
 use pim_dram::workloads::nets;
@@ -59,34 +56,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(y, want);
 
     // --- 3. Cross-check against the AOT Pallas kernel via PJRT -----------
-    if artifacts_available() {
-        println!("\n== 3. AOT Pallas kernel via PJRT ==");
-        let dir = artifacts_dir();
-        let manifest = ArtifactManifest::load(&dir)?;
-        let rt = Runtime::cpu()?;
-        let module = rt.load_hlo_text(&dir.join(&manifest.mvm_hlo))?;
-        let (m, kk, n) = manifest.mvm_shape;
-        let xs: Vec<i32> =
-            (0..m * kk).map(|_| rng.int_range(0, 255) as i32).collect();
-        let ws: Vec<i32> =
-            (0..kk * n).map(|_| rng.int_range(-128, 127) as i32).collect();
-        let out = module.run1(&[
-            Tensor::i32(xs.clone(), &[m, kk]),
-            Tensor::i32(ws.clone(), &[kk, n]),
-        ])?;
-        let got = out.as_i32()?;
-        // Compare first row against the DRAM-model pipeline.
-        let x0: Vec<u64> = xs[..kk].iter().map(|&v| v as u64).collect();
-        let wmat: Vec<Vec<i64>> = (0..kk)
-            .map(|r| (0..n).map(|c| ws[r * n + c] as i64).collect())
-            .collect();
-        let sim = bp.mvm(&x0, &wmat);
-        let agree = (0..n).all(|j| sim[j] == got[j] as i64);
-        println!("  PJRT({m}×{kk}×{n}) row0 == DRAM-model row0: {agree}");
-        assert!(agree);
-    } else {
-        println!("\n== 3. (skipped — run `make artifacts` for the PJRT check) ==");
-    }
+    pjrt_crosscheck(&bp, &mut rng)?;
 
     // --- 4. System-level timing vs GPU -----------------------------------
     println!("\n== 4. AlexNet on the timing simulator ==");
@@ -101,8 +71,51 @@ fn main() -> anyhow::Result<()> {
             "  {label}: {:.3} ms/image, speedup over ideal {}: {:.2}x",
             r.pipeline.cycle_ns / 1e6,
             gpu.name,
-            r.speedup_vs(&gpu, &net)
+            r.speedup_vs(&gpu, &net, 4)
         );
     }
+    Ok(())
+}
+
+/// Step 3 needs the PJRT runtime: compiled only with `--features pjrt`.
+#[cfg(feature = "pjrt")]
+fn pjrt_crosscheck(bp: &BankPipeline, rng: &mut Rng) -> anyhow::Result<()> {
+    use pim_dram::runtime::{
+        artifacts_available, artifacts_dir, ArtifactManifest, Runtime, Tensor,
+    };
+    if !artifacts_available() {
+        println!("\n== 3. (skipped — run `make artifacts` for the PJRT check) ==");
+        return Ok(());
+    }
+    println!("\n== 3. AOT Pallas kernel via PJRT ==");
+    let dir = artifacts_dir();
+    let manifest = ArtifactManifest::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    let module = rt.load_hlo_text(&dir.join(&manifest.mvm_hlo))?;
+    let (m, kk, n) = manifest.mvm_shape;
+    let xs: Vec<i32> =
+        (0..m * kk).map(|_| rng.int_range(0, 255) as i32).collect();
+    let ws: Vec<i32> =
+        (0..kk * n).map(|_| rng.int_range(-128, 127) as i32).collect();
+    let out = module.run1(&[
+        Tensor::i32(xs.clone(), &[m, kk]),
+        Tensor::i32(ws.clone(), &[kk, n]),
+    ])?;
+    let got = out.as_i32()?;
+    // Compare first row against the DRAM-model pipeline.
+    let x0: Vec<u64> = xs[..kk].iter().map(|&v| v as u64).collect();
+    let wmat: Vec<Vec<i64>> = (0..kk)
+        .map(|r| (0..n).map(|c| ws[r * n + c] as i64).collect())
+        .collect();
+    let sim = bp.mvm(&x0, &wmat);
+    let agree = (0..n).all(|j| sim[j] == got[j] as i64);
+    println!("  PJRT({m}×{kk}×{n}) row0 == DRAM-model row0: {agree}");
+    assert!(agree);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_crosscheck(_bp: &BankPipeline, _rng: &mut Rng) -> anyhow::Result<()> {
+    println!("\n== 3. (skipped — this build has no PJRT; use --features pjrt) ==");
     Ok(())
 }

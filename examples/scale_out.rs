@@ -1,0 +1,126 @@
+//! Scale-out walkthrough: one network, many PIM devices.
+//!
+//! 1. Lower ResNet18 onto a 4-channel × 4-rank grid under each shard
+//!    policy and print the device plans.
+//! 2. Price the plans (plan → price → aggregate) and compare replication
+//!    against layer-splitting.
+//! 3. Serve a burst of synthetic requests from a pool of simulated
+//!    devices — one worker per replica — and show the dispatch counts.
+//!
+//! Run: `cargo run --release --example scale_out [network]`
+
+use pim_dram::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
+use pim_dram::mapping::MapConfig;
+use pim_dram::plan::{lower, ShardPolicy};
+use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::util::table::{Align, Table};
+use pim_dram::workloads::nets;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
+    let net = nets::by_name(&name)?;
+
+    // ---- 1. lowering ----------------------------------------------------
+    let cfg = SimConfig::conservative(8).with_grid(4, 4);
+    let mc = MapConfig {
+        geometry: cfg.geometry.clone(),
+        n_bits: cfg.n_bits,
+        ks: cfg.ks.clone(),
+    };
+    println!("== 1. lowering {} onto 4 channels × 4 ranks ==", net.name);
+    for policy in [
+        ShardPolicy::Replicate,
+        ShardPolicy::LayerSplit,
+        ShardPolicy::Hybrid { replicas: 2 },
+    ] {
+        let plan = lower(&net, &mc, policy)?;
+        println!(
+            "  {:<12} {} replica(s), {} device(s), {} hop(s)/image",
+            plan.policy.to_string(),
+            plan.replicas,
+            plan.devices.len(),
+            plan.hops_per_image()
+        );
+        for d in plan.chain(0) {
+            let dev = &plan.devices[*d];
+            println!(
+                "      device {}: ch{} ranks {}..{}  layers {:>2}..{:<2} \
+                 (+{} residuals)",
+                dev.id,
+                dev.channel,
+                dev.ranks.start,
+                dev.ranks.end,
+                dev.shard.layers.start,
+                dev.shard.layers.end,
+                dev.shard.residuals.len()
+            );
+        }
+    }
+
+    // ---- 2. pricing ------------------------------------------------------
+    println!("\n== 2. plan → price → aggregate ==");
+    let mut t = Table::new(&["policy", "replicas", "img/s", "ms/img", "hops us/img"])
+        .aligns(&[
+            Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        ]);
+    for policy in [
+        ShardPolicy::Replicate,
+        ShardPolicy::LayerSplit,
+        ShardPolicy::Hybrid { replicas: 2 },
+    ] {
+        let r = simulate(&net, &cfg.clone().with_shard(policy))?;
+        t.row(&[
+            policy.to_string(),
+            r.replicas().to_string(),
+            format!("{:.1}", r.throughput_ips()),
+            format!("{:.3}", r.latency_ns() / 1e6),
+            if r.scale_out.hop_ns_total > 0.0 {
+                format!("{:.1}", r.scale_out.hop_ns_total / 1e3)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- 3. serving from the pool ---------------------------------------
+    let r = simulate(&net, &cfg)?;
+    let replicas = r.replicas();
+    println!("== 3. serving from {replicas} simulated replica device(s) ==");
+    let backend = SimBackend::from_sim(&r, &net, 8);
+    let server = MultiDeviceServer::start(
+        PoolConfig {
+            devices: replicas,
+            policy: Policy::RoundRobin,
+            batch_window: std::time::Duration::from_millis(2),
+        },
+        move |_| Ok(backend.clone()),
+    )?;
+    let elems = server.image_elems();
+    let requests = 64usize;
+    std::thread::scope(|scope| {
+        let server = &server;
+        let handles: Vec<_> = (0..4usize)
+            .map(|t| {
+                scope.spawn(move || {
+                    for i in (t..requests).step_by(4) {
+                        let img = vec![(i % 251) as i32; elems];
+                        server.classify(img).expect("classify");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    println!("coordinator: {}", server.metrics().report());
+    println!(
+        "model: {:.1} img/s aggregate ({} replicas × {:.1} img/s)",
+        r.throughput_ips(),
+        replicas,
+        r.replica_throughput_ips()
+    );
+    server.shutdown();
+    Ok(())
+}

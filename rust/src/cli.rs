@@ -7,9 +7,12 @@ use anyhow::{Context, Result};
 
 use crate::circuit::{run_monte_carlo, simulate_and, AndInputs, CircuitParams};
 use crate::config;
+use crate::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
 use crate::gpu::{roofline::roofline_points, GpuModel};
 use crate::mapping::{map_network, MapConfig};
+use crate::plan::ShardPolicy;
 use crate::sim::{simulate, SimConfig};
+use crate::util::rng::Rng;
 use crate::util::si;
 use crate::util::table::{Align, Table};
 use crate::workloads::nets;
@@ -66,6 +69,7 @@ COMMANDS:
   simulate   Run the PIM timing simulator on a network
              --network <alexnet|vgg16|resnet18|pimnet>  --bits <n>  --k <k>
              --preset <paper_favorable|conservative>
+             --channels <c>  --ranks <r>  --shard <replicate|layersplit|hybrid:<n>>
   map        Print the Algorithm-1 mapping for a network (same flags)
   optimize   Plan the per-layer parallelism vector (mapping optimizer)
              --network <name>  --bits <n>  --preset <...>  --balanced
@@ -73,8 +77,10 @@ COMMANDS:
   circuit    Fig 14/15: AND transient + Monte Carlo  --samples <n>
   tables     Tables I/II: bank peripheral area & power
   config     Run an experiment from a TOML file: pim-dram config <file>
-  serve      End-to-end inference demo over the AOT artifacts
-             --images <n>  (requires `make artifacts`)
+  serve      Serve batched classification from a multi-device pool
+             --backend <sim|pjrt>  --devices <n>  --policy <rr|least|two>
+             --images <n>  --batch <b>  (+ simulate flags for sim devices;
+             pjrt needs `make artifacts` and a `--features pjrt` build)
   help       Show this help
 ";
 
@@ -106,7 +112,22 @@ fn sim_config_from(args: &Args) -> Result<SimConfig> {
         other => anyhow::bail!("unknown preset `{other}`"),
     };
     cfg.ks = vec![args.flag_usize("k", 1)?.max(1)];
+    cfg.geometry.channels = args.flag_usize("channels", cfg.geometry.channels)?;
+    cfg.geometry.ranks_per_channel =
+        args.flag_usize("ranks", cfg.geometry.ranks_per_channel)?;
+    if let Some(s) = args.flags.get("shard") {
+        cfg.shard = ShardPolicy::parse(s)?;
+    }
     Ok(cfg)
+}
+
+fn policy_from(args: &Args) -> Result<Policy> {
+    match args.flag("policy", "rr").as_str() {
+        "rr" | "roundrobin" => Ok(Policy::RoundRobin),
+        "least" | "leastloaded" => Ok(Policy::LeastLoaded),
+        "two" | "twochoices" => Ok(Policy::TwoChoices),
+        other => anyhow::bail!("unknown policy `{other}` (try rr|least|two)"),
+    }
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -136,10 +157,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     println!("{}", t.render());
     println!(
-        "latency/image: {:.3} ms   steady-state: {:.3} ms/image ({:.1} img/s)",
+        "latency/image: {:.3} ms   steady-state: {:.3} ms/image ({:.1} img/s per replica)",
         r.latency_ns() / 1e6,
         r.pipeline.cycle_ns / 1e6,
-        r.throughput_ips()
+        r.replica_throughput_ips()
     );
     println!(
         "bottleneck stage: {}   total AAPs/image: {}   DRAM energy: {:.2} uJ",
@@ -148,10 +169,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         r.total_dram_energy_nj / 1e3
     );
     println!(
+        "scale-out: {} → {} replica(s) × {} device(s); aggregate {:.1} img/s{}",
+        r.scale_out.policy,
+        r.replicas(),
+        r.scale_out.devices.len(),
+        r.throughput_ips(),
+        if r.scale_out.hop_ns_total > 0.0 {
+            format!(
+                " (inter-channel hops: {:.1} us/img)",
+                r.scale_out.hop_ns_total / 1e3
+            )
+        } else {
+            String::new()
+        }
+    );
+    println!(
         "ideal-GPU ({}) time: {:.3} ms  →  PIM speedup: {:.2}x",
         gpu.name,
         gpu.network_time_s(&net, 4) * 1e3,
-        r.speedup_vs(&gpu, &net)
+        r.speedup_vs(&gpu, &net, 4)
     );
     Ok(())
 }
@@ -194,6 +230,31 @@ fn cmd_map(args: &Args) -> Result<()> {
         m.mean_utilization() * 100.0,
         m.fully_resident()
     );
+    // Device lowering across the channel × rank grid.
+    let plan = crate::plan::lower(&net, &mc, cfg.shard)?;
+    println!(
+        "plan ({}): {} replica(s), {} device(s) on {} channel(s) × {} rank(s)",
+        plan.policy,
+        plan.replicas,
+        plan.devices.len(),
+        plan.geometry.channels,
+        plan.geometry.ranks_per_channel
+    );
+    for d in plan.chain(0) {
+        let dev = &plan.devices[*d];
+        println!(
+            "  device {}: channel {}, ranks {}..{}, layers {}..{} \
+             (+{} residual reserves, {} banks)",
+            dev.id,
+            dev.channel,
+            dev.ranks.start,
+            dev.ranks.end,
+            dev.shard.layers.start,
+            dev.shard.layers.end,
+            dev.shard.residuals.len(),
+            dev.banks_used
+        );
+    }
     Ok(())
 }
 
@@ -311,18 +372,98 @@ fn cmd_config(args: &Args) -> Result<()> {
     let r = simulate(&e.network, &e.sim)?;
     let gpu = GpuModel::titan_xp();
     println!(
-        "{}: latency {:.3} ms, {:.1} img/s, makespan({} imgs) {:.3} ms, speedup {:.2}x",
+        "{}: latency {:.3} ms, {:.1} img/s ({} replicas), makespan({} imgs) \
+         {:.3} ms, speedup {:.2}x",
         e.network.name,
         r.latency_ns() / 1e6,
         r.throughput_ips(),
+        r.replicas(),
         e.images,
         r.pipeline.makespan_ns(e.images) / 1e6,
-        r.speedup_vs(&gpu, &e.network)
+        r.speedup_vs(&gpu, &e.network, 4)
     );
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    match args.flag("backend", "sim").as_str() {
+        "sim" => cmd_serve_sim(args),
+        "pjrt" => cmd_serve_pjrt(args),
+        other => anyhow::bail!("unknown backend `{other}` (try sim|pjrt)"),
+    }
+}
+
+/// Serve synthetic traffic from a pool of *simulated* PIM devices: each
+/// worker stands in for one replica of the planned network, priced by the
+/// timing model. Hermetic — no artifacts, no PJRT.
+fn cmd_serve_sim(args: &Args) -> Result<()> {
+    let net = nets::by_name(&args.flag("network", "pimnet"))?;
+    let cfg = sim_config_from(args)?;
+    let r = simulate(&net, &cfg)?;
+    let devices = args.flag_usize("devices", r.replicas())?.max(1);
+    let policy = policy_from(args)?;
+    let images = args.flag_usize("images", 64)?;
+    let batch = args.flag_usize("batch", 8)?.max(1);
+
+    println!(
+        "plan: {} under {} → {} replica(s); serving from {} simulated \
+         device(s), policy {:?}, batch {}",
+        net.name, r.scale_out.policy, r.replicas(), devices, policy, batch
+    );
+    let backend = SimBackend::from_sim(&r, &net, batch);
+    let server = MultiDeviceServer::start(
+        PoolConfig {
+            devices,
+            policy,
+            batch_window: std::time::Duration::from_millis(2),
+        },
+        move |_| Ok(backend.clone()),
+    )?;
+
+    let elems = server.image_elems();
+    let clients = 4usize;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let server = &server;
+        let mut handles = Vec::new();
+        for t in 0..clients {
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut rng = Rng::new(t as u64);
+                for _ in (t..images).step_by(clients) {
+                    let img: Vec<i32> =
+                        (0..elems).map(|_| rng.int_range(0, 255) as i32).collect();
+                    server.classify(img)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let dt = t0.elapsed();
+
+    println!(
+        "{images} synthetic images in {:.1} ms ({:.0} img/s wall-clock)",
+        dt.as_secs_f64() * 1e3,
+        images as f64 / dt.as_secs_f64()
+    );
+    println!("coordinator: {}", server.metrics().report());
+    println!(
+        "timing model: {:.1} img/s aggregate over {} replica(s) \
+         ({:.3} ms/img per replica)",
+        r.throughput_ips(),
+        r.replicas(),
+        r.pipeline.cycle_ns / 1e6
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// End-to-end inference over the AOT artifacts (PJRT pool).
+#[cfg(feature = "pjrt")]
+fn cmd_serve_pjrt(args: &Args) -> Result<()> {
     use crate::coordinator::{InferenceServer, ServerConfig};
     use crate::runtime::{artifacts_dir, ArtifactManifest, DigitsDataset};
 
@@ -334,9 +475,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let manifest = ArtifactManifest::load(&dir)?;
     let ds = DigitsDataset::load(&dir, &manifest)?;
     let n = args.flag_usize("images", 64)?.min(ds.count);
+    let devices = args.flag_usize("devices", 1)?.max(1);
 
-    println!("starting inference server over {} ...", dir.display());
-    let server = InferenceServer::start(ServerConfig::default())?;
+    println!(
+        "starting inference server over {} ({} device(s)) ...",
+        dir.display(),
+        devices
+    );
+    let server = InferenceServer::start(ServerConfig {
+        devices,
+        policy: policy_from(args)?,
+        ..ServerConfig::default()
+    })?;
     let mut correct = 0;
     let t0 = std::time::Instant::now();
     for i in 0..n {
@@ -358,6 +508,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("{}", server.metrics().report());
     server.shutdown();
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_pjrt(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "this build has no PJRT executor — rebuild with `--features pjrt` \
+         (and run `make artifacts`), or use `--backend sim`"
+    )
 }
 
 #[cfg(test)]
@@ -390,12 +548,20 @@ mod tests {
         for cmd in [
             "simulate --network pimnet",
             "simulate --network alexnet --preset conservative --bits 4 --k 2",
+            "simulate --network pimnet --preset conservative --channels 2 --ranks 4",
+            "simulate --network vgg16 --preset conservative --channels 2 --ranks 2 \
+             --shard layersplit",
+            "simulate --network alexnet --preset conservative --channels 4 \
+             --shard hybrid:2",
             "map --network resnet18",
+            "map --network resnet18 --preset conservative --channels 2 --shard layersplit",
             "optimize --network pimnet --preset conservative",
             "optimize --network alexnet --preset conservative --balanced",
             "roofline --network vgg16",
             "circuit --samples 2000",
             "tables",
+            "serve --backend sim --network pimnet --preset conservative \
+             --devices 2 --images 12 --batch 4",
             "help",
         ] {
             let v: Vec<String> = cmd.split_whitespace().map(String::from).collect();

@@ -7,11 +7,14 @@
 //! preset = "paper_favorable"   # or "conservative"
 //! network = "vgg16"
 //! n_bits = 8
+//! shard = "replicate"          # or "layersplit" / "hybrid:<replicas>"
 //!
 //! [map]
 //! ks = [1, 1, 1, 1]            # per-layer parallelism (or single value)
 //!
 //! [dram]
+//! channels = 1
+//! ranks_per_channel = 4
 //! subarrays_per_bank = 32
 //! cols = 4096
 //! internal_bus_bits = 64
@@ -62,6 +65,12 @@ pub fn load_experiment(text: &str) -> anyhow::Result<Experiment> {
         sim.ks = ks.iter().map(|&v| v.max(1) as usize).collect();
     }
 
+    if let Some(s) = t.get("shard").and_then(Value::as_str) {
+        sim.shard = crate::plan::ShardPolicy::parse(s)?;
+    }
+    sim.geometry.channels = t.get_usize("dram.channels", sim.geometry.channels);
+    sim.geometry.ranks_per_channel =
+        t.get_usize("dram.ranks_per_channel", sim.geometry.ranks_per_channel);
     sim.geometry.subarrays_per_bank =
         t.get_usize("dram.subarrays_per_bank", sim.geometry.subarrays_per_bank);
     sim.geometry.cols = t.get_usize("dram.cols", sim.geometry.cols);
@@ -136,5 +145,27 @@ mod tests {
         let e = load_experiment("network = \"pimnet\"").unwrap();
         let r = crate::sim::simulate(&e.network, &e.sim).unwrap();
         assert!(r.throughput_ips() > 0.0);
+    }
+
+    #[test]
+    fn scaleout_keys_resolve() {
+        let e = load_experiment(
+            "network = \"pimnet\"\npreset = \"conservative\"\n\
+             shard = \"layersplit\"\n\
+             [dram]\nchannels = 2\nranks_per_channel = 2\n",
+        )
+        .unwrap();
+        assert_eq!(e.sim.geometry.channels, 2);
+        assert_eq!(e.sim.geometry.ranks_per_channel, 2);
+        assert_eq!(e.sim.shard, crate::plan::ShardPolicy::LayerSplit);
+        let r = crate::sim::simulate(&e.network, &e.sim).unwrap();
+        assert_eq!(r.replicas(), 1);
+        assert_eq!(r.scale_out.devices.len(), 2);
+        assert!(r.scale_out.hop_ns_total > 0.0);
+    }
+
+    #[test]
+    fn bad_shard_rejected() {
+        assert!(load_experiment("shard = \"diagonal\"").is_err());
     }
 }

@@ -65,12 +65,19 @@ pub struct Toml {
     pub entries: BTreeMap<String, Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 impl Toml {
     pub fn parse(text: &str) -> Result<Toml, TomlError> {

@@ -1,0 +1,164 @@
+//! Device execution backends for the multi-device coordinator.
+//!
+//! A [`Backend`] is what one pool worker drives: it owns one PIM device's
+//! executable state and runs padded batches. Two implementations exist:
+//!
+//!   * [`SimBackend`] (always available) — a simulated device priced by
+//!     the timing model. Logits are a fixed deterministic function of the
+//!     image (the coordinator's dispatch/batching logic is what's under
+//!     test, not numerics), and the device can optionally replay its
+//!     DRAM-model service time in wall-clock for demos.
+//!   * `PjrtBackend` (behind `--features pjrt`, in `server.rs`) — the AOT
+//!     artifact executor; real numerics via PJRT.
+//!
+//! Backends are constructed *inside* their worker thread (the PJRT handles
+//! are not `Send`), so the trait itself needs no `Send` bound.
+
+use anyhow::Result;
+
+use crate::sim::SimResult;
+use crate::workloads::Network;
+
+/// One device's executable state, driven by a single pool worker.
+pub trait Backend {
+    /// Fixed batch the device executes (requests are padded up to it).
+    fn batch_size(&self) -> usize;
+    /// Elements in one input image.
+    fn image_elems(&self) -> usize;
+    /// Logit count per image.
+    fn num_classes(&self) -> usize;
+    /// Run one padded batch (`batch_size × image_elems` elements);
+    /// returns row-major logits `[batch_size × num_classes]`.
+    fn run_batch(&mut self, images: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// A simulated PIM device: deterministic logits + a timing-model service
+/// time it can replay in wall-clock.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    batch: usize,
+    image_elems: usize,
+    classes: usize,
+    /// Steady-state per-image service time from the simulator (ns).
+    service_ns_per_image: f64,
+    /// Wall-clock replay factor: 0 (default) disables sleeping, 1 replays
+    /// the DRAM-model time in real time.
+    time_scale: f64,
+}
+
+impl SimBackend {
+    pub fn new(batch: usize, image_elems: usize, classes: usize) -> Self {
+        assert!(batch > 0 && image_elems > 0 && classes > 0);
+        SimBackend {
+            batch,
+            image_elems,
+            classes,
+            service_ns_per_image: 0.0,
+            time_scale: 0.0,
+        }
+    }
+
+    /// Build a device priced by a simulation result: one pool worker
+    /// stands in for one replica of `result`'s plan, serving `net` images.
+    pub fn from_sim(result: &SimResult, net: &Network, batch: usize) -> Self {
+        let mut b = SimBackend::new(batch, net.layers[0].in_elems(), 10);
+        b.service_ns_per_image = result.pipeline.cycle_ns;
+        b
+    }
+
+    /// Replay the device's modeled service time in wall-clock (scaled).
+    pub fn with_time_scale(mut self, scale: f64) -> Self {
+        self.time_scale = scale.max(0.0);
+        self
+    }
+
+    /// The modeled per-image service time (ns).
+    pub fn service_ns(&self) -> f64 {
+        self.service_ns_per_image
+    }
+
+    /// Deterministic pseudo-weight for (class, element) — fixed stripes so
+    /// every device classifies identically and repeatably.
+    fn weight(class: usize, elem: usize) -> f32 {
+        ((elem.wrapping_mul(31) + class.wrapping_mul(17) + 7) % 13) as f32 - 6.0
+    }
+}
+
+impl Backend for SimBackend {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn run_batch(&mut self, images: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            images.len() == self.batch * self.image_elems,
+            "batch must be {}x{} elements, got {}",
+            self.batch,
+            self.image_elems,
+            images.len()
+        );
+        if self.time_scale > 0.0 {
+            let ns = self.service_ns_per_image * self.batch as f64 * self.time_scale;
+            std::thread::sleep(std::time::Duration::from_nanos(ns as u64));
+        }
+        let mut logits = Vec::with_capacity(self.batch * self.classes);
+        for b in 0..self.batch {
+            let img = &images[b * self.image_elems..(b + 1) * self.image_elems];
+            for c in 0..self.classes {
+                let score: f32 = img
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| v as f32 * Self::weight(c, i))
+                    .sum();
+                logits.push(score / self.image_elems as f32);
+            }
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_backend_is_deterministic_across_instances() {
+        let mut a = SimBackend::new(2, 16, 10);
+        let mut b = SimBackend::new(2, 16, 10);
+        let images: Vec<i32> = (0..32).map(|i| (i * 7) % 256).collect();
+        assert_eq!(a.run_batch(&images).unwrap(), b.run_batch(&images).unwrap());
+    }
+
+    #[test]
+    fn logit_rows_have_class_count() {
+        let mut b = SimBackend::new(3, 8, 10);
+        let out = b.run_batch(&vec![1; 24]).unwrap();
+        assert_eq!(out.len(), 30);
+    }
+
+    #[test]
+    fn wrong_batch_shape_rejected() {
+        let mut b = SimBackend::new(2, 8, 10);
+        assert!(b.run_batch(&[0; 7]).is_err());
+    }
+
+    #[test]
+    fn from_sim_prices_service_time() {
+        use crate::sim::{simulate, SimConfig};
+        use crate::workloads::nets::pimnet;
+        let net = pimnet();
+        let r = simulate(&net, &SimConfig::conservative(8)).unwrap();
+        let b = SimBackend::from_sim(&r, &net, 8);
+        assert_eq!(b.image_elems(), net.layers[0].in_elems());
+        assert!(b.service_ns() > 0.0);
+        assert_eq!(b.batch_size(), 8);
+    }
+}

@@ -12,6 +12,8 @@ pub struct Metrics {
     pub padded_lanes: u64,
     latencies_us: Summary,
     batch_exec_us: Summary,
+    /// Requests dispatched per device (multi-device pool).
+    per_device: Vec<u64>,
 }
 
 impl Metrics {
@@ -22,6 +24,14 @@ impl Metrics {
     pub fn record_request(&mut self, latency: Duration) {
         self.requests += 1;
         self.latencies_us.push(latency.as_secs_f64() * 1e6);
+    }
+
+    /// Count one request routed to `device`.
+    pub fn record_dispatch(&mut self, device: usize) {
+        if self.per_device.len() <= device {
+            self.per_device.resize(device + 1, 0);
+        }
+        self.per_device[device] += 1;
     }
 
     pub fn record_batch(&mut self, exec: Duration, fill: usize, batch_size: usize) {
@@ -39,6 +49,7 @@ impl Metrics {
             latency_p99_us: self.latencies_us.percentile(99.0),
             latency_mean_us: self.latencies_us.mean(),
             batch_exec_mean_us: self.batch_exec_us.mean(),
+            per_device: self.per_device.clone(),
         }
     }
 }
@@ -53,13 +64,20 @@ pub struct MetricsSnapshot {
     pub latency_p99_us: f64,
     pub latency_mean_us: f64,
     pub batch_exec_mean_us: f64,
+    /// Requests dispatched per device (empty for pre-pool accumulators).
+    pub per_device: Vec<u64>,
 }
 
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
+        let devices = if self.per_device.is_empty() {
+            String::new()
+        } else {
+            format!(" per_device={:?}", self.per_device)
+        };
         format!(
             "requests={} batches={} padded={} latency(mean/p50/p99)=\
-             {:.0}/{:.0}/{:.0} µs batch_exec_mean={:.0} µs",
+             {:.0}/{:.0}/{:.0} µs batch_exec_mean={:.0} µs{}",
             self.requests,
             self.batches,
             self.padded_lanes,
@@ -67,6 +85,7 @@ impl MetricsSnapshot {
             self.latency_p50_us,
             self.latency_p99_us,
             self.batch_exec_mean_us,
+            devices,
         )
     }
 }

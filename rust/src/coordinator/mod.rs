@@ -1,23 +1,32 @@
 //! Layer-3 coordinator (DESIGN.md S15): the serving front of PIM-DRAM.
 //!
 //! The paper's system contribution is the architecture + mapping +
-//! dataflow; the coordinator operationalizes it as a request loop: an
-//! inference server owns the PJRT executables (one per bank/layer),
-//! batches incoming requests to the artifact batch size, executes the
-//! bank chain, and reports both measured wall-clock latency and the PIM
-//! timing model's per-image cost for the same work.
+//! dataflow; the coordinator operationalizes it as a request loop over a
+//! *pool* of PIM devices — one worker per replica of a
+//! `plan::ExecutionPlan`. The dispatcher routes each request to a device
+//! (round-robin / least-loaded / two-choices), the device's worker batches
+//! to the artifact batch size, executes its backend, and reports both
+//! measured wall-clock latency and per-device dispatch counts alongside
+//! the PIM timing model's per-image cost for the same work.
 //!
-//! PJRT handles are not `Send`, so the executor lives on a dedicated
-//! worker thread; clients talk to it over channels (std::sync::mpsc — the
-//! offline registry has no tokio, and a simulator coordinator needs no
-//! async I/O).
+//! Backends (`backend::Backend`) are constructed inside their worker
+//! thread — PJRT handles are not `Send` — so clients talk to workers over
+//! channels (std::sync::mpsc — the offline registry has no tokio, and a
+//! simulator coordinator needs no async I/O). The simulated backend
+//! (`backend::SimBackend`) serves without artifacts; the PJRT artifact
+//! executor compiles behind `--features pjrt`.
 
+pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use backend::{Backend, SimBackend};
 pub use batcher::Batcher;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Device, Policy, Router};
-pub use server::{ClassifyResponse, InferenceServer, ServerConfig};
+pub use server::{ClassifyResponse, MultiDeviceServer, PoolConfig};
+
+#[cfg(feature = "pjrt")]
+pub use server::{InferenceServer, ServerConfig};

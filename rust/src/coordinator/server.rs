@@ -1,9 +1,18 @@
-//! The inference server: a worker thread owns the PJRT executor (PJRT
-//! handles are not Send); clients submit requests over a channel and block
-//! on per-request response channels. Requests are batched to the artifact
-//! batch size within a bounded window.
+//! The inference server: a per-device worker pool over [`Backend`]s.
+//!
+//! Every planned device gets one worker thread that owns its backend
+//! (constructed *inside* the thread — PJRT handles are not `Send`) and
+//! runs the batching loop over the shared [`Batcher`]: fill to the
+//! artifact batch size within a bounded window, pad the tail, execute,
+//! reply. The dispatcher routes each request to a device up front
+//! (round-robin / least-loaded / two-choices, mirroring
+//! `coordinator::router`), so replicas of a `plan::ExecutionPlan` serve
+//! disjoint request streams exactly like the timing model assumes.
+//!
+//! [`MultiDeviceServer`] is backend-generic and always compiled; the
+//! artifact-executing [`InferenceServer`] (a pool of PJRT devices) sits on
+//! top behind `--features pjrt`.
 
-use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -11,28 +20,29 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::backend::Backend;
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
-use crate::runtime::{artifacts_dir, PimNetExecutor, Runtime};
+use super::router::{Device, Policy, Router};
 
-/// Server configuration.
+/// Pool configuration.
 #[derive(Debug, Clone)]
-pub struct ServerConfig {
-    pub artifacts: PathBuf,
-    /// Max time a request waits for the batch to fill before a partial
-    /// batch is flushed.
+pub struct PoolConfig {
+    /// Worker/device count (e.g. the plan's replica count).
+    pub devices: usize,
+    /// Dispatch policy across devices.
+    pub policy: Policy,
+    /// Max time a request waits for its device's batch to fill before a
+    /// partial batch is flushed.
     pub batch_window: Duration,
-    /// Use the per-layer chain (true, the bank pipeline) or the fused
-    /// full-model module (false).
-    pub per_layer_chain: bool,
 }
 
-impl Default for ServerConfig {
+impl Default for PoolConfig {
     fn default() -> Self {
-        ServerConfig {
-            artifacts: artifacts_dir(),
+        PoolConfig {
+            devices: 1,
+            policy: Policy::RoundRobin,
             batch_window: Duration::from_millis(5),
-            per_layer_chain: true,
         }
     }
 }
@@ -44,6 +54,8 @@ pub struct ClassifyResponse {
     pub logits: Vec<f32>,
     /// End-to-end wall-clock latency of the request (queue + execute).
     pub latency: Duration,
+    /// Device that served the request.
+    pub device: usize,
 }
 
 struct Request {
@@ -57,47 +69,96 @@ enum Control {
     Shutdown,
 }
 
-/// Handle to the running server.
-pub struct InferenceServer {
+struct Worker {
     tx: SyncSender<Control>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Handle to a running device pool. Dispatch decisions delegate to the
+/// existing [`Router`] (each worker is one routed [`Device`]), so the
+/// offline router simulations and the live pool share one policy
+/// implementation.
+pub struct MultiDeviceServer {
+    workers: Vec<Worker>,
     metrics: Arc<Mutex<Metrics>>,
-    worker: Option<JoinHandle<()>>,
+    router: Mutex<Router>,
     image_elems: usize,
     batch: usize,
 }
 
-impl InferenceServer {
-    /// Start the worker and wait until the artifacts are compiled.
-    pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
-        let (tx, rx) = mpsc::sync_channel::<Control>(1024);
+impl MultiDeviceServer {
+    /// Start one worker per device; `factory(device_id)` builds each
+    /// backend on its own thread. All workers spawn first and readiness is
+    /// collected afterwards, so N slow backend constructions (e.g. PJRT
+    /// artifact compiles) overlap instead of paying `sum(compile)`.
+    pub fn start<B, F>(cfg: PoolConfig, factory: F) -> Result<MultiDeviceServer>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + Clone + 'static,
+    {
+        anyhow::ensure!(cfg.devices > 0, "pool needs at least one device");
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let metrics_worker = Arc::clone(&metrics);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+        let mut workers = Vec::with_capacity(cfg.devices);
+        let mut ready_rxs = Vec::with_capacity(cfg.devices);
 
-        let worker = std::thread::Builder::new()
-            .name("pim-serve".into())
-            .spawn(move || {
-                worker_main(cfg, rx, metrics_worker, ready_tx);
-            })
-            .context("spawning server worker")?;
+        for device in 0..cfg.devices {
+            let (tx, rx) = mpsc::sync_channel::<Control>(1024);
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+            let worker_factory = factory.clone();
+            let worker_metrics = Arc::clone(&metrics);
+            let window = cfg.batch_window;
+            let handle = std::thread::Builder::new()
+                .name(format!("pim-serve-{device}"))
+                .spawn(move || {
+                    worker_main(device, worker_factory, rx, worker_metrics, window, ready_tx)
+                })
+                .context("spawning device worker")?;
+            workers.push(Worker { tx, handle: Some(handle) });
+            ready_rxs.push(ready_rx);
+        }
 
-        let (image_elems, batch) = ready_rx
-            .recv()
-            .context("server worker died during startup")??;
-        Ok(InferenceServer {
-            tx,
+        let mut dims: Option<(usize, usize)> = None;
+        for ready_rx in ready_rxs {
+            let got = ready_rx
+                .recv()
+                .context("device worker died during startup")??;
+            if let Some(prev) = dims {
+                anyhow::ensure!(
+                    prev == got,
+                    "heterogeneous backends in one pool: {prev:?} vs {got:?}"
+                );
+            }
+            dims = Some(got);
+        }
+
+        let (image_elems, batch) = dims.expect("devices > 0");
+        // Workers are homogeneous, so unit service time makes the router's
+        // backlog estimate proportional to plain queue depth.
+        let devices = (0..cfg.devices)
+            .map(|d| Device::new(&format!("worker{d}"), 1.0))
+            .collect();
+        Ok(MultiDeviceServer {
+            workers,
             metrics,
-            worker: Some(worker),
+            router: Mutex::new(Router::new(devices, cfg.policy, 0x5EED)),
             image_elems,
             batch,
         })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.workers.len()
     }
 
     pub fn batch_size(&self) -> usize {
         self.batch
     }
 
-    /// Blocking single-image classification.
+    pub fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    /// Blocking single-image classification, dispatched to one device.
     pub fn classify(&self, image: Vec<i32>) -> Result<ClassifyResponse> {
         anyhow::ensure!(
             image.len() == self.image_elems,
@@ -105,15 +166,26 @@ impl InferenceServer {
             self.image_elems,
             image.len()
         );
+        let device = self.router.lock().unwrap().route();
+        self.metrics.lock().unwrap().record_dispatch(device);
+        let result = self.dispatch_to(device, image);
+        self.router.lock().unwrap().complete(device);
+        result
+    }
+
+    fn dispatch_to(&self, device: usize, image: Vec<i32>) -> Result<ClassifyResponse> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        self.tx
+        self.workers[device]
+            .tx
             .send(Control::Req(Request {
                 image,
                 enqueued: Instant::now(),
                 resp: resp_tx,
             }))
             .map_err(|_| anyhow::anyhow!("server is down"))?;
-        resp_rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -121,37 +193,100 @@ impl InferenceServer {
     }
 
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Control::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Control::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
-impl Drop for InferenceServer {
+impl Drop for MultiDeviceServer {
     fn drop(&mut self) {
-        let _ = self.tx.send(Control::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.stop();
+    }
+}
+
+/// Index of the max logit in one row.
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Execute one popped batch on the worker's backend and reply.
+fn execute_batch<B: Backend>(
+    backend: &mut B,
+    device: usize,
+    reqs: Vec<Request>,
+    metrics: &Mutex<Metrics>,
+) {
+    let batch_size = backend.batch_size();
+    let image_elems = backend.image_elems();
+    let fill = reqs.len();
+
+    // Pad to the compiled batch size.
+    let mut images = Vec::with_capacity(batch_size * image_elems);
+    for r in &reqs {
+        images.extend_from_slice(&r.image);
+    }
+    images.resize(batch_size * image_elems, 0);
+
+    let t0 = Instant::now();
+    let result = backend.run_batch(&images);
+    let exec_time = t0.elapsed();
+
+    match result {
+        Ok(logits) => {
+            let ncls = backend.num_classes();
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(exec_time, fill, batch_size);
+            for (i, r) in reqs.into_iter().enumerate() {
+                let latency = r.enqueued.elapsed();
+                m.record_request(latency);
+                let row = logits[i * ncls..(i + 1) * ncls].to_vec();
+                let _ = r.resp.send(Ok(ClassifyResponse {
+                    class: argmax(&row),
+                    logits: row,
+                    latency,
+                    device,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch execution failed: {e:#}");
+            for r in reqs {
+                let _ = r.resp.send(Err(anyhow::anyhow!(msg.clone())));
+            }
         }
     }
 }
 
-fn worker_main(
-    cfg: ServerConfig,
+fn worker_main<B, F>(
+    device: usize,
+    factory: F,
     rx: Receiver<Control>,
     metrics: Arc<Mutex<Metrics>>,
+    window: Duration,
     ready: Sender<Result<(usize, usize)>>,
-) {
-    // Compile everything on the worker (PJRT handles stay on this thread).
-    let exec = match Runtime::cpu()
-        .and_then(|rt| PimNetExecutor::load(&rt, &cfg.artifacts))
-    {
-        Ok(e) => {
-            let elems: usize =
-                e.manifest.layers[0].in_shape.iter().skip(1).product();
-            let _ = ready.send(Ok((elems, e.batch_size())));
-            e
+) where
+    B: Backend,
+    F: Fn(usize) -> Result<B>,
+{
+    // Build the backend on this thread (PJRT handles stay here).
+    let mut backend = match factory(device) {
+        Ok(b) => {
+            let _ = ready.send(Ok((b.image_elems(), b.batch_size())));
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -159,18 +294,20 @@ fn worker_main(
         }
     };
 
-    let batch_size = exec.batch_size();
-    let image_elems: usize =
-        exec.manifest.layers[0].in_shape.iter().skip(1).product();
+    let batch_size = backend.batch_size();
     let mut batcher: Batcher<Request> = Batcher::new(batch_size);
     let mut open = true;
 
     while open {
-        // Fill the batch or time out on the window.
-        let deadline = Instant::now() + cfg.batch_window;
+        // Block for the first request of the next batch.
+        match rx.recv() {
+            Ok(Control::Req(r)) => batcher.push(r),
+            Ok(Control::Shutdown) | Err(_) => break,
+        }
+        // Fill within the window.
+        let deadline = Instant::now() + window;
         while batcher.pending() < batch_size {
-            let now = Instant::now();
-            let timeout = deadline.saturating_duration_since(now);
+            let timeout = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(timeout) {
                 Ok(Control::Req(r)) => batcher.push(r),
                 Ok(Control::Shutdown) => {
@@ -183,62 +320,205 @@ fn worker_main(
                     break;
                 }
             }
-            if batcher.pending() == 0 {
-                // Nothing queued: keep waiting without burning the window.
-                continue;
+        }
+        // Flush everything queued (all full batches + the tail).
+        while let Some(reqs) = batcher.pop_full() {
+            execute_batch(&mut backend, device, reqs, &metrics);
+        }
+        if let Some(reqs) = batcher.pop_partial() {
+            execute_batch(&mut backend, device, reqs, &metrics);
+        }
+    }
+    // Drain requests that raced the shutdown.
+    while let Some(reqs) = batcher.pop_full().or_else(|| batcher.pop_partial()) {
+        execute_batch(&mut backend, device, reqs, &metrics);
+    }
+}
+
+// ---- PJRT artifact server (feature `pjrt`) --------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_server {
+    use std::path::{Path, PathBuf};
+
+    use super::*;
+    use crate::runtime::{artifacts_dir, PimNetExecutor, Runtime};
+
+    /// Artifact-server configuration.
+    #[derive(Debug, Clone)]
+    pub struct ServerConfig {
+        pub artifacts: PathBuf,
+        /// Max time a request waits for the batch to fill before a partial
+        /// batch is flushed.
+        pub batch_window: Duration,
+        /// Use the per-layer chain (true, the bank pipeline) or the fused
+        /// full-model module (false).
+        pub per_layer_chain: bool,
+        /// PJRT device workers in the pool.
+        pub devices: usize,
+        pub policy: Policy,
+    }
+
+    impl Default for ServerConfig {
+        fn default() -> Self {
+            ServerConfig {
+                artifacts: artifacts_dir(),
+                batch_window: Duration::from_millis(5),
+                per_layer_chain: true,
+                devices: 1,
+                policy: Policy::RoundRobin,
             }
         }
+    }
 
-        let Some(reqs) = batcher
-            .pop_full()
-            .or_else(|| batcher.pop_partial())
-        else {
-            continue;
-        };
+    /// One PJRT device: a compiled copy of the AOT artifacts.
+    pub struct PjrtBackend {
+        exec: PimNetExecutor,
+        per_layer_chain: bool,
+        image_elems: usize,
+    }
 
-        // Pad to the compiled batch size.
-        let fill = reqs.len();
-        let mut images = Vec::with_capacity(batch_size * image_elems);
-        for r in &reqs {
-            images.extend_from_slice(&r.image);
+    impl PjrtBackend {
+        pub fn load(dir: &Path, per_layer_chain: bool) -> Result<PjrtBackend> {
+            let rt = Runtime::cpu()?;
+            let exec = PimNetExecutor::load(&rt, dir)?;
+            let image_elems =
+                exec.manifest.layers[0].in_shape.iter().skip(1).product();
+            Ok(PjrtBackend { exec, per_layer_chain, image_elems })
         }
-        images.resize(batch_size * image_elems, 0);
+    }
 
-        let t0 = Instant::now();
-        let result = if cfg.per_layer_chain {
-            exec.run_chain(images)
-        } else {
-            exec.run_full(images)
-        };
-        let exec_time = t0.elapsed();
+    impl Backend for PjrtBackend {
+        fn batch_size(&self) -> usize {
+            self.exec.batch_size()
+        }
 
-        match result.and_then(|logits| {
-            let classes = PimNetExecutor::classify(&logits)?;
-            let flat = logits.as_f32()?.to_vec();
-            let ncls = flat.len() / batch_size;
-            Ok((classes, flat, ncls))
-        }) {
-            Ok((classes, flat, ncls)) => {
-                let mut m = metrics.lock().unwrap();
-                m.record_batch(exec_time, fill, batch_size);
-                for (i, r) in reqs.into_iter().enumerate() {
-                    let latency = r.enqueued.elapsed();
-                    m.record_request(latency);
-                    let _ = r.resp.send(Ok(ClassifyResponse {
-                        class: classes[i],
-                        logits: flat[i * ncls..(i + 1) * ncls].to_vec(),
-                        latency,
-                    }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("batch execution failed: {e:#}");
-                for r in reqs {
-                    let _ = r.resp.send(Err(anyhow::anyhow!(msg.clone())));
-                }
-            }
+        fn image_elems(&self) -> usize {
+            self.image_elems
+        }
+
+        fn num_classes(&self) -> usize {
+            10
+        }
+
+        fn run_batch(&mut self, images: &[i32]) -> Result<Vec<f32>> {
+            let images = images.to_vec();
+            let logits = if self.per_layer_chain {
+                self.exec.run_chain(images)?
+            } else {
+                self.exec.run_full(images)?
+            };
+            Ok(logits.as_f32()?.to_vec())
+        }
+    }
+
+    /// The artifact-serving front: a pool of PJRT devices.
+    pub struct InferenceServer {
+        inner: MultiDeviceServer,
+    }
+
+    impl InferenceServer {
+        /// Start the worker pool and wait until every device compiled the
+        /// artifacts.
+        pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
+            let artifacts = cfg.artifacts.clone();
+            let per_layer_chain = cfg.per_layer_chain;
+            let inner = MultiDeviceServer::start(
+                PoolConfig {
+                    devices: cfg.devices,
+                    policy: cfg.policy,
+                    batch_window: cfg.batch_window,
+                },
+                move |_| PjrtBackend::load(&artifacts, per_layer_chain),
+            )?;
+            Ok(InferenceServer { inner })
+        }
+
+        pub fn batch_size(&self) -> usize {
+            self.inner.batch_size()
+        }
+
+        /// Blocking single-image classification.
+        pub fn classify(&self, image: Vec<i32>) -> Result<ClassifyResponse> {
+            self.inner.classify(image)
+        }
+
+        pub fn metrics(&self) -> MetricsSnapshot {
+            self.inner.metrics()
+        }
+
+        pub fn shutdown(self) {
+            self.inner.shutdown();
         }
     }
 }
 
-// Integration tests (need artifacts) live in rust/tests/serve_integration.rs.
+#[cfg(feature = "pjrt")]
+pub use pjrt_server::{InferenceServer, PjrtBackend, ServerConfig};
+
+// Integration tests: simulated devices in rust/tests/scaleout_serve.rs
+// (default features); artifact-backed in rust/tests/serve_integration.rs
+// (requires `pjrt` + `make artifacts`).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SimBackend;
+
+    fn pool(devices: usize, policy: Policy) -> MultiDeviceServer {
+        MultiDeviceServer::start(
+            PoolConfig { devices, policy, batch_window: Duration::from_millis(2) },
+            |_| Ok(SimBackend::new(4, 8, 10)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_device_round_trip() {
+        let s = pool(1, Policy::RoundRobin);
+        let resp = s.classify(vec![3; 8]).unwrap();
+        assert_eq!(resp.device, 0);
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.class < 10);
+        let m = s.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.per_device, vec![1]);
+        s.shutdown();
+    }
+
+    #[test]
+    fn round_robin_touches_every_device() {
+        let s = pool(3, Policy::RoundRobin);
+        for i in 0..6 {
+            let resp = s.classify(vec![i as i32; 8]).unwrap();
+            assert_eq!(resp.device, i % 3);
+        }
+        let m = s.metrics();
+        assert_eq!(m.per_device, vec![2, 2, 2]);
+        s.shutdown();
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let s = pool(1, Policy::RoundRobin);
+        assert!(s.classify(vec![0; 3]).is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn failing_factory_fails_start() {
+        let err = MultiDeviceServer::start(PoolConfig::default(), |d| {
+            Err::<SimBackend, _>(anyhow::anyhow!("device {d} has no DIMM"))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("no DIMM"));
+    }
+
+    #[test]
+    fn zero_devices_rejected() {
+        let cfg = PoolConfig { devices: 0, ..PoolConfig::default() };
+        assert!(
+            MultiDeviceServer::start(cfg, |_| Ok(SimBackend::new(1, 1, 2))).is_err()
+        );
+    }
+}

@@ -21,6 +21,12 @@ pub struct DramTiming {
     pub tcas_ns: f64,
     /// Internal bus width in bits for inter-bank RowClone (global I/O).
     pub internal_bus_bits: usize,
+    /// External channel interface width in bits — the path an activation
+    /// takes when a layer-split plan hands it to a device on another
+    /// channel. Stays at the DDR pin width even when a paper-favorable
+    /// stance widens the *internal* links, so cross-channel hops are
+    /// always priced dearer than in-module RowClones.
+    pub channel_bus_bits: usize,
     /// Energy per ACTIVATE+PRECHARGE of one row (nJ).
     pub act_pre_energy_nj: f64,
     /// Extra energy per additional simultaneously-activated row (nJ).
@@ -39,6 +45,7 @@ impl DramTiming {
             trp_ns: 13.75,
             tcas_ns: 13.75,
             internal_bus_bits: 64,
+            channel_bus_bits: 64,
             act_pre_energy_nj: 2.5,
             multi_act_energy_nj: 0.9,
             bus_energy_pj_per_bit: 4.0,
@@ -54,6 +61,7 @@ impl DramTiming {
             trp_ns: 12.5,
             tcas_ns: 12.5,
             internal_bus_bits: 64,
+            channel_bus_bits: 64,
             act_pre_energy_nj: 2.1,
             multi_act_energy_nj: 0.8,
             bus_energy_pj_per_bit: 3.2,
@@ -78,6 +86,17 @@ impl DramTiming {
     pub fn interbank_copy_ns(&self, row_bits: usize) -> f64 {
         let beats = crate::util::ceil_div(row_bits, self.internal_bus_bits);
         2.0 * self.trc_ns() + beats as f64 * self.tck_ns
+    }
+
+    /// Latency to move one row of `row_bits` to a device on another
+    /// channel: read row cycle on the source + write row cycle on the
+    /// destination + a column access on each side + serialized beats over
+    /// the external channel interface. Strictly dearer than
+    /// [`Self::interbank_copy_ns`] for the same row (the two extra tCAS,
+    /// and a bus never wider than the internal one).
+    pub fn interchannel_copy_ns(&self, row_bits: usize) -> f64 {
+        let beats = crate::util::ceil_div(row_bits, self.channel_bus_bits);
+        2.0 * self.trc_ns() + 2.0 * self.tcas_ns + beats as f64 * self.tck_ns
     }
 
     /// Energy of a multi-row activation with `rows` simultaneous rows (nJ).
@@ -111,6 +130,16 @@ mod tests {
         assert!(wide > narrow);
         // 8192/64 = 128 beats at 1.25ns = 160ns on top of 2*48.75.
         assert!((wide - (97.5 + 160.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interchannel_hop_dearer_than_interbank() {
+        let mut t = DramTiming::ddr3_1600();
+        assert!(t.interchannel_copy_ns(4096) > t.interbank_copy_ns(4096));
+        // Even with paper-favorable row-wide internal links the external
+        // channel interface stays at pin width.
+        t.internal_bus_bits = 4096;
+        assert!(t.interchannel_copy_ns(4096) > t.interbank_copy_ns(4096));
     }
 
     #[test]

@@ -12,9 +12,12 @@
 //! * **L3** — this crate: the DRAM PIM *system* — device/timing model,
 //!   in-DRAM compute primitives, circuit-level bitline simulation, bank
 //!   peripheral architecture, the paper's mapping algorithm and pipelined
-//!   dataflow, a GPU roofline baseline, and a request coordinator that
-//!   executes the AOT artifacts via PJRT while the timing model prices the
-//!   same work in DRAM cycles.
+//!   dataflow, a GPU roofline baseline, the device-scoped execution-plan
+//!   layer that shards networks across the channel × rank grid
+//!   (`plan`), and a multi-device request coordinator that serves batched
+//!   traffic from the planned devices (optionally executing the AOT
+//!   artifacts via PJRT — `--features pjrt` — while the timing model
+//!   prices the same work in DRAM cycles).
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for reproduction results.
@@ -30,6 +33,7 @@ pub mod dram;
 pub mod energy;
 pub mod gpu;
 pub mod mapping;
+pub mod plan;
 pub mod primitives;
 pub mod runtime;
 pub mod sim;

@@ -104,14 +104,28 @@ impl LayerMapping {
 }
 
 /// Mapping failure modes.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MapError {
-    #[error("network {net}: needs {banks} banks (layers + residual reserves) \
-             but device has {avail}")]
     BankOverflow { net: String, banks: usize, avail: usize },
-    #[error("layer {layer}: k={k} exceeds outer loop count {outer}")]
     KTooLarge { layer: String, k: usize, outer: usize },
 }
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::BankOverflow { net, banks, avail } => write!(
+                f,
+                "network {net}: needs {banks} banks (layers + residual \
+                 reserves) but device has {avail}"
+            ),
+            MapError::KTooLarge { layer, k, outer } => {
+                write!(f, "layer {layer}: k={k} exceeds outer loop count {outer}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MapError {}
 
 /// The outer-loop count k divides (output filters / output neurons).
 pub fn outer_count(layer: &LayerDesc) -> usize {

@@ -1,0 +1,553 @@
+//! Device-scoped execution plans (DESIGN.md S20): lowering a network
+//! mapping onto the `channels × ranks_per_channel` grid.
+//!
+//! The paper maps one layer per bank inside a single module and stops
+//! there; its own geometry already describes channels and ranks the
+//! original `simulate()` never exploited. This module closes that gap with
+//! a device-agnostic IR between the mapper and the pricing engine:
+//!
+//!   * [`PimDevice`] — one *module slot*: a group of ranks on one channel
+//!     that owns a shard's layer-per-bank mapping and pipeline. Transfers
+//!     inside a device ride the module's internal bus; activations leaving
+//!     a device cross the external channel interface (priced by
+//!     `DramTiming::interchannel_copy_ns`, always dearer).
+//!   * [`ShardAssignment`] — the contiguous slice of pipeline stages (and
+//!     the residual reserve banks) a device hosts.
+//!   * [`ExecutionPlan`] — the full lowering: devices, replica chains and
+//!     the shared per-layer mapping template. Produced by [`lower`],
+//!     priced by `sim::simulate` (plan → price → aggregate), and served by
+//!     the coordinator's multi-device pool.
+//!
+//! Sharding policies:
+//!   * [`ShardPolicy::Replicate`] — every replica hosts the whole network
+//!     in `ceil(banks / banks_per_rank)` ranks of one channel; the grid
+//!     packs as many replicas as fit. Replicas are independent (their bank
+//!     chains never share a bus segment), so steady-state throughput
+//!     scales linearly with the replica count.
+//!   * [`ShardPolicy::LayerSplit`] — one pipeline split into contiguous,
+//!     compute-balanced segments across the channels. Capacity scales (a
+//!     segment only needs its own banks) and each channel's internal bus
+//!     carries only its segment's transfers, but every segment boundary
+//!     pays an inter-channel hop on latency.
+//!   * [`ShardPolicy::Hybrid`] — `replicas` groups of channels, each group
+//!     running one layer-split pipeline: the two axes composed.
+
+use std::ops::Range;
+
+use crate::dram::DramGeometry;
+use crate::mapping::{map_network, MapConfig, MapError, NetworkMapping};
+use crate::util::ceil_div;
+use crate::workloads::Network;
+
+/// How a network is sharded across the channel × rank grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardPolicy {
+    /// Pack as many full-network replicas as the grid holds.
+    #[default]
+    Replicate,
+    /// Split one pipeline into contiguous segments, one per channel.
+    LayerSplit,
+    /// `replicas` layer-split pipelines over disjoint channel groups.
+    Hybrid { replicas: usize },
+}
+
+impl ShardPolicy {
+    /// Parse a CLI/config spelling: `replicate`, `layersplit` (or
+    /// `layer_split`/`split`), `hybrid:<replicas>`.
+    pub fn parse(s: &str) -> anyhow::Result<ShardPolicy> {
+        match s {
+            "replicate" => Ok(ShardPolicy::Replicate),
+            "layersplit" | "layer_split" | "split" => Ok(ShardPolicy::LayerSplit),
+            other => {
+                if let Some(n) = other.strip_prefix("hybrid:") {
+                    let replicas: usize = n.parse().map_err(|_| {
+                        anyhow::anyhow!("bad hybrid replica count `{n}`")
+                    })?;
+                    Ok(ShardPolicy::Hybrid { replicas })
+                } else {
+                    anyhow::bail!(
+                        "unknown shard policy `{other}` \
+                         (try replicate|layersplit|hybrid:<n>)"
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ShardPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardPolicy::Replicate => write!(f, "replicate"),
+            ShardPolicy::LayerSplit => write!(f, "layersplit"),
+            ShardPolicy::Hybrid { replicas } => write!(f, "hybrid:{replicas}"),
+        }
+    }
+}
+
+/// The slice of the network a device hosts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardAssignment {
+    /// Layer indices `[start, end)` of the pipeline segment.
+    pub layers: Range<usize>,
+    /// Indices into `net.residuals` whose reserved bank lives here (a
+    /// residual lands with the device hosting its `into_layer`).
+    pub residuals: Vec<usize>,
+}
+
+/// One module slot: a rank group on one channel owning a shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PimDevice {
+    pub id: usize,
+    /// Replica (pipeline group) this device belongs to.
+    pub replica: usize,
+    pub channel: usize,
+    /// Ranks occupied within the channel, `[start, end)`.
+    pub ranks: Range<usize>,
+    pub shard: ShardAssignment,
+    /// Banks in use: shard layers + resident residual reserves.
+    pub banks_used: usize,
+}
+
+impl PimDevice {
+    /// Bank budget of the rank group.
+    pub fn banks_avail(&self, g: &DramGeometry) -> usize {
+        self.ranks.len() * g.banks_per_rank
+    }
+}
+
+/// A network lowered onto the device grid.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub net_name: String,
+    pub policy: ShardPolicy,
+    pub geometry: DramGeometry,
+    /// Per-layer mapping template (identical in every replica: a layer's
+    /// subarray placement depends only on bank-internal geometry).
+    pub mapping: NetworkMapping,
+    pub devices: Vec<PimDevice>,
+    /// Independent full-network pipelines in the plan.
+    pub replicas: usize,
+    /// Device ids of each replica's chain, pipeline order.
+    pub chains: Vec<Vec<usize>>,
+}
+
+impl ExecutionPlan {
+    /// Devices forming one replica's pipeline, in order.
+    pub fn chain(&self, replica: usize) -> &[usize] {
+        &self.chains[replica]
+    }
+
+    /// Inter-channel hops one image pays end-to-end (per replica).
+    pub fn hops_per_image(&self) -> usize {
+        self.chains.first().map(|c| c.len() - 1).unwrap_or(0)
+    }
+
+    /// Device id hosting `layer` within `replica`'s chain.
+    pub fn device_hosting(&self, replica: usize, layer: usize) -> Option<usize> {
+        self.chains[replica]
+            .iter()
+            .copied()
+            .find(|&id| self.devices[id].shard.layers.contains(&layer))
+    }
+}
+
+/// Plan-lowering failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// The underlying Algorithm-1 mapping failed.
+    Map(MapError),
+    /// A full-network replica does not fit inside one channel.
+    ReplicaTooLarge { needed_ranks: usize, ranks_per_channel: usize },
+    /// A layer-split segment exceeds its channel's bank budget.
+    SegmentOverflow { channel: usize, banks: usize, budget: usize },
+    /// Hybrid replica count is zero or exceeds the channel count.
+    BadHybrid { replicas: usize, channels: usize },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Map(e) => write!(f, "{e}"),
+            PlanError::ReplicaTooLarge { needed_ranks, ranks_per_channel } => {
+                write!(
+                    f,
+                    "replica needs {needed_ranks} ranks but a channel has \
+                     {ranks_per_channel}; use --shard layersplit to span \
+                     channels"
+                )
+            }
+            PlanError::SegmentOverflow { channel, banks, budget } => write!(
+                f,
+                "layer-split segment on channel {channel} needs {banks} \
+                 banks but the channel has {budget}"
+            ),
+            PlanError::BadHybrid { replicas, channels } => write!(
+                f,
+                "hybrid:{replicas} needs 1..={channels} replicas \
+                 ({channels} channels available)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PlanError::Map(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<MapError> for PlanError {
+    fn from(e: MapError) -> Self {
+        PlanError::Map(e)
+    }
+}
+
+/// Lower a network onto the device grid under `policy`.
+pub fn lower(
+    net: &Network,
+    cfg: &MapConfig,
+    policy: ShardPolicy,
+) -> Result<ExecutionPlan, PlanError> {
+    let mapping = map_network(net, cfg)?;
+    let g = cfg.geometry.clone();
+    let banks_needed = mapping.total_banks;
+
+    let mut devices: Vec<PimDevice> = Vec::new();
+    let mut chains: Vec<Vec<usize>> = Vec::new();
+
+    match policy {
+        ShardPolicy::Replicate => {
+            let needed_ranks = ceil_div(banks_needed, g.banks_per_rank);
+            if needed_ranks > g.ranks_per_channel {
+                return Err(PlanError::ReplicaTooLarge {
+                    needed_ranks,
+                    ranks_per_channel: g.ranks_per_channel,
+                });
+            }
+            let per_channel = g.ranks_per_channel / needed_ranks;
+            for channel in 0..g.channels {
+                for slot in 0..per_channel {
+                    let id = devices.len();
+                    devices.push(PimDevice {
+                        id,
+                        replica: id,
+                        channel,
+                        ranks: slot * needed_ranks..(slot + 1) * needed_ranks,
+                        shard: ShardAssignment {
+                            layers: 0..net.layers.len(),
+                            residuals: (0..net.residuals.len()).collect(),
+                        },
+                        banks_used: banks_needed,
+                    });
+                    chains.push(vec![id]);
+                }
+            }
+        }
+        ShardPolicy::LayerSplit => {
+            let chain = split_group(net, &mapping, &g, 0..g.channels, 0, &mut devices)?;
+            chains.push(chain);
+        }
+        ShardPolicy::Hybrid { replicas } => {
+            if replicas == 0 || replicas > g.channels {
+                return Err(PlanError::BadHybrid { replicas, channels: g.channels });
+            }
+            // Equal channel groups; remainder channels stay idle.
+            let group = g.channels / replicas;
+            for r in 0..replicas {
+                let chs = r * group..(r + 1) * group;
+                let chain = split_group(net, &mapping, &g, chs, r, &mut devices)?;
+                chains.push(chain);
+            }
+        }
+    }
+
+    let replicas = chains.len();
+    Ok(ExecutionPlan {
+        net_name: net.name.clone(),
+        policy,
+        geometry: g,
+        mapping,
+        devices,
+        replicas,
+        chains,
+    })
+}
+
+/// Split one pipeline across `channels`, one contiguous segment per
+/// channel, balanced by the per-layer sequential-round count (the same
+/// proxy the k-optimizer uses). Returns the chain of new device ids.
+fn split_group(
+    net: &Network,
+    mapping: &NetworkMapping,
+    g: &DramGeometry,
+    channels: Range<usize>,
+    replica: usize,
+    devices: &mut Vec<PimDevice>,
+) -> Result<Vec<usize>, PlanError> {
+    let weights: Vec<u64> = mapping.layers.iter().map(|m| m.rounds() as u64).collect();
+    let segments = split_by_weight(&weights, channels.len());
+    let budget = g.ranks_per_channel * g.banks_per_rank;
+
+    // A single-channel group degenerates to a whole-network device and
+    // must additionally fit the channel (mirrors the Replicate check).
+    let mut chain = Vec::with_capacity(segments.len());
+    for (si, seg) in segments.iter().enumerate() {
+        let channel = channels.start + si;
+        let residuals: Vec<usize> = net
+            .residuals
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| seg.contains(&r.into_layer))
+            .map(|(i, _)| i)
+            .collect();
+        let banks_used = seg.len() + residuals.len();
+        if banks_used > budget {
+            return Err(PlanError::SegmentOverflow { channel, banks: banks_used, budget });
+        }
+        let ranks_used = ceil_div(banks_used, g.banks_per_rank);
+        let id = devices.len();
+        devices.push(PimDevice {
+            id,
+            replica,
+            channel,
+            ranks: 0..ranks_used,
+            shard: ShardAssignment { layers: seg.clone(), residuals },
+            banks_used,
+        });
+        chain.push(id);
+    }
+    Ok(chain)
+}
+
+/// Contiguous partition of `weights` into at most `segments` non-empty
+/// ranges with near-equal weight: cut j lands at the first prefix ≥
+/// `total·j/segments`, clamped so every remaining segment keeps ≥ 1 item.
+fn split_by_weight(weights: &[u64], segments: usize) -> Vec<Range<usize>> {
+    let n = weights.len();
+    let segs = segments.clamp(1, n.max(1));
+    if n == 0 {
+        return vec![0..0];
+    }
+    let cum: Vec<u64> = weights
+        .iter()
+        .scan(0u64, |acc, &w| {
+            *acc += w;
+            Some(*acc)
+        })
+        .collect();
+    let total = (*cum.last().unwrap()).max(1);
+
+    let mut cuts = vec![0usize];
+    for j in 1..segs {
+        let target = total.saturating_mul(j as u64) / segs as u64;
+        let raw = cum
+            .iter()
+            .position(|&c| c >= target)
+            .map(|i| i + 1)
+            .unwrap_or(n);
+        let prev = *cuts.last().unwrap();
+        let cut = raw.clamp(prev + 1, n - (segs - j));
+        cuts.push(cut);
+    }
+    cuts.push(n);
+    cuts.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::nets::{alexnet, pimnet, resnet18, vgg16};
+
+    fn cfg(g: DramGeometry) -> MapConfig {
+        MapConfig::uniform(g, 8, 1)
+    }
+
+    #[test]
+    fn replicate_packs_the_grid() {
+        // pimnet needs 4 banks → 1 rank; paper_default has 1 ch × 4 ranks.
+        let plan = lower(
+            &pimnet(),
+            &cfg(DramGeometry::paper_default()),
+            ShardPolicy::Replicate,
+        )
+        .unwrap();
+        assert_eq!(plan.replicas, 4);
+        assert_eq!(plan.devices.len(), 4);
+        assert!(plan.chains.iter().all(|c| c.len() == 1));
+        assert_eq!(plan.hops_per_image(), 0);
+
+        let mut g2 = DramGeometry::paper_default();
+        g2.channels = 2;
+        let plan2 = lower(&pimnet(), &cfg(g2), ShardPolicy::Replicate).unwrap();
+        assert_eq!(plan2.replicas, 8);
+        // Slots must be disjoint: distinct (channel, rank range) pairs.
+        let mut slots: Vec<(usize, usize)> = plan2
+            .devices
+            .iter()
+            .map(|d| (d.channel, d.ranks.start))
+            .collect();
+        slots.sort_unstable();
+        slots.dedup();
+        assert_eq!(slots.len(), 8);
+    }
+
+    #[test]
+    fn replicate_spanning_multiple_ranks() {
+        // resnet18: 18 layers + 8 residuals = 26 banks → all 4 ranks.
+        let plan = lower(
+            &resnet18(),
+            &cfg(DramGeometry::paper_default()),
+            ShardPolicy::Replicate,
+        )
+        .unwrap();
+        assert_eq!(plan.replicas, 1);
+        assert_eq!(plan.devices[0].ranks, 0..4);
+        assert_eq!(plan.devices[0].banks_used, 26);
+    }
+
+    #[test]
+    fn replica_too_large_for_one_channel() {
+        let mut g = DramGeometry::paper_default();
+        g.channels = 4;
+        g.ranks_per_channel = 1;
+        g.banks_per_rank = 2; // 2 banks per channel < pimnet's 4
+        let err = lower(&pimnet(), &cfg(g), ShardPolicy::Replicate).unwrap_err();
+        assert!(matches!(err, PlanError::ReplicaTooLarge { needed_ranks: 2, .. }));
+    }
+
+    #[test]
+    fn layer_split_covers_all_layers_once() {
+        let mut g = DramGeometry::paper_default();
+        g.channels = 2;
+        let net = resnet18();
+        let plan = lower(&net, &cfg(g), ShardPolicy::LayerSplit).unwrap();
+        assert_eq!(plan.replicas, 1);
+        assert_eq!(plan.devices.len(), 2);
+        assert_eq!(plan.hops_per_image(), 1);
+        // Coverage + contiguity.
+        let mut covered = vec![false; net.layers.len()];
+        for d in &plan.devices {
+            for l in d.shard.layers.clone() {
+                assert!(!covered[l], "layer {l} assigned twice");
+                covered[l] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        // Residual reserves land with their into_layer's device.
+        for d in &plan.devices {
+            for &ri in &d.shard.residuals {
+                assert!(d.shard.layers.contains(&net.residuals[ri].into_layer));
+            }
+        }
+        let res_total: usize =
+            plan.devices.iter().map(|d| d.shard.residuals.len()).sum();
+        assert_eq!(res_total, net.residuals.len());
+    }
+
+    #[test]
+    fn layer_split_balances_by_rounds() {
+        let mut g = DramGeometry::paper_default();
+        g.channels = 2;
+        let net = vgg16();
+        let plan = lower(&net, &cfg(g), ShardPolicy::LayerSplit).unwrap();
+        let rounds_of = |d: &PimDevice| -> u64 {
+            d.shard
+                .layers
+                .clone()
+                .map(|i| plan.mapping.layers[i].rounds() as u64)
+                .sum()
+        };
+        let a = rounds_of(&plan.devices[0]);
+        let b = rounds_of(&plan.devices[1]);
+        let total = a + b;
+        // Contiguous split can't be perfect; demand better than 80/20.
+        assert!(a * 5 >= total && b * 5 >= total, "split {a} vs {b}");
+    }
+
+    #[test]
+    fn hybrid_composes_split_and_replicas() {
+        let mut g = DramGeometry::paper_default();
+        g.channels = 4;
+        let plan = lower(
+            &alexnet(),
+            &cfg(g),
+            ShardPolicy::Hybrid { replicas: 2 },
+        )
+        .unwrap();
+        assert_eq!(plan.replicas, 2);
+        assert_eq!(plan.devices.len(), 4);
+        assert_eq!(plan.chains[0].len(), 2);
+        assert_eq!(plan.chains[1].len(), 2);
+        // Each replica's devices sit on its own channel group.
+        let chans: Vec<usize> =
+            plan.chains[1].iter().map(|&id| plan.devices[id].channel).collect();
+        assert_eq!(chans, vec![2, 3]);
+    }
+
+    #[test]
+    fn hybrid_validates_replica_count() {
+        let mut g = DramGeometry::paper_default();
+        g.channels = 2;
+        for bad in [0usize, 3] {
+            let err = lower(
+                &pimnet(),
+                &cfg(g.clone()),
+                ShardPolicy::Hybrid { replicas: bad },
+            )
+            .unwrap_err();
+            assert!(matches!(err, PlanError::BadHybrid { .. }), "{bad}");
+        }
+    }
+
+    #[test]
+    fn segment_overflow_detected() {
+        let mut g = DramGeometry::paper_default();
+        g.channels = 2;
+        g.ranks_per_channel = 1;
+        g.banks_per_rank = 4; // 4 banks per channel; vgg16 needs 8 per half
+        let err = lower(&vgg16(), &cfg(g), ShardPolicy::LayerSplit).unwrap_err();
+        assert!(matches!(err, PlanError::SegmentOverflow { .. }));
+    }
+
+    #[test]
+    fn policy_parsing_round_trips() {
+        for (s, p) in [
+            ("replicate", ShardPolicy::Replicate),
+            ("layersplit", ShardPolicy::LayerSplit),
+            ("layer_split", ShardPolicy::LayerSplit),
+            ("hybrid:3", ShardPolicy::Hybrid { replicas: 3 }),
+        ] {
+            assert_eq!(ShardPolicy::parse(s).unwrap(), p);
+        }
+        assert_eq!(ShardPolicy::parse("replicate").unwrap().to_string(), "replicate");
+        assert_eq!(
+            ShardPolicy::Hybrid { replicas: 2 }.to_string(),
+            "hybrid:2"
+        );
+        assert!(ShardPolicy::parse("nope").is_err());
+        assert!(ShardPolicy::parse("hybrid:x").is_err());
+    }
+
+    #[test]
+    fn split_by_weight_properties() {
+        crate::testutil::check(40, |rng| {
+            let n = 1 + rng.below(24);
+            let weights: Vec<u64> =
+                (0..n).map(|_| 1 + rng.below(1000) as u64).collect();
+            let segs = 1 + rng.below(8);
+            let parts = split_by_weight(&weights, segs);
+            crate::prop_assert!(parts.len() == segs.min(n).max(1));
+            crate::prop_assert!(parts[0].start == 0);
+            crate::prop_assert!(parts.last().unwrap().end == n);
+            for w in parts.windows(2) {
+                crate::prop_assert!(w[0].end == w[1].start);
+                crate::prop_assert!(!w[0].is_empty() && !w[1].is_empty());
+            }
+            Ok(())
+        });
+    }
+}

@@ -5,7 +5,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::client::{LoadedModule, Runtime, Tensor};
 use super::manifest::ArtifactManifest;
@@ -26,7 +26,7 @@ impl PimNetExecutor {
             .iter()
             .map(|l| rt.load_hlo_text(&dir.join(&l.file)))
             .collect::<Result<Vec<_>>>()
-            .context("loading layer artifacts")?;
+            .map_err(|e| e.context("loading layer artifacts"))?;
         let full_model = rt.load_hlo_text(&dir.join(&manifest.model_hlo))?;
         Ok(PimNetExecutor { manifest, layers, full_model })
     }

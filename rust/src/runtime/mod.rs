@@ -4,13 +4,20 @@
 //! here — the interchange is HLO text (see /opt/xla-example/README.md for
 //! why text, not serialized protos).
 
+// The PJRT client/executor pair needs the `xla` runtime; everything else
+// (manifest/dataset parsing, artifact discovery) is hermetic and stays in
+// the default build so the coordinator's simulated path can reuse it.
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod dataset;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::{LoadedModule, Runtime, Tensor};
 pub use dataset::DigitsDataset;
+#[cfg(feature = "pjrt")]
 pub use executor::PimNetExecutor;
 pub use manifest::{ArtifactManifest, LayerMeta};
 

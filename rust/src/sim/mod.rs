@@ -1,8 +1,12 @@
 //! The system-level PIM-DRAM simulator (DESIGN.md S11): maps a network,
-//! prices every bank's compute/transfer phases, and produces the pipeline
-//! report plus the GPU comparison the paper's Fig 16/17 are built from.
+//! lowers it onto the channel × rank device grid (`crate::plan`), prices
+//! every bank's compute/transfer phases per device, and aggregates the
+//! replica pipelines into the report the paper's Fig 16/17 and the
+//! scale-out benches are built from.
 
 pub mod engine;
 pub mod trace;
 
-pub use engine::{simulate, LayerSim, SimConfig, SimResult};
+pub use engine::{
+    price_layers, simulate, DeviceSim, LayerSim, ScaleOutReport, SimConfig, SimResult,
+};

@@ -1,0 +1,130 @@
+//! Coordinator end-to-end over *simulated* devices (no artifacts, no
+//! PJRT): a pool with one worker per plan replica serves concurrent
+//! batched traffic — the acceptance path for multi-device serving.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pim_dram::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
+use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::workloads::nets::pimnet;
+
+fn start_pool(devices: usize, policy: Policy) -> (MultiDeviceServer, usize) {
+    let net = pimnet();
+    let r = simulate(&net, &SimConfig::conservative(8)).unwrap();
+    assert!(r.replicas() >= 2, "plan must justify a multi-device pool");
+    let backend = SimBackend::from_sim(&r, &net, 8);
+    let elems = backend.image_elems();
+    let server = MultiDeviceServer::start(
+        PoolConfig { devices, policy, batch_window: Duration::from_millis(5) },
+        move |_| Ok(backend.clone()),
+    )
+    .unwrap();
+    (server, elems)
+}
+
+fn image(seed: usize, elems: usize) -> Vec<i32> {
+    (0..elems).map(|i| ((seed * 37 + i * 13) % 256) as i32).collect()
+}
+
+#[test]
+fn two_devices_serve_concurrent_clients() {
+    let (server, elems) = start_pool(2, Policy::RoundRobin);
+    let server = Arc::new(server);
+    let n = 32usize;
+
+    let results: Vec<(usize, usize)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let server = Arc::clone(&server);
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                for i in (t..n).step_by(4) {
+                    let resp = server.classify(image(i, elems)).unwrap();
+                    assert_eq!(resp.logits.len(), 10);
+                    assert!(resp.latency > Duration::ZERO);
+                    out.push((i, resp.class));
+                }
+                out
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(results.len(), n);
+
+    let m = server.metrics();
+    assert_eq!(m.requests, n as u64);
+    assert!(m.batches >= 1);
+    assert!(m.latency_mean_us > 0.0);
+    // Both devices took traffic, and round-robin splits it evenly.
+    assert_eq!(m.per_device.len(), 2);
+    assert_eq!(m.per_device[0], n as u64 / 2);
+    assert_eq!(m.per_device[1], n as u64 / 2);
+    assert_eq!(m.per_device.iter().sum::<u64>(), n as u64);
+
+    Arc::try_unwrap(server).ok().expect("all clients done").shutdown();
+}
+
+#[test]
+fn devices_classify_identically() {
+    // The same image must classify the same regardless of which device
+    // serves it — replicas are interchangeable.
+    let (server, elems) = start_pool(3, Policy::RoundRobin);
+    let img = image(7, elems);
+    let mut classes = Vec::new();
+    let mut devices_seen = Vec::new();
+    for _ in 0..6 {
+        let resp = server.classify(img.clone()).unwrap();
+        classes.push(resp.class);
+        devices_seen.push(resp.device);
+    }
+    devices_seen.sort_unstable();
+    devices_seen.dedup();
+    assert_eq!(devices_seen, vec![0, 1, 2]);
+    assert!(classes.windows(2).all(|w| w[0] == w[1]), "{classes:?}");
+    server.shutdown();
+}
+
+#[test]
+fn least_loaded_and_two_choices_serve() {
+    for policy in [Policy::LeastLoaded, Policy::TwoChoices] {
+        let (server, elems) = start_pool(2, policy);
+        for i in 0..12 {
+            server.classify(image(i, elems)).unwrap();
+        }
+        let m = server.metrics();
+        assert_eq!(m.requests, 12);
+        assert_eq!(m.per_device.iter().sum::<u64>(), 12);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn pool_batches_fill_under_burst() {
+    // A burst of exactly batch-size requests to one device coalesces into
+    // few executions (padding makes the count exact only when the window
+    // aligns, so assert an upper bound).
+    let (server, elems) = start_pool(1, Policy::RoundRobin);
+    let server = Arc::new(server);
+    let batch = server.batch_size();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for i in 0..batch {
+            let server = Arc::clone(&server);
+            handles.push(scope.spawn(move || {
+                server.classify(image(i, elems)).unwrap()
+            }));
+        }
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(resp.class < 10);
+        }
+    });
+    let m = server.metrics();
+    assert_eq!(m.requests, batch as u64);
+    assert!(
+        m.batches <= batch as u64,
+        "no batching happened: {} batches",
+        m.batches
+    );
+}

@@ -1,0 +1,224 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! This build environment has no crates.io access, so the workspace vendors
+//! the small slice of `anyhow` the codebase uses as a path dependency:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Swapping back to the real crate
+//! is a one-line change in `rust/Cargo.toml`; no source edits are needed.
+//!
+//! Semantics mirror upstream where it matters to callers:
+//!   * `Display` prints the outermost message only.
+//!   * `{:#}` (alternate) prints the whole chain joined by `": "`.
+//!   * `Debug` prints the message plus a `Caused by:` list (what
+//!     `unwrap()` / `fn main() -> anyhow::Result<()>` show).
+//!   * Any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically-typed error with a chain of context messages.
+pub struct Error {
+    /// Context frames, outermost (most recently attached) first.
+    frames: Vec<String>,
+    /// The originating typed error, if any.
+    root: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()], root: None }
+    }
+
+    /// Wrap a typed error (what `?` conversion uses).
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { frames: Vec::new(), root: Some(Box::new(error)) }
+    }
+
+    /// Attach an outer context message (also available through the
+    /// [`Context`] trait on `Result`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The chain of messages, outermost first (contexts, then the root).
+    fn chain_messages(&self) -> Vec<String> {
+        let mut msgs = self.frames.clone();
+        if let Some(root) = &self.root {
+            msgs.push(root.to_string());
+        }
+        msgs
+    }
+
+    /// Reference to the root typed error, if this error wraps one.
+    pub fn root_cause(&self) -> Option<&(dyn StdError + Send + Sync + 'static)> {
+        self.root.as_deref()
+    }
+
+    /// Attempt to downcast the root error to a concrete type.
+    pub fn downcast_ref<E: StdError + Send + Sync + 'static>(&self) -> Option<&E> {
+        self.root.as_deref().and_then(|e| e.downcast_ref::<E>())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_messages();
+        if f.alternate() {
+            write!(f, "{}", msgs.join(": "))
+        } else {
+            write!(f, "{}", msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_messages();
+        write!(f, "{}", msgs.first().map(String::as_str).unwrap_or(""))?;
+        if msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option` (upstream spells this `Context<T, E>`; the extra parameter
+/// is not needed for method-call resolution).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_formats() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("key absent").unwrap_err();
+        assert_eq!(e.to_string(), "key absent");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: usize) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(f(11).unwrap_err().to_string(), "x too big: 11");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+        let from_string = anyhow!(String::from("owned message"));
+        assert_eq!(from_string.to_string(), "owned message");
+    }
+
+    #[test]
+    fn downcast_reaches_root() {
+        let e = Error::new(io_err()).context("outer");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.root_cause().is_some());
+    }
+}
