@@ -6,33 +6,49 @@
 //!
 //! Shape targets: PIM wins on every network; speedup is highest at P1 and
 //! decreases with the folding factor; peak ≈ O(10×) (paper: up to 19.5×).
+//!
+//! Sweep machinery (DESIGN.md §8): networks run on all cores via
+//! `par_sweep`, and each network's P1..P4 points share one incremental
+//! `SimSession` so only the lowering/aggregation re-runs per point.
 
-use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::gpu::GpuModel;
-use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::sim::{simulate, SimConfig, SimSession};
 use pim_dram::util::table::{Align, Table};
 use pim_dram::workloads::nets::all_networks;
 
 fn main() {
     banner("Fig 16", "PIM-DRAM speedup over ideal TITAN Xp (P1..P4)");
     let gpu = GpuModel::titan_xp();
+    let nets = all_networks();
     // The paper's P-vectors: P1=(1,..), P2=(2,..), P3=(4,..), P4=(8,..).
     let p_factors = [1usize, 2, 4, 8];
 
     for bits in [8usize, 4] {
+        // One parallel worker per network; P-points sweep incrementally.
+        let rows = par_sweep(nets.len(), |i| {
+            let net = &nets[i];
+            let mut session = SimSession::new(net);
+            let gpu_ms = gpu.network_time_s(net, 4) * 1e3;
+            let speedups: Vec<f64> = p_factors
+                .iter()
+                .map(|&k| {
+                    let cfg = SimConfig::paper_favorable(bits).with_ks(vec![k]);
+                    session.report(&cfg).expect("simulate").speedup_vs(&gpu, net, 4)
+                })
+                .collect();
+            (net.name.clone(), gpu_ms, speedups)
+        });
+
         let mut t = Table::new(&["network", "GPU ms", "P1", "P2", "P3", "P4"])
             .aligns(&[
                 Align::Left, Align::Right, Align::Right, Align::Right,
                 Align::Right, Align::Right,
             ]);
         let mut peak: f64 = 0.0;
-        for net in all_networks() {
-            let gpu_ms = gpu.network_time_s(&net, 4) * 1e3;
-            let mut row = vec![net.name.clone(), format!("{gpu_ms:.3}")];
-            for &k in &p_factors {
-                let cfg = SimConfig::paper_favorable(bits).with_ks(vec![k]);
-                let r = simulate(&net, &cfg).expect("simulate");
-                let s = r.speedup_vs(&gpu, &net, 4);
+        for (name, gpu_ms, speedups) in &rows {
+            let mut row = vec![name.clone(), format!("{gpu_ms:.3}")];
+            for &s in speedups {
                 peak = peak.max(s);
                 row.push(format!("{s:.2}x"));
             }
@@ -43,24 +59,27 @@ fn main() {
         if bits == 4 {
             assert!(peak > 10.0, "4-bit peak should reach the paper's order");
         }
-    }
 
-    // Shape assertions at 8-bit: every network wins, P1 ≥ P4.
-    for net in all_networks() {
-        let s1 = simulate(&net, &SimConfig::paper_favorable(8))
-            .unwrap()
-            .speedup_vs(&gpu, &net, 4);
-        let s4 = simulate(&net, &SimConfig::paper_favorable(8).with_ks(vec![8]))
-            .unwrap()
-            .speedup_vs(&gpu, &net, 4);
-        assert!(s1 > 1.0, "{}: PIM must beat the ideal GPU (got {s1:.2})", net.name);
-        assert!(s1 >= s4, "{}: speedup must not grow with folding", net.name);
+        // Shape assertions at 8-bit, straight from the sweep rows:
+        // every network wins, P1 ≥ P4.
+        if bits == 8 {
+            for (name, _, speedups) in &rows {
+                let (s1, s4) = (speedups[0], speedups[3]);
+                assert!(s1 > 1.0, "{name}: PIM must beat the ideal GPU (got {s1:.2})");
+                assert!(s1 >= s4, "{name}: speedup must not grow with folding");
+            }
+            println!("shape checks passed: all networks win; P1 >= P4.\n");
+        }
     }
-    println!("shape checks passed: all networks win; P1 >= P4.");
 
     let mut b = Bencher::from_env();
     let vgg = pim_dram::workloads::nets::vgg16();
     b.bench("simulate(vgg16, paper_favorable 8b)", || {
         simulate(&vgg, &SimConfig::paper_favorable(8)).unwrap().total_aaps
+    });
+    let cfg = SimConfig::paper_favorable(8);
+    let mut session = SimSession::new(&vgg);
+    b.bench("session.report(vgg16, paper_favorable 8b)", || {
+        session.report(&cfg).unwrap().total_aaps
     });
 }

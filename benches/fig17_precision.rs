@@ -3,34 +3,43 @@
 //! The multiply cost is the paper's closed form (3n² + 4(n-1)³ + 4(n-1)
 //! AAPs for n > 2), so per-image time should grow ≈ cubically in n. The
 //! bench prints per-network steady-state time for n ∈ {2, 4, 8, 16} and
-//! checks the growth exponent.
+//! checks the growth exponent. Networks sweep in parallel (`par_sweep`);
+//! each worker prices through one incremental `SimSession`.
 
-use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::primitives::paper_mul_aaps;
-use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::sim::{simulate, SimConfig, SimSession};
 use pim_dram::util::table::{Align, Table};
 use pim_dram::workloads::nets::all_networks;
 
 fn main() {
     banner("Fig 17", "runtime vs operand bit precision");
     let bits = [2usize, 4, 8, 16];
+    let nets = all_networks();
+
+    let series: Vec<(String, Vec<f64>)> = par_sweep(nets.len(), |i| {
+        let net = &nets[i];
+        let mut session = SimSession::new(net);
+        let times: Vec<f64> = bits
+            .iter()
+            .map(|&n| {
+                let r = session.report(&SimConfig::paper_favorable(n)).unwrap();
+                r.cycle_ns / 1e6
+            })
+            .collect();
+        (net.name.clone(), times)
+    });
 
     let mut t = Table::new(&["network", "2-bit", "4-bit", "8-bit", "16-bit"])
         .aligns(&[
             Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
         ]);
-    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
-    for net in all_networks() {
-        let mut row = vec![net.name.clone()];
-        let mut times = Vec::new();
-        for &n in &bits {
-            let r = simulate(&net, &SimConfig::paper_favorable(n)).unwrap();
-            let ms = r.pipeline.cycle_ns / 1e6;
-            times.push(ms);
+    for (name, times) in &series {
+        let mut row = vec![name.clone()];
+        for ms in times {
             row.push(format!("{ms:.3} ms"));
         }
         t.row(&row);
-        series.push((net.name.clone(), times));
     }
     println!("{}", t.render());
     println!("multiply AAP counts: {:?}", bits.map(|n| paper_mul_aaps(n as u64)));
@@ -52,5 +61,10 @@ fn main() {
     let alex = pim_dram::workloads::nets::alexnet();
     b.bench("simulate(alexnet) 16-bit", || {
         simulate(&alex, &SimConfig::paper_favorable(16)).unwrap().total_aaps
+    });
+    let cfg16 = SimConfig::paper_favorable(16);
+    let mut session = SimSession::new(&alex);
+    b.bench("session.report(alexnet) 16-bit", || {
+        session.report(&cfg16).unwrap().total_aaps
     });
 }

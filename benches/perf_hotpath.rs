@@ -1,37 +1,101 @@
-//! §Perf — wall-clock benchmarks of the simulator hot paths (the L3
+//! §Perf — wall-clock benchmarks of the simulator hot paths (the
 //! optimization targets in DESIGN.md §8). These are the numbers the
-//! EXPERIMENTS.md §Perf before/after table tracks.
+//! EXPERIMENTS.md §Perf before/after table tracks, and every run writes
+//! the machine-readable `BENCH_PERF.json` at the repo root so the perf
+//! trajectory is diffable.
 //!
-//! Targets:
-//!   * `simulate()` full networks: the per-experiment unit of work — the
-//!     fig16/fig17 sweeps call it dozens of times.
+//! Headline target: a ks × grid sweep over vgg16 — the fig16/design-space
+//! call pattern — evaluated twice, once with fresh `simulate()` per point
+//! and once through one incremental `SimSession`. Full (non-FAST) runs
+//! assert the session path is ≥ 3× faster.
+//!
+//! Other targets:
+//!   * `simulate()` full networks: the per-experiment unit of work.
+//!   * `SimSession::report`: the steady-state incremental path.
 //!   * `in_dram_mul`: the functional bit-level multiply (tests + examples).
 //!   * `maj5`: the inner bit-parallel majority kernel.
 //!   * Monte Carlo sample rate (fig15 calls 400k samples).
 //!   * `BankPipeline::mvm`: the cross-validation path.
 
 use pim_dram::arch::{adder_tree::AdderTree, bank_pim::BankPipeline};
-use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::bench_harness::{banner, write_bench_json, Bencher};
 use pim_dram::circuit::{run_monte_carlo, CircuitParams};
 use pim_dram::dram::BitRow;
 use pim_dram::mapping::{map_network, MapConfig};
 use pim_dram::primitives::{mul::in_dram_mul, PimSubarray};
-use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::sim::{simulate, SimConfig, SimSession};
 use pim_dram::util::rng::Rng;
 use pim_dram::workloads::nets::{resnet18, vgg16};
 
+/// The fig16/design-space call pattern: parallelism × grid points over
+/// one network, all sharing the pricing-relevant config.
+fn sweep_configs() -> Vec<SimConfig> {
+    let mut cfgs = Vec::new();
+    for &(channels, ranks) in &[(1usize, 4usize), (2, 4), (4, 4)] {
+        for &k in &[1usize, 2, 4, 8] {
+            cfgs.push(
+                SimConfig::paper_favorable(8)
+                    .with_ks(vec![k])
+                    .with_grid(channels, ranks),
+            );
+        }
+    }
+    cfgs
+}
+
 fn main() {
     banner("Perf", "simulator hot-path wall-clock benchmarks");
+    let fast = std::env::var("PIM_BENCH_FAST").is_ok();
     let mut b = Bencher::from_env();
-
-    // Full-network simulation (the experiment unit).
     let vgg = vgg16();
     let res = resnet18();
+
+    // ---- headline: sweep-style workload, fresh vs incremental ----------
+    let cfgs = sweep_configs();
+    let fresh = b
+        .bench_items("sweep vgg16 ks×grid (fresh simulate)", cfgs.len() as f64, || {
+            let mut acc = 0u64;
+            for cfg in &cfgs {
+                acc ^= simulate(&vgg, cfg).unwrap().total_aaps;
+            }
+            acc
+        })
+        .clone();
+    let mut sweep_session = SimSession::new(&vgg);
+    let warm = b
+        .bench_items("sweep vgg16 ks×grid (SimSession)", cfgs.len() as f64, || {
+            let mut acc = 0u64;
+            for cfg in &cfgs {
+                acc ^= sweep_session.report(cfg).unwrap().total_aaps;
+            }
+            acc
+        })
+        .clone();
+    let speedup = fresh.mean.as_secs_f64() / warm.mean.as_secs_f64();
+    let (hits, misses) = sweep_session.cache_stats();
+    println!(
+        "sweep speedup: {speedup:.1}x (session cache: {hits} hits / {misses} \
+         misses over the timed runs)"
+    );
+    if !fast {
+        assert!(
+            speedup >= 3.0,
+            "incremental sweep must be ≥ 3x faster than fresh simulate() \
+             (got {speedup:.2}x)"
+        );
+    }
+
+    // ---- full-network simulation (the experiment unit) ------------------
     b.bench("simulate(vgg16, favorable)", || {
         simulate(&vgg, &SimConfig::paper_favorable(8)).unwrap().total_aaps
     });
     b.bench("simulate(resnet18, conservative)", || {
         simulate(&res, &SimConfig::conservative(8)).unwrap().total_aaps
+    });
+    let res_cfg = SimConfig::conservative(8);
+    let mut res_session = SimSession::new(&res);
+    b.bench("session.report(resnet18, conservative)", || {
+        res_session.report(&res_cfg).unwrap().total_aaps
     });
     b.bench("map_network(vgg16)", || {
         map_network(
@@ -79,5 +143,18 @@ fn main() {
         bp.mvm(&x, &w).len()
     });
 
-    println!("\n(record these in EXPERIMENTS.md §Perf)");
+    // ---- machine-readable perf record -----------------------------------
+    // Default lands at the repo root regardless of `cargo bench`'s cwd.
+    let json_path = std::env::var("PIM_BENCH_JSON").unwrap_or_else(|_| {
+        format!("{}/../BENCH_PERF.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    write_bench_json(
+        &json_path,
+        "regenerate with: cargo bench --bench perf_hotpath \
+         (PIM_BENCH_FAST=1 for smoke runs)",
+        b.results(),
+        &[("sweep_speedup_x", speedup)],
+    )
+    .expect("writing BENCH_PERF.json");
+    println!("\nwrote {json_path}  (record the table in EXPERIMENTS.md §Perf)");
 }

@@ -4,23 +4,31 @@
 //!
 //! Sweeps channels 1..8 for every network under the three shard policies
 //! and reports replicas, aggregate throughput, per-image latency and the
-//! priced inter-channel hop cost. Shape targets checked:
+//! priced inter-channel hop cost. Networks sweep on all cores
+//! (`par_sweep`); each network's points run through one incremental
+//! `SimSession` — the grid/shard axes are exactly what the session's
+//! layer cache is invariant to, so only the lowering re-runs per point.
+//!
+//! Shape targets checked:
 //!   * Replicate: aggregate throughput scales exactly linearly with the
 //!     replica count; latency does not move.
 //!   * LayerSplit: latency strictly grows (hops are priced, not ignored),
 //!     while the steady-state cycle never degrades (per-channel buses).
 
-use pim_dram::bench_harness::{banner, Bencher};
+use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::plan::ShardPolicy;
-use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::sim::{simulate, SimConfig, SimSession};
 use pim_dram::util::table::{Align, Table};
 use pim_dram::workloads::nets::all_networks;
 
 fn main() {
     banner("Scale-out S1", "channels × ranks sharding sweep (conservative)");
+    let nets = all_networks();
 
-    for net in all_networks() {
-        let base = simulate(&net, &SimConfig::conservative(8)).unwrap();
+    let reports = par_sweep(nets.len(), |ni| {
+        let net = &nets[ni];
+        let mut session = SimSession::new(net);
+        let base = session.report(&SimConfig::conservative(8)).unwrap();
         let mut t = Table::new(&[
             "channels", "policy", "replicas", "devices", "img/s", "ms/img",
             "hops us/img",
@@ -34,20 +42,20 @@ fn main() {
         for channels in [1usize, 2, 4, 8] {
             // Replicate
             let cfg = SimConfig::conservative(8).with_grid(channels, 4);
-            let r = simulate(&net, &cfg).unwrap();
+            let r = session.report(&cfg).unwrap();
             assert!(
                 r.throughput_ips() >= prev_ips,
                 "{}: replicate throughput must grow with channels",
                 net.name
             );
             assert!(
-                (r.latency_ns() - base.latency_ns()).abs() < 1e-6 * base.latency_ns(),
+                (r.latency_ns - base.latency_ns).abs() < 1e-6 * base.latency_ns,
                 "{}: replication must not move latency",
                 net.name
             );
             let per_replica = r.replica_throughput_ips();
             assert!(
-                (r.throughput_ips() - r.replicas() as f64 * per_replica).abs()
+                (r.throughput_ips() - r.replicas as f64 * per_replica).abs()
                     < 1e-9 * r.throughput_ips(),
                 "{}: aggregate must be replicas × per-replica",
                 net.name
@@ -56,10 +64,10 @@ fn main() {
             t.row(&[
                 channels.to_string(),
                 "replicate".into(),
-                r.replicas().to_string(),
-                r.scale_out.devices_total().to_string(),
+                r.replicas.to_string(),
+                r.devices_total().to_string(),
                 format!("{:.1}", r.throughput_ips()),
-                format!("{:.3}", r.latency_ns() / 1e6),
+                format!("{:.3}", r.latency_ns / 1e6),
                 "-".into(),
             ]);
 
@@ -68,45 +76,53 @@ fn main() {
                 let cfg = SimConfig::conservative(8)
                     .with_grid(channels, 4)
                     .with_shard(ShardPolicy::LayerSplit);
-                let r = simulate(&net, &cfg).unwrap();
+                let r = session.report(&cfg).unwrap();
                 assert!(
-                    r.latency_ns() > base.latency_ns(),
+                    r.latency_ns > base.latency_ns,
                     "{}: layer-split must pay inter-channel hops",
                     net.name
                 );
                 assert!(
-                    r.pipeline.cycle_ns <= base.pipeline.cycle_ns * 1.001,
+                    r.cycle_ns <= base.cycle_ns * 1.001,
                     "{}: per-channel buses must not slow the cycle",
                     net.name
                 );
                 t.row(&[
                     channels.to_string(),
                     "layersplit".into(),
-                    r.replicas().to_string(),
-                    r.scale_out.devices_total().to_string(),
+                    r.replicas.to_string(),
+                    r.devices_total().to_string(),
                     format!("{:.1}", r.throughput_ips()),
-                    format!("{:.3}", r.latency_ns() / 1e6),
-                    format!("{:.1}", r.scale_out.hop_ns_total / 1e3),
+                    format!("{:.3}", r.latency_ns / 1e6),
+                    format!("{:.1}", r.hop_ns_total / 1e3),
                 ]);
 
                 // Hybrid: half the channels replicate, each half splits.
                 let cfg = SimConfig::conservative(8)
                     .with_grid(channels, 4)
                     .with_shard(ShardPolicy::Hybrid { replicas: channels / 2 });
-                let r = simulate(&net, &cfg).unwrap();
-                assert_eq!(r.replicas(), channels / 2);
+                let r = session.report(&cfg).unwrap();
+                assert_eq!(r.replicas, channels / 2);
                 t.row(&[
                     channels.to_string(),
                     format!("hybrid:{}", channels / 2),
-                    r.replicas().to_string(),
-                    r.scale_out.devices_total().to_string(),
+                    r.replicas.to_string(),
+                    r.devices_total().to_string(),
                     format!("{:.1}", r.throughput_ips()),
-                    format!("{:.3}", r.latency_ns() / 1e6),
-                    format!("{:.1}", r.scale_out.hop_ns_total / 1e3),
+                    format!("{:.3}", r.latency_ns / 1e6),
+                    format!("{:.1}", r.hop_ns_total / 1e3),
                 ]);
             }
         }
-        println!("network: {}\n{}", net.name, t.render());
+        let (hits, misses) = session.cache_stats();
+        format!(
+            "network: {}\n{}(session cache: {hits} hits / {misses} misses)\n",
+            net.name,
+            t.render()
+        )
+    });
+    for report in reports {
+        println!("{report}");
     }
     println!(
         "replication scales throughput linearly at flat latency; layer-split \
@@ -121,5 +137,9 @@ fn main() {
         .with_shard(ShardPolicy::Hybrid { replicas: 4 });
     b.bench("simulate(resnet18, hybrid:4 over 8ch)", || {
         simulate(&net, &cfg).unwrap().scale_out.devices_total()
+    });
+    let mut session = SimSession::new(&net);
+    b.bench("session.report(resnet18, hybrid:4 over 8ch)", || {
+        session.report(&cfg).unwrap().devices_total()
     });
 }

@@ -2,10 +2,14 @@
 //! (parallelism k, operand precision, subarray capacity, adder width) and
 //! print the throughput/footprint frontier for one network.
 //!
+//! The whole exploration runs through one incremental `SimSession`
+//! (DESIGN.md §8): per sweep point only the lowering + aggregation
+//! re-runs; per-layer mapping/pricing is cached by config fingerprint.
+//!
 //! Run: `cargo run --release --example design_space [network]`
 
 use pim_dram::gpu::GpuModel;
-use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::sim::{SimConfig, SimSession};
 use pim_dram::util::si;
 use pim_dram::util::table::{Align, Table};
 use pim_dram::workloads::nets;
@@ -13,6 +17,7 @@ use pim_dram::workloads::nets;
 fn main() -> anyhow::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "alexnet".into());
     let net = nets::by_name(&name)?;
+    let mut session = SimSession::new(&net);
     let gpu = GpuModel::titan_xp();
     let gpu_ms = gpu.network_time_s(&net, 4) * 1e3;
     println!(
@@ -33,22 +38,20 @@ fn main() -> anyhow::Result<()> {
     for bits in [2usize, 4, 8, 16] {
         for k in [1usize, 2, 4, 8] {
             let cfg = SimConfig::paper_favorable(bits).with_ks(vec![k]);
-            let r = match simulate(&net, &cfg) {
+            let r = match session.report(&cfg) {
                 Ok(r) => r,
                 Err(e) => {
                     eprintln!("bits={bits} k={k}: {e}");
                     continue;
                 }
             };
-            let resident =
-                r.layers.iter().all(|l| l.mapping.fully_resident());
             t.row(&[
                 bits.to_string(),
                 k.to_string(),
-                format!("{:.3}", r.pipeline.cycle_ns / 1e6),
+                format!("{:.3}", r.cycle_ns / 1e6),
                 format!("{:.0}", r.replica_throughput_ips()),
                 format!("{:.2}x", r.speedup_vs(&gpu, &net, 4)),
-                resident.to_string(),
+                r.fully_resident.to_string(),
             ]);
         }
     }
@@ -67,11 +70,11 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = SimConfig::paper_favorable(8);
         cfg.geometry.subarrays_per_bank = subs;
         cfg.tree_per_subarray = tps;
-        let r = simulate(&net, &cfg)?;
+        let r = session.report(&cfg)?;
         t2.row(&[
             subs.to_string(),
             tps.to_string(),
-            format!("{:.3}", r.pipeline.cycle_ns / 1e6),
+            format!("{:.3}", r.cycle_ns / 1e6),
             format!("{:.2}x", r.speedup_vs(&gpu, &net, 4)),
         ]);
     }
@@ -82,6 +85,12 @@ fn main() -> anyhow::Result<()> {
     println!(
         "(the last rows show why the paper's headline needs its implicit\n\
          capacity assumption — see DESIGN.md §7 and EXPERIMENTS.md)"
+    );
+    let (hits, misses) = session.cache_stats();
+    println!(
+        "session cache over the exploration: {hits} hits / {misses} misses \
+         ({} artifacts)",
+        session.cached_layers()
     );
     Ok(())
 }

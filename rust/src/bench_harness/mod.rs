@@ -154,6 +154,92 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Run `points` independent sweep points across all cores with scoped
+/// threads, preserving index order in the result. Work is handed out
+/// dynamically through an atomic cursor, so uneven point costs still fill
+/// every core; a panic inside `f` (a failed shape assertion) propagates
+/// when the scope joins. One point or one core degrades to the plain
+/// sequential loop.
+pub fn par_sweep<T, F>(points: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(points);
+    if workers <= 1 {
+        return (0..points).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<T>>> =
+        (0..points).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= points {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("sweep point not computed"))
+        .collect()
+}
+
+/// Write the machine-readable per-target perf report (`BENCH_PERF.json`):
+/// mean/median wall-clock ns per op for every measurement plus derived
+/// scalars (e.g. the fresh-vs-session sweep speedup). The schema is
+/// stable so CI and trend tooling can diff runs.
+pub fn write_bench_json(
+    path: &str,
+    note: &str,
+    results: &[Measurement],
+    derived: &[(&str, f64)],
+) -> std::io::Result<()> {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"pim-dram/bench-perf/v1\",\n");
+    out.push_str(&format!(
+        "  \"fast_mode\": {},\n",
+        std::env::var("PIM_BENCH_FAST").is_ok()
+    ));
+    out.push_str(&format!("  \"note\": \"{}\",\n", esc(note)));
+    out.push_str("  \"targets\": {\n");
+    for (i, m) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {{\"ns_per_op\": {:.1}, \"median_ns\": {:.1}, \
+             \"std_ns\": {:.1}, \"iters\": {}}}{}\n",
+            esc(&m.name),
+            m.mean.as_secs_f64() * 1e9,
+            m.median.as_secs_f64() * 1e9,
+            m.std.as_secs_f64() * 1e9,
+            m.iters,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  },\n  \"derived\": {\n");
+    for (i, (k, v)) in derived.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {:.3}{}\n",
+            esc(k),
+            v,
+            if i + 1 == derived.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  }\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Standard bench preamble: prints the figure/table banner.
 pub fn banner(id: &str, caption: &str) {
     println!("\n=== {} — {} ===", id, caption);
@@ -210,5 +296,51 @@ mod tests {
             acc
         }).clone();
         assert!(m.min <= m.mean && m.mean <= m.max);
+    }
+
+    #[test]
+    fn par_sweep_preserves_order() {
+        let out = par_sweep(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_sweep_degenerate_sizes() {
+        assert!(par_sweep(0, |i| i).is_empty());
+        assert_eq!(par_sweep(1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_parser() {
+        let m = Measurement {
+            name: "simulate(vgg16, \"quoted\")".into(),
+            iters: 42,
+            mean: Duration::from_nanos(1500),
+            median: Duration::from_nanos(1400),
+            std: Duration::from_nanos(100),
+            min: Duration::from_nanos(1300),
+            max: Duration::from_nanos(1800),
+            items_per_iter: None,
+        };
+        let path = std::env::temp_dir().join("pim_dram_bench_perf_test.json");
+        let path = path.to_str().unwrap();
+        write_bench_json(path, "unit test", &[m], &[("sweep_speedup_x", 4.2)])
+            .unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.req_str("schema").unwrap(), "pim-dram/bench-perf/v1");
+        let target = doc
+            .get("targets")
+            .unwrap()
+            .get("simulate(vgg16, \"quoted\")")
+            .unwrap();
+        assert_eq!(target.req_f64("ns_per_op").unwrap(), 1500.0);
+        assert_eq!(target.req_i64("iters").unwrap(), 42);
+        assert!(
+            (doc.get("derived").unwrap().req_f64("sweep_speedup_x").unwrap() - 4.2)
+                .abs()
+                < 1e-9
+        );
+        let _ = std::fs::remove_file(path);
     }
 }

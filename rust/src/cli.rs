@@ -11,7 +11,7 @@ use crate::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
 use crate::gpu::{roofline::roofline_points, GpuModel};
 use crate::mapping::{map_network, MapConfig};
 use crate::plan::ShardPolicy;
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate, SimConfig, SimSession};
 use crate::util::rng::Rng;
 use crate::util::si;
 use crate::util::table::{Align, Table};
@@ -285,9 +285,11 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             plan.overflow_layers
         );
     }
-    // Simulate the plan vs the naive k=1 vector.
-    let naive = simulate(&net, &cfg)?;
-    let planned = simulate(&net, &cfg.clone().with_ks(plan.ks.clone()))?;
+    // Simulate the plan vs the naive k=1 vector — one incremental session,
+    // so layers whose planned k stays 1 are priced once, not twice.
+    let mut session = SimSession::new(&net);
+    let naive = session.simulate_full(&cfg)?;
+    let planned = session.simulate_full(&cfg.clone().with_ks(plan.ks.clone()))?;
     println!(
         "naive k=1: {:.3} ms/img   planned: {:.3} ms/img ({:+.1}%)",
         naive.pipeline.cycle_ns / 1e6,
@@ -399,7 +401,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     let net = nets::by_name(&args.flag("network", "pimnet"))?;
     let cfg = sim_config_from(args)?;
-    let r = simulate(&net, &cfg)?;
+    // One incremental session prices the plan summary *and* the pool
+    // backend; the second derivation is a per-layer cache hit.
+    let mut session = SimSession::new(&net);
+    let r = session.simulate_full(&cfg)?;
     let devices = args.flag_usize("devices", r.replicas())?.max(1);
     let policy = policy_from(args)?;
     let images = args.flag_usize("images", 64)?;
@@ -410,7 +415,7 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
          device(s), policy {:?}, batch {}",
         net.name, r.scale_out.policy, r.replicas(), devices, policy, batch
     );
-    let backend = SimBackend::from_sim(&r, &net, batch);
+    let backend = SimBackend::from_session(&mut session, &cfg, batch)?;
     let server = MultiDeviceServer::start(
         PoolConfig {
             devices,

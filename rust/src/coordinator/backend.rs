@@ -16,7 +16,7 @@
 
 use anyhow::Result;
 
-use crate::sim::SimResult;
+use crate::sim::{SimConfig, SimResult, SimSession};
 use crate::workloads::Network;
 
 /// One device's executable state, driven by a single pool worker.
@@ -64,6 +64,22 @@ impl SimBackend {
         let mut b = SimBackend::new(batch, net.layers[0].in_elems(), 10);
         b.service_ns_per_image = result.pipeline.cycle_ns;
         b
+    }
+
+    /// Build a device priced through an incremental [`SimSession`]: the
+    /// serving path reuses the session's cached per-layer pricing instead
+    /// of re-running `simulate()` from scratch, and repricing a pool after
+    /// a `ks`/shard/grid change is a cache hit away.
+    pub fn from_session(
+        session: &mut SimSession<'_>,
+        cfg: &SimConfig,
+        batch: usize,
+    ) -> Result<Self> {
+        let report = session.report(cfg)?;
+        let net = session.network();
+        let mut b = SimBackend::new(batch, net.layers[0].in_elems(), 10);
+        b.service_ns_per_image = report.cycle_ns;
+        Ok(b)
     }
 
     /// Replay the device's modeled service time in wall-clock (scaled).
@@ -160,5 +176,22 @@ mod tests {
         assert_eq!(b.image_elems(), net.layers[0].in_elems());
         assert!(b.service_ns() > 0.0);
         assert_eq!(b.batch_size(), 8);
+    }
+
+    #[test]
+    fn from_session_matches_from_sim() {
+        use crate::sim::{simulate, SimConfig, SimSession};
+        use crate::workloads::nets::pimnet;
+        let net = pimnet();
+        let cfg = SimConfig::conservative(8);
+        let fresh = SimBackend::from_sim(&simulate(&net, &cfg).unwrap(), &net, 4);
+        let mut session = SimSession::new(&net);
+        let cached = SimBackend::from_session(&mut session, &cfg, 4).unwrap();
+        assert_eq!(cached.service_ns().to_bits(), fresh.service_ns().to_bits());
+        assert_eq!(cached.image_elems(), fresh.image_elems());
+        // Repricing the same pool is a pure cache hit.
+        SimBackend::from_session(&mut session, &cfg, 4).unwrap();
+        let (hits, _) = session.cache_stats();
+        assert!(hits >= net.layers.len() as u64);
     }
 }

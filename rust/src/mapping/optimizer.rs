@@ -37,12 +37,21 @@ pub fn min_resident_k(
     geometry: &DramGeometry,
     n_bits: usize,
 ) -> Option<usize> {
+    let mut probe = MapConfig::uniform(geometry.clone(), n_bits, 1);
+    min_resident_k_with(&mut probe, layer)
+}
+
+/// [`min_resident_k`] over a caller-owned probe config: the binary search
+/// only rewrites `probe.ks[0]` between probes instead of re-cloning the
+/// geometry for every `fits(k)` evaluation — [`plan_ks`] shares one probe
+/// across all layers and probes.
+fn min_resident_k_with(probe: &mut MapConfig, layer: &LayerDesc) -> Option<usize> {
     let outer = outer_count(layer);
-    let max_pairs = geometry.pairs_per_column(n_bits).max(1);
+    let max_pairs = probe.geometry.pairs_per_column(probe.n_bits).max(1);
     // fits(k) is monotone in k → binary search the boundary.
-    let fits = |k: usize| -> bool {
-        let cfg = MapConfig::uniform(geometry.clone(), n_bits, k);
-        match map_layer(0, 0, layer, &cfg) {
+    let mut fits = |k: usize| -> bool {
+        probe.ks[0] = k;
+        match map_layer(0, 0, layer, probe) {
             Ok(m) => m.fully_resident(),
             Err(_) => false,
         }
@@ -68,9 +77,9 @@ pub fn min_resident_k(
 
 /// Rough per-layer cost proxy used for balancing: sequential rounds ×
 /// multiply cost dominates, so rounds(k) = k × waves(k) works.
-fn rounds_at(layer: &LayerDesc, geometry: &DramGeometry, n_bits: usize, k: usize) -> usize {
-    let cfg = MapConfig::uniform(geometry.clone(), n_bits, k);
-    map_layer(0, 0, layer, &cfg).map(|m| m.rounds()).unwrap_or(usize::MAX)
+fn rounds_at(probe: &mut MapConfig, layer: &LayerDesc, k: usize) -> usize {
+    probe.ks[0] = k;
+    map_layer(0, 0, layer, probe).map(|m| m.rounds()).unwrap_or(usize::MAX)
 }
 
 /// Plan the parallelism vector for a network.
@@ -80,10 +89,12 @@ pub fn plan_ks(
     n_bits: usize,
     objective: Objective,
 ) -> KPlan {
+    // One probe config for the whole plan; every probe varies only k.
+    let mut probe = MapConfig::uniform(geometry.clone(), n_bits, 1);
     let mut ks = Vec::with_capacity(net.layers.len());
     let mut overflow = Vec::new();
     for layer in &net.layers {
-        match min_resident_k(layer, geometry, n_bits) {
+        match min_resident_k_with(&mut probe, layer) {
             Some(k) => ks.push(k),
             None => {
                 overflow.push(layer.name.clone());
@@ -100,7 +111,7 @@ pub fn plan_ks(
             .layers
             .iter()
             .zip(&ks)
-            .map(|(l, &k)| rounds_at(l, geometry, n_bits, k))
+            .map(|(l, &k)| rounds_at(&mut probe, l, k))
             .max()
             .unwrap_or(1);
         for (i, layer) in net.layers.iter().enumerate() {
@@ -108,7 +119,7 @@ pub fn plan_ks(
             let mut k = ks[i];
             while k < outer {
                 let next = (k * 2).min(outer);
-                if rounds_at(layer, geometry, n_bits, next) <= bottleneck_rounds {
+                if rounds_at(&mut probe, layer, next) <= bottleneck_rounds {
                     k = next;
                 } else {
                     break;
@@ -178,10 +189,11 @@ mod tests {
         let base = plan_ks(&net, &g, 8, Objective::MinResidentK);
         let bal = plan_ks(&net, &g, 8, Objective::Balanced);
         let rounds = |ks: &[usize]| -> usize {
+            let mut probe = MapConfig::uniform(g.clone(), 8, 1);
             net.layers
                 .iter()
                 .zip(ks)
-                .map(|(l, &k)| rounds_at(l, &g, 8, k))
+                .map(|(l, &k)| rounds_at(&mut probe, l, k))
                 .max()
                 .unwrap()
         };

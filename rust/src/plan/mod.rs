@@ -152,6 +152,35 @@ impl ExecutionPlan {
     }
 }
 
+/// The grid geometry of a plan — devices, chains, replica count — without
+/// the per-layer mapping it will carry. This is the part of lowering that
+/// changes when the grid or shard policy changes, and it is cheap: the
+/// incremental pricing session ([`crate::sim::SimSession`]) recomputes it
+/// per call while reusing cached per-layer mapping/pricing.
+#[derive(Debug, Clone)]
+pub struct PlanLayout {
+    pub devices: Vec<PimDevice>,
+    /// Independent full-network pipelines in the layout.
+    pub replicas: usize,
+    /// Device ids of each replica's chain, pipeline order.
+    pub chains: Vec<Vec<usize>>,
+}
+
+impl PlanLayout {
+    /// Devices forming one replica's pipeline, in order.
+    pub fn chain(&self, replica: usize) -> &[usize] {
+        &self.chains[replica]
+    }
+
+    /// Device id hosting `layer` within `replica`'s chain.
+    pub fn device_hosting(&self, replica: usize, layer: usize) -> Option<usize> {
+        self.chains[replica]
+            .iter()
+            .copied()
+            .find(|&id| self.devices[id].shard.layers.contains(&layer))
+    }
+}
+
 /// Plan-lowering failure modes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PlanError {
@@ -213,9 +242,29 @@ pub fn lower(
     policy: ShardPolicy,
 ) -> Result<ExecutionPlan, PlanError> {
     let mapping = map_network(net, cfg)?;
-    let g = cfg.geometry.clone();
-    let banks_needed = mapping.total_banks;
+    let weights: Vec<u64> = mapping.layers.iter().map(|m| m.rounds() as u64).collect();
+    let l = layout(net, &weights, mapping.total_banks, &cfg.geometry, policy)?;
+    Ok(ExecutionPlan {
+        net_name: net.name.clone(),
+        policy,
+        geometry: cfg.geometry.clone(),
+        mapping,
+        devices: l.devices,
+        replicas: l.replicas,
+        chains: l.chains,
+    })
+}
 
+/// Compute the grid layout under `policy` from the per-layer sequential
+/// round counts (`layer_rounds`, the split-balancing weights) and the bank
+/// demand — everything lowering needs short of the mapping itself.
+pub fn layout(
+    net: &Network,
+    layer_rounds: &[u64],
+    banks_needed: usize,
+    g: &DramGeometry,
+    policy: ShardPolicy,
+) -> Result<PlanLayout, PlanError> {
     let mut devices: Vec<PimDevice> = Vec::new();
     let mut chains: Vec<Vec<usize>> = Vec::new();
 
@@ -248,7 +297,8 @@ pub fn lower(
             }
         }
         ShardPolicy::LayerSplit => {
-            let chain = split_group(net, &mapping, &g, 0..g.channels, 0, &mut devices)?;
+            let chain =
+                split_group(net, layer_rounds, g, 0..g.channels, 0, &mut devices)?;
             chains.push(chain);
         }
         ShardPolicy::Hybrid { replicas } => {
@@ -259,22 +309,14 @@ pub fn lower(
             let group = g.channels / replicas;
             for r in 0..replicas {
                 let chs = r * group..(r + 1) * group;
-                let chain = split_group(net, &mapping, &g, chs, r, &mut devices)?;
+                let chain = split_group(net, layer_rounds, g, chs, r, &mut devices)?;
                 chains.push(chain);
             }
         }
     }
 
     let replicas = chains.len();
-    Ok(ExecutionPlan {
-        net_name: net.name.clone(),
-        policy,
-        geometry: g,
-        mapping,
-        devices,
-        replicas,
-        chains,
-    })
+    Ok(PlanLayout { devices, replicas, chains })
 }
 
 /// Split one pipeline across `channels`, one contiguous segment per
@@ -282,14 +324,13 @@ pub fn lower(
 /// proxy the k-optimizer uses). Returns the chain of new device ids.
 fn split_group(
     net: &Network,
-    mapping: &NetworkMapping,
+    weights: &[u64],
     g: &DramGeometry,
     channels: Range<usize>,
     replica: usize,
     devices: &mut Vec<PimDevice>,
 ) -> Result<Vec<usize>, PlanError> {
-    let weights: Vec<u64> = mapping.layers.iter().map(|m| m.rounds() as u64).collect();
-    let segments = split_by_weight(&weights, channels.len());
+    let segments = split_by_weight(weights, channels.len());
     let budget = g.ranks_per_channel * g.banks_per_rank;
 
     // A single-channel group degenerates to a whole-network device and

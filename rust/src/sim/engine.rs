@@ -40,7 +40,7 @@ use crate::mapping::{LayerMapping, MapConfig, NetworkMapping};
 use crate::plan::{self, ExecutionPlan, PlanError, ShardPolicy};
 use crate::primitives::{mul_aaps, CostModel};
 use crate::util::ceil_div;
-use crate::workloads::{Network, Residual};
+use crate::workloads::{LayerDesc, Network, Residual};
 
 /// Full simulator configuration.
 #[derive(Debug, Clone)]
@@ -121,6 +121,16 @@ impl SimConfig {
         self
     }
 
+    /// Requested parallelism for `layer_idx` (`ks` broadcast if a single
+    /// value) — the same convention as `MapConfig::k_for`.
+    pub fn k_for(&self, layer_idx: usize) -> usize {
+        if self.ks.len() == 1 {
+            self.ks[0]
+        } else {
+            self.ks[layer_idx]
+        }
+    }
+
     fn map_config(&self) -> MapConfig {
         MapConfig {
             geometry: self.geometry.clone(),
@@ -167,10 +177,9 @@ pub struct DeviceSim {
     /// Device id within the execution plan.
     pub device: usize,
     pub channel: usize,
-    /// This device's stages: its layer slice (boundary transfer already
-    /// swapped for the inter-channel hop) plus its residual reserves.
-    pub stages: Vec<StageCost>,
-    /// Pipeline report over this device's own internal bus.
+    /// Pipeline report over this device's own internal bus. Its stages
+    /// are this device's layer slice (boundary transfer already swapped
+    /// for the inter-channel hop) plus its residual reserves.
     pub pipeline: PipelineReport,
     /// Outbound inter-channel hop to the next device (0 for the tail).
     pub hop_ns: f64,
@@ -248,92 +257,127 @@ impl SimResult {
     }
 }
 
+/// Shared sub-expressions of per-layer pricing, hoisted out of the layer
+/// loop. Building one per pricing run (rather than per layer) keeps the
+/// arithmetic identical between `price_layers` and the incremental
+/// session's per-layer cache fills.
+pub(crate) struct PriceCtx {
+    tree: AdderTree,
+    aap_ns: f64,
+    logic_cycle: f64,
+    planes: u64,
+    mul_cost: u64,
+}
+
+impl PriceCtx {
+    pub(crate) fn new(cfg: &SimConfig) -> Self {
+        PriceCtx {
+            tree: AdderTree::new(cfg.adder_inputs),
+            aap_ns: cfg.timing.aap_ns(),
+            logic_cycle: energy::logic_cycle_ns(),
+            planes: 2 * cfg.n_bits as u64,
+            mul_cost: mul_aaps(cfg.cost_model, cfg.n_bits as u64),
+        }
+    }
+}
+
+/// Price one layer's bank for one image (the unit the session caches).
+pub(crate) fn price_layer(
+    layer: &LayerDesc,
+    m: &LayerMapping,
+    cfg: &SimConfig,
+    ctx: &PriceCtx,
+) -> LayerSim {
+    let n = cfg.n_bits;
+    let rounds = m.rounds() as f64;
+    let mut multiply_ns = rounds * ctx.mul_cost as f64 * ctx.aap_ns;
+    if let Some(refresh) = &cfg.refresh {
+        multiply_ns = refresh.stretch_ns(multiply_ns);
+    }
+
+    // Tree drain: every used subarray's row buffer is streamed through
+    // a tree once per product bit-plane, per round.
+    let trees = if cfg.tree_per_subarray { m.subarrays_used.max(1) } else { 1 };
+    let passes_per_plane = ceil_div(cfg.geometry.cols, cfg.adder_inputs)
+        * ceil_div(m.subarrays_used.max(1), trees);
+    let passes_per_round = passes_per_plane as u64 * ctx.planes;
+    let drain = ctx.tree.levels() as u64 + 8; // SFU + transpose pipeline drain
+    let logic_cycles = rounds as u64 * (ctx.tree.cycles(passes_per_round as usize) + drain);
+    let logic_ns = logic_cycles as f64 * ctx.logic_cycle;
+
+    // Re-staging: each extra wave / overflowed stack round rewrites the
+    // active subarrays' operand rows over the internal bus.
+    let restage_events = (m.waves - 1) + m.restaged_rounds;
+    let rows_per_subarray = 2 * n;
+    let restage_ns = restage_events as f64
+        * m.subarrays_used as f64
+        * rows_per_subarray as f64
+        * cfg.timing.interbank_copy_ns(cfg.geometry.cols);
+
+    // Residual edges execute in their own reserved banks (Fig 13) —
+    // they become separate pipeline stages below; nothing lands here.
+    let residual_ns = 0.0;
+
+    let transfer = transfer_ns(
+        layer.out_elems(),
+        n,
+        cfg.geometry.cols,
+        &cfg.timing,
+    );
+
+    let aaps = m.rounds() as u64 * ctx.mul_cost * m.subarrays_used as u64;
+    let dram_energy_nj = aaps as f64
+        * (cfg.timing.act_pre_energy_nj + cfg.timing.multi_act_energy(3))
+        + crate::dataflow::transfer::transfer_bits(
+            layer.out_elems(),
+            n,
+            cfg.geometry.cols,
+        ) as f64
+            * cfg.timing.bus_energy_pj_per_bit
+            / 1000.0;
+
+    LayerSim {
+        name: layer.name.clone(),
+        mapping: m.clone(),
+        multiply_ns,
+        logic_ns,
+        restage_ns,
+        residual_ns,
+        transfer_ns: transfer,
+        aaps,
+        dram_energy_nj,
+    }
+}
+
 /// **Price** stage, part 1: charge every layer's bank for one image. The
 /// result is a template shared by all replicas — a layer's in-bank cost
 /// depends only on bank-internal geometry, never on which grid slot the
 /// bank sits in.
 pub fn price_layers(net: &Network, mapping: &NetworkMapping, cfg: &SimConfig) -> Vec<LayerSim> {
-    let tree = AdderTree::new(cfg.adder_inputs);
-    let aap_ns = cfg.timing.aap_ns();
-    let logic_cycle = energy::logic_cycle_ns();
-    let n = cfg.n_bits;
-    let planes = 2 * n as u64;
-    let mul_cost = mul_aaps(cfg.cost_model, n as u64);
-
-    let mut layers = Vec::with_capacity(net.layers.len());
-    for (layer, m) in net.layers.iter().zip(&mapping.layers) {
-        let rounds = m.rounds() as f64;
-        let mut multiply_ns = rounds * mul_cost as f64 * aap_ns;
-        if let Some(refresh) = &cfg.refresh {
-            multiply_ns = refresh.stretch_ns(multiply_ns);
-        }
-
-        // Tree drain: every used subarray's row buffer is streamed through
-        // a tree once per product bit-plane, per round.
-        let trees = if cfg.tree_per_subarray { m.subarrays_used.max(1) } else { 1 };
-        let passes_per_plane = ceil_div(cfg.geometry.cols, cfg.adder_inputs)
-            * ceil_div(m.subarrays_used.max(1), trees);
-        let passes_per_round = passes_per_plane as u64 * planes;
-        let drain = tree.levels() as u64 + 8; // SFU + transpose pipeline drain
-        let logic_cycles = rounds as u64 * (tree.cycles(passes_per_round as usize) + drain);
-        let logic_ns = logic_cycles as f64 * logic_cycle;
-
-        // Re-staging: each extra wave / overflowed stack round rewrites the
-        // active subarrays' operand rows over the internal bus.
-        let restage_events = (m.waves - 1) + m.restaged_rounds;
-        let rows_per_subarray = 2 * n;
-        let restage_ns = restage_events as f64
-            * m.subarrays_used as f64
-            * rows_per_subarray as f64
-            * cfg.timing.interbank_copy_ns(cfg.geometry.cols);
-
-        // Residual edges execute in their own reserved banks (Fig 13) —
-        // they become separate pipeline stages below; nothing lands here.
-        let residual_ns = 0.0;
-
-        let transfer = transfer_ns(
-            layer.out_elems(),
-            n,
-            cfg.geometry.cols,
-            &cfg.timing,
-        );
-
-        let aaps = m.rounds() as u64 * mul_cost * m.subarrays_used as u64;
-        let dram_energy_nj = aaps as f64
-            * (cfg.timing.act_pre_energy_nj + cfg.timing.multi_act_energy(3))
-            + crate::dataflow::transfer::transfer_bits(
-                layer.out_elems(),
-                n,
-                cfg.geometry.cols,
-            ) as f64
-                * cfg.timing.bus_energy_pj_per_bit
-                / 1000.0;
-
-        layers.push(LayerSim {
-            name: layer.name.clone(),
-            mapping: m.clone(),
-            multiply_ns,
-            logic_ns,
-            restage_ns,
-            residual_ns,
-            transfer_ns: transfer,
-            aaps,
-            dram_energy_nj,
-        });
-    }
-    layers
+    let ctx = PriceCtx::new(cfg);
+    net.layers
+        .iter()
+        .zip(&mapping.layers)
+        .map(|(layer, m)| price_layer(layer, m, cfg, &ctx))
+        .collect()
 }
 
 /// Inter-channel hop time for `values` n-bit activations.
-fn hop_ns_for(values: usize, cfg: &SimConfig) -> f64 {
+pub(crate) fn hop_ns_for(values: usize, cfg: &SimConfig) -> f64 {
     transfer_rows(values, cfg.n_bits, cfg.geometry.cols) as f64
         * cfg.timing.interchannel_copy_ns(cfg.geometry.cols)
 }
 
-/// Residual reserved-bank stage (Fig 13). The shortcut/result copies are
-/// its transfers; the in-DRAM add its compute. A shortcut arriving from a
-/// device on another channel pays the hop premium on its copy-in.
-fn residual_stage(net: &Network, r: &Residual, cfg: &SimConfig, cross_device: bool) -> StageCost {
+/// Residual reserved-bank cost (Fig 13) as `(compute_ns, transfer_ns)`.
+/// The shortcut/result copies are its transfers; the in-DRAM add its
+/// compute. A shortcut arriving from a device on another channel pays the
+/// hop premium on its copy-in.
+pub(crate) fn residual_cost(
+    net: &Network,
+    r: &Residual,
+    cfg: &SimConfig,
+    cross_device: bool,
+) -> (f64, f64) {
     let n = cfg.n_bits;
     let elems = net.layers[r.into_layer].out_elems();
     let copy = transfer_ns(elems, n, cfg.geometry.cols, &cfg.timing);
@@ -345,10 +389,16 @@ fn residual_stage(net: &Network, r: &Residual, cfg: &SimConfig, cross_device: bo
             * (cfg.timing.interchannel_copy_ns(cfg.geometry.cols)
                 - cfg.timing.interbank_copy_ns(cfg.geometry.cols));
     }
+    (total - 3.0 * copy, transfer)
+}
+
+/// Residual reserved-bank stage (Fig 13), named for the report.
+fn residual_stage(net: &Network, r: &Residual, cfg: &SimConfig, cross_device: bool) -> StageCost {
+    let (compute_ns, transfer_ns) = residual_cost(net, r, cfg, cross_device);
     StageCost {
         name: format!("res:{}", net.layers[r.into_layer].name),
-        compute_ns: total - 3.0 * copy,
-        transfer_ns: transfer,
+        compute_ns,
+        transfer_ns,
     }
 }
 
@@ -392,8 +442,9 @@ fn price_device(
         stages.push(residual_stage(net, r, cfg, cross));
     }
 
-    let pipeline = schedule(stages.clone(), cfg.overlapped_transfers);
-    DeviceSim { device: device_id, channel: d.channel, stages, pipeline, hop_ns }
+    // The pipeline report owns the stage list — no defensive copy.
+    let pipeline = schedule(stages, cfg.overlapped_transfers);
+    DeviceSim { device: device_id, channel: d.channel, pipeline, hop_ns }
 }
 
 /// **Aggregate** stage: combine a chain of device pipelines into one
@@ -404,7 +455,7 @@ fn price_device(
 fn combine_chain(devices: &[DeviceSim]) -> PipelineReport {
     let stages: Vec<StageCost> = devices
         .iter()
-        .flat_map(|d| d.stages.iter().cloned())
+        .flat_map(|d| d.pipeline.stages.iter().cloned())
         .collect();
     let latency_ns = devices.iter().map(|d| d.pipeline.latency_ns).sum();
     let cycle_ns = devices
@@ -425,9 +476,22 @@ pub fn simulate(net: &Network, cfg: &SimConfig) -> Result<SimResult, PlanError> 
     // Plan: lower the mapping onto the channel × rank grid.
     let plan = plan::lower(net, &cfg.map_config(), cfg.shard)?;
 
-    // Price: per-layer template, then replica 0's device chain (replicas
-    // are identical by construction).
+    // Price: per-layer template (identical in every replica).
     let layers = price_layers(net, &plan.mapping, cfg);
+    Ok(finish_simulation(net, cfg, plan, layers))
+}
+
+/// **Price** part 2 + **aggregate**: turn a lowered plan and a priced
+/// layer template into the full result. Shared verbatim by [`simulate`]
+/// and the incremental session so their reports stay bitwise identical.
+pub(crate) fn finish_simulation(
+    net: &Network,
+    cfg: &SimConfig,
+    plan: ExecutionPlan,
+    layers: Vec<LayerSim>,
+) -> SimResult {
+    // Price replica 0's device chain (replicas are identical by
+    // construction).
     let chain = plan.chain(0);
     let devices: Vec<DeviceSim> = chain
         .iter()
@@ -457,7 +521,7 @@ pub fn simulate(net: &Network, cfg: &SimConfig) -> Result<SimResult, PlanError> 
         hop_ns_total,
     };
 
-    Ok(SimResult {
+    SimResult {
         net_name: net.name.clone(),
         n_bits: cfg.n_bits,
         layers,
@@ -467,7 +531,7 @@ pub fn simulate(net: &Network, cfg: &SimConfig) -> Result<SimResult, PlanError> 
         logic_energy_nj,
         plan,
         scale_out,
-    })
+    }
 }
 
 #[cfg(test)]

@@ -5,8 +5,10 @@
 //! scale-out benches are built from.
 
 pub mod engine;
+pub mod session;
 pub mod trace;
 
 pub use engine::{
     price_layers, simulate, DeviceSim, LayerSim, ScaleOutReport, SimConfig, SimResult,
 };
+pub use session::{SimReport, SimSession};

@@ -1,0 +1,472 @@
+//! Incremental pricing sessions (DESIGN.md §8).
+//!
+//! Sweeps are the experiment unit: Fig 16/17, the design-space studies
+//! and the serving backend call the analytical model dozens-to-hundreds
+//! of times while varying only `ks`, the shard policy, or the
+//! channels × ranks grid. A fresh [`super::simulate`] re-runs Algorithm-1
+//! mapping and re-prices every layer from scratch on each call even
+//! though none of those knobs touch a layer's in-bank cost.
+//!
+//! [`SimSession`] materializes the three stages `simulate()` documents as
+//! reusable artifacts:
+//!
+//!   * **map + price, cached** — each layer's [`LayerSim`] (mapping +
+//!     pricing) is keyed by `(fingerprint, layer, k)` where the
+//!     fingerprint hashes every map/price input: bank-internal geometry,
+//!     timing, operand bits, cost model, adder width, tree stance and
+//!     refresh. The grid, the shard policy and the `ks` vector are
+//!     deliberately **excluded** — they only steer lowering/aggregation,
+//!     so changing them reuses the cache.
+//!   * **lower + aggregate, per call** — [`crate::plan::layout`] and the
+//!     chain folds are recomputed every call; they are the cheap stages.
+//!
+//! Two read paths:
+//!   * [`SimSession::simulate_full`] rebuilds the exact [`SimResult`]
+//!     `simulate()` returns (shared `finish_simulation` tail), for
+//!     callers that need per-stage detail (CLI tables, serving setup).
+//!   * [`SimSession::report`] returns the scalar [`SimReport`] the sweeps
+//!     read, skipping every per-stage vector. Its folds run in the same
+//!     order as `simulate()`'s, so equality is exact, not approximate —
+//!     `tests/session_equivalence.rs` is the correctness bar.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::Hasher;
+
+use crate::gpu::GpuModel;
+use crate::mapping::{map_layer, outer_count, MapConfig, MapError, NetworkMapping};
+use crate::plan::{self, ExecutionPlan, PlanError, ShardPolicy};
+use crate::primitives::CostModel;
+use crate::workloads::Network;
+
+use super::engine::{finish_simulation, hop_ns_for, price_layer, residual_cost};
+use super::engine::{LayerSim, PriceCtx, SimConfig, SimResult};
+
+/// Hash every `SimConfig` field the **map** and **price** stages read.
+/// `channels`, `ranks_per_channel`, `banks_per_rank`, `ks`, `shard` and
+/// `overlapped_transfers` are excluded: they only steer the lowering /
+/// aggregation stages, which the session recomputes per call.
+pub(crate) fn price_fingerprint(cfg: &SimConfig) -> u64 {
+    fn f(h: &mut DefaultHasher, v: f64) {
+        h.write_u64(v.to_bits());
+    }
+    let mut h = DefaultHasher::new();
+    let g = &cfg.geometry;
+    h.write_usize(g.subarrays_per_bank);
+    h.write_usize(g.rows);
+    h.write_usize(g.cols);
+    h.write_usize(g.compute_rows);
+    h.write_usize(cfg.n_bits);
+    h.write_usize(cfg.adder_inputs);
+    h.write_u8(match cfg.cost_model {
+        CostModel::Paper => 0,
+        CostModel::Derived => 1,
+    });
+    h.write_u8(cfg.tree_per_subarray as u8);
+    let t = &cfg.timing;
+    f(&mut h, t.tck_ns);
+    f(&mut h, t.trcd_ns);
+    f(&mut h, t.tras_ns);
+    f(&mut h, t.trp_ns);
+    f(&mut h, t.tcas_ns);
+    h.write_usize(t.internal_bus_bits);
+    h.write_usize(t.channel_bus_bits);
+    f(&mut h, t.act_pre_energy_nj);
+    f(&mut h, t.multi_act_energy_nj);
+    f(&mut h, t.bus_energy_pj_per_bit);
+    match &cfg.refresh {
+        None => h.write_u8(0),
+        Some(r) => {
+            h.write_u8(1);
+            f(&mut h, r.trefi_ns);
+            f(&mut h, r.trfc_ns);
+        }
+    }
+    h.finish()
+}
+
+/// Cache key for one layer's mapped + priced artifact.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct LayerKey {
+    fingerprint: u64,
+    layer: usize,
+    k: usize,
+}
+
+/// Scalar view of one simulation — everything the sweeps read, none of
+/// the per-stage vectors [`SimResult`] carries. Every field is produced
+/// by the same fold order as `simulate()`, so comparing against the full
+/// report is exact `==`, not an epsilon check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    pub net_name: String,
+    pub n_bits: usize,
+    pub policy: ShardPolicy,
+    /// Independent full-network pipelines in the plan.
+    pub replicas: usize,
+    /// Devices in one replica's chain.
+    pub devices_per_replica: usize,
+    /// Per-image latency (pipeline fill, inter-channel hops included).
+    pub latency_ns: f64,
+    /// Steady-state initiation interval of one replica.
+    pub cycle_ns: f64,
+    /// Per-image inter-channel transfer time across the chain.
+    pub hop_ns_total: f64,
+    pub total_aaps: u64,
+    pub total_dram_energy_nj: f64,
+    pub logic_energy_nj: f64,
+    /// Bottleneck stage index in the flattened chain
+    /// (`SimResult::pipeline.bottleneck`).
+    pub bottleneck: usize,
+    /// All layers resident (no waves, no restaging) under this config.
+    pub fully_resident: bool,
+}
+
+impl SimReport {
+    /// Aggregate steady-state throughput (images/s) across replicas.
+    pub fn throughput_ips(&self) -> f64 {
+        self.replicas as f64 * (1e9 / self.cycle_ns)
+    }
+
+    /// Steady-state throughput of a single replica (images/s).
+    pub fn replica_throughput_ips(&self) -> f64 {
+        1e9 / self.cycle_ns
+    }
+
+    /// Devices across all replicas.
+    pub fn devices_total(&self) -> usize {
+        self.replicas * self.devices_per_replica
+    }
+
+    /// Fig 16 metric — see [`SimResult::speedup_vs`].
+    pub fn speedup_vs(&self, gpu: &GpuModel, net: &Network, gpu_bytes_per_elem: usize) -> f64 {
+        let gpu_s = gpu.network_time_s(net, gpu_bytes_per_elem);
+        gpu_s / (self.cycle_ns * 1e-9)
+    }
+}
+
+/// An incremental simulation session over one network: map once, price
+/// per `(config-fingerprint, layer, k)`, re-lower and re-aggregate per
+/// call. See the module docs for the caching contract.
+pub struct SimSession<'a> {
+    net: &'a Network,
+    cache: HashMap<LayerKey, LayerSim>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<'a> SimSession<'a> {
+    pub fn new(net: &'a Network) -> Self {
+        SimSession { net, cache: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// The network this session prices.
+    pub fn network(&self) -> &'a Network {
+        self.net
+    }
+
+    /// `(hits, misses)` of the per-layer cache since construction.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Distinct `(fingerprint, layer, k)` artifacts currently cached.
+    pub fn cached_layers(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Drop all cached artifacts (stats survive).
+    pub fn clear(&mut self) {
+        self.cache.clear();
+    }
+
+    /// The effective per-layer parallelism under `cfg` — the same clamp
+    /// `map_network` applies.
+    fn k_for(&self, cfg: &SimConfig, layer_idx: usize) -> usize {
+        cfg.k_for(layer_idx).min(outer_count(&self.net.layers[layer_idx]))
+    }
+
+    /// Mirror `map_network`'s up-front bank budget check so the session
+    /// fails with the identical error before touching the cache.
+    fn check_banks(&self, cfg: &SimConfig) -> Result<usize, PlanError> {
+        let banks_needed = self.net.layers.len() + self.net.residuals.len();
+        if banks_needed > cfg.geometry.total_banks() {
+            return Err(PlanError::Map(MapError::BankOverflow {
+                net: self.net.name.clone(),
+                banks: banks_needed,
+                avail: cfg.geometry.total_banks(),
+            }));
+        }
+        Ok(banks_needed)
+    }
+
+    /// Fill the cache for every layer missing under `(fp, k)`.
+    fn ensure_priced(&mut self, cfg: &SimConfig, fp: u64) -> Result<(), PlanError> {
+        let mut ctx: Option<PriceCtx> = None;
+        for (i, layer) in self.net.layers.iter().enumerate() {
+            let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
+            if self.cache.contains_key(&key) {
+                self.hits += 1;
+                continue;
+            }
+            self.misses += 1;
+            // Per-layer map config, exactly as `map_network` builds it.
+            let c = MapConfig {
+                geometry: cfg.geometry.clone(),
+                n_bits: cfg.n_bits,
+                ks: vec![key.k],
+            };
+            let m = map_layer(i, i, layer, &c).map_err(PlanError::Map)?;
+            let ctx = ctx.get_or_insert_with(|| PriceCtx::new(cfg));
+            self.cache.insert(key, price_layer(layer, &m, cfg, ctx));
+        }
+        Ok(())
+    }
+
+    /// Full fidelity: the same [`SimResult`] `simulate()` returns, built
+    /// from cached per-layer artifacts and a fresh lowering.
+    pub fn simulate_full(&mut self, cfg: &SimConfig) -> Result<SimResult, PlanError> {
+        let banks_needed = self.check_banks(cfg)?;
+        let fp = price_fingerprint(cfg);
+        self.ensure_priced(cfg, fp)?;
+
+        let layers: Vec<LayerSim> = (0..self.net.layers.len())
+            .map(|i| {
+                let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
+                self.cache[&key].clone()
+            })
+            .collect();
+        let mapping = NetworkMapping {
+            net_name: self.net.name.clone(),
+            layers: layers.iter().map(|l| l.mapping.clone()).collect(),
+            residual_banks: self.net.residuals.len(),
+            total_banks: banks_needed,
+        };
+        let weights: Vec<u64> = mapping.layers.iter().map(|m| m.rounds() as u64).collect();
+        let l = plan::layout(self.net, &weights, banks_needed, &cfg.geometry, cfg.shard)?;
+        let plan = ExecutionPlan {
+            net_name: self.net.name.clone(),
+            policy: cfg.shard,
+            geometry: cfg.geometry.clone(),
+            mapping,
+            devices: l.devices,
+            replicas: l.replicas,
+            chains: l.chains,
+        };
+        Ok(finish_simulation(self.net, cfg, plan, layers))
+    }
+
+    /// Sweep hot path: lower + aggregate over cached layer pricing,
+    /// producing the scalar [`SimReport`] without building any per-stage
+    /// vector. Folds run in `simulate()`'s order so the numbers match the
+    /// full report exactly.
+    pub fn report(&mut self, cfg: &SimConfig) -> Result<SimReport, PlanError> {
+        let banks_needed = self.check_banks(cfg)?;
+        let fp = price_fingerprint(cfg);
+        self.ensure_priced(cfg, fp)?;
+
+        let n_layers = self.net.layers.len();
+        let layers: Vec<&LayerSim> = (0..n_layers)
+            .map(|i| {
+                let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
+                &self.cache[&key]
+            })
+            .collect();
+
+        // Lower: grid layout from the cached per-layer round counts.
+        let weights: Vec<u64> = layers.iter().map(|l| l.mapping.rounds() as u64).collect();
+        let layout = plan::layout(self.net, &weights, banks_needed, &cfg.geometry, cfg.shard)?;
+
+        // Aggregate replica 0's chain, mirroring `price_device` +
+        // `combine_chain` fold-for-fold (see module docs).
+        let chain = layout.chain(0);
+        let mut latency_ns = 0.0f64;
+        let mut cycle_ns = f64::NEG_INFINITY;
+        let mut hop_ns_total = 0.0f64;
+        let mut bottleneck = 0usize;
+        let mut best_compute = f64::NEG_INFINITY;
+        let mut flat_idx = 0usize;
+
+        for (pos, &dev_id) in chain.iter().enumerate() {
+            let d = &layout.devices[dev_id];
+            let is_tail = pos + 1 == chain.len();
+            let boundary = d.shard.layers.end - 1;
+            let hop_ns = if is_tail {
+                0.0
+            } else {
+                hop_ns_for(self.net.layers[boundary].out_elems(), cfg)
+            };
+
+            let mut dev_latency = 0.0f64;
+            let mut max_stage = f64::NEG_INFINITY; // compute + transfer
+            let mut max_compute = f64::NEG_INFINITY;
+            let mut sum_transfer = 0.0f64;
+            let mut fold = |compute: f64, transfer: f64| {
+                dev_latency += compute + transfer;
+                max_stage = max_stage.max(compute + transfer);
+                max_compute = max_compute.max(compute);
+                sum_transfer += transfer;
+                // combine_chain's max_by keeps the *last* maximal stage.
+                if compute >= best_compute {
+                    best_compute = compute;
+                    bottleneck = flat_idx;
+                }
+                flat_idx += 1;
+            };
+            for i in d.shard.layers.clone() {
+                let compute = layers[i].compute_ns();
+                let transfer = if !is_tail && i == boundary {
+                    hop_ns
+                } else {
+                    layers[i].transfer_ns
+                };
+                fold(compute, transfer);
+            }
+            for &ri in &d.shard.residuals {
+                let r = &self.net.residuals[ri];
+                let cross = layout.device_hosting(d.replica, r.from_layer) != Some(dev_id);
+                let (compute, transfer) = residual_cost(self.net, r, cfg, cross);
+                fold(compute, transfer);
+            }
+
+            let dev_cycle = if cfg.overlapped_transfers {
+                max_stage
+            } else {
+                max_compute + sum_transfer
+            };
+            latency_ns += dev_latency;
+            cycle_ns = cycle_ns.max(dev_cycle);
+            hop_ns_total += hop_ns;
+        }
+
+        // Layer-template totals, in `finish_simulation`'s fold order.
+        let total_aaps: u64 = layers.iter().map(|l| l.aaps).sum();
+        let total_dram_energy_nj: f64 = layers.iter().map(|l| l.dram_energy_nj).sum();
+        let bank_power_nw: f64 = crate::energy::bank_components(cfg.adder_inputs)
+            .iter()
+            .map(|c| c.power_nw)
+            .sum();
+        let logic_busy_s: f64 = layers.iter().map(|l| l.logic_ns).sum::<f64>() * 1e-9;
+        let logic_energy_nj = bank_power_nw * logic_busy_s; // nW × s = nJ
+        let fully_resident = layers.iter().all(|l| l.mapping.fully_resident());
+
+        Ok(SimReport {
+            net_name: self.net.name.clone(),
+            n_bits: cfg.n_bits,
+            policy: cfg.shard,
+            replicas: layout.replicas,
+            devices_per_replica: chain.len(),
+            latency_ns,
+            cycle_ns,
+            hop_ns_total,
+            total_aaps,
+            total_dram_energy_nj,
+            logic_energy_nj,
+            bottleneck,
+            fully_resident,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate;
+    use crate::workloads::nets::{pimnet, resnet18, vgg16};
+
+    #[test]
+    fn session_matches_fresh_simulate_exactly() {
+        let net = resnet18();
+        let cfg = SimConfig::conservative(8);
+        let fresh = simulate(&net, &cfg).unwrap();
+        let mut session = SimSession::new(&net);
+        let full = session.simulate_full(&cfg).unwrap();
+        let rep = session.report(&cfg).unwrap();
+
+        assert_eq!(full.pipeline.latency_ns.to_bits(), fresh.pipeline.latency_ns.to_bits());
+        assert_eq!(full.pipeline.cycle_ns.to_bits(), fresh.pipeline.cycle_ns.to_bits());
+        assert_eq!(full.total_aaps, fresh.total_aaps);
+        assert_eq!(rep.latency_ns.to_bits(), fresh.pipeline.latency_ns.to_bits());
+        assert_eq!(rep.cycle_ns.to_bits(), fresh.pipeline.cycle_ns.to_bits());
+        assert_eq!(rep.bottleneck, fresh.pipeline.bottleneck);
+        assert_eq!(rep.total_aaps, fresh.total_aaps);
+        assert_eq!(
+            rep.throughput_ips().to_bits(),
+            fresh.throughput_ips().to_bits()
+        );
+    }
+
+    #[test]
+    fn grid_and_shard_changes_reuse_the_layer_cache() {
+        let net = vgg16();
+        let mut session = SimSession::new(&net);
+        session.report(&SimConfig::conservative(8)).unwrap();
+        let (_, misses_after_first) = session.cache_stats();
+        assert_eq!(misses_after_first, net.layers.len() as u64);
+
+        // Grid + shard sweeps: pure hits.
+        for channels in [2usize, 4, 8] {
+            let cfg = SimConfig::conservative(8).with_grid(channels, 4);
+            session.report(&cfg).unwrap();
+            let split = cfg.with_shard(ShardPolicy::LayerSplit);
+            session.report(&split).unwrap();
+        }
+        let (hits, misses) = session.cache_stats();
+        assert_eq!(misses, misses_after_first, "grid/shard must not re-price");
+        assert_eq!(hits, 6 * net.layers.len() as u64);
+
+        // A new k re-prices each layer once, then hits again.
+        session.report(&SimConfig::conservative(8).with_ks(vec![2])).unwrap();
+        let (_, misses_k2) = session.cache_stats();
+        assert_eq!(misses_k2, misses_after_first + net.layers.len() as u64);
+        session.report(&SimConfig::conservative(8).with_ks(vec![2])).unwrap();
+        let (_, misses_again) = session.cache_stats();
+        assert_eq!(misses_again, misses_k2);
+    }
+
+    #[test]
+    fn fingerprint_separates_pricing_configs() {
+        let a = SimConfig::conservative(8);
+        let b = SimConfig::paper_favorable(8);
+        let c = SimConfig::conservative(4);
+        assert_ne!(price_fingerprint(&a), price_fingerprint(&b));
+        assert_ne!(price_fingerprint(&a), price_fingerprint(&c));
+        // Grid / shard / ks do not move the fingerprint.
+        assert_eq!(
+            price_fingerprint(&a),
+            price_fingerprint(&a.clone().with_grid(8, 2))
+        );
+        assert_eq!(
+            price_fingerprint(&a),
+            price_fingerprint(
+                &a.clone().with_ks(vec![4]).with_shard(ShardPolicy::LayerSplit)
+            )
+        );
+    }
+
+    #[test]
+    fn bank_overflow_error_matches_simulate() {
+        let net = vgg16();
+        let mut cfg = SimConfig::conservative(8);
+        cfg.geometry.ranks_per_channel = 1;
+        cfg.geometry.banks_per_rank = 2;
+        let fresh = simulate(&net, &cfg).unwrap_err();
+        let mut session = SimSession::new(&net);
+        assert_eq!(session.simulate_full(&cfg).unwrap_err(), fresh);
+        assert_eq!(session.report(&cfg).unwrap_err(), fresh);
+    }
+
+    #[test]
+    fn report_carries_residency() {
+        let net = pimnet();
+        let mut session = SimSession::new(&net);
+        let ideal = session.report(&SimConfig::paper_favorable(8)).unwrap();
+        assert!(ideal.fully_resident);
+        let r = session.report(&SimConfig::conservative(8)).unwrap();
+        let fresh = simulate(&net, &SimConfig::conservative(8)).unwrap();
+        assert_eq!(
+            r.fully_resident,
+            fresh.layers.iter().all(|l| l.mapping.fully_resident())
+        );
+    }
+}

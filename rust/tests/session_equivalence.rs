@@ -1,0 +1,222 @@
+//! Incremental-vs-fresh equivalence (the correctness bar of the
+//! `SimSession` pricing engine, DESIGN.md §8): for every network ×
+//! preset × shard policy × grid, the session's two read paths must
+//! reproduce `simulate()`'s report **exactly** — bit-for-bit on every
+//! f64, not within an epsilon — and fail with the identical error when
+//! the fresh path fails.
+
+use pim_dram::plan::ShardPolicy;
+use pim_dram::sim::{simulate, SimConfig, SimResult, SimSession};
+use pim_dram::workloads::nets::all_networks;
+use pim_dram::workloads::Network;
+
+fn presets(bits: usize) -> Vec<(&'static str, SimConfig)> {
+    vec![
+        ("conservative", SimConfig::conservative(bits)),
+        ("paper_favorable", SimConfig::paper_favorable(bits)),
+    ]
+}
+
+fn grids() -> [(usize, usize); 4] {
+    [(1, 4), (2, 2), (2, 4), (4, 4)]
+}
+
+fn policies() -> [ShardPolicy; 3] {
+    [
+        ShardPolicy::Replicate,
+        ShardPolicy::LayerSplit,
+        ShardPolicy::Hybrid { replicas: 2 },
+    ]
+}
+
+/// Assert the full-fidelity session result matches the fresh one
+/// bit-for-bit on everything the experiments read.
+fn assert_full_equiv(ctx: &str, fresh: &SimResult, full: &SimResult) {
+    assert_eq!(full.net_name, fresh.net_name, "{ctx}: net_name");
+    assert_eq!(full.n_bits, fresh.n_bits, "{ctx}: n_bits");
+    assert_eq!(
+        full.pipeline.latency_ns.to_bits(),
+        fresh.pipeline.latency_ns.to_bits(),
+        "{ctx}: latency"
+    );
+    assert_eq!(
+        full.pipeline.cycle_ns.to_bits(),
+        fresh.pipeline.cycle_ns.to_bits(),
+        "{ctx}: cycle"
+    );
+    assert_eq!(full.pipeline.bottleneck, fresh.pipeline.bottleneck, "{ctx}: bottleneck");
+    assert_eq!(full.pipeline.stages.len(), fresh.pipeline.stages.len(), "{ctx}: stages");
+    assert_eq!(full.total_aaps, fresh.total_aaps, "{ctx}: aaps");
+    assert_eq!(
+        full.total_dram_energy_nj.to_bits(),
+        fresh.total_dram_energy_nj.to_bits(),
+        "{ctx}: dram energy"
+    );
+    assert_eq!(
+        full.logic_energy_nj.to_bits(),
+        fresh.logic_energy_nj.to_bits(),
+        "{ctx}: logic energy"
+    );
+    assert_eq!(
+        full.throughput_ips().to_bits(),
+        fresh.throughput_ips().to_bits(),
+        "{ctx}: throughput"
+    );
+    assert_eq!(full.replicas(), fresh.replicas(), "{ctx}: replicas");
+    assert_eq!(
+        full.scale_out.hop_ns_total.to_bits(),
+        fresh.scale_out.hop_ns_total.to_bits(),
+        "{ctx}: hops"
+    );
+    assert_eq!(
+        full.scale_out.devices.len(),
+        fresh.scale_out.devices.len(),
+        "{ctx}: devices"
+    );
+    assert_eq!(full.layers.len(), fresh.layers.len(), "{ctx}: layer count");
+    for (a, b) in full.layers.iter().zip(&fresh.layers) {
+        assert_eq!(a.name, b.name, "{ctx}: layer name");
+        assert_eq!(a.mapping, b.mapping, "{ctx}: {} mapping", a.name);
+        for (va, vb, what) in [
+            (a.multiply_ns, b.multiply_ns, "multiply"),
+            (a.logic_ns, b.logic_ns, "logic"),
+            (a.restage_ns, b.restage_ns, "restage"),
+            (a.transfer_ns, b.transfer_ns, "transfer"),
+            (a.dram_energy_nj, b.dram_energy_nj, "energy"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}: {} {}", a.name, what);
+        }
+        assert_eq!(a.aaps, b.aaps, "{ctx}: {} aaps", a.name);
+    }
+}
+
+/// One (network, config) point: fresh vs `simulate_full` vs `report`,
+/// errors included. Returns whether the point simulated successfully.
+fn check_point(net: &Network, session: &mut SimSession<'_>, ctx: &str, cfg: &SimConfig) -> bool {
+    let fresh = simulate(net, cfg);
+    let full = session.simulate_full(cfg);
+    let rep = session.report(cfg);
+    match fresh {
+        Err(e) => {
+            assert_eq!(full.unwrap_err(), e, "{ctx}: full error");
+            assert_eq!(rep.unwrap_err(), e, "{ctx}: report error");
+            false
+        }
+        Ok(fresh) => {
+            let full = full.unwrap_or_else(|e| panic!("{ctx}: full failed: {e}"));
+            assert_full_equiv(ctx, &fresh, &full);
+            let rep = rep.unwrap_or_else(|e| panic!("{ctx}: report failed: {e}"));
+            assert_eq!(rep.net_name, fresh.net_name, "{ctx}: rep net");
+            assert_eq!(
+                rep.latency_ns.to_bits(),
+                fresh.latency_ns().to_bits(),
+                "{ctx}: rep latency"
+            );
+            assert_eq!(
+                rep.cycle_ns.to_bits(),
+                fresh.pipeline.cycle_ns.to_bits(),
+                "{ctx}: rep cycle"
+            );
+            assert_eq!(rep.bottleneck, fresh.pipeline.bottleneck, "{ctx}: rep bottleneck");
+            assert_eq!(rep.total_aaps, fresh.total_aaps, "{ctx}: rep aaps");
+            assert_eq!(
+                rep.total_dram_energy_nj.to_bits(),
+                fresh.total_dram_energy_nj.to_bits(),
+                "{ctx}: rep dram energy"
+            );
+            assert_eq!(
+                rep.logic_energy_nj.to_bits(),
+                fresh.logic_energy_nj.to_bits(),
+                "{ctx}: rep logic energy"
+            );
+            assert_eq!(
+                rep.throughput_ips().to_bits(),
+                fresh.throughput_ips().to_bits(),
+                "{ctx}: rep throughput"
+            );
+            assert_eq!(rep.replicas, fresh.replicas(), "{ctx}: rep replicas");
+            assert_eq!(
+                rep.devices_total(),
+                fresh.scale_out.devices_total(),
+                "{ctx}: rep devices"
+            );
+            assert_eq!(
+                rep.hop_ns_total.to_bits(),
+                fresh.scale_out.hop_ns_total.to_bits(),
+                "{ctx}: rep hops"
+            );
+            assert_eq!(
+                rep.fully_resident,
+                fresh.layers.iter().all(|l| l.mapping.fully_resident()),
+                "{ctx}: rep residency"
+            );
+            true
+        }
+    }
+}
+
+#[test]
+fn session_reproduces_simulate_across_the_design_space() {
+    let mut points = 0usize;
+    let mut simulated = 0usize;
+    for net in all_networks() {
+        let mut session = SimSession::new(&net);
+        for bits in [4usize, 8] {
+            for (preset_name, preset) in presets(bits) {
+                for (channels, ranks) in grids() {
+                    for policy in policies() {
+                        let cfg = preset
+                            .clone()
+                            .with_grid(channels, ranks)
+                            .with_shard(policy);
+                        let ctx = format!(
+                            "{} {preset_name} {bits}b {channels}x{ranks} {policy}",
+                            net.name
+                        );
+                        points += 1;
+                        if check_point(&net, &mut session, &ctx, &cfg) {
+                            simulated += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let (hits, _) = session.cache_stats();
+        assert!(hits > 0, "{}: grid/shard sweep must hit the cache", net.name);
+    }
+    // The sweep must exercise both successful and failing lowerings.
+    assert!(simulated >= points / 2, "{simulated}/{points} points simulated");
+    assert!(simulated < points, "expected some plan errors in the grid sweep");
+}
+
+#[test]
+fn session_reproduces_ks_sweeps() {
+    for net in all_networks() {
+        let mut session = SimSession::new(&net);
+        for k in [1usize, 2, 3, 8] {
+            let cfg = SimConfig::paper_favorable(8).with_ks(vec![k]);
+            let ctx = format!("{} k={k}", net.name);
+            assert!(check_point(&net, &mut session, &ctx, &cfg), "{ctx}");
+        }
+        // Per-layer vectors too (the optimizer's output shape).
+        let ks: Vec<usize> = (0..net.layers.len())
+            .map(|i| if i % 2 == 0 { 1 } else { 2 })
+            .collect();
+        let cfg = SimConfig::conservative(8).with_ks(ks);
+        let ctx = format!("{} per-layer ks", net.name);
+        assert!(check_point(&net, &mut session, &ctx, &cfg), "{ctx}");
+    }
+}
+
+#[test]
+fn repeated_calls_are_stable_and_cached() {
+    let net = pim_dram::workloads::nets::resnet18();
+    let mut session = SimSession::new(&net);
+    let cfg = SimConfig::conservative(8).with_grid(2, 4).with_shard(ShardPolicy::LayerSplit);
+    let first = session.report(&cfg).unwrap();
+    let (_, misses_first) = session.cache_stats();
+    let second = session.report(&cfg).unwrap();
+    let (_, misses_second) = session.cache_stats();
+    assert_eq!(first, second, "report must be deterministic");
+    assert_eq!(misses_first, misses_second, "second call must be all hits");
+}
