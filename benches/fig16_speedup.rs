@@ -7,13 +7,14 @@
 //! Shape targets: PIM wins on every network; speedup is highest at P1 and
 //! decreases with the folding factor; peak ≈ O(10×) (paper: up to 19.5×).
 //!
-//! Sweep machinery (DESIGN.md §8): networks run on all cores via
-//! `par_sweep`, and each network's P1..P4 points share one incremental
-//! `SimSession` so only the lowering/aggregation re-runs per point.
+//! Sweep machinery (DESIGN.md §8/§API): every point is an `api::Spec`
+//! variant run through one `api::Job` per network; networks run on all
+//! cores via `par_sweep`, and each network's P1..P4 points share the
+//! job's incremental session so only the lowering/aggregation re-runs.
 
+use pim_dram::api::{Job, Spec};
 use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::gpu::GpuModel;
-use pim_dram::sim::{simulate, SimConfig, SimSession};
 use pim_dram::util::table::{Align, Table};
 use pim_dram::workloads::nets::all_networks;
 
@@ -28,13 +29,18 @@ fn main() {
         // One parallel worker per network; P-points sweep incrementally.
         let rows = par_sweep(nets.len(), |i| {
             let net = &nets[i];
-            let mut session = SimSession::new(net);
+            let base = Spec::builtin(&net.name)
+                .with_preset("paper_favorable")
+                .with_precision(bits);
+            let job = Job::new(base.clone()).expect("spec resolves");
+            let mut session = job.session();
             let gpu_ms = gpu.network_time_s(net, 4) * 1e3;
             let speedups: Vec<f64> = p_factors
                 .iter()
                 .map(|&k| {
-                    let cfg = SimConfig::paper_favorable(bits).with_ks(vec![k]);
-                    session.report(&cfg).expect("simulate").speedup_vs(&gpu, net, 4)
+                    job.report_variant(&mut session, &base.clone().with_ks(vec![k]))
+                        .expect("simulate")
+                        .speedup_vs(&gpu, net, 4)
                 })
                 .collect();
             (net.name.clone(), gpu_ms, speedups)
@@ -73,13 +79,13 @@ fn main() {
     }
 
     let mut b = Bencher::from_env();
-    let vgg = pim_dram::workloads::nets::vgg16();
-    b.bench("simulate(vgg16, paper_favorable 8b)", || {
-        simulate(&vgg, &SimConfig::paper_favorable(8)).unwrap().total_aaps
+    let job = Job::new(Spec::builtin("vgg16").with_preset("paper_favorable"))
+        .expect("spec resolves");
+    b.bench("Job::report(vgg16, paper_favorable 8b)", || {
+        job.report().unwrap().total_aaps
     });
-    let cfg = SimConfig::paper_favorable(8);
-    let mut session = SimSession::new(&vgg);
+    let mut session = job.session();
     b.bench("session.report(vgg16, paper_favorable 8b)", || {
-        session.report(&cfg).unwrap().total_aaps
+        session.report(job.config()).unwrap().total_aaps
     });
 }

@@ -3,12 +3,13 @@
 //! The multiply cost is the paper's closed form (3n² + 4(n-1)³ + 4(n-1)
 //! AAPs for n > 2), so per-image time should grow ≈ cubically in n. The
 //! bench prints per-network steady-state time for n ∈ {2, 4, 8, 16} and
-//! checks the growth exponent. Networks sweep in parallel (`par_sweep`);
-//! each worker prices through one incremental `SimSession`.
+//! checks the growth exponent. Every point is an `api::Spec` variant
+//! through one `api::Job` per network; networks sweep in parallel
+//! (`par_sweep`), precision points share the job's incremental session.
 
+use pim_dram::api::{Job, Spec};
 use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::primitives::paper_mul_aaps;
-use pim_dram::sim::{simulate, SimConfig, SimSession};
 use pim_dram::util::table::{Align, Table};
 use pim_dram::workloads::nets::all_networks;
 
@@ -19,11 +20,15 @@ fn main() {
 
     let series: Vec<(String, Vec<f64>)> = par_sweep(nets.len(), |i| {
         let net = &nets[i];
-        let mut session = SimSession::new(net);
+        let base = Spec::builtin(&net.name).with_preset("paper_favorable");
+        let job = Job::new(base.clone()).expect("spec resolves");
+        let mut session = job.session();
         let times: Vec<f64> = bits
             .iter()
             .map(|&n| {
-                let r = session.report(&SimConfig::paper_favorable(n)).unwrap();
+                let r = job
+                    .report_variant(&mut session, &base.clone().with_precision(n))
+                    .unwrap();
                 r.cycle_ns / 1e6
             })
             .collect();
@@ -58,13 +63,15 @@ fn main() {
     }
 
     let mut b = Bencher::from_env();
-    let alex = pim_dram::workloads::nets::alexnet();
-    b.bench("simulate(alexnet) 16-bit", || {
-        simulate(&alex, &SimConfig::paper_favorable(16)).unwrap().total_aaps
+    let job = Job::new(
+        Spec::builtin("alexnet").with_preset("paper_favorable").with_precision(16),
+    )
+    .expect("spec resolves");
+    b.bench("Job::report(alexnet) 16-bit", || {
+        job.report().unwrap().total_aaps
     });
-    let cfg16 = SimConfig::paper_favorable(16);
-    let mut session = SimSession::new(&alex);
+    let mut session = job.session();
     b.bench("session.report(alexnet) 16-bit", || {
-        session.report(&cfg16).unwrap().total_aaps
+        session.report(job.config()).unwrap().total_aaps
     });
 }

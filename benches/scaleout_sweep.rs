@@ -4,10 +4,11 @@
 //!
 //! Sweeps channels 1..8 for every network under the three shard policies
 //! and reports replicas, aggregate throughput, per-image latency and the
-//! priced inter-channel hop cost. Networks sweep on all cores
-//! (`par_sweep`); each network's points run through one incremental
-//! `SimSession` — the grid/shard axes are exactly what the session's
-//! layer cache is invariant to, so only the lowering re-runs per point.
+//! priced inter-channel hop cost. Every point is an `api::Spec` variant
+//! (grid + shard) run through one `api::Job` per network; networks sweep
+//! on all cores (`par_sweep`), and the grid/shard axes are exactly what
+//! the job's session cache is invariant to, so only the lowering re-runs
+//! per point.
 //!
 //! Shape targets checked:
 //!   * Replicate: aggregate throughput scales exactly linearly with the
@@ -15,9 +16,9 @@
 //!   * LayerSplit: latency strictly grows (hops are priced, not ignored),
 //!     while the steady-state cycle never degrades (per-channel buses).
 
+use pim_dram::api::{Job, Spec};
 use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::plan::ShardPolicy;
-use pim_dram::sim::{simulate, SimConfig, SimSession};
 use pim_dram::util::table::{Align, Table};
 use pim_dram::workloads::nets::all_networks;
 
@@ -27,8 +28,10 @@ fn main() {
 
     let reports = par_sweep(nets.len(), |ni| {
         let net = &nets[ni];
-        let mut session = SimSession::new(net);
-        let base = session.report(&SimConfig::conservative(8)).unwrap();
+        let base = Spec::builtin(&net.name).with_preset("conservative");
+        let job = Job::new(base.clone()).expect("spec resolves");
+        let mut session = job.session();
+        let base_r = job.report_variant(&mut session, &base).expect("simulate");
         let mut t = Table::new(&[
             "channels", "policy", "replicas", "devices", "img/s", "ms/img",
             "hops us/img",
@@ -41,15 +44,16 @@ fn main() {
         let mut prev_ips = 0.0f64;
         for channels in [1usize, 2, 4, 8] {
             // Replicate
-            let cfg = SimConfig::conservative(8).with_grid(channels, 4);
-            let r = session.report(&cfg).unwrap();
+            let r = job
+                .report_variant(&mut session, &base.clone().with_grid(channels, 4))
+                .expect("simulate");
             assert!(
                 r.throughput_ips() >= prev_ips,
                 "{}: replicate throughput must grow with channels",
                 net.name
             );
             assert!(
-                (r.latency_ns - base.latency_ns).abs() < 1e-6 * base.latency_ns,
+                (r.latency_ns - base_r.latency_ns).abs() < 1e-6 * base_r.latency_ns,
                 "{}: replication must not move latency",
                 net.name
             );
@@ -73,17 +77,22 @@ fn main() {
 
             // LayerSplit (needs ≥ 2 channels to split anything).
             if channels >= 2 {
-                let cfg = SimConfig::conservative(8)
-                    .with_grid(channels, 4)
-                    .with_shard(ShardPolicy::LayerSplit);
-                let r = session.report(&cfg).unwrap();
+                let r = job
+                    .report_variant(
+                        &mut session,
+                        &base
+                            .clone()
+                            .with_grid(channels, 4)
+                            .with_shard(ShardPolicy::LayerSplit),
+                    )
+                    .expect("simulate");
                 assert!(
-                    r.latency_ns > base.latency_ns,
+                    r.latency_ns > base_r.latency_ns,
                     "{}: layer-split must pay inter-channel hops",
                     net.name
                 );
                 assert!(
-                    r.cycle_ns <= base.cycle_ns * 1.001,
+                    r.cycle_ns <= base_r.cycle_ns * 1.001,
                     "{}: per-channel buses must not slow the cycle",
                     net.name
                 );
@@ -98,10 +107,15 @@ fn main() {
                 ]);
 
                 // Hybrid: half the channels replicate, each half splits.
-                let cfg = SimConfig::conservative(8)
-                    .with_grid(channels, 4)
-                    .with_shard(ShardPolicy::Hybrid { replicas: channels / 2 });
-                let r = session.report(&cfg).unwrap();
+                let r = job
+                    .report_variant(
+                        &mut session,
+                        &base
+                            .clone()
+                            .with_grid(channels, 4)
+                            .with_shard(ShardPolicy::Hybrid { replicas: channels / 2 }),
+                    )
+                    .expect("simulate");
                 assert_eq!(r.replicas, channels / 2);
                 t.row(&[
                     channels.to_string(),
@@ -131,15 +145,16 @@ fn main() {
 
     // Wall-clock cost of the plan→price→aggregate path itself.
     let mut b = Bencher::from_env();
-    let net = pim_dram::workloads::nets::resnet18();
-    let cfg = SimConfig::conservative(8)
+    let spec = Spec::builtin("resnet18")
+        .with_preset("conservative")
         .with_grid(8, 4)
         .with_shard(ShardPolicy::Hybrid { replicas: 4 });
-    b.bench("simulate(resnet18, hybrid:4 over 8ch)", || {
-        simulate(&net, &cfg).unwrap().scale_out.devices_total()
+    let job = Job::new(spec).expect("spec resolves");
+    b.bench("Job::report(resnet18, hybrid:4 over 8ch)", || {
+        job.report().unwrap().devices_total()
     });
-    let mut session = SimSession::new(&net);
+    let mut session = job.session();
     b.bench("session.report(resnet18, hybrid:4 over 8ch)", || {
-        session.report(&cfg).unwrap().devices_total()
+        session.report(job.config()).unwrap().devices_total()
     });
 }

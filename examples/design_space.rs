@@ -2,24 +2,26 @@
 //! (parallelism k, operand precision, subarray capacity, adder width) and
 //! print the throughput/footprint frontier for one network.
 //!
-//! The whole exploration runs through one incremental `SimSession`
-//! (DESIGN.md §8): per sweep point only the lowering + aggregation
-//! re-runs; per-layer mapping/pricing is cached by config fingerprint.
+//! Every sweep point is an `api::Spec` variant priced through one
+//! `api::Job` and its incremental session (DESIGN.md §8/§API): per point
+//! only the lowering + aggregation re-runs when the pricing inputs are
+//! unchanged; per-layer mapping/pricing is cached by config fingerprint.
 //!
 //! Run: `cargo run --release --example design_space [network]`
 
+use pim_dram::api::{Job, Spec};
 use pim_dram::gpu::GpuModel;
-use pim_dram::sim::{SimConfig, SimSession};
 use pim_dram::util::si;
 use pim_dram::util::table::{Align, Table};
-use pim_dram::workloads::nets;
 
 fn main() -> anyhow::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "alexnet".into());
-    let net = nets::by_name(&name)?;
-    let mut session = SimSession::new(&net);
+    let base = Spec::builtin(&name);
+    let job = Job::new(base.clone())?;
+    let net = job.network();
+    let mut session = job.session();
     let gpu = GpuModel::titan_xp();
-    let gpu_ms = gpu.network_time_s(&net, 4) * 1e3;
+    let gpu_ms = gpu.network_time_s(net, 4) * 1e3;
     println!(
         "network: {}  ({} layers, {} FLOP/image; ideal {} = {:.3} ms)\n",
         net.name,
@@ -37,8 +39,8 @@ fn main() -> anyhow::Result<()> {
         ]);
     for bits in [2usize, 4, 8, 16] {
         for k in [1usize, 2, 4, 8] {
-            let cfg = SimConfig::paper_favorable(bits).with_ks(vec![k]);
-            let r = match session.report(&cfg) {
+            let spec = base.clone().with_precision(bits).with_ks(vec![k]);
+            let r = match job.report_variant(&mut session, &spec) {
                 Ok(r) => r,
                 Err(e) => {
                     eprintln!("bits={bits} k={k}: {e}");
@@ -50,7 +52,7 @@ fn main() -> anyhow::Result<()> {
                 k.to_string(),
                 format!("{:.3}", r.cycle_ns / 1e6),
                 format!("{:.0}", r.replica_throughput_ips()),
-                format!("{:.2}x", r.speedup_vs(&gpu, &net, 4)),
+                format!("{:.2}x", r.speedup_vs(&gpu, net, 4)),
                 r.fully_resident.to_string(),
             ]);
         }
@@ -67,15 +69,16 @@ fn main() -> anyhow::Result<()> {
         (32, true),
         (32, false),
     ] {
-        let mut cfg = SimConfig::paper_favorable(8);
-        cfg.geometry.subarrays_per_bank = subs;
-        cfg.tree_per_subarray = tps;
-        let r = session.report(&cfg)?;
+        let spec = base
+            .clone()
+            .with_subarrays_per_bank(subs)
+            .with_tree_per_subarray(tps);
+        let r = job.report_variant(&mut session, &spec)?;
         t2.row(&[
             subs.to_string(),
             tps.to_string(),
             format!("{:.3}", r.cycle_ns / 1e6),
-            format!("{:.2}x", r.speedup_vs(&gpu, &net, 4)),
+            format!("{:.2}x", r.speedup_vs(&gpu, net, 4)),
         ]);
     }
     println!(

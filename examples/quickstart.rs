@@ -6,16 +6,16 @@
 //!    (subarray multiply → adder tree → accumulator → zero-point fixup).
 //! 3. If `make artifacts` has run: execute the same MVM through the
 //!    AOT-compiled Pallas kernel via PJRT and check all three agree.
-//! 4. Price AlexNet on the timing simulator vs the Titan Xp roofline.
+//! 4. Price AlexNet through the `api::Job` surface (Spec → Job → report)
+//!    vs the Titan Xp roofline.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use pim_dram::api::{Job, Spec};
 use pim_dram::arch::{adder_tree::AdderTree, bank_pim::BankPipeline};
 use pim_dram::gpu::GpuModel;
 use pim_dram::primitives::{self, PimSubarray};
-use pim_dram::sim::{simulate, SimConfig};
 use pim_dram::util::rng::Rng;
-use pim_dram::workloads::nets;
 
 fn main() -> anyhow::Result<()> {
     // --- 1. One in-DRAM multiplication, column-parallel ------------------
@@ -58,20 +58,20 @@ fn main() -> anyhow::Result<()> {
     // --- 3. Cross-check against the AOT Pallas kernel via PJRT -----------
     pjrt_crosscheck(&bp, &mut rng)?;
 
-    // --- 4. System-level timing vs GPU -----------------------------------
+    // --- 4. System-level timing vs GPU (Spec → Job → report) -------------
     println!("\n== 4. AlexNet on the timing simulator ==");
-    let net = nets::alexnet();
     let gpu = GpuModel::titan_xp();
-    for (label, cfg) in [
-        ("paper-favorable", SimConfig::paper_favorable(8)),
-        ("conservative   ", SimConfig::conservative(8)),
+    for (label, preset) in [
+        ("paper-favorable", "paper_favorable"),
+        ("conservative   ", "conservative"),
     ] {
-        let r = simulate(&net, &cfg)?;
+        let job = Job::new(Spec::builtin("alexnet").with_preset(preset))?;
+        let r = job.simulate_full()?;
         println!(
             "  {label}: {:.3} ms/image, speedup over ideal {}: {:.2}x",
             r.pipeline.cycle_ns / 1e6,
             gpu.name,
-            r.speedup_vs(&gpu, &net, 4)
+            r.speedup_vs(&gpu, job.network(), 4)
         );
     }
     Ok(())

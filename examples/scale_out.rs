@@ -1,39 +1,36 @@
-//! Scale-out walkthrough: one network, many PIM devices.
+//! Scale-out walkthrough: one network, many PIM devices — all through the
+//! `api::Job` surface.
 //!
 //! 1. Lower ResNet18 onto a 4-channel × 4-rank grid under each shard
-//!    policy and print the device plans.
+//!    policy and print the device plans (`Job::simulate_full().plan`).
 //! 2. Price the plans (plan → price → aggregate) and compare replication
 //!    against layer-splitting.
 //! 3. Serve a burst of synthetic requests from a pool of simulated
-//!    devices — one worker per replica — and show the dispatch counts.
+//!    devices via `Job::serve` — one worker per replica — and show the
+//!    dispatch counts.
 //!
 //! Run: `cargo run --release --example scale_out [network]`
 
-use pim_dram::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
-use pim_dram::mapping::MapConfig;
-use pim_dram::plan::{lower, ShardPolicy};
-use pim_dram::sim::{simulate, SimConfig};
+use pim_dram::api::{Job, ServeSpec, Spec};
+use pim_dram::plan::ShardPolicy;
 use pim_dram::util::table::{Align, Table};
-use pim_dram::workloads::nets;
 
 fn main() -> anyhow::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
-    let net = nets::by_name(&name)?;
-
-    // ---- 1. lowering ----------------------------------------------------
-    let cfg = SimConfig::conservative(8).with_grid(4, 4);
-    let mc = MapConfig {
-        geometry: cfg.geometry.clone(),
-        n_bits: cfg.n_bits,
-        ks: cfg.ks.clone(),
-    };
-    println!("== 1. lowering {} onto 4 channels × 4 ranks ==", net.name);
-    for policy in [
+    let base = Spec::builtin(&name).with_preset("conservative").with_grid(4, 4);
+    let policies = [
         ShardPolicy::Replicate,
         ShardPolicy::LayerSplit,
         ShardPolicy::Hybrid { replicas: 2 },
-    ] {
-        let plan = lower(&net, &mc, policy)?;
+    ];
+
+    // ---- 1. lowering ----------------------------------------------------
+    println!("== 1. lowering {name} onto 4 channels × 4 ranks ==");
+    let mut priced = Vec::new();
+    for policy in policies {
+        let job = Job::new(base.clone().with_shard(policy))?;
+        let r = job.simulate_full()?;
+        let plan = &r.plan;
         println!(
             "  {:<12} {} replica(s), {} device(s), {} hop(s)/image",
             plan.policy.to_string(),
@@ -55,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                 dev.shard.residuals.len()
             );
         }
+        priced.push(r);
     }
 
     // ---- 2. pricing ------------------------------------------------------
@@ -63,14 +61,9 @@ fn main() -> anyhow::Result<()> {
         .aligns(&[
             Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
         ]);
-    for policy in [
-        ShardPolicy::Replicate,
-        ShardPolicy::LayerSplit,
-        ShardPolicy::Hybrid { replicas: 2 },
-    ] {
-        let r = simulate(&net, &cfg.clone().with_shard(policy))?;
+    for r in &priced {
         t.row(&[
-            policy.to_string(),
+            r.plan.policy.to_string(),
             r.replicas().to_string(),
             format!("{:.1}", r.throughput_ips()),
             format!("{:.3}", r.latency_ns() / 1e6),
@@ -84,22 +77,14 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.render());
 
     // ---- 3. serving from the pool ---------------------------------------
-    let r = simulate(&net, &cfg)?;
-    let replicas = r.replicas();
+    let job = Job::new(base.with_serve(ServeSpec::default()))?;
+    let handle = job.serve()?;
+    let replicas = handle.report.replicas;
     println!("== 3. serving from {replicas} simulated replica device(s) ==");
-    let backend = SimBackend::from_sim(&r, &net, 8);
-    let server = MultiDeviceServer::start(
-        PoolConfig {
-            devices: replicas,
-            policy: Policy::RoundRobin,
-            batch_window: std::time::Duration::from_millis(2),
-        },
-        move |_| Ok(backend.clone()),
-    )?;
+    let server = &handle.server;
     let elems = server.image_elems();
     let requests = 64usize;
     std::thread::scope(|scope| {
-        let server = &server;
         let handles: Vec<_> = (0..4usize)
             .map(|t| {
                 scope.spawn(move || {
@@ -117,10 +102,10 @@ fn main() -> anyhow::Result<()> {
     println!("coordinator: {}", server.metrics().report());
     println!(
         "model: {:.1} img/s aggregate ({} replicas × {:.1} img/s)",
-        r.throughput_ips(),
+        handle.report.throughput_ips(),
         replicas,
-        r.replica_throughput_ips()
+        handle.report.replica_throughput_ips()
     );
-    server.shutdown();
+    handle.server.shutdown();
     Ok(())
 }

@@ -1,0 +1,241 @@
+//! The [`Job`] facade: one resolved spec, three ways to run it.
+//!
+//! `Job::new` validates and resolves a [`Spec`] into the existing
+//! machinery — the network (builtin or inline), the engine's `SimConfig`,
+//! and the serving options — **before any work runs**, so every
+//! downstream failure is a real simulation outcome, not a config typo.
+//!
+//! Read paths:
+//!   * [`Job::report`] — the scalar [`SimReport`] sweeps read.
+//!   * [`Job::simulate_full`] — the exact [`SimResult`] the legacy free
+//!     `sim::simulate()` returns, bitwise (results *and* errors):
+//!     `tests/api_equivalence.rs` is the correctness bar.
+//!   * [`Job::serve`] — a running `MultiDeviceServer` pool built from the
+//!     spec's [`ServeSpec`](super::spec::ServeSpec), priced by the same
+//!     session.
+//!
+//! For sweeps, [`Job::session`] hands out the incremental pricing session
+//! (DESIGN.md §8) over the job's network and [`Job::report_variant`]
+//! prices spec-level variations through it, reusing the per-layer cache
+//! across points exactly like the pre-`api` bench loops did.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
+use crate::plan::PlanError;
+use crate::sim::{SimConfig, SimReport, SimResult, SimSession};
+use crate::workloads::Network;
+
+use super::spec::Spec;
+
+/// The broadcast rule: a `run.ks` vector is either a single value (applied
+/// to every layer) or exactly one entry per layer of `net`.
+fn check_ks(net: &Network, ks: &[usize]) -> Result<()> {
+    anyhow::ensure!(
+        ks.len() == 1 || ks.len() == net.layers.len(),
+        "run.ks must have 1 or {} entries (one per layer of `{}`), got {}",
+        net.layers.len(),
+        net.name,
+        ks.len()
+    );
+    Ok(())
+}
+
+/// A validated, resolved spec — the only construction path for simulation
+/// and serving work.
+pub struct Job {
+    spec: Spec,
+    net: Network,
+    cfg: SimConfig,
+}
+
+impl Job {
+    /// Validate `spec` and resolve it against the network/device/plan
+    /// layers. Every value error (unknown network, bad preset, invalid
+    /// geometry, malformed ks vector) surfaces here.
+    pub fn new(spec: Spec) -> Result<Job> {
+        let net = spec.network.resolve()?;
+        check_ks(&net, &spec.run.ks)?;
+        let cfg = spec.resolve_config()?;
+        if let Some(serve) = &spec.serve {
+            serve.validate()?;
+        }
+        Ok(Job { spec, net, cfg })
+    }
+
+    /// Parse a versioned JSON spec document and resolve it.
+    pub fn from_json_text(text: &str) -> Result<Job> {
+        Job::new(Spec::from_json_text(text)?)
+    }
+
+    /// Parse the legacy TOML experiment format and resolve it.
+    pub fn from_toml(text: &str) -> Result<Job> {
+        Job::new(Spec::from_toml(text)?)
+    }
+
+    pub fn spec(&self) -> &Spec {
+        &self.spec
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// The resolved engine configuration.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// An incremental pricing session over this job's network, for sweeps
+    /// (see [`Job::report_variant`]).
+    pub fn session(&self) -> SimSession<'_> {
+        SimSession::new(&self.net)
+    }
+
+    /// Scalar report (the sweep read path). One-shot: uses a fresh
+    /// session; hold a [`Job::session`] to amortize across calls.
+    pub fn report(&self) -> Result<SimReport, PlanError> {
+        let mut session = self.session();
+        session.report(&self.cfg)
+    }
+
+    /// Full-fidelity result — bitwise-identical to the legacy free
+    /// `sim::simulate()` on the same resolved config, including errors.
+    pub fn simulate_full(&self) -> Result<SimResult, PlanError> {
+        let mut session = self.session();
+        session.simulate_full(&self.cfg)
+    }
+
+    /// Price a spec variant through a shared session. The variant must
+    /// keep this job's network (that is what the session's per-layer
+    /// cache is keyed under); device/run knobs are free to change.
+    pub fn report_variant(
+        &self,
+        session: &mut SimSession<'_>,
+        spec: &Spec,
+    ) -> Result<SimReport> {
+        anyhow::ensure!(
+            spec.network == self.spec.network,
+            "variant spec must keep the job's network `{}` (got `{}`)",
+            self.spec.network.name(),
+            spec.network.name()
+        );
+        check_ks(&self.net, &spec.run.ks)?;
+        let cfg = spec.resolve_config()?;
+        Ok(session.report(&cfg)?)
+    }
+
+    /// Start a pool of simulated PIM devices serving this job's plan: one
+    /// incremental session prices the plan summary *and* the worker
+    /// backend, then `coordinator::PoolConfig`/`MultiDeviceServer` are
+    /// built from the spec's serve options (defaults if absent).
+    pub fn serve(&self) -> Result<ServeHandle> {
+        let opts = self.spec.serve.clone().unwrap_or_default();
+        let mut session = self.session();
+        let report = session.report(&self.cfg)?;
+        let devices = opts.devices.unwrap_or(report.replicas).max(1);
+        let backend = SimBackend::from_session(&mut session, &self.cfg, opts.batch)?;
+        let server = MultiDeviceServer::start(
+            PoolConfig {
+                devices,
+                policy: opts.policy,
+                batch_window: Duration::from_millis(opts.batch_window_ms),
+            },
+            move |_| Ok(backend.clone()),
+        )?;
+        Ok(ServeHandle {
+            server,
+            report,
+            devices,
+            policy: opts.policy,
+            batch: opts.batch,
+        })
+    }
+}
+
+/// A running pool plus the timing-model report it was priced from.
+pub struct ServeHandle {
+    pub server: MultiDeviceServer,
+    /// The report the pool's service time came from.
+    pub report: SimReport,
+    /// Workers actually started (spec value, or one per plan replica).
+    pub devices: usize,
+    pub policy: Policy,
+    pub batch: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ShardPolicy;
+    use crate::sim::simulate;
+
+    #[test]
+    fn job_resolves_builtin_spec() {
+        let job = Job::new(Spec::builtin("pimnet").with_preset("conservative")).unwrap();
+        assert_eq!(job.network().name, "pimnet");
+        assert_eq!(job.config().n_bits, 8);
+        assert!(!job.config().tree_per_subarray);
+    }
+
+    #[test]
+    fn job_report_matches_simulate() {
+        let spec = Spec::builtin("alexnet")
+            .with_preset("paper_favorable")
+            .with_ks(vec![2]);
+        let job = Job::new(spec).unwrap();
+        let fresh = simulate(job.network(), job.config()).unwrap();
+        let rep = job.report().unwrap();
+        assert_eq!(rep.cycle_ns.to_bits(), fresh.pipeline.cycle_ns.to_bits());
+        let full = job.simulate_full().unwrap();
+        assert_eq!(full.total_aaps, fresh.total_aaps);
+    }
+
+    #[test]
+    fn validation_runs_before_work() {
+        // Unknown network names the accepted set.
+        let err = Job::new(Spec::builtin("lenet")).unwrap_err();
+        assert!(err.to_string().contains("alexnet"), "{err}");
+        // Bad preset.
+        let err = Job::new(Spec::builtin("pimnet").with_preset("fast")).unwrap_err();
+        assert!(err.to_string().contains("paper_favorable"), "{err}");
+        // Wrong per-layer ks length (pimnet has 4 layers).
+        let err =
+            Job::new(Spec::builtin("pimnet").with_ks(vec![1, 2, 4])).unwrap_err();
+        assert!(err.to_string().contains("run.ks"), "{err}");
+        // Zero parallelism.
+        let err = Job::new(Spec::builtin("pimnet").with_ks(vec![0])).unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+        // Invalid geometry override.
+        let mut spec = Spec::builtin("pimnet");
+        spec.device.rows = Some(4);
+        let err = Job::new(spec).unwrap_err();
+        assert!(err.to_string().contains("rows"), "{err}");
+    }
+
+    #[test]
+    fn report_variant_shares_the_cache() {
+        let base = Spec::builtin("vgg16").with_preset("conservative");
+        let job = Job::new(base.clone()).unwrap();
+        let mut session = job.session();
+        job.report_variant(&mut session, &base).unwrap();
+        let (_, misses) = session.cache_stats();
+        for channels in [2usize, 4] {
+            job.report_variant(
+                &mut session,
+                &base.clone().with_grid(channels, 4).with_shard(ShardPolicy::LayerSplit),
+            )
+            .unwrap();
+        }
+        let (_, misses_after) = session.cache_stats();
+        assert_eq!(misses, misses_after, "grid/shard variants must not re-price");
+
+        // A different network is rejected.
+        let err = job
+            .report_variant(&mut session, &Spec::builtin("alexnet"))
+            .unwrap_err();
+        assert!(err.to_string().contains("network"), "{err}");
+    }
+}

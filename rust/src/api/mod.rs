@@ -1,0 +1,35 @@
+//! `pim::api` — the one versioned Spec → Job → Report surface
+//! (DESIGN.md §API).
+//!
+//! The paper's pipeline (map → lower onto the channel × rank grid →
+//! price → aggregate) used to be reachable through four divergent front
+//! doors: free `sim::simulate()`, `SimSession`, the coordinator's
+//! `PoolConfig`/`MultiDeviceServer::start`, and the stringly-typed CLI
+//! flags plus ad-hoc TOML keys. This module replaces all of them as the
+//! *construction* path:
+//!
+//!   * [`Spec`] and its parts ([`NetworkSpec`], [`DeviceSpec`],
+//!     [`ShardSpec`], [`RunSpec`], [`ServeSpec`]) are pure data,
+//!     JSON-round-trippable under `"api_version": 1`, validated with
+//!     actionable errors before any work runs.
+//!   * [`Job`] resolves a spec into the plan/session machinery:
+//!     [`Job::report`] → `SimReport`, [`Job::simulate_full`] →
+//!     `SimResult` (bitwise-equal to the legacy path — results and
+//!     errors), [`Job::serve`] → a running `MultiDeviceServer` pool.
+//!
+//! The old entry points remain as thin shims: `sim::simulate` is the
+//! engine primitive `Job` delegates to (and the equivalence reference),
+//! `config::load_experiment` parses TOML through [`Spec::from_toml`], and
+//! `SimBackend::from_sim` stays for callers that already priced a result.
+//! Canonical example documents live in `examples/specs/`;
+//! `tests/spec_roundtrip.rs` keeps them parseable and byte-stable, and
+//! `pim-dram spec` validates or reprints them from the CLI.
+
+pub mod job;
+pub mod spec;
+
+pub use job::{Job, ServeHandle};
+pub use spec::{
+    parse_policy, policy_name, DeviceSpec, NetworkSpec, RunSpec, ServeSpec,
+    ShardSpec, Spec, API_VERSION, BUILTIN_NETWORKS, POLICIES, PRESETS, SHARD_FORMS,
+};

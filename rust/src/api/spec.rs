@@ -1,0 +1,1062 @@
+//! Pure-data experiment specifications (DESIGN.md §API).
+//!
+//! A [`Spec`] is the one typed description of "what to run" shared by the
+//! CLI, the TOML config loader, the benches and the serving stack. It is
+//! plain data — no handles, no threads, no borrowed state — and it
+//! round-trips through JSON under a top-level `"api_version"`:
+//!
+//! ```json
+//! {
+//!   "api_version": 1,
+//!   "device": { "preset": "conservative", "channels": 2 },
+//!   "images": 64,
+//!   "network": "vgg16",
+//!   "run": { "ks": [1], "precision": 8, "shard": "layersplit" },
+//!   "serve": { "batch": 8, "batch_window_ms": 2, "policy": "rr" }
+//! }
+//! ```
+//!
+//! * [`NetworkSpec`] — a builtin name **or** an inline layer list (lifting
+//!   the four-hardcoded-nets limit of `workloads::nets`).
+//! * [`DeviceSpec`] — timing/geometry preset plus explicit overrides,
+//!   including the channels × ranks grid.
+//! * [`RunSpec`] / [`ShardSpec`] — parallelism vector, operand precision
+//!   and the shard policy lowering uses.
+//! * [`ServeSpec`] — pool size, batch, dispatch policy for `Job::serve`.
+//!
+//! Serialization is **canonical**: object keys are byte-sorted, optional
+//! fields are omitted when unset, and [`Spec::to_json_text`] uses
+//! [`Json::pretty`] — so parse → serialize is byte-identical for canonical
+//! documents (`tests/spec_roundtrip.rs` holds `examples/specs/` to this).
+//! Parsing is **strict**: unknown keys, bad types and out-of-range values
+//! are errors that name the field and the accepted values, raised before
+//! any simulation work runs. Documents with a different `api_version` are
+//! rejected outright — schema changes must bump [`API_VERSION`] and teach
+//! the parser both shapes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::toml::{Toml, Value};
+use crate::coordinator::Policy;
+use crate::plan::ShardPolicy;
+use crate::sim::SimConfig;
+use crate::util::json::Json;
+use crate::workloads::{nets, LayerDesc, LayerKind, Network, Residual};
+
+pub use crate::workloads::nets::NAMES as BUILTIN_NETWORKS;
+
+/// The one spec-schema version this build reads and writes.
+pub const API_VERSION: i64 = 1;
+
+/// Device preset names [`DeviceSpec::preset`] accepts.
+pub const PRESETS: [&str; 2] = ["paper_favorable", "conservative"];
+
+/// Canonical dispatch-policy spellings [`ServeSpec::policy`] accepts.
+pub const POLICIES: [&str; 3] = ["rr", "least", "two"];
+
+/// Shard-policy grammar ([`ShardSpec`]).
+pub const SHARD_FORMS: &str = "replicate|layersplit|hybrid:<n>";
+
+/// Parse a dispatch-policy spelling (long forms accepted, canonical short
+/// forms serialized).
+pub fn parse_policy(s: &str) -> Result<Policy> {
+    match s {
+        "rr" | "roundrobin" => Ok(Policy::RoundRobin),
+        "least" | "leastloaded" => Ok(Policy::LeastLoaded),
+        "two" | "twochoices" => Ok(Policy::TwoChoices),
+        other => anyhow::bail!(
+            "unknown policy `{other}` (accepted: {})",
+            POLICIES.join("|")
+        ),
+    }
+}
+
+/// The canonical spelling of a dispatch policy.
+pub fn policy_name(p: Policy) -> &'static str {
+    match p {
+        Policy::RoundRobin => "rr",
+        Policy::LeastLoaded => "least",
+        Policy::TwoChoices => "two",
+    }
+}
+
+/// Reject object keys outside `accepted` — a typo'd field must not
+/// silently fall back to its default.
+fn check_keys(what: &str, obj: &BTreeMap<String, Json>, accepted: &[&str]) -> Result<()> {
+    for k in obj.keys() {
+        anyhow::ensure!(
+            accepted.contains(&k.as_str()),
+            "unknown {what} field `{k}` (accepted: {})",
+            accepted.join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn num(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+// ---- NetworkSpec ----------------------------------------------------------
+
+/// The workload: a builtin evaluation network or an inline layer list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetworkSpec {
+    /// One of [`BUILTIN_NETWORKS`]; JSON form is the bare name string.
+    Builtin(String),
+    /// A custom network described in place; JSON form is
+    /// `{"name": .., "layers": [..], "residuals": [..]}`.
+    Inline(Network),
+}
+
+impl NetworkSpec {
+    pub fn name(&self) -> &str {
+        match self {
+            NetworkSpec::Builtin(n) => n,
+            NetworkSpec::Inline(net) => &net.name,
+        }
+    }
+
+    /// Materialize the network, validating an inline description (shape
+    /// chain, residual bounds, per-layer geometry) before any work runs.
+    pub fn resolve(&self) -> Result<Network> {
+        match self {
+            NetworkSpec::Builtin(name) => nets::by_name(name),
+            NetworkSpec::Inline(net) => {
+                validate_inline(net)?;
+                Ok(net.clone())
+            }
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<NetworkSpec> {
+        match v {
+            Json::Str(name) => Ok(NetworkSpec::Builtin(name.clone())),
+            Json::Obj(obj) => {
+                check_keys("network", obj, &["layers", "name", "residuals"])?;
+                let name = v.req_str("name")?.to_string();
+                let layers = v
+                    .req_arr("layers")?
+                    .iter()
+                    .map(layer_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let residuals = match v.get("residuals") {
+                    None => Vec::new(),
+                    Some(r) => r
+                        .as_arr()
+                        .context("network `residuals` must be an array")?
+                        .iter()
+                        .map(residual_from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                Ok(NetworkSpec::Inline(Network { name, layers, residuals }))
+            }
+            _ => anyhow::bail!(
+                "`network` must be a builtin name ({}) or an inline object \
+                 with name/layers/residuals",
+                BUILTIN_NETWORKS.join("|")
+            ),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            NetworkSpec::Builtin(name) => Json::Str(name.clone()),
+            NetworkSpec::Inline(net) => {
+                let mut o = BTreeMap::new();
+                o.insert(
+                    "layers".to_string(),
+                    Json::Arr(net.layers.iter().map(layer_to_json).collect()),
+                );
+                o.insert("name".to_string(), Json::Str(net.name.clone()));
+                o.insert(
+                    "residuals".to_string(),
+                    Json::Arr(net.residuals.iter().map(residual_to_json).collect()),
+                );
+                Json::Obj(o)
+            }
+        }
+    }
+}
+
+/// Inline-network validation: every check that would otherwise surface as
+/// a panic or a confusing mapper error deep inside a run.
+fn validate_inline(net: &Network) -> Result<()> {
+    anyhow::ensure!(!net.name.is_empty(), "inline network needs a non-empty name");
+    anyhow::ensure!(
+        !net.layers.is_empty(),
+        "inline network `{}` needs at least one layer",
+        net.name
+    );
+    for l in &net.layers {
+        match l.kind {
+            LayerKind::Conv { in_h, in_w, in_ch, out_ch, kh, kw, stride, pad } => {
+                anyhow::ensure!(
+                    in_h >= 1
+                        && in_w >= 1
+                        && in_ch >= 1
+                        && out_ch >= 1
+                        && kh >= 1
+                        && kw >= 1
+                        && stride >= 1,
+                    "layer `{}`: conv dimensions and stride must be >= 1",
+                    l.name
+                );
+                anyhow::ensure!(
+                    in_h + 2 * pad >= kh && in_w + 2 * pad >= kw,
+                    "layer `{}`: {kh}x{kw} kernel exceeds the padded \
+                     {in_h}x{in_w} input",
+                    l.name
+                );
+            }
+            LayerKind::Linear { in_features, out_features } => {
+                anyhow::ensure!(
+                    in_features >= 1 && out_features >= 1,
+                    "layer `{}`: linear features must be >= 1",
+                    l.name
+                );
+            }
+        }
+    }
+    net.validate()
+}
+
+fn layer_from_json(v: &Json) -> Result<LayerDesc> {
+    let obj = v.as_obj().context("each network layer must be an object")?;
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .context("each network layer needs a `name` string")?
+        .to_string();
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .with_context(|| format!("layer `{name}`: missing `kind` (conv|linear)"))?;
+    let u = |key: &str| -> Result<usize> {
+        v.get(key).and_then(Json::as_usize).with_context(|| {
+            format!("layer `{name}`: field `{key}` must be a non-negative integer")
+        })
+    };
+    let b = |key: &str, default: bool| -> Result<bool> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(j) => j
+                .as_bool()
+                .with_context(|| format!("layer `{name}`: `{key}` must be a boolean")),
+        }
+    };
+    match kind {
+        "conv" => {
+            check_keys(
+                "conv layer",
+                obj,
+                &[
+                    "gap", "in_ch", "in_h", "in_w", "kh", "kind", "kw", "name",
+                    "out_ch", "pad", "pool", "relu", "stride",
+                ],
+            )?;
+            Ok(LayerDesc {
+                name: name.clone(),
+                kind: LayerKind::Conv {
+                    in_h: u("in_h")?,
+                    in_w: u("in_w")?,
+                    in_ch: u("in_ch")?,
+                    out_ch: u("out_ch")?,
+                    kh: u("kh")?,
+                    kw: u("kw")?,
+                    stride: u("stride")?,
+                    pad: match v.get("pad") {
+                        None => 0,
+                        Some(_) => u("pad")?,
+                    },
+                },
+                pool: b("pool", false)?,
+                gap: b("gap", false)?,
+                relu: b("relu", true)?,
+            })
+        }
+        "linear" => {
+            check_keys(
+                "linear layer",
+                obj,
+                &["in_features", "kind", "name", "out_features", "relu"],
+            )?;
+            Ok(LayerDesc {
+                name: name.clone(),
+                kind: LayerKind::Linear {
+                    in_features: u("in_features")?,
+                    out_features: u("out_features")?,
+                },
+                pool: false,
+                gap: false,
+                relu: b("relu", false)?,
+            })
+        }
+        other => anyhow::bail!(
+            "layer `{name}`: unknown kind `{other}` (accepted: conv, linear)"
+        ),
+    }
+}
+
+fn layer_to_json(l: &LayerDesc) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(l.name.clone()));
+    match l.kind {
+        LayerKind::Conv { in_h, in_w, in_ch, out_ch, kh, kw, stride, pad } => {
+            o.insert("kind".to_string(), Json::Str("conv".to_string()));
+            o.insert("in_h".to_string(), num(in_h));
+            o.insert("in_w".to_string(), num(in_w));
+            o.insert("in_ch".to_string(), num(in_ch));
+            o.insert("out_ch".to_string(), num(out_ch));
+            o.insert("kh".to_string(), num(kh));
+            o.insert("kw".to_string(), num(kw));
+            o.insert("stride".to_string(), num(stride));
+            o.insert("pad".to_string(), num(pad));
+            o.insert("pool".to_string(), Json::Bool(l.pool));
+            o.insert("gap".to_string(), Json::Bool(l.gap));
+            o.insert("relu".to_string(), Json::Bool(l.relu));
+        }
+        LayerKind::Linear { in_features, out_features } => {
+            o.insert("kind".to_string(), Json::Str("linear".to_string()));
+            o.insert("in_features".to_string(), num(in_features));
+            o.insert("out_features".to_string(), num(out_features));
+            o.insert("relu".to_string(), Json::Bool(l.relu));
+        }
+    }
+    Json::Obj(o)
+}
+
+fn residual_from_json(v: &Json) -> Result<Residual> {
+    let obj = v
+        .as_obj()
+        .context("each residual must be an object with `from` and `into`")?;
+    check_keys("residual", obj, &["from", "into"])?;
+    let idx = |key: &str| -> Result<usize> {
+        v.get(key).and_then(Json::as_usize).with_context(|| {
+            format!("residual `{key}` must be a layer index (non-negative integer)")
+        })
+    };
+    Ok(Residual { from_layer: idx("from")?, into_layer: idx("into")? })
+}
+
+fn residual_to_json(r: &Residual) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("from".to_string(), num(r.from_layer));
+    o.insert("into".to_string(), num(r.into_layer));
+    Json::Obj(o)
+}
+
+// ---- DeviceSpec -----------------------------------------------------------
+
+/// The device: a timing/geometry preset plus explicit overrides. `None`
+/// fields inherit the preset's value, exactly as the TOML loader and the
+/// CLI flags always did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceSpec {
+    /// One of [`PRESETS`].
+    pub preset: String,
+    pub channels: Option<usize>,
+    pub ranks_per_channel: Option<usize>,
+    pub banks_per_rank: Option<usize>,
+    pub subarrays_per_bank: Option<usize>,
+    pub rows: Option<usize>,
+    pub cols: Option<usize>,
+    pub internal_bus_bits: Option<usize>,
+    pub adder_inputs: Option<usize>,
+    pub tree_per_subarray: Option<bool>,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        DeviceSpec {
+            preset: "paper_favorable".to_string(),
+            channels: None,
+            ranks_per_channel: None,
+            banks_per_rank: None,
+            subarrays_per_bank: None,
+            rows: None,
+            cols: None,
+            internal_bus_bits: None,
+            adder_inputs: None,
+            tree_per_subarray: None,
+        }
+    }
+}
+
+impl DeviceSpec {
+    /// Resolve to a [`SimConfig`] at `n_bits`: preset first, then each
+    /// override, then the geometry/arch validity checks — the same
+    /// sequence (and therefore the same resulting config, field for
+    /// field) as the legacy CLI and TOML paths.
+    pub fn resolve(&self, n_bits: usize) -> Result<SimConfig> {
+        let mut cfg = match self.preset.as_str() {
+            "paper_favorable" => SimConfig::paper_favorable(n_bits),
+            "conservative" => SimConfig::conservative(n_bits),
+            other => anyhow::bail!(
+                "unknown device preset `{other}` (accepted: {})",
+                PRESETS.join("|")
+            ),
+        };
+        if let Some(v) = self.channels {
+            cfg.geometry.channels = v;
+        }
+        if let Some(v) = self.ranks_per_channel {
+            cfg.geometry.ranks_per_channel = v;
+        }
+        if let Some(v) = self.banks_per_rank {
+            cfg.geometry.banks_per_rank = v;
+        }
+        if let Some(v) = self.subarrays_per_bank {
+            cfg.geometry.subarrays_per_bank = v;
+        }
+        if let Some(v) = self.rows {
+            cfg.geometry.rows = v;
+        }
+        if let Some(v) = self.cols {
+            cfg.geometry.cols = v;
+        }
+        if let Some(v) = self.internal_bus_bits {
+            cfg.timing.internal_bus_bits = v;
+        }
+        if let Some(v) = self.adder_inputs {
+            cfg.adder_inputs = v;
+        }
+        if let Some(v) = self.tree_per_subarray {
+            cfg.tree_per_subarray = v;
+        }
+        cfg.geometry.validate()?;
+        anyhow::ensure!(
+            cfg.adder_inputs.is_power_of_two(),
+            "device.adder_inputs must be a power of two, got {}",
+            cfg.adder_inputs
+        );
+        Ok(cfg)
+    }
+
+    fn from_json(v: &Json) -> Result<DeviceSpec> {
+        let obj = v.as_obj().context("`device` must be an object")?;
+        check_keys(
+            "device",
+            obj,
+            &[
+                "adder_inputs", "banks_per_rank", "channels", "cols",
+                "internal_bus_bits", "preset", "ranks_per_channel", "rows",
+                "subarrays_per_bank", "tree_per_subarray",
+            ],
+        )?;
+        let mut d = DeviceSpec::default();
+        if let Some(p) = v.get("preset") {
+            d.preset = p
+                .as_str()
+                .context("device.preset must be a string")?
+                .to_string();
+        }
+        let u = |key: &str| -> Result<Option<usize>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(j) => j.as_usize().map(Some).with_context(|| {
+                    format!("device.{key} must be a non-negative integer")
+                }),
+            }
+        };
+        d.channels = u("channels")?;
+        d.ranks_per_channel = u("ranks_per_channel")?;
+        d.banks_per_rank = u("banks_per_rank")?;
+        d.subarrays_per_bank = u("subarrays_per_bank")?;
+        d.rows = u("rows")?;
+        d.cols = u("cols")?;
+        d.internal_bus_bits = u("internal_bus_bits")?;
+        d.adder_inputs = u("adder_inputs")?;
+        if let Some(t) = v.get("tree_per_subarray") {
+            d.tree_per_subarray =
+                Some(t.as_bool().context("device.tree_per_subarray must be a boolean")?);
+        }
+        Ok(d)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("preset".to_string(), Json::Str(self.preset.clone()));
+        let mut opt = |key: &str, v: Option<usize>| {
+            if let Some(v) = v {
+                o.insert(key.to_string(), num(v));
+            }
+        };
+        opt("channels", self.channels);
+        opt("ranks_per_channel", self.ranks_per_channel);
+        opt("banks_per_rank", self.banks_per_rank);
+        opt("subarrays_per_bank", self.subarrays_per_bank);
+        opt("rows", self.rows);
+        opt("cols", self.cols);
+        opt("internal_bus_bits", self.internal_bus_bits);
+        opt("adder_inputs", self.adder_inputs);
+        if let Some(t) = self.tree_per_subarray {
+            o.insert("tree_per_subarray".to_string(), Json::Bool(t));
+        }
+        Json::Obj(o)
+    }
+}
+
+// ---- ShardSpec / RunSpec --------------------------------------------------
+
+/// How the network is sharded across the channel × rank grid. JSON form is
+/// the policy spelling (`replicate`, `layersplit`, `hybrid:<n>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardSpec {
+    pub policy: ShardPolicy,
+}
+
+impl ShardSpec {
+    pub fn parse(s: &str) -> Result<ShardSpec> {
+        Ok(ShardSpec { policy: ShardPolicy::parse(s)? })
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.policy)
+    }
+}
+
+/// One simulation run: operand precision, the paper's P vector, sharding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunSpec {
+    /// Operand bit width n.
+    pub precision: usize,
+    /// Per-layer parallelism (broadcast if length 1) — the paper's P factor.
+    pub ks: Vec<usize>,
+    pub shard: ShardSpec,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec { precision: 8, ks: vec![1], shard: ShardSpec::default() }
+    }
+}
+
+impl RunSpec {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (1..=64).contains(&self.precision),
+            "run.precision must be in 1..=64 bits, got {}",
+            self.precision
+        );
+        anyhow::ensure!(!self.ks.is_empty(), "run.ks must not be empty");
+        anyhow::ensure!(
+            self.ks.iter().all(|&k| k >= 1),
+            "run.ks entries must be >= 1, got {:?}",
+            self.ks
+        );
+        Ok(())
+    }
+
+    fn from_json(v: &Json) -> Result<RunSpec> {
+        let obj = v.as_obj().context("`run` must be an object")?;
+        check_keys("run", obj, &["ks", "precision", "shard"])?;
+        let mut run = RunSpec::default();
+        if let Some(k) = v.get("ks") {
+            let ints = k.i64_vec().context("run.ks must be an array of integers")?;
+            anyhow::ensure!(
+                ints.iter().all(|&x| x >= 1),
+                "run.ks entries must be >= 1, got {ints:?}"
+            );
+            run.ks = ints.into_iter().map(|x| x as usize).collect();
+        }
+        if let Some(p) = v.get("precision") {
+            run.precision = p
+                .as_usize()
+                .context("run.precision must be a positive integer")?;
+        }
+        if let Some(s) = v.get("shard") {
+            run.shard =
+                ShardSpec::parse(s.as_str().context("run.shard must be a string")?)?;
+        }
+        Ok(run)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("ks".to_string(), Json::Arr(self.ks.iter().map(|&k| num(k)).collect()));
+        o.insert("precision".to_string(), num(self.precision));
+        o.insert("shard".to_string(), Json::Str(self.shard.to_string()));
+        Json::Obj(o)
+    }
+}
+
+// ---- ServeSpec ------------------------------------------------------------
+
+/// Pool configuration for `Job::serve`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeSpec {
+    /// Worker/device count; `None` serves one worker per plan replica.
+    pub devices: Option<usize>,
+    /// Fixed device batch (requests are padded up to it).
+    pub batch: usize,
+    /// Dispatch policy across devices.
+    pub policy: Policy,
+    /// Max time a request waits for its batch to fill before a partial
+    /// batch is flushed.
+    pub batch_window_ms: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            devices: None,
+            batch: 8,
+            policy: Policy::RoundRobin,
+            batch_window_ms: 2,
+        }
+    }
+}
+
+impl ServeSpec {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.batch >= 1, "serve.batch must be >= 1");
+        if let Some(d) = self.devices {
+            anyhow::ensure!(d >= 1, "serve.devices must be >= 1");
+        }
+        Ok(())
+    }
+
+    fn from_json(v: &Json) -> Result<ServeSpec> {
+        let obj = v.as_obj().context("`serve` must be an object")?;
+        check_keys("serve", obj, &["batch", "batch_window_ms", "devices", "policy"])?;
+        let mut s = ServeSpec::default();
+        if let Some(d) = v.get("devices") {
+            s.devices =
+                Some(d.as_usize().context("serve.devices must be a positive integer")?);
+        }
+        if let Some(b) = v.get("batch") {
+            s.batch = b.as_usize().context("serve.batch must be a positive integer")?;
+        }
+        if let Some(p) = v.get("policy") {
+            s.policy = parse_policy(p.as_str().context("serve.policy must be a string")?)?;
+        }
+        if let Some(w) = v.get("batch_window_ms") {
+            s.batch_window_ms = w
+                .as_usize()
+                .context("serve.batch_window_ms must be a non-negative integer")?
+                as u64;
+        }
+        Ok(s)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("batch".to_string(), num(self.batch));
+        o.insert("batch_window_ms".to_string(), num(self.batch_window_ms as usize));
+        if let Some(d) = self.devices {
+            o.insert("devices".to_string(), num(d));
+        }
+        o.insert("policy".to_string(), Json::Str(policy_name(self.policy).to_string()));
+        Json::Obj(o)
+    }
+}
+
+// ---- Spec -----------------------------------------------------------------
+
+/// The top-level versioned spec: everything `Job` needs to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spec {
+    pub network: NetworkSpec,
+    pub device: DeviceSpec,
+    pub run: RunSpec,
+    /// Present when the spec also describes a serving pool.
+    pub serve: Option<ServeSpec>,
+    /// Synthetic traffic volume for makespan reporting / serving drivers.
+    pub images: usize,
+}
+
+impl Spec {
+    pub fn new(network: NetworkSpec) -> Spec {
+        Spec {
+            network,
+            device: DeviceSpec::default(),
+            run: RunSpec::default(),
+            serve: None,
+            images: 64,
+        }
+    }
+
+    /// Spec over a builtin network with all defaults.
+    pub fn builtin(name: &str) -> Spec {
+        Spec::new(NetworkSpec::Builtin(name.to_string()))
+    }
+
+    /// Spec over an inline network description.
+    pub fn inline(net: Network) -> Spec {
+        Spec::new(NetworkSpec::Inline(net))
+    }
+
+    pub fn with_preset(mut self, preset: &str) -> Spec {
+        self.device.preset = preset.to_string();
+        self
+    }
+
+    pub fn with_precision(mut self, bits: usize) -> Spec {
+        self.run.precision = bits;
+        self
+    }
+
+    pub fn with_ks(mut self, ks: Vec<usize>) -> Spec {
+        self.run.ks = ks;
+        self
+    }
+
+    /// Resize the device grid (scale-out knob).
+    pub fn with_grid(mut self, channels: usize, ranks_per_channel: usize) -> Spec {
+        self.device.channels = Some(channels);
+        self.device.ranks_per_channel = Some(ranks_per_channel);
+        self
+    }
+
+    pub fn with_shard(mut self, policy: ShardPolicy) -> Spec {
+        self.run.shard = ShardSpec { policy };
+        self
+    }
+
+    pub fn with_subarrays_per_bank(mut self, subarrays: usize) -> Spec {
+        self.device.subarrays_per_bank = Some(subarrays);
+        self
+    }
+
+    pub fn with_tree_per_subarray(mut self, tree_per_subarray: bool) -> Spec {
+        self.device.tree_per_subarray = Some(tree_per_subarray);
+        self
+    }
+
+    pub fn with_serve(mut self, serve: ServeSpec) -> Spec {
+        self.serve = Some(serve);
+        self
+    }
+
+    /// Value-level validation (no network resolution). `Job::new` runs
+    /// this plus the network-dependent checks.
+    pub fn validate(&self) -> Result<()> {
+        self.run.validate()?;
+        if let Some(serve) = &self.serve {
+            serve.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Resolve device + run into the engine's [`SimConfig`].
+    pub fn resolve_config(&self) -> Result<SimConfig> {
+        self.run.validate()?;
+        let mut cfg = self.device.resolve(self.run.precision)?;
+        cfg.ks = self.run.ks.clone();
+        cfg.shard = self.run.shard.policy;
+        Ok(cfg)
+    }
+
+    /// Parse a versioned spec document. Rejects any `api_version` other
+    /// than [`API_VERSION`] and any unknown field, before resolution.
+    pub fn from_json_text(text: &str) -> Result<Spec> {
+        let v = Json::parse(text)?;
+        let obj = v.as_obj().context("spec must be a JSON object")?;
+        check_keys(
+            "spec",
+            obj,
+            &["api_version", "device", "images", "network", "run", "serve"],
+        )?;
+        let version = v.get("api_version").and_then(Json::as_i64).context(
+            "spec is missing `api_version` (this build writes api_version 1)",
+        )?;
+        anyhow::ensure!(
+            version == API_VERSION,
+            "unsupported api_version {version}: this build supports \
+             api_version {API_VERSION}"
+        );
+        let network = NetworkSpec::from_json(v.get("network").context(
+            "spec is missing `network` (a builtin name or an inline object)",
+        )?)?;
+        let device = match v.get("device") {
+            None => DeviceSpec::default(),
+            Some(d) => DeviceSpec::from_json(d)?,
+        };
+        let run = match v.get("run") {
+            None => RunSpec::default(),
+            Some(r) => RunSpec::from_json(r)?,
+        };
+        let serve = match v.get("serve") {
+            None => None,
+            Some(s) => Some(ServeSpec::from_json(s)?),
+        };
+        let images = match v.get("images") {
+            None => 64,
+            Some(i) => i.as_usize().context("`images` must be a non-negative integer")?,
+        };
+        let spec = Spec { network, device, run, serve, images };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("api_version".to_string(), Json::Num(API_VERSION as f64));
+        o.insert("device".to_string(), self.device.to_json());
+        o.insert("images".to_string(), num(self.images));
+        o.insert("network".to_string(), self.network.to_json());
+        o.insert("run".to_string(), self.run.to_json());
+        if let Some(s) = &self.serve {
+            o.insert("serve".to_string(), s.to_json());
+        }
+        Json::Obj(o)
+    }
+
+    /// Canonical pretty JSON (the byte-exact form `examples/specs/` uses).
+    pub fn to_json_text(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    /// Deserialize the legacy TOML experiment format into a spec — the
+    /// `config` subcommand's shim path. Key names and semantics (including
+    /// the `max(1)` clamp on `map.ks`) are unchanged from the pre-`api`
+    /// loader.
+    pub fn from_toml(text: &str) -> Result<Spec> {
+        let t = Toml::parse(text)?;
+        let net_name = t.get_str("network", "pimnet").to_string();
+        let network = nets::by_name(&net_name)?;
+        let mut spec = Spec::builtin(&net_name);
+        spec.device.preset = t.get_str("preset", "paper_favorable").to_string();
+        spec.run.precision = t.get_usize("n_bits", 8);
+        if let Some(ks) = t.get("map.ks").and_then(Value::as_int_array) {
+            anyhow::ensure!(
+                ks.len() == 1 || ks.len() == network.layers.len(),
+                "map.ks must have 1 or {} entries, got {}",
+                network.layers.len(),
+                ks.len()
+            );
+            spec.run.ks = ks.iter().map(|&v| v.max(1) as usize).collect();
+        }
+        if let Some(s) = t.get("shard").and_then(Value::as_str) {
+            spec.run.shard = ShardSpec::parse(s)?;
+        }
+        spec.device.channels = t.get("dram.channels").and_then(Value::as_usize);
+        spec.device.ranks_per_channel =
+            t.get("dram.ranks_per_channel").and_then(Value::as_usize);
+        spec.device.subarrays_per_bank =
+            t.get("dram.subarrays_per_bank").and_then(Value::as_usize);
+        spec.device.cols = t.get("dram.cols").and_then(Value::as_usize);
+        spec.device.rows = t.get("dram.rows").and_then(Value::as_usize);
+        spec.device.internal_bus_bits =
+            t.get("dram.internal_bus_bits").and_then(Value::as_usize);
+        spec.device.adder_inputs = t.get("arch.adder_inputs").and_then(Value::as_usize);
+        spec.device.tree_per_subarray =
+            t.get("arch.tree_per_subarray").and_then(Value::as_bool);
+        spec.images = t.get_usize("images", 64);
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_inline() -> Network {
+        Network {
+            name: "tinynet".to_string(),
+            layers: vec![
+                LayerDesc::conv("c1", (8, 8), 1, 8, 3, 1, 1, true),
+                LayerDesc::linear("fc1", 128, 32, true),
+                LayerDesc::linear("fc2", 32, 10, false),
+            ],
+            residuals: vec![],
+        }
+    }
+
+    #[test]
+    fn builtin_spec_roundtrips() {
+        let spec = Spec::builtin("vgg16")
+            .with_preset("conservative")
+            .with_grid(2, 4)
+            .with_shard(ShardPolicy::LayerSplit)
+            .with_serve(ServeSpec {
+                devices: Some(3),
+                policy: Policy::LeastLoaded,
+                ..ServeSpec::default()
+            });
+        let text = spec.to_json_text();
+        let parsed = Spec::from_json_text(&text).unwrap();
+        assert_eq!(parsed, spec);
+        // Canonical: serialize is a fixed point.
+        assert_eq!(parsed.to_json_text(), text);
+    }
+
+    #[test]
+    fn inline_spec_roundtrips_and_resolves() {
+        let spec = Spec::inline(tiny_inline()).with_ks(vec![2]);
+        let text = spec.to_json_text();
+        let parsed = Spec::from_json_text(&text).unwrap();
+        assert_eq!(parsed, spec);
+        let net = parsed.network.resolve().unwrap();
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.layers[0].out_elems(), 128);
+    }
+
+    #[test]
+    fn residuals_roundtrip() {
+        let mut net = Network {
+            name: "res".to_string(),
+            layers: vec![
+                LayerDesc::conv("c1", (8, 8), 1, 8, 3, 1, 1, false),
+                LayerDesc::conv("c2", (8, 8), 8, 8, 3, 1, 1, false),
+                LayerDesc::conv("c3", (8, 8), 8, 8, 3, 1, 1, false),
+            ],
+            residuals: vec![Residual { from_layer: 0, into_layer: 2 }],
+        };
+        net.validate().unwrap();
+        let spec = Spec::inline(net.clone());
+        let parsed = Spec::from_json_text(&spec.to_json_text()).unwrap();
+        assert_eq!(parsed.network.resolve().unwrap().residuals, net.residuals);
+        // A backwards residual is rejected at resolve time.
+        net.residuals[0] = Residual { from_layer: 2, into_layer: 1 };
+        assert!(Spec::inline(net).network.resolve().is_err());
+    }
+
+    #[test]
+    fn version_gate() {
+        let good = r#"{"api_version": 1, "network": "pimnet"}"#;
+        Spec::from_json_text(good).unwrap();
+        let err = Spec::from_json_text(r#"{"api_version": 2, "network": "pimnet"}"#)
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("api_version") && msg.contains('2'), "{msg}");
+        let err = Spec::from_json_text(r#"{"network": "pimnet"}"#).unwrap_err();
+        assert!(err.to_string().contains("api_version"), "{err}");
+    }
+
+    #[test]
+    fn unknown_fields_are_errors() {
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet", "nets": "x"}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("`nets`"), "{err}");
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet", "run": {"kss": [1]}}"#,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("`kss`") && msg.contains("ks"), "{msg}");
+    }
+
+    #[test]
+    fn value_errors_are_actionable() {
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet", "run": {"ks": [0]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet", "serve": {"policy": "rand"}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("rr"), "{err}");
+        let mut spec = Spec::builtin("pimnet");
+        spec.run.precision = 0;
+        assert!(spec.resolve_config().is_err());
+        spec.run.precision = 8;
+        spec.device.adder_inputs = Some(100);
+        let err = spec.resolve_config().unwrap_err();
+        assert!(err.to_string().contains("power of two"), "{err}");
+    }
+
+    #[test]
+    fn inline_validation_catches_bad_geometry() {
+        // Kernel larger than the padded input would underflow the mapper.
+        let net = Network {
+            name: "bad".to_string(),
+            layers: vec![LayerDesc::conv("c1", (4, 4), 1, 8, 11, 4, 0, false)],
+            residuals: vec![],
+        };
+        let err = NetworkSpec::Inline(net).resolve().unwrap_err();
+        assert!(err.to_string().contains("kernel"), "{err}");
+        // A kernel wider than the *unpadded* input is fine when padding
+        // compensates: H=4, K=5, p=1 → (4 + 2 - 5)/1 + 1 = 2×2 output.
+        let net = Network {
+            name: "padded".to_string(),
+            layers: vec![LayerDesc::conv("c1", (4, 4), 1, 8, 5, 1, 1, false)],
+            residuals: vec![],
+        };
+        let resolved = NetworkSpec::Inline(net).resolve().unwrap();
+        assert_eq!(resolved.layers[0].conv_out_hw(), Some((2, 2)));
+        assert_eq!(resolved.layers[0].out_elems(), 2 * 2 * 8);
+        // Broken shape chain.
+        let net = Network {
+            name: "bad2".to_string(),
+            layers: vec![
+                LayerDesc::conv("c1", (8, 8), 1, 8, 3, 1, 1, false),
+                LayerDesc::linear("fc", 100, 10, false),
+            ],
+            residuals: vec![],
+        };
+        assert!(NetworkSpec::Inline(net).resolve().is_err());
+        // Empty layer list.
+        let net =
+            Network { name: "empty".to_string(), layers: vec![], residuals: vec![] };
+        let err = NetworkSpec::Inline(net).resolve().unwrap_err();
+        assert!(err.to_string().contains("at least one layer"), "{err}");
+    }
+
+    #[test]
+    fn terse_layers_default_optionals() {
+        let terse = r#"{
+            "api_version": 1,
+            "network": {
+                "name": "t",
+                "layers": [
+                    {"kind": "conv", "name": "c1", "in_h": 8, "in_w": 8,
+                     "in_ch": 1, "out_ch": 8, "kh": 3, "kw": 3, "stride": 1,
+                     "pad": 1, "pool": true},
+                    {"kind": "linear", "name": "fc", "in_features": 128,
+                     "out_features": 10}
+                ]
+            }
+        }"#;
+        let spec = Spec::from_json_text(terse).unwrap();
+        let net = spec.network.resolve().unwrap();
+        assert!(net.layers[0].relu && !net.layers[0].gap);
+        assert!(!net.layers[1].relu);
+        assert_eq!(spec, Spec::from_json_text(&spec.to_json_text()).unwrap());
+    }
+
+    #[test]
+    fn toml_resolves_like_the_legacy_loader() {
+        let spec = Spec::from_toml(
+            "preset = \"conservative\"\nnetwork = \"alexnet\"\nn_bits = 4\n\
+             [map]\nks = [2]\n[arch]\nadder_inputs = 1024\n",
+        )
+        .unwrap();
+        assert_eq!(spec.network.name(), "alexnet");
+        assert_eq!(spec.run.precision, 4);
+        assert_eq!(spec.run.ks, vec![2]);
+        let cfg = spec.resolve_config().unwrap();
+        assert_eq!(cfg.adder_inputs, 1024);
+        assert!(!cfg.tree_per_subarray);
+        // Scale-out keys.
+        let spec = Spec::from_toml(
+            "network = \"pimnet\"\nshard = \"layersplit\"\n\
+             [dram]\nchannels = 2\nranks_per_channel = 2\n",
+        )
+        .unwrap();
+        let cfg = spec.resolve_config().unwrap();
+        assert_eq!(cfg.geometry.channels, 2);
+        assert_eq!(cfg.geometry.ranks_per_channel, 2);
+        assert_eq!(cfg.shard, ShardPolicy::LayerSplit);
+    }
+
+    #[test]
+    fn policy_spellings() {
+        assert_eq!(parse_policy("rr").unwrap(), Policy::RoundRobin);
+        assert_eq!(parse_policy("leastloaded").unwrap(), Policy::LeastLoaded);
+        assert_eq!(parse_policy("two").unwrap(), Policy::TwoChoices);
+        assert!(parse_policy("rand").is_err());
+        for p in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+            assert_eq!(parse_policy(policy_name(p)).unwrap(), p);
+        }
+    }
+}

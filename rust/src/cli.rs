@@ -1,23 +1,29 @@
 //! CLI argument parsing and subcommand implementations (clap is
 //! unavailable offline — DESIGN.md S17).
+//!
+//! Every spec-driven subcommand resolves its flags into an [`api::Spec`]
+//! (`--spec <file.json>` loads one first; individual flags override it)
+//! and constructs all simulation/serving work through [`api::Job`] — the
+//! per-command flag plumbing of the pre-`api` CLI is gone. Unknown flags
+//! are an error that lists the accepted set, and the help text is
+//! generated from the spec definitions (builtin networks, presets,
+//! policies, shard forms) so it cannot drift from what the API accepts.
 
 use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
+use crate::api::{self, Job, ShardSpec, Spec};
 use crate::circuit::{run_monte_carlo, simulate_and, AndInputs, CircuitParams};
-use crate::config;
-use crate::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
 use crate::gpu::{roofline::roofline_points, GpuModel};
 use crate::mapping::{map_network, MapConfig};
-use crate::plan::ShardPolicy;
-use crate::sim::{simulate, SimConfig, SimSession};
 use crate::util::rng::Rng;
 use crate::util::si;
 use crate::util::table::{Align, Table};
 use crate::workloads::nets;
 
-/// Parsed command line: subcommand, positionals, `--key value` flags.
+/// Parsed command line: subcommand, positionals, `--key value` /
+/// `--key=value` flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
@@ -26,6 +32,10 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse `argv`. Both `--key value` and `--key=value` are accepted;
+    /// a value may start with a single `-` (e.g. a negative offset). A
+    /// `--key` followed by another `--flag` (or by nothing) is a boolean
+    /// set to `"true"`. A repeated flag keeps its last value.
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
@@ -33,12 +43,18 @@ impl Args {
             args.command = cmd.clone();
         }
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
-                let val = match it.peek() {
-                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
-                    _ => "true".to_string(),
-                };
-                args.flags.insert(key.to_string(), val);
+            if let Some(body) = a.strip_prefix("--") {
+                anyhow::ensure!(!body.is_empty(), "stray `--` in arguments");
+                if let Some((key, val)) = body.split_once('=') {
+                    anyhow::ensure!(!key.is_empty(), "empty flag name in `{a}`");
+                    args.flags.insert(key.to_string(), val.to_string());
+                } else {
+                    let val = match it.peek() {
+                        Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                        _ => "true".to_string(),
+                    };
+                    args.flags.insert(body.to_string(), val);
+                }
             } else {
                 args.positional.push(a.clone());
             }
@@ -58,82 +74,178 @@ impl Args {
                 .with_context(|| format!("--{key} expects an integer, got `{v}`")),
         }
     }
+
+    /// Error on any flag outside `accepted` — a typo'd flag must not
+    /// silently fall back to its default.
+    pub fn expect_flags(&self, accepted: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !accepted.contains(&key.as_str()) {
+                let list = if accepted.is_empty() {
+                    "this command takes no flags".to_string()
+                } else {
+                    format!(
+                        "accepted: {}",
+                        accepted
+                            .iter()
+                            .map(|a| format!("--{a}"))
+                            .collect::<Vec<_>>()
+                            .join(" ")
+                    )
+                };
+                anyhow::bail!("unknown flag `--{key}` for `{}` ({list})", self.command);
+            }
+        }
+        Ok(())
+    }
 }
 
-pub const USAGE: &str = "\
+/// Flags shared by every spec-driven subcommand.
+const SPEC_FLAGS: &[&str] =
+    &["spec", "network", "preset", "bits", "k", "channels", "ranks", "shard"];
+const OPTIMIZE_FLAGS: &[&str] = &[
+    "spec", "network", "preset", "bits", "k", "channels", "ranks", "shard",
+    "balanced",
+];
+const SERVE_FLAGS: &[&str] = &[
+    "spec", "network", "preset", "bits", "k", "channels", "ranks", "shard",
+    "backend", "devices", "policy", "images", "batch",
+];
+const SPEC_CMD_FLAGS: &[&str] = &["print"];
+const ROOFLINE_FLAGS: &[&str] = &["network"];
+const CIRCUIT_FLAGS: &[&str] = &["samples"];
+
+/// Build the help text from the spec definitions so it cannot drift from
+/// what `api::Spec` accepts.
+pub fn usage() -> String {
+    format!(
+        "\
 pim-dram — PIM-DRAM system simulator + coordinator (paper reproduction)
 
 USAGE: pim-dram <COMMAND> [flags]
 
+Spec-driven commands (simulate, map, optimize, serve) accept
+  --spec <file.json>   load an api::Spec (api_version {version}); other
+                       flags override it
+  --network <{nets}>
+  --preset <{presets}>  --bits <n>  --k <k>
+  --channels <c>  --ranks <r>  --shard <{shard}>
+
 COMMANDS:
   simulate   Run the PIM timing simulator on a network
-             --network <alexnet|vgg16|resnet18|pimnet>  --bits <n>  --k <k>
-             --preset <paper_favorable|conservative>
-             --channels <c>  --ranks <r>  --shard <replicate|layersplit|hybrid:<n>>
-  map        Print the Algorithm-1 mapping for a network (same flags)
-  optimize   Plan the per-layer parallelism vector (mapping optimizer)
-             --network <name>  --bits <n>  --preset <...>  --balanced
+  map        Print the Algorithm-1 mapping and the device plan
+  optimize   Plan the per-layer parallelism vector  --balanced
+  spec       Validate spec JSON files: pim-dram spec [--print] <file>...
+             (--print emits the canonical form examples/specs/ uses)
   roofline   Fig 1: Titan Xp roofline for a network  --network <name>
   circuit    Fig 14/15: AND transient + Monte Carlo  --samples <n>
   tables     Tables I/II: bank peripheral area & power
-  config     Run an experiment from a TOML file: pim-dram config <file>
+  config     Run an experiment from a TOML or spec-JSON file:
+             pim-dram config <file>
   serve      Serve batched classification from a multi-device pool
-             --backend <sim|pjrt>  --devices <n>  --policy <rr|least|two>
-             --images <n>  --batch <b>  (+ simulate flags for sim devices;
+             --backend <sim|pjrt>  --devices <n>  --policy <{policies}>
+             --images <n>  --batch <b>  (+ spec flags for sim devices;
              pjrt needs `make artifacts` and a `--features pjrt` build)
   help       Show this help
-";
+
+Unknown flags are an error; the message lists the command's accepted set.
+",
+        version = api::API_VERSION,
+        nets = api::BUILTIN_NETWORKS.join("|"),
+        presets = api::PRESETS.join("|"),
+        shard = api::SHARD_FORMS,
+        policies = api::POLICIES.join("|"),
+    )
+}
 
 /// Entry point used by main.rs.
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
-        "simulate" => cmd_simulate(&args),
-        "map" => cmd_map(&args),
-        "optimize" => cmd_optimize(&args),
-        "roofline" => cmd_roofline(&args),
-        "circuit" => cmd_circuit(&args),
-        "tables" => cmd_tables(),
-        "config" => cmd_config(&args),
-        "serve" => cmd_serve(&args),
+        "simulate" => {
+            args.expect_flags(SPEC_FLAGS)?;
+            cmd_simulate(&args)
+        }
+        "map" => {
+            args.expect_flags(SPEC_FLAGS)?;
+            cmd_map(&args)
+        }
+        "optimize" => {
+            args.expect_flags(OPTIMIZE_FLAGS)?;
+            cmd_optimize(&args)
+        }
+        "spec" => {
+            args.expect_flags(SPEC_CMD_FLAGS)?;
+            cmd_spec(&args)
+        }
+        "roofline" => {
+            args.expect_flags(ROOFLINE_FLAGS)?;
+            cmd_roofline(&args)
+        }
+        "circuit" => {
+            args.expect_flags(CIRCUIT_FLAGS)?;
+            cmd_circuit(&args)
+        }
+        "tables" => {
+            args.expect_flags(&[])?;
+            cmd_tables()
+        }
+        "config" => {
+            args.expect_flags(&[])?;
+            cmd_config(&args)
+        }
+        "serve" => {
+            args.expect_flags(SERVE_FLAGS)?;
+            cmd_serve(&args)
+        }
         "help" | "" => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
-        other => anyhow::bail!("unknown command `{other}`\n\n{USAGE}"),
+        other => anyhow::bail!("unknown command `{other}`\n\n{}", usage()),
     }
 }
 
-fn sim_config_from(args: &Args) -> Result<SimConfig> {
-    let bits = args.flag_usize("bits", 8)?;
-    let mut cfg = match args.flag("preset", "paper_favorable").as_str() {
-        "paper_favorable" => SimConfig::paper_favorable(bits),
-        "conservative" => SimConfig::conservative(bits),
-        other => anyhow::bail!("unknown preset `{other}`"),
+/// Resolve the spec-driven flags into an [`api::Spec`]: start from
+/// `--spec <file.json>` (or the default spec over `default_network`), then
+/// apply individual flag overrides on top.
+fn spec_from(args: &Args, default_network: &str) -> Result<Spec> {
+    let mut spec = match args.flags.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            Spec::from_json_text(&text)
+                .map_err(|e| e.context(format!("parsing {path}")))?
+        }
+        None => Spec::builtin(default_network),
     };
-    cfg.ks = vec![args.flag_usize("k", 1)?.max(1)];
-    cfg.geometry.channels = args.flag_usize("channels", cfg.geometry.channels)?;
-    cfg.geometry.ranks_per_channel =
-        args.flag_usize("ranks", cfg.geometry.ranks_per_channel)?;
+    if let Some(name) = args.flags.get("network") {
+        spec.network = api::NetworkSpec::Builtin(name.clone());
+    }
+    if let Some(preset) = args.flags.get("preset") {
+        spec.device.preset = preset.clone();
+    }
+    if args.flags.contains_key("bits") {
+        spec.run.precision = args.flag_usize("bits", 8)?;
+    }
+    if args.flags.contains_key("k") {
+        spec.run.ks = vec![args.flag_usize("k", 1)?.max(1)];
+    }
+    if args.flags.contains_key("channels") {
+        spec.device.channels = Some(args.flag_usize("channels", 1)?);
+    }
+    if args.flags.contains_key("ranks") {
+        spec.device.ranks_per_channel = Some(args.flag_usize("ranks", 1)?);
+    }
     if let Some(s) = args.flags.get("shard") {
-        cfg.shard = ShardPolicy::parse(s)?;
+        spec.run.shard = ShardSpec::parse(s)?;
     }
-    Ok(cfg)
-}
-
-fn policy_from(args: &Args) -> Result<Policy> {
-    match args.flag("policy", "rr").as_str() {
-        "rr" | "roundrobin" => Ok(Policy::RoundRobin),
-        "least" | "leastloaded" => Ok(Policy::LeastLoaded),
-        "two" | "twochoices" => Ok(Policy::TwoChoices),
-        other => anyhow::bail!("unknown policy `{other}` (try rr|least|two)"),
-    }
+    Ok(spec)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let net = nets::by_name(&args.flag("network", "pimnet"))?;
-    let cfg = sim_config_from(args)?;
-    let r = simulate(&net, &cfg)?;
+    let job = Job::new(spec_from(args, "pimnet")?)?;
+    let net = job.network();
+    let r = job.simulate_full()?;
     let gpu = GpuModel::titan_xp();
 
     let mut t = Table::new(&[
@@ -186,21 +298,22 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!(
         "ideal-GPU ({}) time: {:.3} ms  →  PIM speedup: {:.2}x",
         gpu.name,
-        gpu.network_time_s(&net, 4) * 1e3,
-        r.speedup_vs(&gpu, &net, 4)
+        gpu.network_time_s(net, 4) * 1e3,
+        r.speedup_vs(&gpu, net, 4)
     );
     Ok(())
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
-    let net = nets::by_name(&args.flag("network", "pimnet"))?;
-    let cfg = sim_config_from(args)?;
+    let job = Job::new(spec_from(args, "pimnet")?)?;
+    let net = job.network();
+    let cfg = job.config();
     let mc = MapConfig {
         geometry: cfg.geometry.clone(),
         n_bits: cfg.n_bits,
         ks: cfg.ks.clone(),
     };
-    let m = map_network(&net, &mc)?;
+    let m = map_network(net, &mc)?;
     let mut t = Table::new(&[
         "layer", "mac_size", "macs", "k", "sub/grp(ideal)", "sub(used)", "waves",
         "util%", "footprint",
@@ -231,7 +344,7 @@ fn cmd_map(args: &Args) -> Result<()> {
         m.fully_resident()
     );
     // Device lowering across the channel × rank grid.
-    let plan = crate::plan::lower(&net, &mc, cfg.shard)?;
+    let plan = crate::plan::lower(net, &mc, cfg.shard)?;
     println!(
         "plan ({}): {} replica(s), {} device(s) on {} channel(s) × {} rank(s)",
         plan.policy,
@@ -260,14 +373,16 @@ fn cmd_map(args: &Args) -> Result<()> {
 
 fn cmd_optimize(args: &Args) -> Result<()> {
     use crate::mapping::optimizer::{plan_ks, Objective};
-    let net = nets::by_name(&args.flag("network", "pimnet"))?;
-    let cfg = sim_config_from(args)?;
+    let spec = spec_from(args, "pimnet")?;
+    let job = Job::new(spec.clone())?;
+    let net = job.network();
+    let cfg = job.config();
     let objective = if args.flags.contains_key("balanced") {
         Objective::Balanced
     } else {
         Objective::MinResidentK
     };
-    let plan = plan_ks(&net, &cfg.geometry, cfg.n_bits, objective);
+    let plan = plan_ks(net, &cfg.geometry, cfg.n_bits, objective);
 
     let mut t = Table::new(&["layer", "k", "resident"])
         .aligns(&[Align::Left, Align::Right, Align::Right]);
@@ -285,18 +400,54 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             plan.overflow_layers
         );
     }
-    // Simulate the plan vs the naive k=1 vector — one incremental session,
-    // so layers whose planned k stays 1 are priced once, not twice.
-    let mut session = SimSession::new(&net);
-    let naive = session.simulate_full(&cfg)?;
-    let planned = session.simulate_full(&cfg.clone().with_ks(plan.ks.clone()))?;
+    // Simulate the plan vs the spec's own k vector — one incremental
+    // session, so layers whose planned k is unchanged are priced once.
+    let mut session = job.session();
+    let naive = job.report_variant(&mut session, &spec)?;
+    let planned =
+        job.report_variant(&mut session, &spec.clone().with_ks(plan.ks.clone()))?;
     println!(
-        "naive k=1: {:.3} ms/img   planned: {:.3} ms/img ({:+.1}%)",
-        naive.pipeline.cycle_ns / 1e6,
-        planned.pipeline.cycle_ns / 1e6,
-        100.0 * (planned.pipeline.cycle_ns - naive.pipeline.cycle_ns)
-            / naive.pipeline.cycle_ns
+        "spec ks {:?}: {:.3} ms/img   planned: {:.3} ms/img ({:+.1}%)",
+        spec.run.ks,
+        naive.cycle_ns / 1e6,
+        planned.cycle_ns / 1e6,
+        100.0 * (planned.cycle_ns - naive.cycle_ns) / naive.cycle_ns
     );
+    Ok(())
+}
+
+/// Validate spec files and show what they resolve to; `--print` emits the
+/// canonical JSON form instead (regenerates `examples/specs/` content).
+fn cmd_spec(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "usage: pim-dram spec [--print] <file.json>..."
+    );
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        let spec = Spec::from_json_text(&text)
+            .map_err(|e| e.context(format!("parsing {path}")))?;
+        let job = Job::new(spec.clone())
+            .map_err(|e| e.context(format!("validating {path}")))?;
+        if args.flags.contains_key("print") {
+            print!("{}", spec.to_json_text());
+        } else {
+            let cfg = job.config();
+            println!(
+                "{path}: ok — network {} ({} layers), preset {}, {}b, \
+                 grid {}x{}, shard {}{}",
+                job.network().name,
+                job.network().layers.len(),
+                spec.device.preset,
+                cfg.n_bits,
+                cfg.geometry.channels,
+                cfg.geometry.ranks_per_channel,
+                cfg.shard,
+                if spec.serve.is_some() { ", servable" } else { "" }
+            );
+        }
+    }
     Ok(())
 }
 
@@ -367,22 +518,29 @@ fn cmd_config(args: &Args) -> Result<()> {
     let path = args
         .positional
         .first()
-        .context("usage: pim-dram config <file.toml>")?;
+        .context("usage: pim-dram config <file.toml|file.json>")?;
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {path}"))?;
-    let e = config::load_experiment(&text)?;
-    let r = simulate(&e.network, &e.sim)?;
+    let job = if path.ends_with(".json") {
+        Job::from_json_text(&text)
+    } else {
+        Job::from_toml(&text)
+    }
+    .map_err(|e| e.context(format!("resolving {path}")))?;
+    let net = job.network();
+    let images = job.spec().images;
+    let r = job.simulate_full()?;
     let gpu = GpuModel::titan_xp();
     println!(
         "{}: latency {:.3} ms, {:.1} img/s ({} replicas), makespan({} imgs) \
          {:.3} ms, speedup {:.2}x",
-        e.network.name,
+        net.name,
         r.latency_ns() / 1e6,
         r.throughput_ips(),
         r.replicas(),
-        e.images,
-        r.pipeline.makespan_ns(e.images) / 1e6,
-        r.speedup_vs(&gpu, &e.network, 4)
+        images,
+        r.pipeline.makespan_ns(images) / 1e6,
+        r.speedup_vs(&gpu, net, 4)
     );
     Ok(())
 }
@@ -390,46 +548,53 @@ fn cmd_config(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     match args.flag("backend", "sim").as_str() {
         "sim" => cmd_serve_sim(args),
-        "pjrt" => cmd_serve_pjrt(args),
+        "pjrt" => {
+            // The artifact pool ignores the sim-device spec knobs; accepting
+            // them would be exactly the silent fallback expect_flags exists
+            // to prevent.
+            args.expect_flags(&["backend", "devices", "policy", "images"])?;
+            cmd_serve_pjrt(args)
+        }
         other => anyhow::bail!("unknown backend `{other}` (try sim|pjrt)"),
     }
 }
 
-/// Serve synthetic traffic from a pool of *simulated* PIM devices: each
-/// worker stands in for one replica of the planned network, priced by the
-/// timing model. Hermetic — no artifacts, no PJRT.
+/// Serve synthetic traffic from a pool of *simulated* PIM devices via
+/// `Job::serve`: each worker stands in for one replica of the planned
+/// network, priced by the timing model. Hermetic — no artifacts, no PJRT.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
-    let net = nets::by_name(&args.flag("network", "pimnet"))?;
-    let cfg = sim_config_from(args)?;
-    // One incremental session prices the plan summary *and* the pool
-    // backend; the second derivation is a per-layer cache hit.
-    let mut session = SimSession::new(&net);
-    let r = session.simulate_full(&cfg)?;
-    let devices = args.flag_usize("devices", r.replicas())?.max(1);
-    let policy = policy_from(args)?;
-    let images = args.flag_usize("images", 64)?;
-    let batch = args.flag_usize("batch", 8)?.max(1);
+    let mut spec = spec_from(args, "pimnet")?;
+    let mut serve = spec.serve.clone().unwrap_or_default();
+    if args.flags.contains_key("devices") {
+        serve.devices = Some(args.flag_usize("devices", 1)?.max(1));
+    }
+    if let Some(p) = args.flags.get("policy") {
+        serve.policy = api::parse_policy(p)?;
+    }
+    if args.flags.contains_key("batch") {
+        serve.batch = args.flag_usize("batch", 8)?.max(1);
+    }
+    spec.serve = Some(serve);
+    let images = args.flag_usize("images", spec.images)?;
+    let job = Job::new(spec)?;
+    let handle = job.serve()?;
 
     println!(
         "plan: {} under {} → {} replica(s); serving from {} simulated \
          device(s), policy {:?}, batch {}",
-        net.name, r.scale_out.policy, r.replicas(), devices, policy, batch
+        job.network().name,
+        handle.report.policy,
+        handle.report.replicas,
+        handle.devices,
+        handle.policy,
+        handle.batch
     );
-    let backend = SimBackend::from_session(&mut session, &cfg, batch)?;
-    let server = MultiDeviceServer::start(
-        PoolConfig {
-            devices,
-            policy,
-            batch_window: std::time::Duration::from_millis(2),
-        },
-        move |_| Ok(backend.clone()),
-    )?;
 
+    let server = &handle.server;
     let elems = server.image_elems();
     let clients = 4usize;
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| -> Result<()> {
-        let server = &server;
         let mut handles = Vec::new();
         for t in 0..clients {
             handles.push(scope.spawn(move || -> Result<()> {
@@ -458,11 +623,11 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     println!(
         "timing model: {:.1} img/s aggregate over {} replica(s) \
          ({:.3} ms/img per replica)",
-        r.throughput_ips(),
-        r.replicas(),
-        r.pipeline.cycle_ns / 1e6
+        handle.report.throughput_ips(),
+        handle.report.replicas,
+        handle.report.cycle_ns / 1e6
     );
-    server.shutdown();
+    handle.server.shutdown();
     Ok(())
 }
 
@@ -489,7 +654,7 @@ fn cmd_serve_pjrt(args: &Args) -> Result<()> {
     );
     let server = InferenceServer::start(ServerConfig {
         devices,
-        policy: policy_from(args)?,
+        policy: api::parse_policy(&args.flag("policy", "rr"))?,
         ..ServerConfig::default()
     })?;
     let mut correct = 0;
@@ -532,6 +697,11 @@ mod tests {
         Args::parse(&v).unwrap()
     }
 
+    fn run_str(s: &str) -> Result<()> {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        run(&v)
+    }
+
     #[test]
     fn parses_flags_and_positionals() {
         let a = parse("simulate --network vgg16 --bits 4 extra --verbose");
@@ -543,9 +713,45 @@ mod tests {
     }
 
     #[test]
+    fn key_equals_value_and_dashed_values() {
+        let a = parse("simulate --network=vgg16 --offset -5 --delta=-7 --flag");
+        assert_eq!(a.flag("network", ""), "vgg16");
+        assert_eq!(a.flag("offset", ""), "-5");
+        assert_eq!(a.flag("delta", ""), "-7");
+        assert_eq!(a.flag("flag", "false"), "true");
+        // Last value wins on repeats; `=` can carry values with `=` in them.
+        let a = parse("simulate --k 1 --k=2 --path=a=b");
+        assert_eq!(a.flag("k", ""), "2");
+        assert_eq!(a.flag("path", ""), "a=b");
+    }
+
+    #[test]
+    fn malformed_flags_rejected() {
+        for bad in ["simulate --", "simulate --=3"] {
+            let v: Vec<String> = bad.split_whitespace().map(String::from).collect();
+            assert!(Args::parse(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
     fn bad_int_flag_errors() {
         let a = parse("simulate --bits abc");
         assert!(a.flag_usize("bits", 8).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error_listing_accepted() {
+        let err = run_str("simulate --nework vgg16").unwrap_err().to_string();
+        assert!(err.contains("--nework"), "{err}");
+        assert!(err.contains("--network"), "{err}");
+        let err = run_str("tables --verbose").unwrap_err().to_string();
+        assert!(err.contains("no flags"), "{err}");
+        // The PJRT pool ignores sim-device knobs, so they are rejected
+        // up front rather than silently dropped.
+        let err = run_str("serve --backend pjrt --batch 16")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--batch"), "{err}");
     }
 
     #[test]
@@ -553,7 +759,7 @@ mod tests {
         for cmd in [
             "simulate --network pimnet",
             "simulate --network alexnet --preset conservative --bits 4 --k 2",
-            "simulate --network pimnet --preset conservative --channels 2 --ranks 4",
+            "simulate --network=pimnet --preset=conservative --channels 2 --ranks 4",
             "simulate --network vgg16 --preset conservative --channels 2 --ranks 2 \
              --shard layersplit",
             "simulate --network alexnet --preset conservative --channels 4 \
@@ -569,9 +775,24 @@ mod tests {
              --devices 2 --images 12 --batch 4",
             "help",
         ] {
-            let v: Vec<String> = cmd.split_whitespace().map(String::from).collect();
-            run(&v).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));
+            run_str(cmd).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));
         }
+    }
+
+    #[test]
+    fn spec_files_drive_the_cli() {
+        let spec = Spec::builtin("pimnet").with_preset("conservative");
+        let path = std::env::temp_dir()
+            .join(format!("pim_cli_spec_{}.json", std::process::id()));
+        std::fs::write(&path, spec.to_json_text()).unwrap();
+        let p = path.display();
+        run_str(&format!("spec {p}")).unwrap();
+        run_str(&format!("spec --print {p}")).unwrap();
+        run_str(&format!("simulate --spec {p}")).unwrap();
+        // Flags override the file.
+        run_str(&format!("simulate --spec {p} --network alexnet --k 2")).unwrap();
+        run_str(&format!("config {p}")).unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -25,11 +25,18 @@
 //! ```
 //!
 //! Every key is optional; unspecified keys inherit from the preset.
+//!
+//! Since the `api` redesign this module is a thin shim: the TOML keys
+//! deserialize into an [`crate::api::Spec`] (`Spec::from_toml`) and
+//! resolve through [`crate::api::Job`], so the TOML path and every other
+//! front door share one validation and resolution sequence. Prefer
+//! `api::Job::from_toml` in new code; [`load_experiment`] remains for
+//! callers that want the flattened [`Experiment`] view.
 
 pub mod toml;
 
 use crate::sim::SimConfig;
-use crate::workloads::{nets, Network};
+use crate::workloads::Network;
 
 pub use toml::{Toml, TomlError, Value};
 
@@ -42,54 +49,17 @@ pub struct Experiment {
     pub images: usize,
 }
 
-/// Resolve an experiment from config text.
+/// Resolve an experiment from config text. Deprecated-style shim: parses
+/// and validates through `api::Spec`/`api::Job` — key names, defaults and
+/// error behavior are unchanged from the pre-`api` loader.
 pub fn load_experiment(text: &str) -> anyhow::Result<Experiment> {
-    let t = Toml::parse(text)?;
-    let preset = t.get_str("preset", "paper_favorable");
-    let n_bits = t.get_usize("n_bits", 8);
-    let mut sim = match preset {
-        "paper_favorable" => SimConfig::paper_favorable(n_bits),
-        "conservative" => SimConfig::conservative(n_bits),
-        other => anyhow::bail!("unknown preset `{other}`"),
-    };
-
-    let network = nets::by_name(t.get_str("network", "pimnet"))?;
-
-    if let Some(ks) = t.get("map.ks").and_then(Value::as_int_array) {
-        anyhow::ensure!(
-            ks.len() == 1 || ks.len() == network.layers.len(),
-            "map.ks must have 1 or {} entries, got {}",
-            network.layers.len(),
-            ks.len()
-        );
-        sim.ks = ks.iter().map(|&v| v.max(1) as usize).collect();
-    }
-
-    if let Some(s) = t.get("shard").and_then(Value::as_str) {
-        sim.shard = crate::plan::ShardPolicy::parse(s)?;
-    }
-    sim.geometry.channels = t.get_usize("dram.channels", sim.geometry.channels);
-    sim.geometry.ranks_per_channel =
-        t.get_usize("dram.ranks_per_channel", sim.geometry.ranks_per_channel);
-    sim.geometry.subarrays_per_bank =
-        t.get_usize("dram.subarrays_per_bank", sim.geometry.subarrays_per_bank);
-    sim.geometry.cols = t.get_usize("dram.cols", sim.geometry.cols);
-    sim.geometry.rows = t.get_usize("dram.rows", sim.geometry.rows);
-    sim.timing.internal_bus_bits =
-        t.get_usize("dram.internal_bus_bits", sim.timing.internal_bus_bits);
-    sim.adder_inputs = t.get_usize("arch.adder_inputs", sim.adder_inputs);
-    sim.tree_per_subarray =
-        t.get_bool("arch.tree_per_subarray", sim.tree_per_subarray);
-    sim.geometry.validate()?;
-    anyhow::ensure!(
-        sim.adder_inputs.is_power_of_two(),
-        "arch.adder_inputs must be a power of two"
-    );
-
+    let spec = crate::api::Spec::from_toml(text)?;
+    let images = spec.images;
+    let job = crate::api::Job::new(spec)?;
     Ok(Experiment {
-        network,
-        sim,
-        images: t.get_usize("images", 64),
+        network: job.network().clone(),
+        sim: job.config().clone(),
+        images,
     })
 }
 

@@ -75,6 +75,66 @@ mod tests {
     }
 
     #[test]
+    fn pops_on_empty_are_none() {
+        let mut b = Batcher::<u8>::new(2);
+        assert_eq!(b.pop_full(), None);
+        assert_eq!(b.pop_partial(), None);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn exact_multiple_drains_to_empty() {
+        let mut b = Batcher::new(3);
+        for i in 0..6 {
+            b.push(i);
+        }
+        assert_eq!(b.pop_full(), Some(vec![0, 1, 2]));
+        assert_eq!(b.pop_full(), Some(vec![3, 4, 5]));
+        assert_eq!(b.pop_full(), None);
+        assert_eq!(b.pop_partial(), None);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn remainder_flushes_after_full_batches() {
+        let mut b = Batcher::new(4);
+        for i in 0..9 {
+            b.push(i);
+        }
+        assert_eq!(b.pop_full(), Some(vec![0, 1, 2, 3]));
+        assert_eq!(b.pop_full(), Some(vec![4, 5, 6, 7]));
+        assert_eq!(b.pop_full(), None);
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.pop_partial(), Some(vec![8]));
+        assert_eq!(b.pop_partial(), None);
+    }
+
+    #[test]
+    fn pop_partial_never_exceeds_batch_size() {
+        // The shutdown drain pops partials in a loop; each one must stay
+        // within the compiled batch size.
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.pop_partial(), Some(vec![0, 1]));
+        assert_eq!(b.pop_partial(), Some(vec![2, 3]));
+        assert_eq!(b.pop_partial(), Some(vec![4]));
+        assert_eq!(b.pop_partial(), None);
+    }
+
+    #[test]
+    fn batch_size_one_degenerates_to_fifo() {
+        let mut b = Batcher::new(1);
+        b.push("x");
+        b.push("y");
+        assert_eq!(b.batch_size(), 1);
+        assert_eq!(b.pop_full(), Some(vec!["x"]));
+        assert_eq!(b.pop_partial(), Some(vec!["y"]));
+        assert_eq!(b.pop_full(), None);
+    }
+
+    #[test]
     #[should_panic]
     fn zero_batch_rejected() {
         Batcher::<u8>::new(0);

@@ -184,4 +184,86 @@ mod tests {
     fn empty_router_rejected() {
         Router::new(vec![], Policy::RoundRobin, 0);
     }
+
+    #[test]
+    fn backlog_accounting_is_consistent_under_every_policy() {
+        // route() increments exactly the chosen device's in_flight and
+        // complete() decrements it, under an interleaved dispatch/complete
+        // stream — for each policy.
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+            let mut r = Router::new(devs(&[1.0, 2.0, 3.0]), policy, 42);
+            let mut outstanding = vec![0u64; 3];
+            let mut inflight_fifo = Vec::new();
+            for step in 0..60 {
+                let i = r.route();
+                outstanding[i] += 1;
+                inflight_fifo.push(i);
+                if step % 2 == 1 {
+                    let j = inflight_fifo.remove(0);
+                    r.complete(j);
+                    outstanding[j] -= 1;
+                }
+                let got: Vec<u64> =
+                    r.devices().iter().map(|d| d.in_flight).collect();
+                assert_eq!(got, outstanding, "{policy:?} step {step}");
+            }
+            assert_eq!(r.dispatched, 60, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn round_robin_is_exactly_fair() {
+        let mut r = Router::new(devs(&[5.0, 1.0, 2.0]), Policy::RoundRobin, 9);
+        let mut counts = [0u64; 3];
+        for _ in 0..99 {
+            counts[r.route()] += 1;
+        }
+        // Round-robin ignores backlog entirely: perfect thirds.
+        assert_eq!(counts, [33, 33, 33]);
+    }
+
+    #[test]
+    fn least_loaded_balances_exactly_with_equal_service() {
+        let mut r = Router::new(devs(&[1.0, 1.0, 1.0, 1.0]), Policy::LeastLoaded, 0);
+        for _ in 0..103 {
+            r.route();
+        }
+        let inflight: Vec<u64> = r.devices().iter().map(|d| d.in_flight).collect();
+        let max = *inflight.iter().max().unwrap();
+        let min = *inflight.iter().min().unwrap();
+        assert!(max - min <= 1, "least-loaded must stay within 1: {inflight:?}");
+    }
+
+    #[test]
+    fn least_loaded_prefers_freshly_drained_device() {
+        let mut r = Router::new(devs(&[1.0, 1.0]), Policy::LeastLoaded, 0);
+        let first = r.route();
+        let second = r.route();
+        assert_ne!(first, second, "second dispatch must avoid the loaded device");
+        // Draining `first` makes it the unique minimum again.
+        r.complete(first);
+        assert_eq!(r.route(), first);
+    }
+
+    #[test]
+    fn two_choices_tracks_completions() {
+        // With completions flowing, two-choices must not let any device's
+        // backlog run away: complete in bursts and re-check the spread.
+        let mut r = Router::new(devs(&[1.0, 1.0, 1.0]), Policy::TwoChoices, 7);
+        let mut picks = Vec::new();
+        for round in 0..20 {
+            for _ in 0..6 {
+                picks.push(r.route());
+            }
+            // Drain all but the last round's dispatches.
+            for &i in &picks[..picks.len() - 6] {
+                r.complete(i);
+            }
+            picks.drain(..picks.len() - 6);
+            let max = r.devices().iter().map(|d| d.in_flight).max().unwrap();
+            assert!(max <= 6, "round {round}: runaway backlog {max}");
+        }
+        let total: u64 = r.devices().iter().map(|d| d.in_flight).sum();
+        assert_eq!(total, 6, "exactly the undrained round stays in flight");
+    }
 }

@@ -17,11 +17,14 @@
 //!   (`plan`), and a multi-device request coordinator that serves batched
 //!   traffic from the planned devices (optionally executing the AOT
 //!   artifacts via PJRT — `--features pjrt` — while the timing model
-//!   prices the same work in DRAM cycles).
+//!   prices the same work in DRAM cycles). The versioned `api` layer
+//!   (`Spec` → `Job` → report) is the single construction path for all of
+//!   it — CLI, TOML configs, benches and serving included.
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for reproduction results.
 
+pub mod api;
 pub mod arch;
 pub mod bench_harness;
 pub mod circuit;

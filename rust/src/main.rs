@@ -1,4 +1,4 @@
-//! PIM-DRAM launcher: see `pim-dram help` (or `cli::USAGE`).
+//! PIM-DRAM launcher: see `pim-dram help` (or `cli::usage()`).
 
 use pim_dram::cli;
 

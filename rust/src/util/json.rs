@@ -130,6 +130,98 @@ impl Json {
             .map(|v| v.as_i64().ok_or_else(|| anyhow::anyhow!("expected int")))
             .collect()
     }
+
+    /// Canonical pretty form: 2-space indent, object keys in `BTreeMap`
+    /// (byte-sorted) order, scalar-only arrays inline, one trailing
+    /// newline. Deterministic — re-rendering a parsed document reproduces
+    /// it byte-for-byte, which is the property `tests/spec_roundtrip.rs`
+    /// holds `examples/specs/` to.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        use std::fmt::Write;
+        fn indent(out: &mut String, depth: usize) {
+            for _ in 0..depth {
+                out.push_str("  ");
+            }
+        }
+        match self {
+            Json::Arr(a)
+                if a.iter().any(|v| matches!(v, Json::Arr(_) | Json::Obj(_))) =>
+            {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push(']');
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    let _ = write!(out, "{v}");
+                }
+                out.push(']');
+            }
+            Json::Obj(o) if o.is_empty() => out.push_str("{}"),
+            Json::Obj(o) => {
+                out.push_str("{\n");
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    indent(out, depth + 1);
+                    out.push_str(&escape_json_string(k));
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                indent(out, depth);
+                out.push('}');
+            }
+            scalar => {
+                let _ = write!(out, "{scalar}");
+            }
+        }
+    }
+}
+
+/// Escape a string as a JSON string literal (quotes included). Unlike
+/// Rust's `{:?}` debug form, control characters get *JSON* escapes
+/// (`\u00XX`), so the output always re-parses.
+pub fn escape_json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 impl fmt::Display for Json {
@@ -138,7 +230,7 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => write!(f, "{n}"),
-            Json::Str(s) => write!(f, "{:?}", s),
+            Json::Str(s) => f.write_str(&escape_json_string(s)),
             Json::Arr(a) => {
                 write!(f, "[")?;
                 for (i, v) in a.iter().enumerate() {
@@ -155,7 +247,7 @@ impl fmt::Display for Json {
                     if i > 0 {
                         write!(f, ",")?;
                     }
-                    write!(f, "{:?}:{}", k, v)?;
+                    write!(f, "{}:{}", escape_json_string(k), v)?;
                 }
                 write!(f, "}}")
             }
@@ -429,5 +521,45 @@ mod tests {
         let v = Json::parse(doc).unwrap();
         let v2 = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn pretty_is_canonical() {
+        let doc = r#"{"b": [1, 2], "a": {"x": true}, "c": [], "d": [{"k": 1}]}"#;
+        let v = Json::parse(doc).unwrap();
+        let text = v.pretty();
+        assert_eq!(
+            text,
+            "{\n  \"a\": {\n    \"x\": true\n  },\n  \"b\": [1, 2],\n  \
+             \"c\": [],\n  \"d\": [\n    {\n      \"k\": 1\n    }\n  ]\n}\n"
+        );
+        // Parse → pretty is a fixed point.
+        let reparsed = Json::parse(&text).unwrap();
+        assert_eq!(reparsed, v);
+        assert_eq!(reparsed.pretty(), text);
+    }
+
+    #[test]
+    fn pretty_scalars_and_empties() {
+        assert_eq!(Json::parse("3").unwrap().pretty(), "3\n");
+        assert_eq!(Json::parse("{}").unwrap().pretty(), "{}\n");
+        assert_eq!(Json::parse("[1.5, null]").unwrap().pretty(), "[1.5, null]\n");
+    }
+
+    #[test]
+    fn control_characters_re_emit_as_valid_json() {
+        // Rust debug escapes (`\u{8}`) are not JSON; both render paths
+        // must emit JSON escapes that re-parse.
+        let v = Json::parse("\"a\\u0008b\\u001fc\"").unwrap();
+        assert_eq!(v.as_str(), Some("a\u{0008}b\u{001f}c"));
+        assert_eq!(v.to_string(), "\"a\\bb\\u001fc\"");
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(v.pretty().trim_end()).unwrap(), v);
+        // Quotes, backslashes, and keys round-trip too.
+        let q = Json::Str("say \"hi\" \\ done".to_string());
+        assert_eq!(Json::parse(&q.to_string()).unwrap(), q);
+        let obj = Json::parse("{\"k\\n\": 1}").unwrap();
+        assert_eq!(Json::parse(&obj.to_string()).unwrap(), obj);
+        assert_eq!(Json::parse(obj.pretty().trim_end()).unwrap(), obj);
     }
 }

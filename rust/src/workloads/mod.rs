@@ -87,12 +87,16 @@ impl LayerDesc {
     }
 
     /// Output spatial dims for conv layers (pre-pool): the paper's
-    /// `((H-K+2p)/s + 1, (W-L+2p)/s + 1)`.
+    /// `((H-K+2p)/s + 1, (W-L+2p)/s + 1)`. The padding is added before
+    /// the kernel is subtracted so a kernel larger than the *unpadded*
+    /// input (legal when padding compensates, e.g. H=4, K=5, p=1) does
+    /// not underflow `usize`; `api::spec` validates `H + 2p >= K` before
+    /// any inline network reaches this.
     pub fn conv_out_hw(&self) -> Option<(usize, usize)> {
         match self.kind {
             LayerKind::Conv { in_h, in_w, kh, kw, stride, pad, .. } => Some((
-                (in_h - kh + 2 * pad) / stride + 1,
-                (in_w - kw + 2 * pad) / stride + 1,
+                (in_h + 2 * pad - kh) / stride + 1,
+                (in_w + 2 * pad - kw) / stride + 1,
             )),
             LayerKind::Linear { .. } => None,
         }

@@ -118,17 +118,29 @@ pub fn all_networks() -> Vec<Network> {
     vec![alexnet(), vgg16(), resnet18()]
 }
 
+/// Builtin registry (paper order, then the AOT workload) — the single
+/// place to add a network: `NAMES`, `by_name`, the `api` spec layer and
+/// the generated CLI help all derive from this table.
+const BUILTINS: [(&str, fn() -> Network); 4] = [
+    ("alexnet", alexnet),
+    ("vgg16", vgg16),
+    ("resnet18", resnet18),
+    ("pimnet", pimnet),
+];
+
+/// Builtin names `by_name` accepts, in registry order.
+pub const NAMES: [&str; 4] =
+    [BUILTINS[0].0, BUILTINS[1].0, BUILTINS[2].0, BUILTINS[3].0];
+
 /// Look up a network by name (CLI entry point).
 pub fn by_name(name: &str) -> anyhow::Result<Network> {
-    match name {
-        "alexnet" => Ok(alexnet()),
-        "vgg16" => Ok(vgg16()),
-        "resnet18" => Ok(resnet18()),
-        "pimnet" => Ok(pimnet()),
-        other => anyhow::bail!(
-            "unknown network `{other}` (try alexnet|vgg16|resnet18|pimnet)"
-        ),
-    }
+    BUILTINS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, build)| build())
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown network `{name}` (try {})", NAMES.join("|"))
+        })
 }
 
 #[cfg(test)]
@@ -211,6 +223,13 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("vgg16").is_ok());
         assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn every_registered_name_resolves_to_itself() {
+        for name in NAMES {
+            assert_eq!(by_name(name).unwrap().name, name);
+        }
     }
 
     #[test]

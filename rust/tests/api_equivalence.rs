@@ -1,0 +1,223 @@
+//! `api::Job` vs the legacy free-function path (the acceptance bar of the
+//! `api` redesign): for every network × preset × shard × grid × ks point,
+//! `Job::simulate_full()` on a spec must reproduce `sim::simulate()` on
+//! the equivalently-built `SimConfig` **exactly** — bit-for-bit on every
+//! f64 — and fail with the identical `PlanError` when the legacy path
+//! fails. Plus: an inline `NetworkSpec` with custom layers runs
+//! end-to-end through `report()` and `serve()`.
+
+use pim_dram::api::{Job, ServeSpec, Spec};
+use pim_dram::plan::ShardPolicy;
+use pim_dram::sim::{simulate, SimConfig, SimResult};
+use pim_dram::workloads::nets::all_networks;
+use pim_dram::workloads::{LayerDesc, Network};
+
+fn legacy_cfg(preset: &str, bits: usize) -> SimConfig {
+    match preset {
+        "conservative" => SimConfig::conservative(bits),
+        "paper_favorable" => SimConfig::paper_favorable(bits),
+        other => panic!("unknown preset {other}"),
+    }
+}
+
+/// Bitwise comparison of everything the experiments read.
+fn assert_bitwise(ctx: &str, fresh: &SimResult, job: &SimResult) {
+    assert_eq!(job.net_name, fresh.net_name, "{ctx}: net_name");
+    assert_eq!(job.n_bits, fresh.n_bits, "{ctx}: n_bits");
+    assert_eq!(
+        job.pipeline.latency_ns.to_bits(),
+        fresh.pipeline.latency_ns.to_bits(),
+        "{ctx}: latency"
+    );
+    assert_eq!(
+        job.pipeline.cycle_ns.to_bits(),
+        fresh.pipeline.cycle_ns.to_bits(),
+        "{ctx}: cycle"
+    );
+    assert_eq!(job.pipeline.bottleneck, fresh.pipeline.bottleneck, "{ctx}: bottleneck");
+    assert_eq!(job.total_aaps, fresh.total_aaps, "{ctx}: aaps");
+    assert_eq!(
+        job.total_dram_energy_nj.to_bits(),
+        fresh.total_dram_energy_nj.to_bits(),
+        "{ctx}: dram energy"
+    );
+    assert_eq!(
+        job.logic_energy_nj.to_bits(),
+        fresh.logic_energy_nj.to_bits(),
+        "{ctx}: logic energy"
+    );
+    assert_eq!(
+        job.throughput_ips().to_bits(),
+        fresh.throughput_ips().to_bits(),
+        "{ctx}: throughput"
+    );
+    assert_eq!(job.replicas(), fresh.replicas(), "{ctx}: replicas");
+    assert_eq!(
+        job.scale_out.hop_ns_total.to_bits(),
+        fresh.scale_out.hop_ns_total.to_bits(),
+        "{ctx}: hops"
+    );
+    assert_eq!(job.layers.len(), fresh.layers.len(), "{ctx}: layer count");
+    for (a, b) in job.layers.iter().zip(&fresh.layers) {
+        assert_eq!(a.name, b.name, "{ctx}: layer name");
+        assert_eq!(a.mapping, b.mapping, "{ctx}: {} mapping", a.name);
+        for (va, vb, what) in [
+            (a.multiply_ns, b.multiply_ns, "multiply"),
+            (a.logic_ns, b.logic_ns, "logic"),
+            (a.restage_ns, b.restage_ns, "restage"),
+            (a.transfer_ns, b.transfer_ns, "transfer"),
+            (a.dram_energy_nj, b.dram_energy_nj, "energy"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}: {} {}", a.name, what);
+        }
+        assert_eq!(a.aaps, b.aaps, "{ctx}: {} aaps", a.name);
+    }
+}
+
+#[test]
+fn job_reproduces_simulate_across_the_design_space() {
+    let grids = [(1usize, 4usize), (2, 2), (4, 4)];
+    let policies = [
+        ShardPolicy::Replicate,
+        ShardPolicy::LayerSplit,
+        ShardPolicy::Hybrid { replicas: 2 },
+    ];
+    let mut simulated = 0usize;
+    let mut failed = 0usize;
+    for net in all_networks() {
+        for bits in [4usize, 8] {
+            for preset in ["paper_favorable", "conservative"] {
+                for (channels, ranks) in grids {
+                    for policy in policies {
+                        for k in [1usize, 2] {
+                            let cfg = legacy_cfg(preset, bits)
+                                .with_grid(channels, ranks)
+                                .with_shard(policy)
+                                .with_ks(vec![k]);
+                            let spec = Spec::builtin(&net.name)
+                                .with_preset(preset)
+                                .with_precision(bits)
+                                .with_grid(channels, ranks)
+                                .with_shard(policy)
+                                .with_ks(vec![k]);
+                            let job = Job::new(spec).expect("spec resolves");
+                            let ctx = format!(
+                                "{} {preset} {bits}b {channels}x{ranks} {policy} k={k}",
+                                net.name
+                            );
+                            match simulate(&net, &cfg) {
+                                Err(e) => {
+                                    assert_eq!(
+                                        job.simulate_full().unwrap_err(),
+                                        e,
+                                        "{ctx}: error equality"
+                                    );
+                                    failed += 1;
+                                }
+                                Ok(fresh) => {
+                                    let full = job.simulate_full().unwrap_or_else(
+                                        |e| panic!("{ctx}: job failed: {e}"),
+                                    );
+                                    assert_bitwise(&ctx, &fresh, &full);
+                                    let rep = job.report().unwrap();
+                                    assert_eq!(
+                                        rep.cycle_ns.to_bits(),
+                                        fresh.pipeline.cycle_ns.to_bits(),
+                                        "{ctx}: report cycle"
+                                    );
+                                    assert_eq!(
+                                        rep.latency_ns.to_bits(),
+                                        fresh.pipeline.latency_ns.to_bits(),
+                                        "{ctx}: report latency"
+                                    );
+                                    assert_eq!(
+                                        rep.total_aaps, fresh.total_aaps,
+                                        "{ctx}: report aaps"
+                                    );
+                                    simulated += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // The sweep must exercise both successful and failing lowerings.
+    assert!(simulated > 0, "no point simulated");
+    assert!(failed > 0, "expected some plan errors in the grid sweep");
+}
+
+#[test]
+fn per_layer_ks_match_through_the_job() {
+    for net in all_networks() {
+        let ks: Vec<usize> =
+            (0..net.layers.len()).map(|i| if i % 2 == 0 { 1 } else { 2 }).collect();
+        let cfg = SimConfig::conservative(8).with_ks(ks.clone());
+        let spec = Spec::builtin(&net.name)
+            .with_preset("conservative")
+            .with_ks(ks);
+        let job = Job::new(spec).unwrap();
+        let fresh = simulate(&net, &cfg).unwrap();
+        let full = job.simulate_full().unwrap();
+        assert_bitwise(&format!("{} per-layer ks", net.name), &fresh, &full);
+    }
+}
+
+#[test]
+fn toml_and_json_front_doors_agree() {
+    let toml = "network = \"resnet18\"\npreset = \"conservative\"\n\
+                shard = \"layersplit\"\n[dram]\nchannels = 2\n";
+    let via_toml = Job::from_toml(toml).unwrap();
+    let via_json =
+        Job::from_json_text(&via_toml.spec().to_json_text()).unwrap();
+    let a = via_toml.simulate_full().unwrap();
+    let b = via_json.simulate_full().unwrap();
+    assert_bitwise("toml vs json", &a, &b);
+    // And both equal the legacy loader's result (now a shim over api).
+    let e = pim_dram::config::load_experiment(toml).unwrap();
+    let fresh = simulate(&e.network, &e.sim).unwrap();
+    assert_bitwise("toml vs legacy", &fresh, &a);
+}
+
+fn tinynet() -> Network {
+    Network {
+        name: "tinynet".to_string(),
+        layers: vec![
+            LayerDesc::conv("c1", (8, 8), 1, 8, 3, 1, 1, true),
+            LayerDesc::linear("fc1", 128, 32, true),
+            LayerDesc::linear("fc2", 32, 10, false),
+        ],
+        residuals: vec![],
+    }
+}
+
+#[test]
+fn inline_network_runs_end_to_end() {
+    let spec = Spec::inline(tinynet())
+        .with_preset("conservative")
+        .with_serve(ServeSpec { devices: Some(2), batch: 4, ..ServeSpec::default() });
+    // The inline spec survives a JSON round-trip before running.
+    let parsed = Spec::from_json_text(&spec.to_json_text()).unwrap();
+    assert_eq!(parsed, spec);
+
+    let job = Job::new(parsed).unwrap();
+    let rep = job.report().unwrap();
+    assert!(rep.cycle_ns > 0.0, "inline net must price");
+    assert!(rep.replicas >= 1);
+    assert_eq!(rep.net_name, "tinynet");
+
+    let handle = job.serve().unwrap();
+    assert_eq!(handle.devices, 2);
+    let elems = handle.server.image_elems();
+    assert_eq!(elems, 64, "8x8x1 input");
+    for i in 0..6i32 {
+        let resp = handle.server.classify(vec![i; elems]).unwrap();
+        assert!(resp.class < 10);
+        assert_eq!(resp.logits.len(), 10);
+    }
+    let m = handle.server.metrics();
+    assert_eq!(m.requests, 6);
+    assert_eq!(m.per_device.len(), 2);
+    handle.server.shutdown();
+}

@@ -1,0 +1,73 @@
+//! The example spec corpus is canonical and the version gate holds:
+//! every JSON document in `examples/specs/` parses, validates (resolves
+//! through `api::Job`), and re-serializes **byte-identically**; a bumped
+//! `api_version` is rejected with an error that names the problem.
+
+use pim_dram::api::{Job, Spec};
+
+fn specs_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/specs")
+}
+
+#[test]
+fn example_specs_roundtrip_byte_identically() {
+    let mut paths: Vec<_> = std::fs::read_dir(specs_dir())
+        .expect("examples/specs exists")
+        .map(|e| e.expect("readable dir entry").path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .collect();
+    paths.sort();
+    assert!(
+        paths.len() >= 4,
+        "expected at least 4 example specs, found {}",
+        paths.len()
+    );
+    for path in paths {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let spec = Spec::from_json_text(&text)
+            .unwrap_or_else(|e| panic!("{}: parse: {e:#}", path.display()));
+        // Validates and resolves without running any work.
+        Job::new(spec.clone())
+            .unwrap_or_else(|e| panic!("{}: validate: {e:#}", path.display()));
+        assert_eq!(
+            spec.to_json_text(),
+            text,
+            "{} is not canonical — regenerate with `pim-dram spec --print {}`",
+            path.display(),
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn bumped_api_version_is_rejected_with_a_clear_error() {
+    let good = r#"{"api_version": 1, "network": "pimnet"}"#;
+    Spec::from_json_text(good).expect("version 1 parses");
+
+    let bumped = r#"{"api_version": 2, "network": "pimnet"}"#;
+    let err = Spec::from_json_text(bumped).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("api_version"), "must name the field: {msg}");
+    assert!(msg.contains('2'), "must show the offending version: {msg}");
+    assert!(msg.contains('1'), "must show the supported version: {msg}");
+
+    let missing = r#"{"network": "pimnet"}"#;
+    let err = Spec::from_json_text(missing).unwrap_err();
+    assert!(err.to_string().contains("api_version"), "{err}");
+}
+
+#[test]
+fn serve_spec_is_optional_and_preserved() {
+    // A run-only spec has no "serve" key; adding one survives the trip.
+    let run_only = Spec::builtin("pimnet");
+    let text = run_only.to_json_text();
+    assert!(!text.contains("serve"), "run-only spec must omit serve:\n{text}");
+    let spec = Spec::from_json_text(&text).unwrap();
+    assert!(spec.serve.is_none());
+
+    let served = Spec::builtin("pimnet")
+        .with_serve(pim_dram::api::ServeSpec::default());
+    let text = served.to_json_text();
+    assert!(text.contains("serve"));
+    assert_eq!(Spec::from_json_text(&text).unwrap(), served);
+}
