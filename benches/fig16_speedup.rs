@@ -16,12 +16,12 @@ use pim_dram::api::{Job, Spec};
 use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::gpu::GpuModel;
 use pim_dram::util::table::{Align, Table};
-use pim_dram::workloads::nets::all_networks;
+use pim_dram::workloads::nets::paper_networks;
 
 fn main() {
     banner("Fig 16", "PIM-DRAM speedup over ideal TITAN Xp (P1..P4)");
     let gpu = GpuModel::titan_xp();
-    let nets = all_networks();
+    let nets = paper_networks();
     // The paper's P-vectors: P1=(1,..), P2=(2,..), P3=(4,..), P4=(8,..).
     let p_factors = [1usize, 2, 4, 8];
 

@@ -11,12 +11,12 @@ use pim_dram::api::{Job, Spec};
 use pim_dram::bench_harness::{banner, par_sweep, Bencher};
 use pim_dram::primitives::paper_mul_aaps;
 use pim_dram::util::table::{Align, Table};
-use pim_dram::workloads::nets::all_networks;
+use pim_dram::workloads::nets::paper_networks;
 
 fn main() {
     banner("Fig 17", "runtime vs operand bit precision");
     let bits = [2usize, 4, 8, 16];
-    let nets = all_networks();
+    let nets = paper_networks();
 
     let series: Vec<(String, Vec<f64>)> = par_sweep(nets.len(), |i| {
         let net = &nets[i];

@@ -11,7 +11,10 @@
 //!   * [`Spec`] and its parts ([`NetworkSpec`], [`DeviceSpec`],
 //!     [`ShardSpec`], [`RunSpec`], [`ServeSpec`]) are pure data,
 //!     JSON-round-trippable under `"api_version": 1`, validated with
-//!     actionable errors before any work runs.
+//!     actionable errors before any work runs. A network is a builtin
+//!     name, an inline lowered layer list, or an inline `pim::ir`
+//!     operator graph (DESIGN.md §IR) — all three resolve to the same
+//!     per-bank stage form before pricing.
 //!   * [`Job`] resolves a spec into the plan/session machinery:
 //!     [`Job::report`] → `SimReport`, [`Job::simulate_full`] →
 //!     `SimResult` (bitwise-equal to the legacy path — results and

@@ -16,8 +16,11 @@
 //! }
 //! ```
 //!
-//! * [`NetworkSpec`] — a builtin name **or** an inline layer list (lifting
-//!   the four-hardcoded-nets limit of `workloads::nets`).
+//! * [`NetworkSpec`] — a builtin name, an inline layer list, **or** an
+//!   inline operator graph (`{"name": .., "graph": [..]}` — the
+//!   `pim::ir` schema: nodes with explicit `inputs` edges, residual adds
+//!   as ordinary nodes). The layer-list form stays accepted and converts
+//!   to the same lowered chain, so `api_version` stays 1.
 //! * [`DeviceSpec`] — timing/geometry preset plus explicit overrides,
 //!   including the channels × ranks grid.
 //! * [`RunSpec`] / [`ShardSpec`] — parallelism vector, operand precision
@@ -40,6 +43,7 @@ use anyhow::{Context, Result};
 
 use crate::config::toml::{Toml, Value};
 use crate::coordinator::Policy;
+use crate::ir::{self, ActFn, Graph, NodeId, Op, Shape};
 use crate::plan::ShardPolicy;
 use crate::sim::SimConfig;
 use crate::util::json::Json;
@@ -101,14 +105,20 @@ fn num(v: usize) -> Json {
 
 // ---- NetworkSpec ----------------------------------------------------------
 
-/// The workload: a builtin evaluation network or an inline layer list.
+/// The workload: a builtin evaluation network, an inline layer list, or
+/// an inline operator graph.
 #[derive(Debug, Clone, PartialEq)]
 pub enum NetworkSpec {
     /// One of [`BUILTIN_NETWORKS`]; JSON form is the bare name string.
     Builtin(String),
-    /// A custom network described in place; JSON form is
-    /// `{"name": .., "layers": [..], "residuals": [..]}`.
+    /// A custom network described as the lowered layer chain; JSON form
+    /// is `{"name": .., "layers": [..], "residuals": [..]}`.
     Inline(Network),
+    /// A custom network described as a `pim::ir` operator graph; JSON
+    /// form is `{"name": .., "graph": [node, ..]}` where each node is
+    /// `{"op": .., "name": .., "inputs": [..], ..params}` and residual
+    /// shortcuts are ordinary `add` nodes.
+    Graph(Graph),
 }
 
 impl NetworkSpec {
@@ -116,11 +126,14 @@ impl NetworkSpec {
         match self {
             NetworkSpec::Builtin(n) => n,
             NetworkSpec::Inline(net) => &net.name,
+            NetworkSpec::Graph(g) => &g.name,
         }
     }
 
     /// Materialize the network, validating an inline description (shape
-    /// chain, residual bounds, per-layer geometry) before any work runs.
+    /// chain / graph shape inference, residual bounds, per-layer
+    /// geometry) before any work runs. Graphs lower through the full
+    /// `ir` pass pipeline here.
     pub fn resolve(&self) -> Result<Network> {
         match self {
             NetworkSpec::Builtin(name) => nets::by_name(name),
@@ -128,12 +141,18 @@ impl NetworkSpec {
                 validate_inline(net)?;
                 Ok(net.clone())
             }
+            NetworkSpec::Graph(g) => ir::lower(g),
         }
     }
 
     fn from_json(v: &Json) -> Result<NetworkSpec> {
         match v {
             Json::Str(name) => Ok(NetworkSpec::Builtin(name.clone())),
+            Json::Obj(obj) if obj.contains_key("graph") => {
+                check_keys("network", obj, &["graph", "name"])?;
+                let name = v.req_str("name")?.to_string();
+                Ok(NetworkSpec::Graph(graph_from_json(&name, v.req_arr("graph")?)?))
+            }
             Json::Obj(obj) => {
                 check_keys("network", obj, &["layers", "name", "residuals"])?;
                 let name = v.req_str("name")?.to_string();
@@ -154,8 +173,8 @@ impl NetworkSpec {
                 Ok(NetworkSpec::Inline(Network { name, layers, residuals }))
             }
             _ => anyhow::bail!(
-                "`network` must be a builtin name ({}) or an inline object \
-                 with name/layers/residuals",
+                "`network` must be a builtin name ({}), an inline object with \
+                 name/layers/residuals, or a graph object with name/graph",
                 BUILTIN_NETWORKS.join("|")
             ),
         }
@@ -177,8 +196,286 @@ impl NetworkSpec {
                 );
                 Json::Obj(o)
             }
+            NetworkSpec::Graph(g) => {
+                let mut o = BTreeMap::new();
+                o.insert("graph".to_string(), graph_to_json(g));
+                o.insert("name".to_string(), Json::Str(g.name.clone()));
+                Json::Obj(o)
+            }
         }
     }
+}
+
+// ---- graph schema ---------------------------------------------------------
+
+/// Node-op spellings the graph schema accepts, for error messages.
+const GRAPH_OPS: &str =
+    "input|conv|depthwise|linear|matmul|add|pool|gap|relu|softmax";
+
+/// The common node keys (`inputs`/`name`/`op`) plus the op-specific
+/// fields, byte-sorted for `check_keys`.
+fn node_keys<'a>(extra: &[&'a str]) -> Vec<&'a str> {
+    let mut all: Vec<&'a str> = vec!["inputs", "name", "op"];
+    all.extend_from_slice(extra);
+    all.sort_unstable();
+    all
+}
+
+fn shape_from_json(name: &str, v: &Json) -> Result<Shape> {
+    let obj = v.as_obj().with_context(|| {
+        format!("node `{name}`: `shape` must be an object ({{h,w,c}} | {{n}} | {{rows,cols}})")
+    })?;
+    let u = |key: &str| -> Result<usize> {
+        v.get(key).and_then(Json::as_usize).with_context(|| {
+            format!("node `{name}`: shape field `{key}` must be a non-negative integer")
+        })
+    };
+    if obj.contains_key("h") || obj.contains_key("w") || obj.contains_key("c") {
+        check_keys("shape", obj, &["c", "h", "w"])?;
+        Ok(Shape::Map { h: u("h")?, w: u("w")?, c: u("c")? })
+    } else if obj.contains_key("rows") || obj.contains_key("cols") {
+        check_keys("shape", obj, &["cols", "rows"])?;
+        Ok(Shape::Mat { rows: u("rows")?, cols: u("cols")? })
+    } else {
+        check_keys("shape", obj, &["n"])?;
+        Ok(Shape::Flat { n: u("n")? })
+    }
+}
+
+fn shape_to_json(s: Shape) -> Json {
+    let mut o = BTreeMap::new();
+    match s {
+        Shape::Map { h, w, c } => {
+            o.insert("c".to_string(), num(c));
+            o.insert("h".to_string(), num(h));
+            o.insert("w".to_string(), num(w));
+        }
+        Shape::Flat { n } => {
+            o.insert("n".to_string(), num(n));
+        }
+        Shape::Mat { rows, cols } => {
+            o.insert("cols".to_string(), num(cols));
+            o.insert("rows".to_string(), num(rows));
+        }
+    }
+    Json::Obj(o)
+}
+
+/// Parse one graph node. `inputs` entries are node *names* and must refer
+/// to already-declared nodes (the schema keeps program order topological,
+/// like the builder API).
+fn graph_node_from_json(
+    v: &Json,
+    ids: &BTreeMap<String, NodeId>,
+) -> Result<(String, Op, Vec<NodeId>)> {
+    let obj = v.as_obj().context("each graph node must be an object")?;
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .context("each graph node needs a `name` string")?
+        .to_string();
+    let op_name = v
+        .get("op")
+        .and_then(Json::as_str)
+        .with_context(|| format!("node `{name}`: missing `op` ({GRAPH_OPS})"))?;
+    let u = |key: &str| -> Result<usize> {
+        v.get(key).and_then(Json::as_usize).with_context(|| {
+            format!("node `{name}`: field `{key}` must be a non-negative integer")
+        })
+    };
+    let opt_u = |key: &str, default: usize| -> Result<usize> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(_) => u(key),
+        }
+    };
+    let inputs: Vec<NodeId> = match v.get("inputs") {
+        None => Vec::new(),
+        Some(arr) => arr
+            .as_arr()
+            .with_context(|| format!("node `{name}`: `inputs` must be an array"))?
+            .iter()
+            .map(|i| {
+                let refname = i.as_str().with_context(|| {
+                    format!("node `{name}`: inputs must be node-name strings")
+                })?;
+                ids.get(refname).copied().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "node `{name}`: unknown input `{refname}` (inputs must \
+                         be declared earlier in the graph)"
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let op = match op_name {
+        "input" => {
+            check_keys("input node", obj, &node_keys(&["shape"]))?;
+            let shape = shape_from_json(
+                &name,
+                v.get("shape").with_context(|| {
+                    format!("node `{name}`: input nodes need a `shape`")
+                })?,
+            )?;
+            Op::Input { shape }
+        }
+        "conv" => {
+            check_keys(
+                "conv node",
+                obj,
+                &node_keys(&["kh", "kw", "out_ch", "pad", "stride"]),
+            )?;
+            Op::Conv {
+                out_ch: u("out_ch")?,
+                kh: u("kh")?,
+                kw: u("kw")?,
+                stride: u("stride")?,
+                pad: opt_u("pad", 0)?,
+            }
+        }
+        "depthwise" => {
+            check_keys(
+                "depthwise node",
+                obj,
+                &node_keys(&["kh", "kw", "pad", "stride"]),
+            )?;
+            Op::DepthwiseConv {
+                kh: u("kh")?,
+                kw: u("kw")?,
+                stride: u("stride")?,
+                pad: opt_u("pad", 0)?,
+            }
+        }
+        "linear" => {
+            check_keys("linear node", obj, &node_keys(&["out_features"]))?;
+            Op::Linear { out_features: u("out_features")? }
+        }
+        "matmul" => {
+            check_keys("matmul node", obj, &node_keys(&["transpose_rhs"]))?;
+            let transpose_rhs = match v.get("transpose_rhs") {
+                None => false,
+                Some(t) => t.as_bool().with_context(|| {
+                    format!("node `{name}`: `transpose_rhs` must be a boolean")
+                })?,
+            };
+            Op::MatMul { transpose_rhs }
+        }
+        "add" => {
+            check_keys("add node", obj, &node_keys(&[]))?;
+            Op::ElemwiseAdd
+        }
+        "pool" => {
+            check_keys("pool node", obj, &node_keys(&[]))?;
+            Op::Pool
+        }
+        "gap" => {
+            check_keys("gap node", obj, &node_keys(&[]))?;
+            Op::GlobalAvgPool
+        }
+        "relu" => {
+            check_keys("relu node", obj, &node_keys(&[]))?;
+            Op::Activation { f: ActFn::Relu }
+        }
+        "softmax" => {
+            check_keys("softmax node", obj, &node_keys(&[]))?;
+            Op::Activation { f: ActFn::Softmax }
+        }
+        other => anyhow::bail!(
+            "node `{name}`: unknown op `{other}` (accepted: {GRAPH_OPS})"
+        ),
+    };
+    anyhow::ensure!(
+        inputs.len() == op.arity(),
+        "node `{name}`: op `{op_name}` takes {} input(s), got {}",
+        op.arity(),
+        inputs.len()
+    );
+    Ok((name, op, inputs))
+}
+
+fn graph_from_json(name: &str, nodes: &[Json]) -> Result<Graph> {
+    let mut g = Graph::new(name);
+    let mut ids: BTreeMap<String, NodeId> = BTreeMap::new();
+    for v in nodes {
+        let (node_name, op, inputs) = graph_node_from_json(v, &ids)?;
+        let id = g.push(&node_name, op, inputs);
+        // A duplicate name overwrites the id binding here, but
+        // `validate` rejects the graph before it can be used.
+        ids.insert(node_name, id);
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+fn graph_to_json(g: &Graph) -> Json {
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|node| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(node.name.clone()));
+            if !node.inputs.is_empty() {
+                o.insert(
+                    "inputs".to_string(),
+                    Json::Arr(
+                        node.inputs
+                            .iter()
+                            .map(|id| Json::Str(g.node(*id).name.clone()))
+                            .collect(),
+                    ),
+                );
+            }
+            let op = |s: &str| Json::Str(s.to_string());
+            match node.op {
+                Op::Input { shape } => {
+                    o.insert("op".to_string(), op("input"));
+                    o.insert("shape".to_string(), shape_to_json(shape));
+                }
+                Op::Conv { out_ch, kh, kw, stride, pad } => {
+                    o.insert("op".to_string(), op("conv"));
+                    o.insert("out_ch".to_string(), num(out_ch));
+                    o.insert("kh".to_string(), num(kh));
+                    o.insert("kw".to_string(), num(kw));
+                    o.insert("stride".to_string(), num(stride));
+                    o.insert("pad".to_string(), num(pad));
+                }
+                Op::DepthwiseConv { kh, kw, stride, pad } => {
+                    o.insert("op".to_string(), op("depthwise"));
+                    o.insert("kh".to_string(), num(kh));
+                    o.insert("kw".to_string(), num(kw));
+                    o.insert("stride".to_string(), num(stride));
+                    o.insert("pad".to_string(), num(pad));
+                }
+                Op::Linear { out_features } => {
+                    o.insert("op".to_string(), op("linear"));
+                    o.insert("out_features".to_string(), num(out_features));
+                }
+                Op::MatMul { transpose_rhs } => {
+                    o.insert("op".to_string(), op("matmul"));
+                    if transpose_rhs {
+                        o.insert("transpose_rhs".to_string(), Json::Bool(true));
+                    }
+                }
+                Op::ElemwiseAdd => {
+                    o.insert("op".to_string(), op("add"));
+                }
+                Op::Pool => {
+                    o.insert("op".to_string(), op("pool"));
+                }
+                Op::GlobalAvgPool => {
+                    o.insert("op".to_string(), op("gap"));
+                }
+                Op::Activation { f: ActFn::Relu } => {
+                    o.insert("op".to_string(), op("relu"));
+                }
+                Op::Activation { f: ActFn::Softmax } => {
+                    o.insert("op".to_string(), op("softmax"));
+                }
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    Json::Arr(nodes)
 }
 
 /// Inline-network validation: every check that would otherwise surface as
@@ -192,7 +489,17 @@ fn validate_inline(net: &Network) -> Result<()> {
     );
     for l in &net.layers {
         match l.kind {
-            LayerKind::Conv { in_h, in_w, in_ch, out_ch, kh, kw, stride, pad } => {
+            LayerKind::Conv {
+                in_h,
+                in_w,
+                in_ch,
+                out_ch,
+                kh,
+                kw,
+                stride,
+                pad,
+                groups,
+            } => {
                 anyhow::ensure!(
                     in_h >= 1
                         && in_w >= 1
@@ -210,11 +517,30 @@ fn validate_inline(net: &Network) -> Result<()> {
                      {in_h}x{in_w} input",
                     l.name
                 );
+                anyhow::ensure!(
+                    groups >= 1 && in_ch % groups == 0 && out_ch % groups == 0,
+                    "layer `{}`: groups ({groups}) must divide in_ch \
+                     ({in_ch}) and out_ch ({out_ch})",
+                    l.name
+                );
             }
             LayerKind::Linear { in_features, out_features } => {
                 anyhow::ensure!(
                     in_features >= 1 && out_features >= 1,
                     "layer `{}`: linear features must be >= 1",
+                    l.name
+                );
+            }
+            LayerKind::MatMul { m, k, n } => {
+                anyhow::ensure!(
+                    m >= 1 && k >= 1 && n >= 1,
+                    "layer `{}`: matmul dimensions must be >= 1",
+                    l.name
+                );
+                anyhow::ensure!(
+                    !l.pool && !l.gap,
+                    "layer `{}`: pool/gap need a spatial feature map, which \
+                     a matmul does not produce",
                     l.name
                 );
             }
@@ -233,7 +559,9 @@ fn layer_from_json(v: &Json) -> Result<LayerDesc> {
     let kind = v
         .get("kind")
         .and_then(Json::as_str)
-        .with_context(|| format!("layer `{name}`: missing `kind` (conv|linear)"))?;
+        .with_context(|| {
+            format!("layer `{name}`: missing `kind` (conv|linear|matmul)")
+        })?;
     let u = |key: &str| -> Result<usize> {
         v.get(key).and_then(Json::as_usize).with_context(|| {
             format!("layer `{name}`: field `{key}` must be a non-negative integer")
@@ -253,8 +581,8 @@ fn layer_from_json(v: &Json) -> Result<LayerDesc> {
                 "conv layer",
                 obj,
                 &[
-                    "gap", "in_ch", "in_h", "in_w", "kh", "kind", "kw", "name",
-                    "out_ch", "pad", "pool", "relu", "stride",
+                    "gap", "groups", "in_ch", "in_h", "in_w", "kh", "kind",
+                    "kw", "name", "out_ch", "pad", "pool", "relu", "stride",
                 ],
             )?;
             Ok(LayerDesc {
@@ -270,6 +598,10 @@ fn layer_from_json(v: &Json) -> Result<LayerDesc> {
                     pad: match v.get("pad") {
                         None => 0,
                         Some(_) => u("pad")?,
+                    },
+                    groups: match v.get("groups") {
+                        None => 1,
+                        Some(_) => u("groups")?,
                     },
                 },
                 pool: b("pool", false)?,
@@ -294,8 +626,19 @@ fn layer_from_json(v: &Json) -> Result<LayerDesc> {
                 relu: b("relu", false)?,
             })
         }
+        "matmul" => {
+            check_keys("matmul layer", obj, &["k", "kind", "m", "n", "name", "relu"])?;
+            Ok(LayerDesc {
+                name: name.clone(),
+                kind: LayerKind::MatMul { m: u("m")?, k: u("k")?, n: u("n")? },
+                pool: false,
+                gap: false,
+                relu: b("relu", false)?,
+            })
+        }
         other => anyhow::bail!(
-            "layer `{name}`: unknown kind `{other}` (accepted: conv, linear)"
+            "layer `{name}`: unknown kind `{other}` (accepted: conv, linear, \
+             matmul)"
         ),
     }
 }
@@ -304,7 +647,7 @@ fn layer_to_json(l: &LayerDesc) -> Json {
     let mut o = BTreeMap::new();
     o.insert("name".to_string(), Json::Str(l.name.clone()));
     match l.kind {
-        LayerKind::Conv { in_h, in_w, in_ch, out_ch, kh, kw, stride, pad } => {
+        LayerKind::Conv { in_h, in_w, in_ch, out_ch, kh, kw, stride, pad, groups } => {
             o.insert("kind".to_string(), Json::Str("conv".to_string()));
             o.insert("in_h".to_string(), num(in_h));
             o.insert("in_w".to_string(), num(in_w));
@@ -314,6 +657,11 @@ fn layer_to_json(l: &LayerDesc) -> Json {
             o.insert("kw".to_string(), num(kw));
             o.insert("stride".to_string(), num(stride));
             o.insert("pad".to_string(), num(pad));
+            // Dense convs omit `groups` so pre-IR documents stay
+            // canonical fixed points.
+            if groups != 1 {
+                o.insert("groups".to_string(), num(groups));
+            }
             o.insert("pool".to_string(), Json::Bool(l.pool));
             o.insert("gap".to_string(), Json::Bool(l.gap));
             o.insert("relu".to_string(), Json::Bool(l.relu));
@@ -322,6 +670,13 @@ fn layer_to_json(l: &LayerDesc) -> Json {
             o.insert("kind".to_string(), Json::Str("linear".to_string()));
             o.insert("in_features".to_string(), num(in_features));
             o.insert("out_features".to_string(), num(out_features));
+            o.insert("relu".to_string(), Json::Bool(l.relu));
+        }
+        LayerKind::MatMul { m, k, n } => {
+            o.insert("kind".to_string(), Json::Str("matmul".to_string()));
+            o.insert("m".to_string(), num(m));
+            o.insert("k".to_string(), num(k));
+            o.insert("n".to_string(), num(n));
             o.insert("relu".to_string(), Json::Bool(l.relu));
         }
     }
@@ -691,6 +1046,11 @@ impl Spec {
         Spec::new(NetworkSpec::Inline(net))
     }
 
+    /// Spec over an inline `pim::ir` operator graph.
+    pub fn inline_graph(graph: Graph) -> Spec {
+        Spec::new(NetworkSpec::Graph(graph))
+    }
+
     pub fn with_preset(mut self, preset: &str) -> Spec {
         self.device.preset = preset.to_string();
         self
@@ -1047,6 +1407,136 @@ mod tests {
         assert_eq!(cfg.geometry.channels, 2);
         assert_eq!(cfg.geometry.ranks_per_channel, 2);
         assert_eq!(cfg.shard, ShardPolicy::LayerSplit);
+    }
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("graphnet");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 4 });
+        let c0 = g.conv("c0", x, 4, 3, 1, 1);
+        let d = g.depthwise("dw", c0, 3, 1, 1);
+        let r = g.relu("dw.relu", d);
+        let a = g.add("res", c0, r);
+        let pw = g.conv("pw", a, 8, 1, 1, 0);
+        let gp = g.global_avg_pool("pw.gap", pw);
+        g.linear("fc", gp, 10);
+        g
+    }
+
+    #[test]
+    fn graph_spec_roundtrips_and_resolves() {
+        let spec = Spec::inline_graph(tiny_graph()).with_preset("conservative");
+        let text = spec.to_json_text();
+        let parsed = Spec::from_json_text(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_json_text(), text, "canonical fixed point");
+        let net = parsed.network.resolve().unwrap();
+        assert_eq!(net.name, "graphnet");
+        assert_eq!(net.layers.len(), 4);
+        assert_eq!(net.residuals.len(), 1);
+        assert!(net.layers[1].relu && !net.layers[1].gap);
+        assert!(net.layers[2].gap);
+    }
+
+    #[test]
+    fn graph_spec_parse_errors_are_actionable() {
+        // Unknown op names the accepted set.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": {"name": "g", "graph": [
+                {"name": "x", "op": "tensor"}
+            ]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("conv"), "{err}");
+        // Forward/unknown input references are rejected at parse time.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": {"name": "g", "graph": [
+                {"name": "x", "op": "input", "shape": {"n": 8}},
+                {"inputs": ["nope"], "name": "fc", "op": "linear",
+                 "out_features": 4}
+            ]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("declared earlier"), "{err}");
+        // Arity mismatch.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": {"name": "g", "graph": [
+                {"name": "x", "op": "input", "shape": {"n": 8}},
+                {"inputs": ["x"], "name": "a", "op": "add"}
+            ]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("2 input(s)"), "{err}");
+        // Unknown node field.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": {"name": "g", "graph": [
+                {"name": "x", "op": "input", "shape": {"n": 8}, "extra": 1}
+            ]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("`extra`"), "{err}");
+    }
+
+    #[test]
+    fn grouped_and_matmul_layers_roundtrip() {
+        let net = Network {
+            name: "g".to_string(),
+            layers: vec![
+                LayerDesc::depthwise("dw", (8, 8), 4, 3, 1, 1, false),
+                LayerDesc::conv("pw", (8, 8), 4, 4, 1, 1, 0, false),
+            ],
+            residuals: vec![],
+        };
+        let spec = Spec::inline(net);
+        let parsed = Spec::from_json_text(&spec.to_json_text()).unwrap();
+        assert_eq!(parsed, spec);
+        assert!(spec.to_json_text().contains("\"groups\": 4"));
+
+        let net = Network {
+            name: "mm".to_string(),
+            layers: vec![
+                LayerDesc::matmul("qk", 4, 16, 4, true),
+                LayerDesc::matmul("av", 4, 4, 16, false),
+            ],
+            residuals: vec![],
+        };
+        let spec = Spec::inline(net);
+        let parsed = Spec::from_json_text(&spec.to_json_text()).unwrap();
+        assert_eq!(parsed, spec);
+        parsed.network.resolve().unwrap();
+
+        // Bad groups are caught at resolve time.
+        let net = Network {
+            name: "bad".to_string(),
+            layers: vec![LayerDesc {
+                name: "c".to_string(),
+                kind: LayerKind::Conv {
+                    in_h: 8,
+                    in_w: 8,
+                    in_ch: 4,
+                    out_ch: 6,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                    groups: 4,
+                },
+                pool: false,
+                gap: false,
+                relu: true,
+            }],
+            residuals: vec![],
+        };
+        let err = NetworkSpec::Inline(net).resolve().unwrap_err();
+        assert!(err.to_string().contains("groups"), "{err}");
+    }
+
+    #[test]
+    fn builtin_registry_includes_the_generality_workloads() {
+        assert!(BUILTIN_NETWORKS.contains(&"mobilenet_mini"));
+        assert!(BUILTIN_NETWORKS.contains(&"tinyformer"));
+        for name in BUILTIN_NETWORKS {
+            Spec::builtin(name).network.resolve().unwrap();
+        }
     }
 
     #[test]

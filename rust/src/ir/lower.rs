@@ -1,0 +1,103 @@
+//! Bank-stage scheduling — the final `pim::ir` pass.
+//!
+//! Runs the whole pipeline (validate → shape inference → SFU fusion →
+//! legalization) and emits the lowered [`Network`]: one bank stage per
+//! compute node in topological program order, one reserved-bank
+//! [`Residual`](crate::workloads::Residual) edge per `ElemwiseAdd`, in
+//! add order. The result is exactly the per-bank stage form `mapping`,
+//! `plan::lower`/`plan::layout` and the pricing engine consume — graphs
+//! that describe the paper's networks lower to **structurally identical**
+//! `Network` values, which is what makes the IR migration bitwise-safe
+//! (`tests/ir_equivalence.rs`).
+//!
+//! The lowered chain is priced as a linear layer-per-bank pipeline (the
+//! paper's dataflow): a stage's activations ride to the next stage's
+//! bank. Fan-out in the graph (several consumers of one value, e.g.
+//! attention's Q/K/V reading the same embedding) is therefore modeled as
+//! repeated reads of the producing bank's output — the transfer cost
+//! stays attributed to the producer stage, matching how the flat chain
+//! always priced it.
+
+use anyhow::Result;
+
+use crate::workloads::Network;
+
+use super::{passes, shape, Graph};
+
+/// Lower a graph to the per-bank stage form.
+pub fn lower(g: &Graph) -> Result<Network> {
+    g.validate()?;
+    let shapes = shape::infer(g)
+        .map_err(|e| e.context(format!("shape inference over graph `{}`", g.name)))?;
+    let fused = passes::fuse(g)
+        .map_err(|e| e.context(format!("SFU fusion over graph `{}`", g.name)))?;
+    let layers = passes::legalize(g, &shapes, &fused)
+        .map_err(|e| e.context(format!("legalizing graph `{}`", g.name)))?;
+    Ok(Network { name: g.name.clone(), layers, residuals: fused.residuals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Shape;
+    use crate::workloads::{LayerDesc, Residual};
+
+    /// The smallest interesting graph: conv+relu+pool, fc chain — must
+    /// lower to exactly what the flat constructors build.
+    #[test]
+    fn lowering_matches_flat_construction() {
+        let mut g = Graph::new("tiny");
+        let x = g.input("in", Shape::Map { h: 8, w: 8, c: 1 });
+        let c = g.conv("c1", x, 8, 3, 1, 1);
+        let r = g.relu("c1.relu", c);
+        let p = g.pool("c1.pool", r);
+        let f1 = g.linear("fc1", p, 32);
+        let f1r = g.relu("fc1.relu", f1);
+        g.linear("fc2", f1r, 10);
+
+        let net = lower(&g).unwrap();
+        let flat = Network {
+            name: "tiny".to_string(),
+            layers: vec![
+                LayerDesc::conv("c1", (8, 8), 1, 8, 3, 1, 1, true),
+                LayerDesc::linear("fc1", 128, 32, true),
+                LayerDesc::linear("fc2", 32, 10, false),
+            ],
+            residuals: vec![],
+        };
+        assert_eq!(net, flat);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn residual_block_lowers_to_edge_list() {
+        let mut g = Graph::new("res");
+        let x = g.input("in", Shape::Map { h: 8, w: 8, c: 4 });
+        let c0 = g.conv("c0", x, 4, 3, 1, 1);
+        let c1 = g.conv("c1", c0, 4, 3, 1, 1);
+        let c2 = g.conv("c2", c1, 4, 3, 1, 1);
+        let a = g.add("a", c0, c2);
+        let c3 = g.conv("c3", a, 4, 3, 1, 1);
+        g.add("a2", a, c3);
+        let net = lower(&g).unwrap();
+        assert_eq!(net.layers.len(), 4);
+        assert_eq!(
+            net.residuals,
+            vec![
+                Residual { from_layer: 0, into_layer: 2 },
+                Residual { from_layer: 2, into_layer: 3 },
+            ]
+        );
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn lowering_errors_name_the_pass() {
+        // Shape error carries the graph name.
+        let mut g = Graph::new("bad");
+        let x = g.input("in", Shape::Map { h: 4, w: 4, c: 1 });
+        g.conv("c", x, 8, 11, 4, 0);
+        let err = format!("{:#}", lower(&g).unwrap_err());
+        assert!(err.contains("shape inference") && err.contains("bad"), "{err}");
+    }
+}

@@ -1,0 +1,332 @@
+//! `pim::ir` — the typed operator-graph IR and its pass-based lowering
+//! (DESIGN.md §IR).
+//!
+//! The workload model used to be a flat `Vec<LayerDesc>` with boolean
+//! `pool`/`gap`/`relu` flags and a bolted-on residual side-table, which
+//! structurally locked the repro to the paper's four CNNs. This module
+//! replaces the *authoring* layer with a small dataflow graph:
+//!
+//!   * [`Graph`] — named single-output nodes ([`Node`]) with explicit
+//!     value edges ([`NodeId`] operands). Residual shortcuts are ordinary
+//!     [`Op::ElemwiseAdd`] nodes, not a parallel list.
+//!   * [`Op`] — the operator set: `Conv`, `DepthwiseConv`, `Linear`,
+//!     `MatMul`, `ElemwiseAdd`, `Pool`, `GlobalAvgPool`, `Activation`.
+//!
+//! Lowering ([`lower`]) runs a fixed pass pipeline:
+//!
+//!   1. **shape inference** ([`shape::infer`]) — per-value shapes
+//!      (feature map / flat vector / matrix), producer ↔ consumer
+//!      agreement, kernel/stride validity.
+//!   2. **SFU fusion** ([`passes::fuse`]) — `Activation`/`Pool`/
+//!      `GlobalAvgPool` nodes fold into the SFU chain of the bank stage
+//!      that produces their operand (the paper's §IV-A peripheral units),
+//!      and `ElemwiseAdd` nodes become reserved-bank residual edges.
+//!   3. **legalization** ([`passes::legalize`]) — every compute node is
+//!      rewritten onto the bank multiplication primitive: dense conv,
+//!      grouped/depthwise conv, flat linear, and `m×k·k×n` matmul (which
+//!      also covers per-token linear on matrix values).
+//!   4. **bank-stage scheduling** ([`lower`]) — stages are emitted in
+//!      topological (program) order, one bank per stage plus one reserved
+//!      bank per residual edge, producing the `workloads::Network` form
+//!      that `mapping`, `plan` and the pricing engine consume unchanged.
+//!
+//! Graphs are constructed in topological order by the builder methods
+//! (an operand must already exist to be referenced), so program order
+//! *is* a topological order and scheduling is deterministic — a property
+//! the bitwise-equivalence bar (`tests/ir_equivalence.rs`) relies on.
+
+pub mod lower;
+pub mod passes;
+pub mod shape;
+
+pub use lower::lower;
+pub use shape::{infer as infer_shapes, Shape};
+
+/// A value id: the node that produces the value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+/// Pointwise activation functions the SFU chain can absorb. The SFU
+/// prices every fused nonlinearity identically (one pipeline pass), so
+/// the distinction is semantic, not a cost-model input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActFn {
+    Relu,
+    Softmax,
+}
+
+/// One operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// The graph input (exactly one per graph, no operands).
+    Input { shape: Shape },
+    /// Dense convolution (square or rectangular kernel).
+    Conv { out_ch: usize, kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Depthwise convolution: one filter per channel.
+    DepthwiseConv { kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Linear map: flat vectors map to flat vectors, matrices per-row.
+    Linear { out_features: usize },
+    /// Matrix product of two value operands; `transpose_rhs` contracts
+    /// against the rhs rows (attention's `Q·Kᵀ`).
+    MatMul { transpose_rhs: bool },
+    /// Residual add: operands are `[shortcut, main]`. Lowering turns it
+    /// into a reserved-bank edge; the shortcut may be shape-projected by
+    /// that bank (Fig 13), so only the main operand sets the shape.
+    ElemwiseAdd,
+    /// The SFU pooling unit: 2×2/stride-2 max pool.
+    Pool,
+    /// The pooling unit in running-average mode: h×w×c → c.
+    GlobalAvgPool,
+    /// Pointwise activation, fused into the producer's SFU chain.
+    Activation { f: ActFn },
+}
+
+impl Op {
+    /// Operand count the operator requires.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Input { .. } => 0,
+            Op::MatMul { .. } | Op::ElemwiseAdd => 2,
+            _ => 1,
+        }
+    }
+
+    /// Does this node become a bank stage of its own when lowered?
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            Op::Conv { .. }
+                | Op::DepthwiseConv { .. }
+                | Op::Linear { .. }
+                | Op::MatMul { .. }
+        )
+    }
+}
+
+/// One graph node: a named operator applied to earlier nodes' values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+}
+
+/// A typed operator graph. Nodes are stored in construction order, which
+/// the builder keeps topological (operands must already exist).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    /// Append a node; `inputs` must reference existing nodes.
+    pub fn push(&mut self, name: &str, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node { name: name.to_string(), op, inputs });
+        id
+    }
+
+    pub fn input(&mut self, name: &str, shape: Shape) -> NodeId {
+        self.push(name, Op::Input { shape }, vec![])
+    }
+
+    /// Square-kernel convolution.
+    pub fn conv(
+        &mut self,
+        name: &str,
+        src: NodeId,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> NodeId {
+        self.push(name, Op::Conv { out_ch, kh: k, kw: k, stride, pad }, vec![src])
+    }
+
+    /// Square-kernel depthwise convolution.
+    pub fn depthwise(
+        &mut self,
+        name: &str,
+        src: NodeId,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> NodeId {
+        self.push(name, Op::DepthwiseConv { kh: k, kw: k, stride, pad }, vec![src])
+    }
+
+    pub fn linear(&mut self, name: &str, src: NodeId, out_features: usize) -> NodeId {
+        self.push(name, Op::Linear { out_features }, vec![src])
+    }
+
+    /// `lhs · rhs`.
+    pub fn matmul(&mut self, name: &str, lhs: NodeId, rhs: NodeId) -> NodeId {
+        self.push(name, Op::MatMul { transpose_rhs: false }, vec![lhs, rhs])
+    }
+
+    /// `lhs · rhsᵀ` (attention scores).
+    pub fn matmul_t(&mut self, name: &str, lhs: NodeId, rhs: NodeId) -> NodeId {
+        self.push(name, Op::MatMul { transpose_rhs: true }, vec![lhs, rhs])
+    }
+
+    /// Residual add of `shortcut` into `main` (the later stage).
+    pub fn add(&mut self, name: &str, shortcut: NodeId, main: NodeId) -> NodeId {
+        self.push(name, Op::ElemwiseAdd, vec![shortcut, main])
+    }
+
+    pub fn relu(&mut self, name: &str, src: NodeId) -> NodeId {
+        self.push(name, Op::Activation { f: ActFn::Relu }, vec![src])
+    }
+
+    pub fn softmax(&mut self, name: &str, src: NodeId) -> NodeId {
+        self.push(name, Op::Activation { f: ActFn::Softmax }, vec![src])
+    }
+
+    pub fn pool(&mut self, name: &str, src: NodeId) -> NodeId {
+        self.push(name, Op::Pool, vec![src])
+    }
+
+    pub fn global_avg_pool(&mut self, name: &str, src: NodeId) -> NodeId {
+        self.push(name, Op::GlobalAvgPool, vec![src])
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    /// How many nodes read each node's value.
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nodes.len()];
+        for node in &self.nodes {
+            for id in &node.inputs {
+                counts[id.0] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Structural validation: non-empty, unique names, exactly one input
+    /// node, correct arities, operands strictly earlier (topological
+    /// program order), at least one compute node.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "graph needs a non-empty name");
+        anyhow::ensure!(
+            !self.nodes.is_empty(),
+            "graph `{}` has no nodes",
+            self.name
+        );
+        let mut seen = std::collections::BTreeSet::new();
+        let mut inputs = 0usize;
+        let mut computes = 0usize;
+        for (i, node) in self.nodes.iter().enumerate() {
+            anyhow::ensure!(
+                !node.name.is_empty(),
+                "graph `{}`: node {i} needs a non-empty name",
+                self.name
+            );
+            anyhow::ensure!(
+                seen.insert(node.name.as_str()),
+                "graph `{}`: duplicate node name `{}`",
+                self.name,
+                node.name
+            );
+            anyhow::ensure!(
+                node.inputs.len() == node.op.arity(),
+                "graph `{}`: node `{}` takes {} operand(s), got {}",
+                self.name,
+                node.name,
+                node.op.arity(),
+                node.inputs.len()
+            );
+            for id in &node.inputs {
+                anyhow::ensure!(
+                    id.0 < i,
+                    "graph `{}`: node `{}` reads a later/undefined value \
+                     (nodes must be declared before use)",
+                    self.name,
+                    node.name
+                );
+            }
+            match node.op {
+                Op::Input { .. } => inputs += 1,
+                op if op.is_compute() => computes += 1,
+                _ => {}
+            }
+        }
+        anyhow::ensure!(
+            inputs == 1,
+            "graph `{}` needs exactly one input node, found {inputs}",
+            self.name
+        );
+        anyhow::ensure!(
+            computes >= 1,
+            "graph `{}` needs at least one compute node (conv/depthwise/\
+             linear/matmul)",
+            self.name
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_keeps_topological_order() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 1 });
+        let c = g.conv("c", x, 8, 3, 1, 1);
+        let r = g.relu("r", c);
+        g.linear("fc", r, 10);
+        g.validate().unwrap();
+        assert_eq!(g.node(c).inputs, vec![x]);
+        assert_eq!(g.consumer_counts(), vec![1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn validation_catches_structural_errors() {
+        // Duplicate name.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Flat { n: 8 });
+        g.linear("fc", x, 8);
+        g.linear("fc", x, 8);
+        assert!(g.validate().unwrap_err().to_string().contains("duplicate"));
+
+        // No input node.
+        let mut g = Graph::new("t");
+        g.push("fc", Op::Linear { out_features: 8 }, vec![]);
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("operand"), "{err}");
+
+        // Two input nodes.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Flat { n: 8 });
+        g.input("y", Shape::Flat { n: 8 });
+        g.linear("fc", x, 8);
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("exactly one input"), "{err}");
+
+        // No compute node.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 1 });
+        g.pool("p", x);
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("compute"), "{err}");
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Flat { n: 8 });
+        g.push("fc", Op::Linear { out_features: 8 }, vec![NodeId(5)]);
+        let _ = x;
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("before use"), "{err}");
+    }
+}

@@ -1,0 +1,378 @@
+//! SFU fusion and bank-op legalization — `pim::ir` passes 2 and 3.
+//!
+//! **Fusion** walks the graph in (topological) program order and folds
+//! every `Activation`/`Pool`/`GlobalAvgPool` node into the SFU chain of
+//! the bank stage that produces its operand — the peripheral units of
+//! §IV-A run behind the adder tree, so they never get a bank of their
+//! own. `ElemwiseAdd` nodes become reserved-bank residual edges between
+//! the stages that carry their operands (Fig 13). Fusion is legal only
+//! when the fused node is its operand's sole consumer (another consumer
+//! would observe the pre-chain value) and the operand is carried by a
+//! compute stage (not the graph input, not a residual add).
+//!
+//! **Legalization** rewrites each fused stage onto the bank
+//! multiplication primitive as a `workloads::LayerDesc`:
+//!
+//! | graph op | input shape | bank op |
+//! |----------|-------------|---------|
+//! | `Conv` | map | dense conv (`groups = 1`) |
+//! | `DepthwiseConv` | map | grouped conv (`groups = in_ch = out_ch`) |
+//! | `Linear` | flat / map | `Linear` (maps flatten implicitly) |
+//! | `Linear` | matrix | `MatMul` (per-row linear; weights resident) |
+//! | `MatMul` | matrix × matrix | `MatMul` (`k×n` operand resident) |
+//!
+//! Pool/GAP flags are legal only on stages producing feature maps — the
+//! pooling unit walks spatial windows, which flat vectors and matrices do
+//! not have.
+
+use anyhow::Result;
+
+use crate::workloads::{LayerDesc, LayerKind, Residual};
+
+use super::shape::Shape;
+use super::{Graph, NodeId, Op};
+
+/// The SFU chain fused behind one bank stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SfuChain {
+    pub relu: bool,
+    pub pool: bool,
+    pub gap: bool,
+}
+
+/// One bank stage after fusion: a compute node plus its SFU chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BankStage {
+    /// The compute node this stage executes.
+    pub node: NodeId,
+    pub chain: SfuChain,
+}
+
+/// Fusion output: bank stages in topological program order, residual
+/// edges (stage-indexed), and the stage that carries each node's value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedGraph {
+    pub stages: Vec<BankStage>,
+    pub residuals: Vec<Residual>,
+    /// Per node: the stage index whose bank holds the node's value after
+    /// fusion (`None` for the graph input).
+    pub carrier: Vec<Option<usize>>,
+}
+
+/// Pass 2: fold SFU nodes into their producer stages and turn adds into
+/// residual edges. Expects a [`Graph::validate`]d graph.
+pub fn fuse(g: &Graph) -> Result<FusedGraph> {
+    let consumers = g.consumer_counts();
+    let mut stages: Vec<BankStage> = Vec::new();
+    let mut residuals: Vec<Residual> = Vec::new();
+    let mut carrier: Vec<Option<usize>> = Vec::with_capacity(g.nodes.len());
+
+    for (i, node) in g.nodes.iter().enumerate() {
+        let name = &node.name;
+        let carried = match node.op {
+            Op::Input { .. } => None,
+            op if op.is_compute() => {
+                stages.push(BankStage { node: NodeId(i), chain: SfuChain::default() });
+                Some(stages.len() - 1)
+            }
+            Op::ElemwiseAdd => {
+                let from = carrier[node.inputs[0].0].ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "add `{name}`: a shortcut from the graph input has no \
+                         producing bank — insert a compute node first"
+                    )
+                })?;
+                let into = carrier[node.inputs[1].0].ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "add `{name}`: the main operand must come from a \
+                         compute stage, not the graph input"
+                    )
+                })?;
+                anyhow::ensure!(
+                    from < into,
+                    "add `{name}`: the shortcut must come from an earlier \
+                     stage than the main path (got stage {from} -> {into}); \
+                     swap the operands"
+                );
+                residuals.push(Residual { from_layer: from, into_layer: into });
+                Some(into)
+            }
+            Op::Pool | Op::GlobalAvgPool | Op::Activation { .. } => {
+                let src = node.inputs[0];
+                let src_node = g.node(src);
+                anyhow::ensure!(
+                    !matches!(src_node.op, Op::Input { .. } | Op::ElemwiseAdd),
+                    "`{name}` cannot fuse into `{}` — SFU ops chain behind a \
+                     compute stage, not the graph input or a residual add \
+                     (move it before the add or after a compute op)",
+                    src_node.name
+                );
+                anyhow::ensure!(
+                    consumers[src.0] == 1,
+                    "`{name}` cannot fuse: `{}` has {} consumers, so fusing \
+                     would hide its pre-chain value",
+                    src_node.name,
+                    consumers[src.0]
+                );
+                let stage = carrier[src.0].expect("non-input, non-add carrier");
+                let stage_node = stages[stage].node;
+                let chain = &mut stages[stage].chain;
+                let (flag, what): (&mut bool, &str) = match node.op {
+                    Op::Pool => (&mut chain.pool, "pool"),
+                    Op::GlobalAvgPool => (&mut chain.gap, "global average pool"),
+                    _ => (&mut chain.relu, "activation"),
+                };
+                anyhow::ensure!(
+                    !*flag,
+                    "`{name}`: stage `{}` already has a fused {what}",
+                    g.node(stage_node).name
+                );
+                *flag = true;
+                Some(stage)
+            }
+            // Compute ops are consumed by the `is_compute` guard arm.
+            _ => unreachable!(),
+        };
+        carrier.push(carried);
+    }
+    Ok(FusedGraph { stages, residuals, carrier })
+}
+
+/// Pass 3: legalize each fused stage onto the bank multiplication
+/// primitive, producing the lowered per-bank [`LayerDesc`] list.
+pub fn legalize(g: &Graph, shapes: &[Shape], fused: &FusedGraph) -> Result<Vec<LayerDesc>> {
+    fused
+        .stages
+        .iter()
+        .map(|stage| {
+            let node = g.node(stage.node);
+            let name = &node.name;
+            let in_shape = shapes[node.inputs[0].0];
+            let out_shape = shapes[stage.node.0];
+            let kind = match node.op {
+                Op::Conv { out_ch, kh, kw, stride, pad } => match in_shape {
+                    Shape::Map { h, w, c } => LayerKind::Conv {
+                        in_h: h,
+                        in_w: w,
+                        in_ch: c,
+                        out_ch,
+                        kh,
+                        kw,
+                        stride,
+                        pad,
+                        groups: 1,
+                    },
+                    other => anyhow::bail!(
+                        "stage `{name}`: conv on non-map input {other}"
+                    ),
+                },
+                Op::DepthwiseConv { kh, kw, stride, pad } => match in_shape {
+                    Shape::Map { h, w, c } => LayerKind::Conv {
+                        in_h: h,
+                        in_w: w,
+                        in_ch: c,
+                        out_ch: c,
+                        kh,
+                        kw,
+                        stride,
+                        pad,
+                        groups: c,
+                    },
+                    other => anyhow::bail!(
+                        "stage `{name}`: depthwise conv on non-map input {other}"
+                    ),
+                },
+                Op::Linear { out_features } => match in_shape {
+                    // Per-row linear on a matrix is a matmul against the
+                    // resident weight operand.
+                    Shape::Mat { rows, cols } => {
+                        LayerKind::MatMul { m: rows, k: cols, n: out_features }
+                    }
+                    flat_or_map => LayerKind::Linear {
+                        in_features: flat_or_map.elems(),
+                        out_features,
+                    },
+                },
+                Op::MatMul { .. } => {
+                    let (m, k) = match in_shape {
+                        Shape::Mat { rows, cols } => (rows, cols),
+                        other => anyhow::bail!(
+                            "stage `{name}`: matmul on non-matrix input {other}"
+                        ),
+                    };
+                    let n = match out_shape {
+                        Shape::Mat { cols, .. } => cols,
+                        other => anyhow::bail!(
+                            "stage `{name}`: matmul produced non-matrix {other}"
+                        ),
+                    };
+                    LayerKind::MatMul { m, k, n }
+                }
+                _ => unreachable!("fusion only emits compute stages"),
+            };
+            if stage.chain.pool || stage.chain.gap {
+                anyhow::ensure!(
+                    matches!(kind, LayerKind::Conv { .. }),
+                    "stage `{name}`: pool/global-average-pool need a spatial \
+                     feature map, but the stage lowers to a {} bank op",
+                    match kind {
+                        LayerKind::Linear { .. } => "linear",
+                        LayerKind::MatMul { .. } => "matmul",
+                        LayerKind::Conv { .. } => unreachable!(),
+                    }
+                );
+            }
+            Ok(LayerDesc {
+                name: name.clone(),
+                kind,
+                pool: stage.chain.pool,
+                gap: stage.chain.gap,
+                relu: stage.chain.relu,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::shape;
+
+    #[test]
+    fn sfu_nodes_fuse_into_their_producer() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 1 });
+        let c = g.conv("c1", x, 8, 3, 1, 1);
+        let r = g.relu("c1.relu", c);
+        g.pool("c1.pool", r);
+        let fused = fuse(&g).unwrap();
+        assert_eq!(fused.stages.len(), 1);
+        assert_eq!(
+            fused.stages[0].chain,
+            SfuChain { relu: true, pool: true, gap: false }
+        );
+        assert!(fused.residuals.is_empty());
+    }
+
+    #[test]
+    fn adds_become_residual_edges() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 4 });
+        let c0 = g.conv("c0", x, 4, 3, 1, 1);
+        let c1 = g.conv("c1", c0, 4, 3, 1, 1);
+        let c2 = g.conv("c2", c1, 4, 3, 1, 1);
+        let a = g.add("a", c0, c2);
+        g.linear("fc", a, 10);
+        let fused = fuse(&g).unwrap();
+        assert_eq!(fused.residuals, vec![Residual { from_layer: 0, into_layer: 2 }]);
+        // The add's value is carried by the into stage; fc chains off it.
+        assert_eq!(fused.carrier[a.0], Some(2));
+        assert_eq!(fused.stages.len(), 4);
+    }
+
+    #[test]
+    fn backwards_add_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 4 });
+        let c0 = g.conv("c0", x, 4, 3, 1, 1);
+        let c1 = g.conv("c1", c0, 4, 3, 1, 1);
+        g.add("a", c1, c0); // operands swapped
+        let err = fuse(&g).unwrap_err().to_string();
+        assert!(err.contains("swap"), "{err}");
+    }
+
+    #[test]
+    fn add_from_graph_input_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 4 });
+        let c = g.conv("c", x, 4, 3, 1, 1);
+        g.add("a", x, c);
+        let err = fuse(&g).unwrap_err().to_string();
+        assert!(err.contains("graph input"), "{err}");
+    }
+
+    #[test]
+    fn fusion_through_multi_consumer_value_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 4 });
+        let c0 = g.conv("c0", x, 4, 3, 1, 1);
+        let r = g.relu("r", c0); // c0 also feeds the add below
+        let c1 = g.conv("c1", r, 4, 3, 1, 1);
+        g.add("a", c0, c1);
+        let err = fuse(&g).unwrap_err().to_string();
+        assert!(err.contains("consumers"), "{err}");
+    }
+
+    #[test]
+    fn double_pool_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 1 });
+        let c = g.conv("c", x, 8, 3, 1, 1);
+        let p = g.pool("p1", c);
+        g.pool("p2", p);
+        let err = fuse(&g).unwrap_err().to_string();
+        assert!(err.contains("already has"), "{err}");
+    }
+
+    #[test]
+    fn legalization_covers_all_bank_ops() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 4 });
+        let dw = g.depthwise("dw", x, 3, 1, 1);
+        let pw = g.conv("pw", dw, 8, 1, 1, 0);
+        let gp = g.global_avg_pool("gp", pw);
+        g.linear("fc", gp, 10);
+        let shapes = shape::infer(&g).unwrap();
+        let fused = fuse(&g).unwrap();
+        let layers = legalize(&g, &shapes, &fused).unwrap();
+        assert_eq!(layers.len(), 3);
+        assert!(matches!(
+            layers[0].kind,
+            LayerKind::Conv { groups: 4, in_ch: 4, out_ch: 4, .. }
+        ));
+        assert!(matches!(layers[1].kind, LayerKind::Conv { groups: 1, .. }));
+        assert!(layers[1].gap);
+        assert!(matches!(
+            layers[2].kind,
+            LayerKind::Linear { in_features: 8, out_features: 10 }
+        ));
+    }
+
+    #[test]
+    fn per_row_linear_legalizes_to_matmul() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Mat { rows: 4, cols: 16 });
+        let q = g.linear("q", x, 8);
+        let k = g.linear("k", x, 8);
+        let s = g.matmul_t("s", q, k);
+        let _ = s;
+        let shapes = shape::infer(&g).unwrap();
+        let fused = fuse(&g).unwrap();
+        let layers = legalize(&g, &shapes, &fused).unwrap();
+        assert!(matches!(layers[0].kind, LayerKind::MatMul { m: 4, k: 16, n: 8 }));
+        assert!(matches!(layers[2].kind, LayerKind::MatMul { m: 4, k: 8, n: 4 }));
+    }
+
+    #[test]
+    fn pool_on_matmul_stage_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Mat { rows: 4, cols: 16 });
+        let q = g.linear("q", x, 8);
+        let _ = q;
+        // Hand-build an illegal pool over a matrix by bypassing shape
+        // inference: fuse alone accepts it, legalization must reject.
+        let p = g.push("p", Op::Pool, vec![q]);
+        let _ = p;
+        let fused = fuse(&g).unwrap();
+        // Shapes for legalization: infer would fail on the pool, which is
+        // the first line of defense; legalize guards stages regardless.
+        let shapes = vec![
+            Shape::Mat { rows: 4, cols: 16 },
+            Shape::Mat { rows: 4, cols: 8 },
+            Shape::Mat { rows: 4, cols: 8 },
+        ];
+        let err = legalize(&g, &shapes, &fused).unwrap_err().to_string();
+        assert!(err.contains("feature map"), "{err}");
+        assert!(shape::infer(&g).is_err(), "shape inference also rejects");
+    }
+}

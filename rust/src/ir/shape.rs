@@ -1,0 +1,252 @@
+//! Shape inference — the first `pim::ir` pass.
+//!
+//! Every value in a [`Graph`](crate::ir::Graph) carries one of three
+//! shapes: a spatial feature map (`h × w × c`), a flat feature vector, or
+//! a token/feature matrix (`rows × cols`). [`infer`] walks the graph in
+//! program order (a topological order by construction) and derives every
+//! node's output shape from its operator and operand shapes, rejecting
+//! inconsistent graphs with errors that name the node and both shapes.
+//!
+//! One deliberate exception, inherited from the paper's Fig 13 dataflow:
+//! the **shortcut** operand of an [`Op::ElemwiseAdd`] may disagree with
+//! the main-path operand. ResNet-style downsample projections are folded
+//! into the reserved bank that executes the add (see `workloads::nets`
+//! module docs), so the add's output shape is the *main* operand's shape
+//! and the shortcut is not shape-checked against it.
+
+use anyhow::Result;
+
+use super::{Graph, Node, Op};
+
+/// The shape of one value edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// Spatial feature map, `h × w` with `c` channels.
+    Map { h: usize, w: usize, c: usize },
+    /// Flat feature vector.
+    Flat { n: usize },
+    /// Token/feature matrix, `rows × cols` (e.g. sequence × model dim).
+    Mat { rows: usize, cols: usize },
+}
+
+impl Shape {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        match *self {
+            Shape::Map { h, w, c } => h * w * c,
+            Shape::Flat { n } => n,
+            Shape::Mat { rows, cols } => rows * cols,
+        }
+    }
+
+    fn valid(&self) -> bool {
+        self.elems() > 0
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Shape::Map { h, w, c } => write!(f, "{h}x{w}x{c}"),
+            Shape::Flat { n } => write!(f, "[{n}]"),
+            Shape::Mat { rows, cols } => write!(f, "{rows}x{cols}"),
+        }
+    }
+}
+
+/// Output shape of one node given its operands' shapes — the single
+/// inference rule [`infer`] applies per node, exported so tests can
+/// re-check every edge independently.
+pub fn output_shape(node: &Node, inputs: &[Shape]) -> Result<Shape> {
+    let name = &node.name;
+    let map_input = |what: &str| -> Result<(usize, usize, usize)> {
+        match inputs[0] {
+            Shape::Map { h, w, c } => Ok((h, w, c)),
+            other => anyhow::bail!(
+                "node `{name}`: {what} needs a feature-map input, got {other}"
+            ),
+        }
+    };
+    let out = match node.op {
+        Op::Input { shape } => {
+            anyhow::ensure!(
+                shape.valid(),
+                "node `{name}`: input dimensions must be >= 1"
+            );
+            shape
+        }
+        Op::Conv { out_ch, kh, kw, stride, pad } => {
+            let (h, w, c) = map_input("conv")?;
+            conv_out(name, h, w, c, out_ch, kh, kw, stride, pad)?
+        }
+        Op::DepthwiseConv { kh, kw, stride, pad } => {
+            let (h, w, c) = map_input("depthwise conv")?;
+            conv_out(name, h, w, c, c, kh, kw, stride, pad)?
+        }
+        Op::Linear { out_features } => {
+            anyhow::ensure!(
+                out_features >= 1,
+                "node `{name}`: out_features must be >= 1"
+            );
+            match inputs[0] {
+                // A matrix input applies the linear map per row.
+                Shape::Mat { rows, .. } => Shape::Mat { rows, cols: out_features },
+                // Feature maps flatten implicitly, as the classic CNN
+                // conv → fc transition always did.
+                Shape::Map { .. } | Shape::Flat { .. } => {
+                    Shape::Flat { n: out_features }
+                }
+            }
+        }
+        Op::MatMul { transpose_rhs } => {
+            let (m, k) = match inputs[0] {
+                Shape::Mat { rows, cols } => (rows, cols),
+                other => anyhow::bail!(
+                    "node `{name}`: matmul lhs must be a matrix, got {other}"
+                ),
+            };
+            let (rk, n) = match (inputs[1], transpose_rhs) {
+                (Shape::Mat { rows, cols }, false) => (rows, cols),
+                (Shape::Mat { rows, cols }, true) => (cols, rows),
+                (other, _) => anyhow::bail!(
+                    "node `{name}`: matmul rhs must be a matrix, got {other}"
+                ),
+            };
+            anyhow::ensure!(
+                rk == k,
+                "node `{name}`: matmul contraction mismatch — lhs {} vs rhs {}{}",
+                inputs[0],
+                inputs[1],
+                if transpose_rhs { " (transposed)" } else { "" }
+            );
+            Shape::Mat { rows: m, cols: n }
+        }
+        // The shortcut operand (inputs[0]) is exempt from the shape
+        // check: a mismatched shortcut is the Fig 13 stance where the
+        // downsample projection folds into the reserved bank.
+        Op::ElemwiseAdd => inputs[1],
+        Op::Pool => {
+            let (h, w, c) = map_input("pool")?;
+            anyhow::ensure!(
+                h >= 2 && w >= 2,
+                "node `{name}`: 2x2/stride-2 pool needs h,w >= 2, got {h}x{w}"
+            );
+            Shape::Map { h: h / 2, w: w / 2, c }
+        }
+        Op::GlobalAvgPool => {
+            let (_, _, c) = map_input("global average pool")?;
+            Shape::Flat { n: c }
+        }
+        Op::Activation { .. } => inputs[0],
+    };
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv_out(
+    name: &str,
+    h: usize,
+    w: usize,
+    c: usize,
+    out_ch: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<Shape> {
+    anyhow::ensure!(
+        c >= 1 && out_ch >= 1 && kh >= 1 && kw >= 1 && stride >= 1,
+        "node `{name}`: conv dimensions and stride must be >= 1"
+    );
+    anyhow::ensure!(
+        h + 2 * pad >= kh && w + 2 * pad >= kw,
+        "node `{name}`: {kh}x{kw} kernel exceeds the padded {h}x{w} input"
+    );
+    Ok(Shape::Map {
+        h: (h + 2 * pad - kh) / stride + 1,
+        w: (w + 2 * pad - kw) / stride + 1,
+        c: out_ch,
+    })
+}
+
+/// Infer every node's output shape, program order. Fails on the first
+/// producer/consumer disagreement.
+pub fn infer(g: &Graph) -> Result<Vec<Shape>> {
+    let mut shapes: Vec<Shape> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let inputs: Vec<Shape> =
+            node.inputs.iter().map(|id| shapes[id.0]).collect();
+        shapes.push(output_shape(node, &inputs)?);
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Graph;
+
+    #[test]
+    fn conv_chain_infers_spatial_dims() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 227, w: 227, c: 3 });
+        let c = g.conv("c1", x, 96, 11, 4, 0);
+        let r = g.relu("c1.relu", c);
+        let p = g.pool("c1.pool", r);
+        let shapes = infer(&g).unwrap();
+        assert_eq!(shapes[c.0], Shape::Map { h: 55, w: 55, c: 96 });
+        assert_eq!(shapes[r.0], shapes[c.0]);
+        assert_eq!(shapes[p.0], Shape::Map { h: 27, w: 27, c: 96 });
+    }
+
+    #[test]
+    fn matmul_contraction_checked() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Mat { rows: 4, cols: 8 });
+        let q = g.linear("q", x, 8);
+        let k = g.linear("k", x, 8);
+        let s = g.matmul_t("s", q, k);
+        let shapes = infer(&g).unwrap();
+        assert_eq!(shapes[s.0], Shape::Mat { rows: 4, cols: 4 });
+
+        // Untransposed rhs with mismatched inner dim is rejected.
+        let mut g = Graph::new("bad");
+        let x = g.input("x", Shape::Mat { rows: 4, cols: 8 });
+        let q = g.linear("q", x, 6);
+        let k = g.linear("k", x, 8);
+        g.matmul("s", q, k);
+        let err = infer(&g).unwrap_err();
+        assert!(err.to_string().contains("contraction"), "{err}");
+    }
+
+    #[test]
+    fn pool_on_flat_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Flat { n: 64 });
+        g.pool("p", x);
+        let err = infer(&g).unwrap_err();
+        assert!(err.to_string().contains("feature-map"), "{err}");
+    }
+
+    #[test]
+    fn oversized_kernel_rejected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 4, w: 4, c: 1 });
+        g.conv("c", x, 8, 11, 4, 0);
+        let err = infer(&g).unwrap_err();
+        assert!(err.to_string().contains("kernel"), "{err}");
+    }
+
+    #[test]
+    fn shortcut_operand_is_exempt() {
+        // Downsample residual: the shortcut's shape differs from the main
+        // path; the add takes the main path's shape (Fig 13 stance).
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 4 });
+        let c1 = g.conv("c1", x, 8, 3, 2, 1);
+        let c2 = g.conv("c2", c1, 8, 3, 1, 1);
+        let a = g.add("a", x, c2);
+        let shapes = infer(&g).unwrap();
+        assert_eq!(shapes[a.0], Shape::Map { h: 4, w: 4, c: 8 });
+    }
+}

@@ -21,6 +21,12 @@
 //!   (`Spec` → `Job` → report) is the single construction path for all of
 //!   it — CLI, TOML configs, benches and serving included.
 //!
+//! Workloads are authored as typed operator graphs (`ir::Graph` — conv,
+//! depthwise conv, linear, matmul, residual adds as ordinary edges) and
+//! lowered by the `ir` pass pipeline (shape inference → SFU fusion →
+//! bank-op legalization → topological bank-stage scheduling) into the
+//! per-bank stage form the rest of the stack prices.
+//!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for reproduction results.
 
@@ -35,6 +41,7 @@ pub mod dataflow;
 pub mod dram;
 pub mod energy;
 pub mod gpu;
+pub mod ir;
 pub mod mapping;
 pub mod plan;
 pub mod primitives;

@@ -127,11 +127,13 @@ impl std::fmt::Display for MapError {
 
 impl std::error::Error for MapError {}
 
-/// The outer-loop count k divides (output filters / output neurons).
+/// The outer-loop count k divides (output filters / output neurons /
+/// resident-operand columns for matmul).
 pub fn outer_count(layer: &LayerDesc) -> usize {
     match layer.kind {
         LayerKind::Conv { out_ch, .. } => out_ch,
         LayerKind::Linear { out_features, .. } => out_features,
+        LayerKind::MatMul { n, .. } => n,
     }
 }
 

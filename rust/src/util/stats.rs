@@ -35,10 +35,14 @@ impl Summary {
         self.values.iter().sum::<f64>() / self.values.len() as f64
     }
 
-    /// Sample standard deviation (n-1 denominator).
+    /// Sample standard deviation (n-1 denominator); `NaN` on an empty
+    /// set (like every other statistic here), 0 for a single sample.
     pub fn std(&self) -> f64 {
         let n = self.values.len();
-        if n < 2 {
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n == 1 {
             return 0.0;
         }
         let mean = self.mean();
@@ -46,11 +50,20 @@ impl Summary {
         (ss / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest sample; `NaN` on an empty set — the fold's `+INFINITY`
+    /// seed used to leak out, disagreeing with `mean()`/`percentile()`.
     pub fn min(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
         self.values.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; `NaN` on an empty set (see [`Summary::min`]).
     pub fn max(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -158,10 +171,26 @@ mod tests {
     }
 
     #[test]
-    fn empty_summary() {
+    fn empty_summary_is_nan_everywhere() {
+        // Every statistic of an empty sample set is NaN — min/max used to
+        // return ±INFINITY while mean/percentile returned NaN.
         let s = Summary::new();
-        assert!(s.mean().is_nan());
         assert!(s.is_empty());
+        assert!(s.mean().is_nan());
+        assert!(s.std().is_nan());
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn single_sample_summary() {
+        let s = Summary::from_values(vec![3.5]);
+        assert_eq!(s.mean(), 3.5);
+        assert_eq!(s.min(), 3.5);
+        assert_eq!(s.max(), 3.5);
+        assert_eq!(s.median(), 3.5);
         assert_eq!(s.std(), 0.0);
     }
 

@@ -1,15 +1,29 @@
-//! Workload zoo (DESIGN.md S12): layer-shape descriptors for the paper's
-//! evaluation networks (AlexNet, VGG16, ResNet18 — §V-B) plus PimNet, the
-//! small quantized CNN whose AOT artifacts the end-to-end driver executes.
+//! Workload zoo (DESIGN.md S12): the **lowered per-bank stage form** every
+//! network reaches through `crate::ir` — an ordered chain of
+//! [`LayerDesc`] bank stages plus [`Residual`] reserved-bank edges — and
+//! the builtin networks (the paper's AlexNet/VGG16/ResNet18, PimNet, and
+//! the post-paper generality workloads `mobilenet_mini`/`tinyformer`).
 //!
-//! Only *shapes* matter for the timing experiments; they are the public
-//! architectures. Every descriptor knows its MAC geometry (`mac_size`,
-//! `num_macs`), FLOPs and byte traffic — the quantities the mapper, the
-//! PIM simulator, and the GPU roofline baseline all consume.
+//! Networks are *authored* as typed operator graphs (`ir::Graph`) and
+//! lowered by the `ir` pass pipeline; this module keeps the lowered form
+//! and its constructors as thin shims. Only *shapes* matter for the
+//! timing experiments. Every descriptor knows its MAC geometry
+//! (`mac_size`, `num_macs`), FLOPs and byte traffic — the quantities the
+//! mapper, the PIM simulator, and the GPU roofline baseline all consume.
+//!
+//! Three bank-op kinds exist after `ir` legalization:
+//!   * [`LayerKind::Conv`] — (optionally grouped) convolution; a
+//!     depthwise conv is the `groups == in_ch == out_ch` special case.
+//!   * [`LayerKind::Linear`] — fully-connected over a flat vector.
+//!   * [`LayerKind::MatMul`] — `m×k · k×n` with the `k×n` operand
+//!     resident in the bank (attention scores/context, per-token linear).
 
 pub mod nets;
 
-pub use nets::{alexnet, pimnet, resnet18, vgg16, all_networks};
+pub use nets::{
+    all_networks, alexnet, mobilenet_mini, paper_networks, pimnet, resnet18,
+    tinyformer, vgg16,
+};
 
 /// One network layer (a PIM bank's worth of work).
 #[derive(Debug, Clone, PartialEq)]
@@ -37,8 +51,17 @@ pub enum LayerKind {
         kw: usize,
         stride: usize,
         pad: usize,
+        /// Channel groups: each output channel reads `in_ch / groups`
+        /// input channels. 1 = dense conv; `groups == in_ch == out_ch` =
+        /// depthwise.
+        groups: usize,
     },
     Linear { in_features: usize, out_features: usize },
+    /// `m×k · k×n` matrix product on the bank multiplication primitive:
+    /// the `k×n` operand sits resident in the bank (it is "the weights"
+    /// for footprint purposes, even when it is an activation such as the
+    /// attention keys), the `m×k` operand streams through.
+    MatMul { m: usize, k: usize, n: usize },
 }
 
 impl LayerDesc {
@@ -63,10 +86,52 @@ impl LayerDesc {
                 kw: k,
                 stride,
                 pad,
+                groups: 1,
             },
             pool,
             gap: false,
             relu: true,
+        }
+    }
+
+    /// Depthwise convolution: one `k×k` filter per channel
+    /// (`groups == in_ch == out_ch`), the MobileNet building block.
+    pub fn depthwise(
+        name: &str,
+        in_hw: (usize, usize),
+        ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        pool: bool,
+    ) -> Self {
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Conv {
+                in_h: in_hw.0,
+                in_w: in_hw.1,
+                in_ch: ch,
+                out_ch: ch,
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+                groups: ch,
+            },
+            pool,
+            gap: false,
+            relu: true,
+        }
+    }
+
+    /// `m×k · k×n` matrix product with the `k×n` operand bank-resident.
+    pub fn matmul(name: &str, m: usize, k: usize, n: usize, relu: bool) -> Self {
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::MatMul { m, k, n },
+            pool: false,
+            gap: false,
+            relu,
         }
     }
 
@@ -98,20 +163,23 @@ impl LayerDesc {
                 (in_h + 2 * pad - kh) / stride + 1,
                 (in_w + 2 * pad - kw) / stride + 1,
             )),
-            LayerKind::Linear { .. } => None,
+            LayerKind::Linear { .. } | LayerKind::MatMul { .. } => None,
         }
     }
 
-    /// Multiplications per MAC (§IV-B: `K·L·I` for conv, fan-in for linear).
+    /// Multiplications per MAC (§IV-B: `K·L·I/G` for (grouped) conv,
+    /// fan-in for linear, the contraction length for matmul).
     pub fn mac_size(&self) -> usize {
         match self.kind {
-            LayerKind::Conv { in_ch, kh, kw, .. } => kh * kw * in_ch,
+            LayerKind::Conv { in_ch, kh, kw, groups, .. } => kh * kw * (in_ch / groups),
             LayerKind::Linear { in_features, .. } => in_features,
+            LayerKind::MatMul { k, .. } => k,
         }
     }
 
     /// Number of MACs (dot products) in the layer:
-    /// conv → `No_of_MAC · no_output_filter`; linear → output neurons.
+    /// conv → `No_of_MAC · no_output_filter`; linear → output neurons;
+    /// matmul → output elements.
     pub fn num_macs(&self) -> usize {
         match self.kind {
             LayerKind::Conv { out_ch, .. } => {
@@ -119,6 +187,7 @@ impl LayerDesc {
                 oh * ow * out_ch
             }
             LayerKind::Linear { out_features, .. } => out_features,
+            LayerKind::MatMul { m, n, .. } => m * n,
         }
     }
 
@@ -137,24 +206,29 @@ impl LayerDesc {
                 }
             }
             LayerKind::Linear { out_features, .. } => out_features,
+            LayerKind::MatMul { m, n, .. } => m * n,
         }
     }
 
-    /// Input element count.
+    /// Input element count (the streaming operand for matmul).
     pub fn in_elems(&self) -> usize {
         match self.kind {
             LayerKind::Conv { in_h, in_w, in_ch, .. } => in_h * in_w * in_ch,
             LayerKind::Linear { in_features, .. } => in_features,
+            LayerKind::MatMul { m, k, .. } => m * k,
         }
     }
 
-    /// Weight count.
+    /// Weight count (the bank-resident operand for matmul).
     pub fn weight_elems(&self) -> usize {
         match self.kind {
-            LayerKind::Conv { in_ch, out_ch, kh, kw, .. } => kh * kw * in_ch * out_ch,
+            LayerKind::Conv { in_ch, out_ch, kh, kw, groups, .. } => {
+                kh * kw * (in_ch / groups) * out_ch
+            }
             LayerKind::Linear { in_features, out_features } => {
                 in_features * out_features
             }
+            LayerKind::MatMul { k, n, .. } => k * n,
         }
     }
 

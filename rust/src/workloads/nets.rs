@@ -1,139 +1,280 @@
-//! The evaluation networks (§V-B): AlexNet, VGG-16, ResNet-18 — plus
-//! PimNet, the runnable AOT workload.
+//! The builtin networks, authored as `pim::ir` operator graphs: the
+//! paper's evaluation CNNs (AlexNet, VGG-16, ResNet-18 — §V-B), PimNet
+//! (the runnable AOT workload), and two post-paper generality workloads —
+//! `mobilenet_mini` (depthwise-separable CNN) and `tinyformer` (a
+//! transformer block: MatMul attention + MLP + residual edges).
 //!
-//! Modeling notes (DESIGN.md §2): pooling is the SFU pooling unit, i.e.
-//! 2×2/stride-2 with floor division on odd dims (AlexNet's overlapping
-//! 3×3/s2 pools produce the same output dims); ResNet-18's downsample 1×1
-//! convs are folded into the residual edges their reserved banks execute.
+//! Every builtin is a graph builder (`*_graph()`) plus a lowered-form
+//! shim (`alexnet()` etc. — `ir::lower` applied to the graph). The four
+//! paper networks lower to **exactly** the flat layer chains the
+//! pre-IR constructors built (`tests/ir_equivalence.rs` holds the whole
+//! pricing stack to bitwise identity against them).
+//!
+//! Modeling notes (DESIGN.md §2/§IR): pooling is the SFU pooling unit,
+//! i.e. 2×2/stride-2 with floor division on odd dims (AlexNet's
+//! overlapping 3×3/s2 pools produce the same output dims); ResNet-18's
+//! downsample 1×1 convs are folded into the residual edges their
+//! reserved banks execute — in the graph form this is the documented
+//! shortcut-operand exemption of `ir::shape`. Softmax in `tinyformer`
+//! fuses into the SFU chain like any pointwise activation (one pipeline
+//! pass — `ir::ActFn`).
 
-use super::{LayerDesc, Network, Residual};
+use crate::ir::{Graph, NodeId, Shape};
 
-/// AlexNet (227×227×3 input), 8 layers — the paper's P-vector length.
-pub fn alexnet() -> Network {
-    let layers = vec![
-        LayerDesc::conv("conv1", (227, 227), 3, 96, 11, 4, 0, true),
-        LayerDesc::conv("conv2", (27, 27), 96, 256, 5, 1, 2, true),
-        LayerDesc::conv("conv3", (13, 13), 256, 384, 3, 1, 1, false),
-        LayerDesc::conv("conv4", (13, 13), 384, 384, 3, 1, 1, false),
-        LayerDesc::conv("conv5", (13, 13), 384, 256, 3, 1, 1, true),
-        LayerDesc::linear("fc6", 9216, 4096, true),
-        LayerDesc::linear("fc7", 4096, 4096, true),
-        LayerDesc::linear("fc8", 4096, 1000, false),
-    ];
-    Network { name: "alexnet".into(), layers, residuals: vec![] }
+use super::Network;
+
+/// conv → relu (→ pool) — the standard CNN block, matching the flat
+/// `LayerDesc::conv` constructor's always-on ReLU.
+#[allow(clippy::too_many_arguments)]
+fn conv_block(
+    g: &mut Graph,
+    src: NodeId,
+    name: &str,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    pool: bool,
+) -> NodeId {
+    let c = g.conv(name, src, out_ch, k, stride, pad);
+    let r = g.relu(&format!("{name}.relu"), c);
+    if pool {
+        g.pool(&format!("{name}.pool"), r)
+    } else {
+        r
+    }
 }
 
-/// VGG-16 (224×224×3 input), 16 layers.
-pub fn vgg16() -> Network {
-    let layers = vec![
-        LayerDesc::conv("conv1_1", (224, 224), 3, 64, 3, 1, 1, false),
-        LayerDesc::conv("conv1_2", (224, 224), 64, 64, 3, 1, 1, true),
-        LayerDesc::conv("conv2_1", (112, 112), 64, 128, 3, 1, 1, false),
-        LayerDesc::conv("conv2_2", (112, 112), 128, 128, 3, 1, 1, true),
-        LayerDesc::conv("conv3_1", (56, 56), 128, 256, 3, 1, 1, false),
-        LayerDesc::conv("conv3_2", (56, 56), 256, 256, 3, 1, 1, false),
-        LayerDesc::conv("conv3_3", (56, 56), 256, 256, 3, 1, 1, true),
-        LayerDesc::conv("conv4_1", (28, 28), 256, 512, 3, 1, 1, false),
-        LayerDesc::conv("conv4_2", (28, 28), 512, 512, 3, 1, 1, false),
-        LayerDesc::conv("conv4_3", (28, 28), 512, 512, 3, 1, 1, true),
-        LayerDesc::conv("conv5_1", (14, 14), 512, 512, 3, 1, 1, false),
-        LayerDesc::conv("conv5_2", (14, 14), 512, 512, 3, 1, 1, false),
-        LayerDesc::conv("conv5_3", (14, 14), 512, 512, 3, 1, 1, true),
-        LayerDesc::linear("fc6", 25088, 4096, true),
-        LayerDesc::linear("fc7", 4096, 4096, true),
-        LayerDesc::linear("fc8", 4096, 1000, false),
-    ];
-    Network { name: "vgg16".into(), layers, residuals: vec![] }
+/// depthwise conv → relu.
+fn dw_block(g: &mut Graph, src: NodeId, name: &str, k: usize, stride: usize, pad: usize) -> NodeId {
+    let c = g.depthwise(name, src, k, stride, pad);
+    g.relu(&format!("{name}.relu"), c)
 }
 
-/// ResNet-18 (224×224×3 input): stem + 16 block convs + classifier head,
-/// residual edges per basic block (Fig 13 dataflow).
-pub fn resnet18() -> Network {
-    let mut layers = vec![LayerDesc::conv("conv1", (224, 224), 3, 64, 7, 2, 3, true)];
-    let stages: [(usize, usize, usize); 4] = [
-        // (spatial in, channels, first-conv stride)
-        (56, 64, 1),
-        (56, 128, 2),
-        (28, 256, 2),
-        (14, 512, 2),
-    ];
-    let mut in_ch = 64;
-    for (si, &(hw, ch, stride1)) in stages.iter().enumerate() {
+/// linear (→ relu).
+fn linear_block(g: &mut Graph, src: NodeId, name: &str, out: usize, relu: bool) -> NodeId {
+    let l = g.linear(name, src, out);
+    if relu {
+        g.relu(&format!("{name}.relu"), l)
+    } else {
+        l
+    }
+}
+
+/// AlexNet (227×227×3 input), 8 bank stages — the paper's P-vector length.
+pub fn alexnet_graph() -> Graph {
+    let mut g = Graph::new("alexnet");
+    let x = g.input("input", Shape::Map { h: 227, w: 227, c: 3 });
+    let mut v = conv_block(&mut g, x, "conv1", 96, 11, 4, 0, true);
+    v = conv_block(&mut g, v, "conv2", 256, 5, 1, 2, true);
+    v = conv_block(&mut g, v, "conv3", 384, 3, 1, 1, false);
+    v = conv_block(&mut g, v, "conv4", 384, 3, 1, 1, false);
+    v = conv_block(&mut g, v, "conv5", 256, 3, 1, 1, true);
+    v = linear_block(&mut g, v, "fc6", 4096, true);
+    v = linear_block(&mut g, v, "fc7", 4096, true);
+    linear_block(&mut g, v, "fc8", 1000, false);
+    g
+}
+
+/// VGG-16 (224×224×3 input), 16 bank stages.
+pub fn vgg16_graph() -> Graph {
+    let mut g = Graph::new("vgg16");
+    let x = g.input("input", Shape::Map { h: 224, w: 224, c: 3 });
+    let mut v = x;
+    for (name, out_ch, pool) in [
+        ("conv1_1", 64usize, false),
+        ("conv1_2", 64, true),
+        ("conv2_1", 128, false),
+        ("conv2_2", 128, true),
+        ("conv3_1", 256, false),
+        ("conv3_2", 256, false),
+        ("conv3_3", 256, true),
+        ("conv4_1", 512, false),
+        ("conv4_2", 512, false),
+        ("conv4_3", 512, true),
+        ("conv5_1", 512, false),
+        ("conv5_2", 512, false),
+        ("conv5_3", 512, true),
+    ] {
+        v = conv_block(&mut g, v, name, out_ch, 3, 1, 1, pool);
+    }
+    v = linear_block(&mut g, v, "fc6", 4096, true);
+    v = linear_block(&mut g, v, "fc7", 4096, true);
+    linear_block(&mut g, v, "fc8", 1000, false);
+    g
+}
+
+/// ResNet-18 (224×224×3 input): stem + 16 block convs + classifier head.
+/// Residual shortcuts are ordinary `add` nodes (Fig 13 dataflow); each
+/// lowers to a reserved-bank edge `from 2b into 2b+2`.
+pub fn resnet18_graph() -> Graph {
+    let mut g = Graph::new("resnet18");
+    let x = g.input("input", Shape::Map { h: 224, w: 224, c: 3 });
+    let mut v = conv_block(&mut g, x, "conv1", 64, 7, 2, 3, true);
+    let stages: [(usize, usize); 4] = [(64, 1), (128, 2), (256, 2), (512, 2)];
+    for (si, &(ch, stride1)) in stages.iter().enumerate() {
         for block in 0..2 {
-            let (s, ic, dim) = if block == 0 {
-                (stride1, in_ch, hw)
-            } else {
-                (1, ch, hw / stride1)
-            };
-            let out_dim = dim / s;
-            layers.push(LayerDesc::conv(
+            let s = if block == 0 { stride1 } else { 1 };
+            let c1 = conv_block(
+                &mut g,
+                v,
                 &format!("l{}b{}c1", si + 1, block + 1),
-                (dim, dim),
-                ic,
                 ch,
                 3,
                 s,
                 1,
                 false,
-            ));
-            layers.push(LayerDesc::conv(
+            );
+            let mut c2 = conv_block(
+                &mut g,
+                c1,
                 &format!("l{}b{}c2", si + 1, block + 1),
-                (out_dim, out_dim),
-                ch,
                 ch,
                 3,
                 1,
                 1,
                 false,
-            ));
+            );
+            // The classifier reads the global average pool of the last
+            // block; the GAP fuses into l4b2c2's SFU chain, so the final
+            // shortcut adds 512-vector values in its reserved bank.
+            if si == 3 && block == 1 {
+                c2 = g.global_avg_pool("l4b2c2.gap", c2);
+            }
+            v = g.add(&format!("l{}b{}add", si + 1, block + 1), v, c2);
         }
-        in_ch = ch;
     }
-    // Global average pool feeds the classifier.
-    let last = layers.len() - 1;
-    layers[last] = layers[last].clone().with_gap();
-    layers.push(LayerDesc::linear("fc", 512, 1000, false));
-
-    // Residual edges: every basic block adds its input to its output.
-    let residuals = (0..8)
-        .map(|b| Residual { from_layer: 2 * b, into_layer: 2 * b + 2 })
-        .collect();
-    Network { name: "resnet18".into(), layers, residuals }
+    g.linear("fc", v, 1000);
+    g
 }
 
 /// PimNet: the small quantized CNN the AOT artifacts implement
 /// (python/compile/model.py LAYER_DEFS — must stay in sync).
-pub fn pimnet() -> Network {
-    let layers = vec![
-        LayerDesc::conv("conv1", (16, 16), 1, 16, 3, 1, 1, true),
-        LayerDesc::conv("conv2", (8, 8), 16, 32, 3, 1, 1, true),
-        LayerDesc::linear("fc1", 512, 128, true),
-        LayerDesc::linear("fc2", 128, 10, false),
-    ];
-    Network { name: "pimnet".into(), layers, residuals: vec![] }
+pub fn pimnet_graph() -> Graph {
+    let mut g = Graph::new("pimnet");
+    let x = g.input("input", Shape::Map { h: 16, w: 16, c: 1 });
+    let mut v = conv_block(&mut g, x, "conv1", 16, 3, 1, 1, true);
+    v = conv_block(&mut g, v, "conv2", 32, 3, 1, 1, true);
+    v = linear_block(&mut g, v, "fc1", 128, true);
+    linear_block(&mut g, v, "fc2", 10, false);
+    g
 }
 
-/// All evaluation networks, paper order.
-pub fn all_networks() -> Vec<Network> {
-    vec![alexnet(), vgg16(), resnet18()]
+/// MobileNet-style depthwise-separable CNN (32×32×3 input): stem conv,
+/// three depthwise + pointwise pairs, GAP head. Exists to prove the IR's
+/// depthwise legalization end-to-end (grouped bank op, `mac_size = K·L`).
+pub fn mobilenet_mini_graph() -> Graph {
+    let mut g = Graph::new("mobilenet_mini");
+    let x = g.input("input", Shape::Map { h: 32, w: 32, c: 3 });
+    let mut v = conv_block(&mut g, x, "conv1", 16, 3, 1, 1, true);
+    v = dw_block(&mut g, v, "dw1", 3, 1, 1);
+    v = conv_block(&mut g, v, "pw1", 32, 1, 1, 0, true);
+    v = dw_block(&mut g, v, "dw2", 3, 1, 1);
+    v = conv_block(&mut g, v, "pw2", 64, 1, 1, 0, true);
+    v = dw_block(&mut g, v, "dw3", 3, 1, 1);
+    v = conv_block(&mut g, v, "pw3", 128, 1, 1, 0, false);
+    let p = g.global_avg_pool("pw3.gap", v);
+    g.linear("fc", p, 10);
+    g
 }
 
-/// Builtin registry (paper order, then the AOT workload) — the single
-/// place to add a network: `NAMES`, `by_name`, the `api` spec layer and
-/// the generated CLI help all derive from this table.
-const BUILTINS: [(&str, fn() -> Network); 4] = [
-    ("alexnet", alexnet),
-    ("vgg16", vgg16),
-    ("resnet18", resnet18),
-    ("pimnet", pimnet),
+/// A small transformer block over 16 tokens × 64 features: single-head
+/// MatMul attention (`Q·Kᵀ` softmax, `scores·V`), a 4× MLP, and two
+/// residual edges. Exists to prove MatMul legalization and graph-edge
+/// residuals end-to-end.
+pub fn tinyformer_graph() -> Graph {
+    let (s, d, f) = (16usize, 64usize, 256usize);
+    let mut g = Graph::new("tinyformer");
+    let x = g.input("tokens", Shape::Mat { rows: s, cols: d });
+    let embed = g.linear("embed", x, d);
+    let q = g.linear("q", embed, d);
+    let k = g.linear("k", embed, d);
+    let v = g.linear("v", embed, d);
+    let scores = g.matmul_t("scores", q, k);
+    let sm = g.softmax("scores.softmax", scores);
+    let ctx = g.matmul("attn", sm, v);
+    let proj = g.linear("proj", ctx, d);
+    let r1 = g.add("attn.res", embed, proj);
+    let m1 = g.linear("mlp1", r1, f);
+    let m1r = g.relu("mlp1.relu", m1);
+    let m2 = g.linear("mlp2", m1r, d);
+    g.add("mlp.res", r1, m2);
+    g
+}
+
+/// Builtin registry (paper order, the AOT workload, then the generality
+/// workloads) — the single place to add a network: `NAMES`, `by_name`,
+/// `graph_by_name`, the `api` spec layer and the generated CLI help all
+/// derive from this table.
+const BUILTINS: [(&str, fn() -> Graph); 6] = [
+    ("alexnet", alexnet_graph),
+    ("vgg16", vgg16_graph),
+    ("resnet18", resnet18_graph),
+    ("pimnet", pimnet_graph),
+    ("mobilenet_mini", mobilenet_mini_graph),
+    ("tinyformer", tinyformer_graph),
 ];
 
 /// Builtin names `by_name` accepts, in registry order.
-pub const NAMES: [&str; 4] =
-    [BUILTINS[0].0, BUILTINS[1].0, BUILTINS[2].0, BUILTINS[3].0];
+pub const NAMES: [&str; 6] = [
+    BUILTINS[0].0,
+    BUILTINS[1].0,
+    BUILTINS[2].0,
+    BUILTINS[3].0,
+    BUILTINS[4].0,
+    BUILTINS[5].0,
+];
 
-/// Look up a network by name (CLI entry point).
-pub fn by_name(name: &str) -> anyhow::Result<Network> {
+/// Lower a builtin's graph; builtin graphs are constructed valid, so a
+/// lowering failure is a bug in the builder, not user input.
+fn lower_builtin(g: &Graph) -> Network {
+    crate::ir::lower(g).expect("builtin graph lowers")
+}
+
+/// AlexNet, lowered.
+pub fn alexnet() -> Network {
+    lower_builtin(&alexnet_graph())
+}
+
+/// VGG-16, lowered.
+pub fn vgg16() -> Network {
+    lower_builtin(&vgg16_graph())
+}
+
+/// ResNet-18, lowered.
+pub fn resnet18() -> Network {
+    lower_builtin(&resnet18_graph())
+}
+
+/// PimNet, lowered.
+pub fn pimnet() -> Network {
+    lower_builtin(&pimnet_graph())
+}
+
+/// MobileNet-mini, lowered.
+pub fn mobilenet_mini() -> Network {
+    lower_builtin(&mobilenet_mini_graph())
+}
+
+/// Tinyformer, lowered.
+pub fn tinyformer() -> Network {
+    lower_builtin(&tinyformer_graph())
+}
+
+/// The paper's evaluation networks (§V-B), paper order — the Fig 16/17
+/// subjects.
+pub fn paper_networks() -> Vec<Network> {
+    vec![alexnet(), vgg16(), resnet18()]
+}
+
+/// Every evaluation workload: the paper trio plus the generality
+/// workloads (PimNet stays the AOT driver's network, as before).
+pub fn all_networks() -> Vec<Network> {
+    vec![alexnet(), vgg16(), resnet18(), mobilenet_mini(), tinyformer()]
+}
+
+/// Look up a builtin's operator graph by name.
+pub fn graph_by_name(name: &str) -> anyhow::Result<Graph> {
     BUILTINS
         .iter()
         .find(|(n, _)| *n == name)
@@ -143,13 +284,25 @@ pub fn by_name(name: &str) -> anyhow::Result<Network> {
         })
 }
 
+/// Look up a network by name (CLI entry point), lowered through the IR.
+pub fn by_name(name: &str) -> anyhow::Result<Network> {
+    graph_by_name(name).map(|g| lower_builtin(&g))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::{infer_shapes, Shape};
+    use crate::workloads::LayerKind;
+
+    fn builtin_graphs() -> Vec<Graph> {
+        NAMES.iter().map(|n| graph_by_name(n).unwrap()).collect()
+    }
 
     #[test]
     fn all_chains_validate() {
-        for net in [alexnet(), vgg16(), resnet18(), pimnet()] {
+        for name in NAMES {
+            let net = by_name(name).unwrap();
             net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
         }
     }
@@ -160,6 +313,71 @@ mod tests {
         assert_eq!(vgg16().num_layers(), 16);
         assert_eq!(resnet18().num_layers(), 18);
         assert_eq!(pimnet().num_layers(), 4);
+        assert_eq!(mobilenet_mini().num_layers(), 8);
+        assert_eq!(tinyformer().num_layers(), 9);
+    }
+
+    /// The satellite shape-inference bar: walk every builtin graph,
+    /// infer every edge's shape (inference itself rejects any
+    /// producer/consumer disagreement), and cross-check the **lowered**
+    /// `LayerDesc` geometry against the inferred shapes. The two sides
+    /// are computed independently — `LayerDesc` arithmetic (pool halving,
+    /// GAP collapse, matmul dims) vs the IR's per-node inference — so a
+    /// bug in either is caught. This is what retires hand-typed shape
+    /// tables (the old ResNet stage list).
+    #[test]
+    fn every_builtin_edge_shape_agrees() {
+        for g in builtin_graphs() {
+            let shapes = infer_shapes(&g)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", g.name));
+            let net = crate::ir::lower(&g).unwrap();
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            let fused = crate::ir::passes::fuse(&g).unwrap();
+            for (si, (stage, layer)) in
+                fused.stages.iter().zip(&net.layers).enumerate()
+            {
+                // Input side: the stage's operand shape must be exactly
+                // the geometry the bank op was legalized with.
+                let in_shape = shapes[g.node(stage.node).inputs[0].0];
+                match layer.kind {
+                    LayerKind::Conv { in_h, in_w, in_ch, .. } => assert_eq!(
+                        in_shape,
+                        Shape::Map { h: in_h, w: in_w, c: in_ch },
+                        "{}: stage `{}` input geometry",
+                        g.name,
+                        layer.name
+                    ),
+                    LayerKind::Linear { in_features, .. } => assert_eq!(
+                        in_features,
+                        in_shape.elems(),
+                        "{}: stage `{}` in_features",
+                        g.name,
+                        layer.name
+                    ),
+                    LayerKind::MatMul { m, k, .. } => assert_eq!(
+                        in_shape,
+                        Shape::Mat { rows: m, cols: k },
+                        "{}: stage `{}` streaming operand",
+                        g.name,
+                        layer.name
+                    ),
+                }
+                // Output side: the value the stage's bank ships (after
+                // its fused SFU chain) must have the element count the
+                // lowered descriptor prices transfers with.
+                let out_node = (0..g.nodes.len())
+                    .filter(|&i| fused.carrier[i] == Some(si))
+                    .max()
+                    .expect("every stage carries at least its compute node");
+                assert_eq!(
+                    layer.out_elems(),
+                    shapes[out_node].elems(),
+                    "{}: stage `{}` output elems",
+                    g.name,
+                    layer.name
+                );
+            }
+        }
     }
 
     #[test]
@@ -195,8 +413,9 @@ mod tests {
     fn resnet_residual_edges() {
         let net = resnet18();
         assert_eq!(net.residuals.len(), 8);
-        for r in &net.residuals {
-            assert!(r.into_layer < net.layers.len());
+        for (b, r) in net.residuals.iter().enumerate() {
+            assert_eq!(r.from_layer, 2 * b, "block {b}");
+            assert_eq!(r.into_layer, 2 * b + 2, "block {b}");
         }
     }
 
@@ -220,15 +439,53 @@ mod tests {
     }
 
     #[test]
+    fn mobilenet_depthwise_legalizes_to_grouped_banks() {
+        let net = mobilenet_mini();
+        let dw = net.layers.iter().find(|l| l.name == "dw2").unwrap();
+        assert!(matches!(
+            dw.kind,
+            LayerKind::Conv { groups: 32, in_ch: 32, out_ch: 32, .. }
+        ));
+        // Depthwise MACs contract over the kernel window only.
+        assert_eq!(dw.mac_size(), 9);
+        assert_eq!(dw.weight_elems(), 9 * 32);
+        // The pointwise conv stays dense.
+        let pw = net.layers.iter().find(|l| l.name == "pw2").unwrap();
+        assert_eq!(pw.mac_size(), 32);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn tinyformer_attention_legalizes_to_matmuls() {
+        let net = tinyformer();
+        assert_eq!(net.residuals.len(), 2);
+        let scores = net.layers.iter().find(|l| l.name == "scores").unwrap();
+        assert!(matches!(scores.kind, LayerKind::MatMul { m: 16, k: 64, n: 16 }));
+        assert!(scores.relu, "softmax fuses into the SFU chain");
+        let attn = net.layers.iter().find(|l| l.name == "attn").unwrap();
+        assert!(matches!(attn.kind, LayerKind::MatMul { m: 16, k: 16, n: 64 }));
+        // Per-token linears legalize to matmuls against resident weights.
+        let mlp1 = net.layers.iter().find(|l| l.name == "mlp1").unwrap();
+        assert!(matches!(mlp1.kind, LayerKind::MatMul { m: 16, k: 64, n: 256 }));
+        // Residuals land on the proj and mlp2 stages.
+        assert_eq!(net.residuals[0].into_layer, 6);
+        assert_eq!(net.residuals[1].from_layer, 6);
+        assert_eq!(net.residuals[1].into_layer, 8);
+        net.validate().unwrap();
+    }
+
+    #[test]
     fn by_name_lookup() {
         assert!(by_name("vgg16").is_ok());
         assert!(by_name("nope").is_err());
+        assert!(graph_by_name("tinyformer").is_ok());
     }
 
     #[test]
     fn every_registered_name_resolves_to_itself() {
         for name in NAMES {
             assert_eq!(by_name(name).unwrap().name, name);
+            assert_eq!(graph_by_name(name).unwrap().name, name);
         }
     }
 

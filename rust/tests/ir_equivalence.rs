@@ -1,0 +1,342 @@
+//! The `pim::ir` migration bar: lowering the four paper networks through
+//! the typed operator-graph IR must reproduce the pre-refactor flat
+//! layer chains **exactly** — first structurally (the lowered `Network`
+//! equals the hand-built chain), then bitwise through the whole pricing
+//! stack (`SimResult` and `SimReport`, errors included) across
+//! network × preset × shard × grid × ks. Plus: the two new generality
+//! workloads (`mobilenet_mini`, `tinyformer`) run end-to-end through
+//! `Job::report()` and `Job::serve()`.
+//!
+//! The flat constructors below are verbatim copies of the pre-IR
+//! `workloads::nets` builders — the "pre-refactor path" this test holds
+//! the graph lowering to.
+
+use pim_dram::api::{Job, ServeSpec, Spec};
+use pim_dram::plan::ShardPolicy;
+use pim_dram::sim::{simulate, SimConfig, SimResult};
+use pim_dram::workloads::{nets, LayerDesc, Network, Residual};
+
+// ---- the pre-refactor flat constructors (frozen) --------------------------
+
+fn legacy_alexnet() -> Network {
+    let layers = vec![
+        LayerDesc::conv("conv1", (227, 227), 3, 96, 11, 4, 0, true),
+        LayerDesc::conv("conv2", (27, 27), 96, 256, 5, 1, 2, true),
+        LayerDesc::conv("conv3", (13, 13), 256, 384, 3, 1, 1, false),
+        LayerDesc::conv("conv4", (13, 13), 384, 384, 3, 1, 1, false),
+        LayerDesc::conv("conv5", (13, 13), 384, 256, 3, 1, 1, true),
+        LayerDesc::linear("fc6", 9216, 4096, true),
+        LayerDesc::linear("fc7", 4096, 4096, true),
+        LayerDesc::linear("fc8", 4096, 1000, false),
+    ];
+    Network { name: "alexnet".into(), layers, residuals: vec![] }
+}
+
+fn legacy_vgg16() -> Network {
+    let layers = vec![
+        LayerDesc::conv("conv1_1", (224, 224), 3, 64, 3, 1, 1, false),
+        LayerDesc::conv("conv1_2", (224, 224), 64, 64, 3, 1, 1, true),
+        LayerDesc::conv("conv2_1", (112, 112), 64, 128, 3, 1, 1, false),
+        LayerDesc::conv("conv2_2", (112, 112), 128, 128, 3, 1, 1, true),
+        LayerDesc::conv("conv3_1", (56, 56), 128, 256, 3, 1, 1, false),
+        LayerDesc::conv("conv3_2", (56, 56), 256, 256, 3, 1, 1, false),
+        LayerDesc::conv("conv3_3", (56, 56), 256, 256, 3, 1, 1, true),
+        LayerDesc::conv("conv4_1", (28, 28), 256, 512, 3, 1, 1, false),
+        LayerDesc::conv("conv4_2", (28, 28), 512, 512, 3, 1, 1, false),
+        LayerDesc::conv("conv4_3", (28, 28), 512, 512, 3, 1, 1, true),
+        LayerDesc::conv("conv5_1", (14, 14), 512, 512, 3, 1, 1, false),
+        LayerDesc::conv("conv5_2", (14, 14), 512, 512, 3, 1, 1, false),
+        LayerDesc::conv("conv5_3", (14, 14), 512, 512, 3, 1, 1, true),
+        LayerDesc::linear("fc6", 25088, 4096, true),
+        LayerDesc::linear("fc7", 4096, 4096, true),
+        LayerDesc::linear("fc8", 4096, 1000, false),
+    ];
+    Network { name: "vgg16".into(), layers, residuals: vec![] }
+}
+
+fn legacy_resnet18() -> Network {
+    let mut layers = vec![LayerDesc::conv("conv1", (224, 224), 3, 64, 7, 2, 3, true)];
+    let stages: [(usize, usize, usize); 4] =
+        [(56, 64, 1), (56, 128, 2), (28, 256, 2), (14, 512, 2)];
+    let mut in_ch = 64;
+    for (si, &(hw, ch, stride1)) in stages.iter().enumerate() {
+        for block in 0..2 {
+            let (s, ic, dim) = if block == 0 {
+                (stride1, in_ch, hw)
+            } else {
+                (1, ch, hw / stride1)
+            };
+            let out_dim = dim / s;
+            layers.push(LayerDesc::conv(
+                &format!("l{}b{}c1", si + 1, block + 1),
+                (dim, dim),
+                ic,
+                ch,
+                3,
+                s,
+                1,
+                false,
+            ));
+            layers.push(LayerDesc::conv(
+                &format!("l{}b{}c2", si + 1, block + 1),
+                (out_dim, out_dim),
+                ch,
+                ch,
+                3,
+                1,
+                1,
+                false,
+            ));
+        }
+        in_ch = ch;
+    }
+    let last = layers.len() - 1;
+    layers[last] = layers[last].clone().with_gap();
+    layers.push(LayerDesc::linear("fc", 512, 1000, false));
+    let residuals = (0..8)
+        .map(|b| Residual { from_layer: 2 * b, into_layer: 2 * b + 2 })
+        .collect();
+    Network { name: "resnet18".into(), layers, residuals }
+}
+
+fn legacy_pimnet() -> Network {
+    let layers = vec![
+        LayerDesc::conv("conv1", (16, 16), 1, 16, 3, 1, 1, true),
+        LayerDesc::conv("conv2", (8, 8), 16, 32, 3, 1, 1, true),
+        LayerDesc::linear("fc1", 512, 128, true),
+        LayerDesc::linear("fc2", 128, 10, false),
+    ];
+    Network { name: "pimnet".into(), layers, residuals: vec![] }
+}
+
+fn legacy_networks() -> Vec<Network> {
+    vec![legacy_alexnet(), legacy_vgg16(), legacy_resnet18(), legacy_pimnet()]
+}
+
+// ---- comparison helpers ---------------------------------------------------
+
+/// Bitwise comparison of everything the experiments read.
+fn assert_bitwise(ctx: &str, legacy: &SimResult, lowered: &SimResult) {
+    assert_eq!(lowered.net_name, legacy.net_name, "{ctx}: net_name");
+    assert_eq!(lowered.n_bits, legacy.n_bits, "{ctx}: n_bits");
+    assert_eq!(
+        lowered.pipeline.latency_ns.to_bits(),
+        legacy.pipeline.latency_ns.to_bits(),
+        "{ctx}: latency"
+    );
+    assert_eq!(
+        lowered.pipeline.cycle_ns.to_bits(),
+        legacy.pipeline.cycle_ns.to_bits(),
+        "{ctx}: cycle"
+    );
+    assert_eq!(
+        lowered.pipeline.bottleneck, legacy.pipeline.bottleneck,
+        "{ctx}: bottleneck"
+    );
+    assert_eq!(lowered.total_aaps, legacy.total_aaps, "{ctx}: aaps");
+    assert_eq!(
+        lowered.total_dram_energy_nj.to_bits(),
+        legacy.total_dram_energy_nj.to_bits(),
+        "{ctx}: dram energy"
+    );
+    assert_eq!(
+        lowered.logic_energy_nj.to_bits(),
+        legacy.logic_energy_nj.to_bits(),
+        "{ctx}: logic energy"
+    );
+    assert_eq!(
+        lowered.throughput_ips().to_bits(),
+        legacy.throughput_ips().to_bits(),
+        "{ctx}: throughput"
+    );
+    assert_eq!(lowered.replicas(), legacy.replicas(), "{ctx}: replicas");
+    assert_eq!(
+        lowered.scale_out.hop_ns_total.to_bits(),
+        legacy.scale_out.hop_ns_total.to_bits(),
+        "{ctx}: hops"
+    );
+    assert_eq!(lowered.layers.len(), legacy.layers.len(), "{ctx}: layer count");
+    for (a, b) in lowered.layers.iter().zip(&legacy.layers) {
+        assert_eq!(a.name, b.name, "{ctx}: layer name");
+        assert_eq!(a.mapping, b.mapping, "{ctx}: {} mapping", a.name);
+        for (va, vb, what) in [
+            (a.multiply_ns, b.multiply_ns, "multiply"),
+            (a.logic_ns, b.logic_ns, "logic"),
+            (a.restage_ns, b.restage_ns, "restage"),
+            (a.transfer_ns, b.transfer_ns, "transfer"),
+            (a.dram_energy_nj, b.dram_energy_nj, "energy"),
+        ] {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{ctx}: {} {}", a.name, what);
+        }
+        assert_eq!(a.aaps, b.aaps, "{ctx}: {} aaps", a.name);
+    }
+}
+
+// ---- the bars -------------------------------------------------------------
+
+#[test]
+fn graphs_lower_to_the_exact_legacy_networks() {
+    for legacy in legacy_networks() {
+        let lowered = nets::by_name(&legacy.name).unwrap();
+        assert_eq!(
+            lowered, legacy,
+            "{}: IR lowering diverged from the flat chain",
+            legacy.name
+        );
+    }
+}
+
+#[test]
+fn lowered_graphs_price_bitwise_identically() {
+    let grids = [(1usize, 4usize), (2, 2), (4, 4)];
+    let policies = [
+        ShardPolicy::Replicate,
+        ShardPolicy::LayerSplit,
+        ShardPolicy::Hybrid { replicas: 2 },
+    ];
+    let mut simulated = 0usize;
+    let mut failed = 0usize;
+    for legacy in legacy_networks() {
+        for preset in ["paper_favorable", "conservative"] {
+            for (channels, ranks) in grids {
+                for policy in policies {
+                    for k in [1usize, 2] {
+                        let cfg = match preset {
+                            "conservative" => SimConfig::conservative(8),
+                            _ => SimConfig::paper_favorable(8),
+                        }
+                        .with_grid(channels, ranks)
+                        .with_shard(policy)
+                        .with_ks(vec![k]);
+                        let ctx = format!(
+                            "{} {preset} {channels}x{ranks} {policy} k={k}",
+                            legacy.name
+                        );
+                        // Pre-refactor path: the frozen flat chain through
+                        // the free engine entry point.
+                        let legacy_r = simulate(&legacy, &cfg);
+                        // IR path: builtin graph, lowered, through Job.
+                        let job = Job::new(
+                            Spec::builtin(&legacy.name)
+                                .with_preset(preset)
+                                .with_grid(channels, ranks)
+                                .with_shard(policy)
+                                .with_ks(vec![k]),
+                        )
+                        .expect("spec resolves");
+                        match legacy_r {
+                            Err(e) => {
+                                assert_eq!(
+                                    job.simulate_full().unwrap_err(),
+                                    e,
+                                    "{ctx}: error equality"
+                                );
+                                failed += 1;
+                            }
+                            Ok(legacy_r) => {
+                                let lowered =
+                                    job.simulate_full().unwrap_or_else(|e| {
+                                        panic!("{ctx}: IR path failed: {e}")
+                                    });
+                                assert_bitwise(&ctx, &legacy_r, &lowered);
+                                let rep = job.report().unwrap();
+                                assert_eq!(
+                                    rep.latency_ns.to_bits(),
+                                    legacy_r.pipeline.latency_ns.to_bits(),
+                                    "{ctx}: report latency"
+                                );
+                                assert_eq!(
+                                    rep.cycle_ns.to_bits(),
+                                    legacy_r.pipeline.cycle_ns.to_bits(),
+                                    "{ctx}: report cycle"
+                                );
+                                assert_eq!(
+                                    rep.total_aaps, legacy_r.total_aaps,
+                                    "{ctx}: report aaps"
+                                );
+                                simulated += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(simulated > 0, "no point simulated");
+    assert!(failed > 0, "expected some plan errors in the grid sweep");
+}
+
+#[test]
+fn generality_workloads_report_end_to_end() {
+    for name in ["mobilenet_mini", "tinyformer"] {
+        for preset in ["paper_favorable", "conservative"] {
+            let job = Job::new(Spec::builtin(name).with_preset(preset)).unwrap();
+            let rep = job.report().unwrap_or_else(|e| panic!("{name} {preset}: {e}"));
+            assert!(rep.cycle_ns > 0.0 && rep.cycle_ns.is_finite(), "{name}");
+            assert!(rep.latency_ns >= rep.cycle_ns, "{name}");
+            assert!(rep.replicas >= 1, "{name}");
+            assert!(rep.total_aaps > 0, "{name}");
+        }
+        // Per-layer ks and layer-split lowering also work on the new nets.
+        let net = nets::by_name(name).unwrap();
+        let ks: Vec<usize> =
+            (0..net.layers.len()).map(|i| 1 + (i % 2)).collect();
+        let job = Job::new(
+            Spec::builtin(name)
+                .with_preset("conservative")
+                .with_grid(2, 4)
+                .with_shard(ShardPolicy::LayerSplit)
+                .with_ks(ks),
+        )
+        .unwrap();
+        let rep = job.report().unwrap();
+        assert!(rep.hop_ns_total > 0.0, "{name}: split must pay hops");
+    }
+}
+
+#[test]
+fn generality_workloads_serve_end_to_end() {
+    for name in ["mobilenet_mini", "tinyformer"] {
+        let spec = Spec::builtin(name).with_preset("conservative").with_serve(
+            ServeSpec { devices: Some(2), batch: 4, ..ServeSpec::default() },
+        );
+        let job = Job::new(spec).unwrap();
+        let net = job.network().clone();
+        let handle = job.serve().unwrap_or_else(|e| panic!("{name}: serve: {e}"));
+        assert_eq!(handle.devices, 2, "{name}");
+        let elems = handle.server.image_elems();
+        assert_eq!(elems, net.layers[0].in_elems(), "{name}: input elems");
+        for i in 0..6i32 {
+            let resp = handle.server.classify(vec![i; elems]).unwrap();
+            assert!(resp.class < resp.logits.len(), "{name}");
+        }
+        let m = handle.server.metrics();
+        assert_eq!(m.requests, 6, "{name}");
+        assert_eq!(m.per_device.len(), 2, "{name}");
+        handle.server.shutdown();
+    }
+}
+
+#[test]
+fn residuals_are_graph_edges_not_a_side_table() {
+    // The tinyformer residuals land on the stages its adds name — proof
+    // the edge form survives lowering — and price as reserved-bank
+    // stages exactly like the paper CNN's shortcuts.
+    let net = nets::tinyformer();
+    assert_eq!(net.residuals.len(), 2);
+    let r = simulate(&net, &SimConfig::conservative(8)).unwrap();
+    let res_stages: Vec<_> = r
+        .pipeline
+        .stages
+        .iter()
+        .filter(|s| s.name.starts_with("res:"))
+        .collect();
+    assert_eq!(res_stages.len(), 2);
+    for s in res_stages {
+        assert!(s.compute_ns > 0.0 && s.transfer_ns > 0.0, "{}", s.name);
+    }
+    assert_eq!(
+        r.pipeline.stages.len(),
+        net.layers.len() + net.residuals.len()
+    );
+}
