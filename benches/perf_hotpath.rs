@@ -1,31 +1,50 @@
 //! §Perf — wall-clock benchmarks of the simulator hot paths (the
 //! optimization targets in DESIGN.md §8). These are the numbers the
-//! EXPERIMENTS.md §Perf before/after table tracks, and every run writes
-//! the machine-readable `BENCH_PERF.json` at the repo root so the perf
-//! trajectory is diffable.
+//! EXPERIMENTS.md §Perf trajectory table tracks, and every run writes the
+//! machine-readable `BENCH_PERF.json` at the repo root so the perf
+//! trajectory is diffable. The run also diffs itself against the
+//! *committed* `BENCH_PERF.json` (or `PIM_BENCH_BASELINE`) and fails on a
+//! > 25% ns/op regression of any shared target — unless the baseline is
+//! the empty seed placeholder, which skips the gate.
 //!
-//! Headline target: a ks × grid sweep over vgg16 — the fig16/design-space
+//! Named targets (required in every run, fast or full — `PIM_BENCH_FAST=1`
+//! shrinks iteration counts but never skips a target):
+//!   * `price_layer` — per-layer pricing over a pre-mapped vgg16.
+//!   * `lower` — grid lowering (map + layout) of vgg16.
+//!   * `session_hit` — warm `SimSession::report` (pure cache-hit read).
+//!   * `serve_dispatch` — one `classify()` through a running device pool.
+//!   * `batched_serve` — 8 admission requests priced in one session pass;
+//!     full runs assert it is ≥ 2× faster than `serve_per_request`.
+//!
+//! Headline sweep: a ks × grid sweep over vgg16 — the fig16/design-space
 //! call pattern — evaluated twice, once with fresh `simulate()` per point
-//! and once through one incremental `SimSession`. Full (non-FAST) runs
-//! assert the session path is ≥ 3× faster.
+//! (`sweep_fresh`) and once through one incremental `SimSession`
+//! (`sweep_session`). Full runs assert the session path is ≥ 3× faster.
 //!
-//! Other targets:
-//!   * `simulate()` full networks: the per-experiment unit of work.
-//!   * `SimSession::report`: the steady-state incremental path.
-//!   * `in_dram_mul`: the functional bit-level multiply (tests + examples).
-//!   * `maj5`: the inner bit-parallel majority kernel.
-//!   * Monte Carlo sample rate (fig15 calls 400k samples).
-//!   * `BankPipeline::mvm`: the cross-validation path.
+//! Legacy targets (kept for trend continuity): full-network `simulate()`,
+//! `map_network`, `in_dram_mul`, `maj5`, Monte Carlo sample rate, and
+//! `BankPipeline::mvm`.
+
+use std::time::Duration;
 
 use pim_dram::arch::{adder_tree::AdderTree, bank_pim::BankPipeline};
-use pim_dram::bench_harness::{banner, write_bench_json, Bencher};
+use pim_dram::bench_harness::{
+    banner, check_regression, read_baseline, write_bench_json, Bencher,
+};
 use pim_dram::circuit::{run_monte_carlo, CircuitParams};
+use pim_dram::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
 use pim_dram::dram::BitRow;
 use pim_dram::mapping::{map_network, MapConfig};
+use pim_dram::plan::{self, ShardPolicy};
 use pim_dram::primitives::{mul::in_dram_mul, PimSubarray};
-use pim_dram::sim::{simulate, SimConfig, SimSession};
+use pim_dram::sim::{price_layers, simulate, SimConfig, SimSession};
 use pim_dram::util::rng::Rng;
-use pim_dram::workloads::nets::{resnet18, vgg16};
+use pim_dram::workloads::nets::{pimnet, resnet18, vgg16};
+
+/// Every run — fast or full — must measure these. A fast-mode change that
+/// silently drops one fails here, not in a later CI grep.
+const REQUIRED: [&str; 5] =
+    ["price_layer", "lower", "session_hit", "serve_dispatch", "batched_serve"];
 
 /// The fig16/design-space call pattern: parallelism × grid points over
 /// one network, all sharing the pricing-relevant config.
@@ -43,6 +62,23 @@ fn sweep_configs() -> Vec<SimConfig> {
     cfgs
 }
 
+/// An admission batch of serve-pricing requests: same network and pricing
+/// config (so the per-layer cache is shared), different plan shapes —
+/// the pool-resizing call pattern the serve path batches.
+fn serve_batch() -> Vec<SimConfig> {
+    let mut cfgs = Vec::new();
+    for &(channels, ranks) in &[(1usize, 4usize), (2, 4), (4, 4), (8, 4)] {
+        for &shard in &[ShardPolicy::Replicate, ShardPolicy::LayerSplit] {
+            cfgs.push(
+                SimConfig::paper_favorable(8)
+                    .with_grid(channels, ranks)
+                    .with_shard(shard),
+            );
+        }
+    }
+    cfgs
+}
+
 fn main() {
     banner("Perf", "simulator hot-path wall-clock benchmarks");
     let fast = std::env::var("PIM_BENCH_FAST").is_ok();
@@ -50,10 +86,82 @@ fn main() {
     let vgg = vgg16();
     let res = resnet18();
 
+    // ---- named hot-path targets ----------------------------------------
+    let map_cfg =
+        MapConfig::uniform(pim_dram::dram::DramGeometry::paper_ideal(), 8, 1);
+    let mapped = map_network(&vgg, &map_cfg).unwrap();
+    let price_cfg = SimConfig::paper_favorable(8);
+    b.bench_items("price_layer", vgg.layers.len() as f64, || {
+        price_layers(&vgg, &mapped, &price_cfg).len()
+    });
+
+    b.bench("lower", || {
+        plan::lower(&vgg, &map_cfg, ShardPolicy::Replicate).unwrap().devices.len()
+    });
+
+    let res_cfg = SimConfig::conservative(8);
+    let mut res_session = SimSession::new(&res);
+    res_session.report(&res_cfg).unwrap(); // prime: timed runs are pure hits
+    b.bench("session_hit", || res_session.report(&res_cfg).unwrap().total_aaps);
+
+    // One dispatched request through a live 2-device pool (pimnet keeps the
+    // deterministic logit math cheap; the dispatch/queue overhead is what
+    // this times).
+    let pn = pimnet();
+    let serve_cfg = SimConfig::conservative(8);
+    let mut pn_session = SimSession::new(&pn);
+    let backend = SimBackend::from_session(&mut pn_session, &serve_cfg, 1).unwrap();
+    let image: Vec<i32> =
+        (0..pn.layers[0].in_elems()).map(|i| (i % 7) as i32).collect();
+    let server = MultiDeviceServer::start(
+        PoolConfig {
+            devices: 2,
+            policy: Policy::RoundRobin,
+            batch_window: Duration::ZERO,
+        },
+        move |_| Ok(backend.clone()),
+    )
+    .unwrap();
+    b.bench("serve_dispatch", || server.classify(image.clone()).unwrap().class);
+    server.shutdown();
+
+    // Batched serve pricing: 8 admission requests, per-request sessions vs
+    // one shared session pass. Both start cold every iteration — the win
+    // measured is the shared cache fill, not warm-vs-cold.
+    let batch = serve_batch();
+    let per_request = b
+        .bench_items("serve_per_request", batch.len() as f64, || {
+            let mut acc = 0u64;
+            for cfg in &batch {
+                let mut session = SimSession::new(&vgg);
+                acc ^= session.report(cfg).unwrap().total_aaps;
+            }
+            acc
+        })
+        .clone();
+    let batched = b
+        .bench_items("batched_serve", batch.len() as f64, || {
+            let mut session = SimSession::new(&vgg);
+            SimBackend::price_batch(&mut session, &batch)
+                .iter()
+                .map(|r| r.as_ref().unwrap().total_aaps)
+                .fold(0u64, |a, v| a ^ v)
+        })
+        .clone();
+    let batched_speedup = per_request.mean.as_secs_f64() / batched.mean.as_secs_f64();
+    println!("batched serve-pricing speedup: {batched_speedup:.1}x over per-request");
+    if !fast {
+        assert!(
+            batched_speedup >= 2.0,
+            "batched serve pricing must be ≥ 2x faster than the per-request \
+             loop (got {batched_speedup:.2}x)"
+        );
+    }
+
     // ---- headline: sweep-style workload, fresh vs incremental ----------
     let cfgs = sweep_configs();
     let fresh = b
-        .bench_items("sweep vgg16 ks×grid (fresh simulate)", cfgs.len() as f64, || {
+        .bench_items("sweep_fresh", cfgs.len() as f64, || {
             let mut acc = 0u64;
             for cfg in &cfgs {
                 acc ^= simulate(&vgg, cfg).unwrap().total_aaps;
@@ -63,7 +171,7 @@ fn main() {
         .clone();
     let mut sweep_session = SimSession::new(&vgg);
     let warm = b
-        .bench_items("sweep vgg16 ks×grid (SimSession)", cfgs.len() as f64, || {
+        .bench_items("sweep_session", cfgs.len() as f64, || {
             let mut acc = 0u64;
             for cfg in &cfgs {
                 acc ^= sweep_session.report(cfg).unwrap().total_aaps;
@@ -92,19 +200,8 @@ fn main() {
     b.bench("simulate(resnet18, conservative)", || {
         simulate(&res, &SimConfig::conservative(8)).unwrap().total_aaps
     });
-    let res_cfg = SimConfig::conservative(8);
-    let mut res_session = SimSession::new(&res);
-    b.bench("session.report(resnet18, conservative)", || {
-        res_session.report(&res_cfg).unwrap().total_aaps
-    });
     b.bench("map_network(vgg16)", || {
-        map_network(
-            &vgg,
-            &MapConfig::uniform(pim_dram::dram::DramGeometry::paper_ideal(), 8, 1),
-        )
-        .unwrap()
-        .layers
-        .len()
+        map_network(&vgg, &map_cfg).unwrap().layers.len()
     });
 
     // Bit-level functional multiply, 4096 columns (one subarray row-width).
@@ -143,18 +240,53 @@ fn main() {
         bp.mvm(&x, &w).len()
     });
 
-    // ---- machine-readable perf record -----------------------------------
+    // ---- structural fast-mode guard -------------------------------------
+    for name in REQUIRED {
+        assert!(
+            b.results().iter().any(|m| m.name == name),
+            "required perf target `{name}` was not measured — fast mode may \
+             shrink iteration counts but never skip a target"
+        );
+    }
+
+    // ---- machine-readable perf record + regression gate ------------------
     // Default lands at the repo root regardless of `cargo bench`'s cwd.
     let json_path = std::env::var("PIM_BENCH_JSON").unwrap_or_else(|_| {
         format!("{}/../BENCH_PERF.json", env!("CARGO_MANIFEST_DIR"))
     });
+    // The committed record is the baseline unless CI saved it elsewhere —
+    // read it *before* overwriting.
+    let baseline_path =
+        std::env::var("PIM_BENCH_BASELINE").unwrap_or_else(|_| json_path.clone());
+    let baseline = read_baseline(&baseline_path);
+    let baseline_pairs = baseline.clone().unwrap_or_default();
     write_bench_json(
         &json_path,
         "regenerate with: cargo bench --bench perf_hotpath \
          (PIM_BENCH_FAST=1 for smoke runs)",
         b.results(),
-        &[("sweep_speedup_x", speedup)],
+        &[
+            ("sweep_speedup_x", speedup),
+            ("batched_serve_speedup_x", batched_speedup),
+        ],
+        &baseline_pairs,
     )
     .expect("writing BENCH_PERF.json");
     println!("\nwrote {json_path}  (record the table in EXPERIMENTS.md §Perf)");
+
+    match baseline {
+        None => println!(
+            "no perf baseline at {baseline_path} (missing or empty seed) — \
+             regression gate skipped"
+        ),
+        Some(base) => match check_regression(&base, b.results(), 0.25) {
+            Ok(()) => println!(
+                "regression gate: all shared targets within +25% of {baseline_path}"
+            ),
+            Err(report) => {
+                eprintln!("perf regression vs {baseline_path}:\n{report}");
+                std::process::exit(1);
+            }
+        },
+    }
 }

@@ -127,6 +127,19 @@ impl Job {
         Ok(session.report(&cfg)?)
     }
 
+    /// Price several spec variants through **one** session pass — the
+    /// batched counterpart of a [`Job::report`] call per variant. Every
+    /// variant must keep this job's network (the same rule as
+    /// [`Job::report_variant`]); results come back in input order and a
+    /// failing variant poisons only its own slot.
+    pub fn report_batch(&self, variants: &[Spec]) -> Vec<Result<SimReport>> {
+        let mut session = self.session();
+        variants
+            .iter()
+            .map(|spec| self.report_variant(&mut session, spec))
+            .collect()
+    }
+
     /// Start a pool of simulated PIM devices serving this job's plan: one
     /// incremental session prices the plan summary *and* the worker
     /// backend, then `coordinator::PoolConfig`/`MultiDeviceServer` are
@@ -213,6 +226,37 @@ mod tests {
         spec.device.rows = Some(4);
         let err = Job::new(spec).unwrap_err();
         assert!(err.to_string().contains("rows"), "{err}");
+    }
+
+    #[test]
+    fn report_batch_matches_per_variant_jobs() {
+        let base = Spec::builtin("vgg16").with_preset("conservative");
+        let variants = vec![
+            base.clone(),
+            base.clone().with_grid(2, 4).with_shard(ShardPolicy::LayerSplit),
+            base.clone().with_ks(vec![2]),
+            // Fails lowering: 16 banks overflow a 1×1 grid.
+            base.clone().with_grid(1, 1),
+        ];
+        let job = Job::new(base).unwrap();
+        let batched = job.report_batch(&variants);
+        assert_eq!(batched.len(), variants.len());
+        for (spec, got) in variants.iter().zip(&batched) {
+            let want = Job::new(spec.clone()).unwrap().report();
+            match (want, got) {
+                (Ok(want), Ok(got)) => {
+                    assert_eq!(&want, got);
+                    assert_eq!(want.cycle_ns.to_bits(), got.cycle_ns.to_bits());
+                }
+                (Err(want), Err(got)) => {
+                    assert_eq!(want.to_string(), got.to_string());
+                }
+                (want, got) => panic!("mismatch: {want:?} vs {got:?}"),
+            }
+        }
+        // A foreign network is rejected per-slot, not a panic.
+        let mixed = job.report_batch(&[Spec::builtin("alexnet")]);
+        assert!(mixed[0].as_ref().unwrap_err().to_string().contains("network"));
     }
 
     #[test]

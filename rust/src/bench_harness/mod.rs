@@ -194,21 +194,23 @@ where
 }
 
 /// Write the machine-readable per-target perf report (`BENCH_PERF.json`):
-/// mean/median wall-clock ns per op for every measurement plus derived
-/// scalars (e.g. the fresh-vs-session sweep speedup). The schema is
-/// stable so CI and trend tooling can diff runs.
+/// mean/median wall-clock ns per op for every measurement, derived
+/// scalars (e.g. the fresh-vs-session sweep speedup), and the `baseline`
+/// ns/op this run was diffed against (empty when no baseline existed).
+/// The schema is stable so CI and trend tooling can diff runs.
 pub fn write_bench_json(
     path: &str,
     note: &str,
     results: &[Measurement],
     derived: &[(&str, f64)],
+    baseline: &[(String, f64)],
 ) -> std::io::Result<()> {
     fn esc(s: &str) -> String {
         s.replace('\\', "\\\\").replace('"', "\\\"")
     }
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"pim-dram/bench-perf/v1\",\n");
+    out.push_str("  \"schema\": \"pim-dram/bench-perf/v2\",\n");
     out.push_str(&format!(
         "  \"fast_mode\": {},\n",
         std::env::var("PIM_BENCH_FAST").is_ok()
@@ -236,8 +238,73 @@ pub fn write_bench_json(
             if i + 1 == derived.len() { "" } else { "," }
         ));
     }
+    out.push_str("  },\n  \"baseline\": {\n");
+    for (i, (k, v)) in baseline.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {:.1}{}\n",
+            esc(k),
+            v,
+            if i + 1 == baseline.len() { "" } else { "," }
+        ));
+    }
     out.push_str("  }\n}\n");
     std::fs::write(path, out)
+}
+
+/// Read the measured targets of a previous `BENCH_PERF.json` as
+/// `(name, ns_per_op)` pairs, for the regression gate. Returns `None`
+/// when the file is missing, unparseable, or records no targets (the
+/// seed placeholder committed before any toolchain ran) — callers treat
+/// all three as "no baseline, skip the diff".
+pub fn read_baseline(path: &str) -> Option<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let doc = crate::util::json::Json::parse(&text).ok()?;
+    let targets = doc.get("targets")?.as_obj()?;
+    let out: Vec<(String, f64)> = targets
+        .iter()
+        .filter_map(|(name, t)| {
+            t.get("ns_per_op").and_then(|v| v.as_f64()).map(|ns| (name.clone(), ns))
+        })
+        .collect();
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Diff a fresh run against a baseline: any target whose mean ns/op grew
+/// by more than `tolerance` (0.25 = +25%) is a regression. Targets
+/// present on only one side are skipped — the suite is allowed to grow.
+/// Returns `Err` with one line per regressed target.
+pub fn check_regression(
+    baseline: &[(String, f64)],
+    results: &[Measurement],
+    tolerance: f64,
+) -> Result<(), String> {
+    let mut bad = Vec::new();
+    for m in results {
+        let Some((_, base_ns)) = baseline.iter().find(|(name, _)| *name == m.name)
+        else {
+            continue;
+        };
+        let fresh_ns = m.mean.as_secs_f64() * 1e9;
+        if *base_ns > 0.0 && fresh_ns > base_ns * (1.0 + tolerance) {
+            bad.push(format!(
+                "{}: {:.1} ns/op vs baseline {:.1} ns/op (+{:.0}%, limit +{:.0}%)",
+                m.name,
+                fresh_ns,
+                base_ns,
+                (fresh_ns / base_ns - 1.0) * 100.0,
+                tolerance * 100.0
+            ));
+        }
+    }
+    if bad.is_empty() {
+        Ok(())
+    } else {
+        Err(bad.join("\n"))
+    }
 }
 
 /// Standard bench preamble: prints the figure/table banner.
@@ -310,25 +377,35 @@ mod tests {
         assert_eq!(par_sweep(1, |i| i + 41), vec![41]);
     }
 
+    fn measurement(name: &str, mean_ns: u64) -> Measurement {
+        Measurement {
+            name: name.into(),
+            iters: 42,
+            mean: Duration::from_nanos(mean_ns),
+            median: Duration::from_nanos(mean_ns),
+            std: Duration::from_nanos(mean_ns / 10),
+            min: Duration::from_nanos(mean_ns / 2),
+            max: Duration::from_nanos(mean_ns * 2),
+            items_per_iter: None,
+        }
+    }
+
     #[test]
     fn bench_json_round_trips_through_parser() {
-        let m = Measurement {
-            name: "simulate(vgg16, \"quoted\")".into(),
-            iters: 42,
-            mean: Duration::from_nanos(1500),
-            median: Duration::from_nanos(1400),
-            std: Duration::from_nanos(100),
-            min: Duration::from_nanos(1300),
-            max: Duration::from_nanos(1800),
-            items_per_iter: None,
-        };
+        let m = measurement("simulate(vgg16, \"quoted\")", 1500);
         let path = std::env::temp_dir().join("pim_dram_bench_perf_test.json");
         let path = path.to_str().unwrap();
-        write_bench_json(path, "unit test", &[m], &[("sweep_speedup_x", 4.2)])
-            .unwrap();
+        write_bench_json(
+            path,
+            "unit test",
+            &[m],
+            &[("sweep_speedup_x", 4.2)],
+            &[("price_layer".to_string(), 900.0)],
+        )
+        .unwrap();
         let text = std::fs::read_to_string(path).unwrap();
         let doc = crate::util::json::Json::parse(&text).unwrap();
-        assert_eq!(doc.req_str("schema").unwrap(), "pim-dram/bench-perf/v1");
+        assert_eq!(doc.req_str("schema").unwrap(), "pim-dram/bench-perf/v2");
         let target = doc
             .get("targets")
             .unwrap()
@@ -341,6 +418,44 @@ mod tests {
                 .abs()
                 < 1e-9
         );
+        assert_eq!(
+            doc.get("baseline").unwrap().req_f64("price_layer").unwrap(),
+            900.0
+        );
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn read_baseline_skips_empty_placeholders() {
+        let path = std::env::temp_dir().join("pim_dram_bench_baseline_test.json");
+        let path = path.to_str().unwrap();
+        // The committed seed placeholder has no targets → no baseline.
+        write_bench_json(path, "seed", &[], &[], &[]).unwrap();
+        assert!(read_baseline(path).is_none());
+        // A missing file is also no baseline.
+        assert!(read_baseline("/nonexistent/bench.json").is_none());
+        // A real run round-trips.
+        write_bench_json(path, "real", &[measurement("lower", 2000)], &[], &[])
+            .unwrap();
+        let base = read_baseline(path).unwrap();
+        assert_eq!(base, vec![("lower".to_string(), 2000.0)]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn regression_gate_flags_only_real_slowdowns() {
+        let base = vec![
+            ("price_layer".to_string(), 1000.0),
+            ("lower".to_string(), 1000.0),
+            ("retired_target".to_string(), 1.0),
+        ];
+        // Within tolerance (+20%) and a brand-new target: pass.
+        let ok = [measurement("price_layer", 1200), measurement("session_hit", 9999)];
+        assert!(check_regression(&base, &ok, 0.25).is_ok());
+        // +100% on a tracked target: fail, naming the target.
+        let bad = [measurement("lower", 2000)];
+        let err = check_regression(&base, &bad, 0.25).unwrap_err();
+        assert!(err.contains("lower"), "{err}");
+        assert!(err.contains("+100%"), "{err}");
     }
 }

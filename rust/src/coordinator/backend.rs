@@ -16,8 +16,11 @@
 
 use anyhow::Result;
 
-use crate::sim::{SimConfig, SimResult, SimSession};
+use crate::plan::PlanError;
+use crate::sim::{SimConfig, SimReport, SimResult, SimSession};
 use crate::workloads::Network;
+
+use super::batcher::Batcher;
 
 /// One device's executable state, driven by a single pool worker.
 pub trait Backend {
@@ -80,6 +83,56 @@ impl SimBackend {
         let mut b = SimBackend::new(batch, net.layers[0].in_elems(), 10);
         b.service_ns_per_image = report.cycle_ns;
         Ok(b)
+    }
+
+    /// Price a whole admission batch through **one** session pass — the
+    /// batched serve-pricing path. Each request keeps its own `Result`
+    /// (a failing plan poisons only its own slot) and its report is
+    /// bitwise-identical to a per-request [`SimBackend::from_session`]
+    /// pricing, but the per-layer cache fill is shared across the batch
+    /// instead of repeated per request.
+    pub fn price_batch(
+        session: &mut SimSession<'_>,
+        cfgs: &[SimConfig],
+    ) -> Vec<Result<SimReport, PlanError>> {
+        session.report_batch(cfgs)
+    }
+
+    /// Drain `batcher` (full batches first, then the partial tail) and
+    /// price every admitted request in one batched session pass.
+    /// Admission order is preserved in the result.
+    pub fn price_drained(
+        session: &mut SimSession<'_>,
+        batcher: &mut Batcher<SimConfig>,
+    ) -> Vec<Result<SimReport, PlanError>> {
+        let mut cfgs: Vec<SimConfig> = Vec::with_capacity(batcher.pending());
+        while let Some(batch) = batcher.pop_full() {
+            cfgs.extend(batch);
+        }
+        if let Some(tail) = batcher.pop_partial() {
+            cfgs.extend(tail);
+        }
+        session.report_batch(&cfgs)
+    }
+
+    /// [`SimBackend::from_session`] over a whole admission batch: one
+    /// session pass prices every backend.
+    pub fn from_session_batch(
+        session: &mut SimSession<'_>,
+        cfgs: &[SimConfig],
+        batch: usize,
+    ) -> Vec<Result<Self>> {
+        let net = session.network();
+        session
+            .report_batch(cfgs)
+            .into_iter()
+            .map(|r| {
+                let report = r?;
+                let mut b = SimBackend::new(batch, net.layers[0].in_elems(), 10);
+                b.service_ns_per_image = report.cycle_ns;
+                Ok(b)
+            })
+            .collect()
     }
 
     /// Replay the device's modeled service time in wall-clock (scaled).
@@ -176,6 +229,71 @@ mod tests {
         assert_eq!(b.image_elems(), net.layers[0].in_elems());
         assert!(b.service_ns() > 0.0);
         assert_eq!(b.batch_size(), 8);
+    }
+
+    #[test]
+    fn price_batch_matches_per_request_sessions() {
+        use crate::plan::ShardPolicy;
+        use crate::sim::{SimConfig, SimSession};
+        use crate::workloads::nets::vgg16;
+        let net = vgg16();
+        let cfgs = [
+            SimConfig::conservative(8),
+            SimConfig::conservative(8)
+                .with_grid(2, 4)
+                .with_shard(ShardPolicy::LayerSplit),
+            // 16 layer banks overflow a 1×1 grid — a per-request error.
+            SimConfig::conservative(8).with_grid(1, 1),
+        ];
+        let mut session = SimSession::new(&net);
+        let batched = SimBackend::price_batch(&mut session, &cfgs);
+        assert_eq!(batched.len(), cfgs.len());
+        for (cfg, got) in cfgs.iter().zip(&batched) {
+            let mut fresh = SimSession::new(&net);
+            assert_eq!(&fresh.report(cfg), got);
+        }
+        assert!(batched[2].is_err());
+    }
+
+    #[test]
+    fn price_drained_empties_the_batcher_in_order() {
+        use crate::coordinator::Batcher;
+        use crate::sim::{SimConfig, SimSession};
+        use crate::workloads::nets::pimnet;
+        let net = pimnet();
+        let mut batcher = Batcher::new(2);
+        for bits in [4usize, 8, 16] {
+            batcher.push(SimConfig::conservative(bits));
+        }
+        let mut session = SimSession::new(&net);
+        let reports = SimBackend::price_drained(&mut session, &mut batcher);
+        assert_eq!(batcher.pending(), 0);
+        assert_eq!(reports.len(), 3);
+        let bits: Vec<usize> =
+            reports.iter().map(|r| r.as_ref().unwrap().n_bits).collect();
+        assert_eq!(bits, vec![4, 8, 16]);
+    }
+
+    #[test]
+    fn from_session_batch_matches_per_request_backends() {
+        use crate::sim::{SimConfig, SimSession};
+        use crate::workloads::nets::pimnet;
+        let net = pimnet();
+        let cfgs = [
+            SimConfig::conservative(8),
+            SimConfig::paper_favorable(8),
+        ];
+        let mut session = SimSession::new(&net);
+        let batched = SimBackend::from_session_batch(&mut session, &cfgs, 4);
+        assert_eq!(batched.len(), 2);
+        for (cfg, got) in cfgs.iter().zip(batched) {
+            let mut fresh = SimSession::new(&net);
+            let want = SimBackend::from_session(&mut fresh, cfg, 4).unwrap();
+            let got = got.unwrap();
+            assert_eq!(got.service_ns().to_bits(), want.service_ns().to_bits());
+            assert_eq!(got.batch_size(), want.batch_size());
+            assert_eq!(got.image_elems(), want.image_elems());
+        }
     }
 
     #[test]

@@ -32,6 +32,10 @@
 //!   * [`ShardPolicy::Hybrid`] — `replicas` groups of channels, each group
 //!     running one layer-split pipeline: the two axes composed.
 
+// Lowering runs on the sweep hot path; a reintroduced clone here fails CI
+// (clippy runs with -D warnings).
+#![warn(clippy::redundant_clone)]
+
 use std::ops::Range;
 
 use crate::dram::DramGeometry;
@@ -157,24 +161,50 @@ impl ExecutionPlan {
 /// changes when the grid or shard policy changes, and it is cheap: the
 /// incremental pricing session ([`crate::sim::SimSession`]) recomputes it
 /// per call while reusing cached per-layer mapping/pricing.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct PlanLayout {
     pub devices: Vec<PimDevice>,
     /// Independent full-network pipelines in the layout.
     pub replicas: usize,
-    /// Device ids of each replica's chain, pipeline order.
-    pub chains: Vec<Vec<usize>>,
+    /// Flat chain arena: every replica's device ids back-to-back, so
+    /// re-lowering into an existing layout ([`layout_into`]) allocates
+    /// nothing once the vectors have grown to size. Replica `r`'s chain is
+    /// `chain_devices[chain_bounds[r]..chain_bounds[r + 1]]`.
+    chain_devices: Vec<usize>,
+    chain_bounds: Vec<usize>,
 }
 
 impl PlanLayout {
+    /// Empty the layout for re-lowering, keeping the allocations.
+    fn reset(&mut self) {
+        self.devices.clear();
+        self.replicas = 0;
+        self.chain_devices.clear();
+        self.chain_bounds.clear();
+        self.chain_bounds.push(0);
+    }
+
+    /// Close the chain under construction: everything pushed onto
+    /// `chain_devices` since the last seal becomes one replica's chain.
+    fn seal_chain(&mut self) {
+        self.chain_bounds.push(self.chain_devices.len());
+        self.replicas += 1;
+    }
+
     /// Devices forming one replica's pipeline, in order.
     pub fn chain(&self, replica: usize) -> &[usize] {
-        &self.chains[replica]
+        &self.chain_devices[self.chain_bounds[replica]..self.chain_bounds[replica + 1]]
+    }
+
+    /// The chains as the owned per-replica vectors [`ExecutionPlan`]
+    /// carries.
+    pub fn chains_vec(&self) -> Vec<Vec<usize>> {
+        (0..self.replicas).map(|r| self.chain(r).to_vec()).collect()
     }
 
     /// Device id hosting `layer` within `replica`'s chain.
     pub fn device_hosting(&self, replica: usize, layer: usize) -> Option<usize> {
-        self.chains[replica]
+        self.chain(replica)
             .iter()
             .copied()
             .find(|&id| self.devices[id].shard.layers.contains(&layer))
@@ -244,6 +274,7 @@ pub fn lower(
     let mapping = map_network(net, cfg)?;
     let weights: Vec<u64> = mapping.layers.iter().map(|m| m.rounds() as u64).collect();
     let l = layout(net, &weights, mapping.total_banks, &cfg.geometry, policy)?;
+    let chains = l.chains_vec();
     Ok(ExecutionPlan {
         net_name: net.name.clone(),
         policy,
@@ -251,7 +282,7 @@ pub fn lower(
         mapping,
         devices: l.devices,
         replicas: l.replicas,
-        chains: l.chains,
+        chains,
     })
 }
 
@@ -265,8 +296,25 @@ pub fn layout(
     g: &DramGeometry,
     policy: ShardPolicy,
 ) -> Result<PlanLayout, PlanError> {
-    let mut devices: Vec<PimDevice> = Vec::new();
-    let mut chains: Vec<Vec<usize>> = Vec::new();
+    let mut out = PlanLayout::default();
+    layout_into(net, layer_rounds, banks_needed, g, policy, &mut out)?;
+    Ok(out)
+}
+
+/// [`layout`] into a caller-owned [`PlanLayout`], reusing its
+/// allocations. This is the sweep hot path: the incremental pricing
+/// session re-lowers on every probe, and after the first call the layout
+/// vectors are already sized. On error the layout holds a partial
+/// lowering and must not be read — the next `layout_into` resets it.
+pub fn layout_into(
+    net: &Network,
+    layer_rounds: &[u64],
+    banks_needed: usize,
+    g: &DramGeometry,
+    policy: ShardPolicy,
+    out: &mut PlanLayout,
+) -> Result<(), PlanError> {
+    out.reset();
 
     match policy {
         ShardPolicy::Replicate => {
@@ -280,8 +328,8 @@ pub fn layout(
             let per_channel = g.ranks_per_channel / needed_ranks;
             for channel in 0..g.channels {
                 for slot in 0..per_channel {
-                    let id = devices.len();
-                    devices.push(PimDevice {
+                    let id = out.devices.len();
+                    out.devices.push(PimDevice {
                         id,
                         replica: id,
                         channel,
@@ -292,14 +340,13 @@ pub fn layout(
                         },
                         banks_used: banks_needed,
                     });
-                    chains.push(vec![id]);
+                    out.chain_devices.push(id);
+                    out.seal_chain();
                 }
             }
         }
         ShardPolicy::LayerSplit => {
-            let chain =
-                split_group(net, layer_rounds, g, 0..g.channels, 0, &mut devices)?;
-            chains.push(chain);
+            split_group_into(net, layer_rounds, g, 0..g.channels, 0, out)?;
         }
         ShardPolicy::Hybrid { replicas } => {
             if replicas == 0 || replicas > g.channels {
@@ -309,33 +356,31 @@ pub fn layout(
             let group = g.channels / replicas;
             for r in 0..replicas {
                 let chs = r * group..(r + 1) * group;
-                let chain = split_group(net, layer_rounds, g, chs, r, &mut devices)?;
-                chains.push(chain);
+                split_group_into(net, layer_rounds, g, chs, r, out)?;
             }
         }
     }
 
-    let replicas = chains.len();
-    Ok(PlanLayout { devices, replicas, chains })
+    Ok(())
 }
 
 /// Split one pipeline across `channels`, one contiguous segment per
 /// channel, balanced by the per-layer sequential-round count (the same
-/// proxy the k-optimizer uses). Returns the chain of new device ids.
-fn split_group(
+/// proxy the k-optimizer uses). The new devices become one sealed chain
+/// of `out`.
+fn split_group_into(
     net: &Network,
     weights: &[u64],
     g: &DramGeometry,
     channels: Range<usize>,
     replica: usize,
-    devices: &mut Vec<PimDevice>,
-) -> Result<Vec<usize>, PlanError> {
+    out: &mut PlanLayout,
+) -> Result<(), PlanError> {
     let segments = split_by_weight(weights, channels.len());
     let budget = g.ranks_per_channel * g.banks_per_rank;
 
     // A single-channel group degenerates to a whole-network device and
     // must additionally fit the channel (mirrors the Replicate check).
-    let mut chain = Vec::with_capacity(segments.len());
     for (si, seg) in segments.iter().enumerate() {
         let channel = channels.start + si;
         let residuals: Vec<usize> = net
@@ -350,8 +395,8 @@ fn split_group(
             return Err(PlanError::SegmentOverflow { channel, banks: banks_used, budget });
         }
         let ranks_used = ceil_div(banks_used, g.banks_per_rank);
-        let id = devices.len();
-        devices.push(PimDevice {
+        let id = out.devices.len();
+        out.devices.push(PimDevice {
             id,
             replica,
             channel,
@@ -359,9 +404,10 @@ fn split_group(
             shard: ShardAssignment { layers: seg.clone(), residuals },
             banks_used,
         });
-        chain.push(id);
+        out.chain_devices.push(id);
     }
-    Ok(chain)
+    out.seal_chain();
+    Ok(())
 }
 
 /// Contiguous partition of `weights` into at most `segments` non-empty
@@ -571,6 +617,54 @@ mod tests {
         );
         assert!(ShardPolicy::parse("nope").is_err());
         assert!(ShardPolicy::parse("hybrid:x").is_err());
+    }
+
+    #[test]
+    fn layout_into_reuses_allocations_across_calls() {
+        let net = resnet18();
+        let mut g2 = DramGeometry::paper_default();
+        g2.channels = 2;
+        let mapping = map_network(&net, &cfg(g2.clone())).unwrap();
+        let weights: Vec<u64> =
+            mapping.layers.iter().map(|m| m.rounds() as u64).collect();
+        let banks = mapping.total_banks;
+
+        let mut out = PlanLayout::default();
+        layout_into(&net, &weights, banks, &g2, ShardPolicy::LayerSplit, &mut out)
+            .unwrap();
+        assert_eq!(out.replicas, 1);
+        assert_eq!(out.chain(0).len(), 2);
+
+        // Re-lowering in place must agree with a fresh layout exactly.
+        layout_into(&net, &weights, banks, &g2, ShardPolicy::Replicate, &mut out)
+            .unwrap();
+        let fresh =
+            layout(&net, &weights, banks, &g2, ShardPolicy::Replicate).unwrap();
+        assert_eq!(out.devices, fresh.devices);
+        assert_eq!(out.replicas, fresh.replicas);
+        assert_eq!(out.chains_vec(), fresh.chains_vec());
+
+        // A failed lowering leaves the layout reusable: the next call
+        // resets it.
+        let mut small = g2.clone();
+        small.ranks_per_channel = 1;
+        assert!(layout_into(
+            &net,
+            &weights,
+            banks,
+            &small,
+            ShardPolicy::Replicate,
+            &mut out
+        )
+        .is_err());
+        layout_into(&net, &weights, banks, &g2, ShardPolicy::LayerSplit, &mut out)
+            .unwrap();
+        assert_eq!(out.replicas, 1);
+        assert_eq!(
+            out.devices.len(),
+            out.chain(0).len(),
+            "reset must drop stale devices"
+        );
     }
 
     #[test]

@@ -288,6 +288,18 @@ pub(crate) fn price_layer(
     cfg: &SimConfig,
     ctx: &PriceCtx,
 ) -> LayerSim {
+    price_layer_owned(layer, m.clone(), cfg, ctx)
+}
+
+/// [`price_layer`] taking ownership of the mapping — the session's miss
+/// path, which builds a fresh `LayerMapping` per cache fill and would
+/// otherwise clone it only to drop the original.
+pub(crate) fn price_layer_owned(
+    layer: &LayerDesc,
+    m: LayerMapping,
+    cfg: &SimConfig,
+    ctx: &PriceCtx,
+) -> LayerSim {
     let n = cfg.n_bits;
     let rounds = m.rounds() as f64;
     let mut multiply_ns = rounds * ctx.mul_cost as f64 * ctx.aap_ns;
@@ -338,7 +350,7 @@ pub(crate) fn price_layer(
 
     LayerSim {
         name: layer.name.clone(),
-        mapping: m.clone(),
+        mapping: m,
         multiply_ns,
         logic_ns,
         restage_ns,
@@ -412,16 +424,13 @@ fn price_device(
     cfg: &SimConfig,
 ) -> DeviceSim {
     let d = &plan.devices[device_id];
-    let mut stages: Vec<StageCost> = d
-        .shard
-        .layers
-        .clone()
-        .map(|i| StageCost {
-            name: layers[i].name.clone(),
-            compute_ns: layers[i].compute_ns(),
-            transfer_ns: layers[i].transfer_ns,
-        })
-        .collect();
+    let mut stages: Vec<StageCost> =
+        Vec::with_capacity(d.shard.layers.len() + d.shard.residuals.len());
+    stages.extend(d.shard.layers.clone().map(|i| StageCost {
+        name: layers[i].name.clone(),
+        compute_ns: layers[i].compute_ns(),
+        transfer_ns: layers[i].transfer_ns,
+    }));
 
     // The boundary layer's activations leave the module over the channel
     // interface instead of the internal bus.
@@ -453,10 +462,11 @@ fn price_device(
 /// slowest device — every channel drives its own internal bus, and hop
 /// links are dedicated per channel pair.
 fn combine_chain(devices: &[DeviceSim]) -> PipelineReport {
-    let stages: Vec<StageCost> = devices
-        .iter()
-        .flat_map(|d| d.pipeline.stages.iter().cloned())
-        .collect();
+    let total: usize = devices.iter().map(|d| d.pipeline.stages.len()).sum();
+    let mut stages: Vec<StageCost> = Vec::with_capacity(total);
+    for d in devices {
+        stages.extend_from_slice(&d.pipeline.stages);
+    }
     let latency_ns = devices.iter().map(|d| d.pipeline.latency_ns).sum();
     let cycle_ns = devices
         .iter()
@@ -491,15 +501,21 @@ pub(crate) fn finish_simulation(
     layers: Vec<LayerSim>,
 ) -> SimResult {
     // Price replica 0's device chain (replicas are identical by
-    // construction).
+    // construction). Long layer-split chains fan out across cores —
+    // device pricing is independent per device and `par_sweep` preserves
+    // index order, so the output is identical either way. Short chains
+    // (the common case) stay sequential: thread spawn costs more than the
+    // pricing itself.
+    const PAR_CHAIN_MIN_DEVICES: usize = 8;
     let chain = plan.chain(0);
-    let devices: Vec<DeviceSim> = chain
-        .iter()
-        .enumerate()
-        .map(|(pos, &id)| {
-            price_device(net, &plan, &layers, id, pos + 1 == chain.len(), cfg)
-        })
-        .collect();
+    let price_one = |pos: usize| {
+        price_device(net, &plan, &layers, chain[pos], pos + 1 == chain.len(), cfg)
+    };
+    let devices: Vec<DeviceSim> = if chain.len() >= PAR_CHAIN_MIN_DEVICES {
+        crate::bench_harness::par_sweep(chain.len(), price_one)
+    } else {
+        (0..chain.len()).map(price_one).collect()
+    };
 
     // Aggregate.
     let pipeline = combine_chain(&devices);
@@ -802,6 +818,26 @@ mod tests {
             (r.throughput_ips() - 2.0 * r.replica_throughput_ips()).abs()
                 < 1e-9 * r.throughput_ips()
         );
+    }
+
+    #[test]
+    fn long_split_chains_price_in_parallel_identically() {
+        // An 8-device layer-split chain crosses finish_simulation's
+        // parallel-pricing threshold; the session's scalar fold is
+        // strictly sequential, so bitwise agreement proves the fan-out
+        // changes nothing about the numbers.
+        let net = vgg16();
+        let cfg = SimConfig::conservative(8)
+            .with_grid(8, 4)
+            .with_shard(ShardPolicy::LayerSplit);
+        let fresh = simulate(&net, &cfg).unwrap();
+        assert_eq!(fresh.scale_out.devices.len(), 8);
+        let mut session = crate::sim::SimSession::new(&net);
+        let rep = session.report(&cfg).unwrap();
+        assert_eq!(rep.latency_ns.to_bits(), fresh.pipeline.latency_ns.to_bits());
+        assert_eq!(rep.cycle_ns.to_bits(), fresh.pipeline.cycle_ns.to_bits());
+        assert_eq!(rep.bottleneck, fresh.pipeline.bottleneck);
+        assert_eq!(rep.hop_ns_total.to_bits(), fresh.scale_out.hop_ns_total.to_bits());
     }
 
     #[test]

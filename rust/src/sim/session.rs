@@ -11,16 +11,20 @@
 //! reusable artifacts:
 //!
 //!   * **map + price, cached** — each layer's [`LayerSim`] (mapping +
-//!     pricing) is keyed by `(fingerprint, layer, k)` where the
+//!     pricing) lives in a session-owned **arena** (`Vec<LayerSim>`),
+//!     keyed by `(fingerprint, layer, k)` → arena slot, where the
 //!     fingerprint hashes every map/price input: bank-internal geometry,
 //!     timing, operand bits, cost model, adder width, tree stance and
 //!     refresh. The grid, the shard policy and the `ks` vector are
 //!     deliberately **excluded** — they only steer lowering/aggregation,
 //!     so changing them reuses the cache.
-//!   * **lower + aggregate, per call** — [`crate::plan::layout`] and the
-//!     chain folds are recomputed every call; they are the cheap stages.
+//!   * **lower + aggregate, per call** — [`crate::plan::layout_into`] and
+//!     the chain folds are recomputed every call; they are the cheap
+//!     stages, and they run in session-owned scratch (the slot/weight
+//!     vectors and the [`crate::plan::PlanLayout`]) so a warm probe
+//!     allocates nothing at all.
 //!
-//! Two read paths:
+//! Read paths:
 //!   * [`SimSession::simulate_full`] rebuilds the exact [`SimResult`]
 //!     `simulate()` returns (shared `finish_simulation` tail), for
 //!     callers that need per-stage detail (CLI tables, serving setup).
@@ -28,6 +32,10 @@
 //!     read, skipping every per-stage vector. Its folds run in the same
 //!     order as `simulate()`'s, so equality is exact, not approximate —
 //!     `tests/session_equivalence.rs` is the correctness bar.
+//!   * [`SimSession::report_batch`] prices a whole admission batch (the
+//!     serve path's unit) through one session pass: request *i*'s result
+//!     is bitwise-identical to an isolated `report()` call, but every
+//!     request after the first amortizes the shared cache fill.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -35,11 +43,11 @@ use std::hash::Hasher;
 
 use crate::gpu::GpuModel;
 use crate::mapping::{map_layer, outer_count, MapConfig, MapError, NetworkMapping};
-use crate::plan::{self, ExecutionPlan, PlanError, ShardPolicy};
+use crate::plan::{self, ExecutionPlan, PlanError, PlanLayout, ShardPolicy};
 use crate::primitives::CostModel;
 use crate::workloads::Network;
 
-use super::engine::{finish_simulation, hop_ns_for, price_layer, residual_cost};
+use super::engine::{finish_simulation, hop_ns_for, price_layer_owned, residual_cost};
 use super::engine::{LayerSim, PriceCtx, SimConfig, SimResult};
 
 /// Hash every `SimConfig` field the **map** and **price** stages read.
@@ -148,16 +156,37 @@ impl SimReport {
 /// An incremental simulation session over one network: map once, price
 /// per `(config-fingerprint, layer, k)`, re-lower and re-aggregate per
 /// call. See the module docs for the caching contract.
+///
+/// All per-call state lives in session-owned arenas and scratch vectors:
+/// a warm [`SimSession::report`] probe performs no heap allocation beyond
+/// the report's own `net_name` string.
 pub struct SimSession<'a> {
     net: &'a Network,
-    cache: HashMap<LayerKey, LayerSim>,
+    /// Arena of priced per-layer artifacts; cache values are slots here.
+    /// Entries are append-only until [`SimSession::clear`].
+    arena: Vec<LayerSim>,
+    cache: HashMap<LayerKey, u32>,
+    /// Scratch, reused across calls: the active config's arena slot per
+    /// layer, the layout-balancing round counts, and the grid layout.
+    slots: Vec<u32>,
+    weights: Vec<u64>,
+    layout: PlanLayout,
     hits: u64,
     misses: u64,
 }
 
 impl<'a> SimSession<'a> {
     pub fn new(net: &'a Network) -> Self {
-        SimSession { net, cache: HashMap::new(), hits: 0, misses: 0 }
+        SimSession {
+            net,
+            arena: Vec::new(),
+            cache: HashMap::new(),
+            slots: Vec::new(),
+            weights: Vec::new(),
+            layout: PlanLayout::default(),
+            hits: 0,
+            misses: 0,
+        }
     }
 
     /// The network this session prices.
@@ -178,6 +207,7 @@ impl<'a> SimSession<'a> {
     /// Drop all cached artifacts (stats survive).
     pub fn clear(&mut self) {
         self.cache.clear();
+        self.arena.clear();
     }
 
     /// The effective per-layer parallelism under `cfg` — the same clamp
@@ -200,41 +230,65 @@ impl<'a> SimSession<'a> {
         Ok(banks_needed)
     }
 
-    /// Fill the cache for every layer missing under `(fp, k)`.
+    /// Fill the arena for every layer missing under `(fp, k)`.
     fn ensure_priced(&mut self, cfg: &SimConfig, fp: u64) -> Result<(), PlanError> {
+        let net = self.net;
         let mut ctx: Option<PriceCtx> = None;
-        for (i, layer) in self.net.layers.iter().enumerate() {
+        // One probe MapConfig serves every miss: `map_layer` broadcasts a
+        // single-entry `ks`, so only `ks[0]` changes between layers.
+        let mut probe: Option<MapConfig> = None;
+        for (i, layer) in net.layers.iter().enumerate() {
             let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
             if self.cache.contains_key(&key) {
                 self.hits += 1;
                 continue;
             }
             self.misses += 1;
-            // Per-layer map config, exactly as `map_network` builds it.
-            let c = MapConfig {
+            let c = probe.get_or_insert_with(|| MapConfig {
                 geometry: cfg.geometry.clone(),
                 n_bits: cfg.n_bits,
                 ks: vec![key.k],
-            };
-            let m = map_layer(i, i, layer, &c).map_err(PlanError::Map)?;
+            });
+            c.ks[0] = key.k;
+            let m = map_layer(i, i, layer, c).map_err(PlanError::Map)?;
             let ctx = ctx.get_or_insert_with(|| PriceCtx::new(cfg));
-            self.cache.insert(key, price_layer(layer, &m, cfg, ctx));
+            let slot = self.arena.len() as u32;
+            self.arena.push(price_layer_owned(layer, m, cfg, ctx));
+            self.cache.insert(key, slot);
         }
         Ok(())
     }
 
+    /// Resolve the active config's arena slots and layout-balancing
+    /// weights into the session scratch. Infallible after a successful
+    /// [`SimSession::ensure_priced`] under the same `(cfg, fp)`.
+    fn resolve_slots(&mut self, cfg: &SimConfig, fp: u64) {
+        let net = self.net;
+        self.slots.clear();
+        self.weights.clear();
+        for i in 0..net.layers.len() {
+            let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
+            let slot = self.cache[&key];
+            let rounds = self.arena[slot as usize].mapping.rounds() as u64;
+            self.slots.push(slot);
+            self.weights.push(rounds);
+        }
+    }
+
     /// Full fidelity: the same [`SimResult`] `simulate()` returns, built
-    /// from cached per-layer artifacts and a fresh lowering.
+    /// from cached per-layer artifacts and a fresh lowering. The result
+    /// owns every per-stage vector, so this path clones out of the arena
+    /// by design; sweeps should read [`SimSession::report`].
     pub fn simulate_full(&mut self, cfg: &SimConfig) -> Result<SimResult, PlanError> {
         let banks_needed = self.check_banks(cfg)?;
         let fp = price_fingerprint(cfg);
         self.ensure_priced(cfg, fp)?;
+        self.resolve_slots(cfg, fp);
 
-        let layers: Vec<LayerSim> = (0..self.net.layers.len())
-            .map(|i| {
-                let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
-                self.cache[&key].clone()
-            })
+        let layers: Vec<LayerSim> = self
+            .slots
+            .iter()
+            .map(|&s| self.arena[s as usize].clone())
             .collect();
         let mapping = NetworkMapping {
             net_name: self.net.name.clone(),
@@ -242,8 +296,9 @@ impl<'a> SimSession<'a> {
             residual_banks: self.net.residuals.len(),
             total_banks: banks_needed,
         };
-        let weights: Vec<u64> = mapping.layers.iter().map(|m| m.rounds() as u64).collect();
-        let l = plan::layout(self.net, &weights, banks_needed, &cfg.geometry, cfg.shard)?;
+        let l =
+            plan::layout(self.net, &self.weights, banks_needed, &cfg.geometry, cfg.shard)?;
+        let chains = l.chains_vec();
         let plan = ExecutionPlan {
             net_name: self.net.name.clone(),
             policy: cfg.shard,
@@ -251,7 +306,7 @@ impl<'a> SimSession<'a> {
             mapping,
             devices: l.devices,
             replicas: l.replicas,
-            chains: l.chains,
+            chains,
         };
         Ok(finish_simulation(self.net, cfg, plan, layers))
     }
@@ -264,21 +319,26 @@ impl<'a> SimSession<'a> {
         let banks_needed = self.check_banks(cfg)?;
         let fp = price_fingerprint(cfg);
         self.ensure_priced(cfg, fp)?;
+        self.resolve_slots(cfg, fp);
 
-        let n_layers = self.net.layers.len();
-        let layers: Vec<&LayerSim> = (0..n_layers)
-            .map(|i| {
-                let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
-                &self.cache[&key]
-            })
-            .collect();
+        // Lower: grid layout from the cached per-layer round counts, into
+        // the session-owned layout scratch.
+        plan::layout_into(
+            self.net,
+            &self.weights,
+            banks_needed,
+            &cfg.geometry,
+            cfg.shard,
+            &mut self.layout,
+        )?;
 
-        // Lower: grid layout from the cached per-layer round counts.
-        let weights: Vec<u64> = layers.iter().map(|l| l.mapping.rounds() as u64).collect();
-        let layout = plan::layout(self.net, &weights, banks_needed, &cfg.geometry, cfg.shard)?;
+        let arena = &self.arena;
+        let slots = &self.slots;
+        let layer_at = |i: usize| -> &LayerSim { &arena[slots[i] as usize] };
 
         // Aggregate replica 0's chain, mirroring `price_device` +
         // `combine_chain` fold-for-fold (see module docs).
+        let layout = &self.layout;
         let chain = layout.chain(0);
         let mut latency_ns = 0.0f64;
         let mut cycle_ns = f64::NEG_INFINITY;
@@ -314,11 +374,11 @@ impl<'a> SimSession<'a> {
                 flat_idx += 1;
             };
             for i in d.shard.layers.clone() {
-                let compute = layers[i].compute_ns();
+                let compute = layer_at(i).compute_ns();
                 let transfer = if !is_tail && i == boundary {
                     hop_ns
                 } else {
-                    layers[i].transfer_ns
+                    layer_at(i).transfer_ns
                 };
                 fold(compute, transfer);
             }
@@ -340,15 +400,18 @@ impl<'a> SimSession<'a> {
         }
 
         // Layer-template totals, in `finish_simulation`'s fold order.
-        let total_aaps: u64 = layers.iter().map(|l| l.aaps).sum();
-        let total_dram_energy_nj: f64 = layers.iter().map(|l| l.dram_energy_nj).sum();
+        let n_layers = self.net.layers.len();
+        let total_aaps: u64 = (0..n_layers).map(|i| layer_at(i).aaps).sum();
+        let total_dram_energy_nj: f64 =
+            (0..n_layers).map(|i| layer_at(i).dram_energy_nj).sum();
         let bank_power_nw: f64 = crate::energy::bank_components(cfg.adder_inputs)
             .iter()
             .map(|c| c.power_nw)
             .sum();
-        let logic_busy_s: f64 = layers.iter().map(|l| l.logic_ns).sum::<f64>() * 1e-9;
+        let logic_busy_s: f64 =
+            (0..n_layers).map(|i| layer_at(i).logic_ns).sum::<f64>() * 1e-9;
         let logic_energy_nj = bank_power_nw * logic_busy_s; // nW × s = nJ
-        let fully_resident = layers.iter().all(|l| l.mapping.fully_resident());
+        let fully_resident = (0..n_layers).all(|i| layer_at(i).mapping.fully_resident());
 
         Ok(SimReport {
             net_name: self.net.name.clone(),
@@ -365,6 +428,23 @@ impl<'a> SimSession<'a> {
             bottleneck,
             fully_resident,
         })
+    }
+
+    /// Price a whole admission batch through one session pass — the serve
+    /// path's batched entry point ([`crate::coordinator::SimBackend`]
+    /// wraps it for `Batcher` batches). Each request keeps its own
+    /// `Result`, so a failing plan poisons only its own slot, and request
+    /// *i*'s report is bitwise-identical to an isolated
+    /// [`SimSession::report`] call under the same config. The win is
+    /// amortization: requests sharing a pricing fingerprint (the common
+    /// serve case — same die, different grid/shard/ks knobs) are one
+    /// cache fill plus per-request scalar folds, instead of the
+    /// per-request fresh-session loop `Job::report()` implies.
+    pub fn report_batch(
+        &mut self,
+        cfgs: &[SimConfig],
+    ) -> Vec<Result<SimReport, PlanError>> {
+        cfgs.iter().map(|cfg| self.report(cfg)).collect()
     }
 }
 
@@ -429,19 +509,47 @@ mod tests {
         let a = SimConfig::conservative(8);
         let b = SimConfig::paper_favorable(8);
         let c = SimConfig::conservative(4);
-        assert_ne!(price_fingerprint(&a), price_fingerprint(&b));
-        assert_ne!(price_fingerprint(&a), price_fingerprint(&c));
+        let fa = price_fingerprint(&a);
+        assert_ne!(fa, price_fingerprint(&b));
+        assert_ne!(fa, price_fingerprint(&c));
         // Grid / shard / ks do not move the fingerprint.
+        assert_eq!(fa, price_fingerprint(&a.clone().with_grid(8, 2)));
         assert_eq!(
-            price_fingerprint(&a),
-            price_fingerprint(&a.clone().with_grid(8, 2))
+            fa,
+            price_fingerprint(&a.with_ks(vec![4]).with_shard(ShardPolicy::LayerSplit))
         );
-        assert_eq!(
-            price_fingerprint(&a),
-            price_fingerprint(
-                &a.clone().with_ks(vec![4]).with_shard(ShardPolicy::LayerSplit)
-            )
-        );
+    }
+
+    #[test]
+    fn report_batch_matches_isolated_reports_including_errors() {
+        let net = vgg16();
+        let batch = [
+            SimConfig::conservative(8),
+            // 16 layer banks overflow a 1×1 grid's 8 — a per-request error.
+            SimConfig::conservative(8).with_grid(1, 1),
+            SimConfig::conservative(8)
+                .with_grid(2, 4)
+                .with_shard(ShardPolicy::LayerSplit),
+        ];
+
+        let mut session = SimSession::new(&net);
+        let batched = session.report_batch(&batch);
+        assert_eq!(batched.len(), 3);
+        for (cfg, got) in batch.iter().zip(&batched) {
+            let mut isolated = SimSession::new(&net);
+            match (isolated.report(cfg), got) {
+                (Ok(want), Ok(got)) => {
+                    assert_eq!(&want, got);
+                    assert_eq!(want.cycle_ns.to_bits(), got.cycle_ns.to_bits());
+                }
+                (Err(want), Err(got)) => assert_eq!(&want, got),
+                (want, got) => panic!("mismatch: {want:?} vs {got:?}"),
+            }
+        }
+        // The whole batch shares one pricing pass.
+        let (hits, misses) = session.cache_stats();
+        assert_eq!(misses, net.layers.len() as u64);
+        assert_eq!(hits, net.layers.len() as u64);
     }
 
     #[test]

@@ -4,10 +4,12 @@
 
 use crate::sim::SimResult;
 
-/// One traced interval on a bank's timeline.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Span {
-    pub bank: String,
+/// One traced interval on a bank's timeline. Borrows its bank label from
+/// the [`SimResult`] it was traced from — a timeline is a *view* of a
+/// result, and the layer-name strings never need copying.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span<'a> {
+    pub bank: &'a str,
     pub start_ns: f64,
     pub end_ns: f64,
     pub kind: SpanKind,
@@ -34,7 +36,7 @@ impl SpanKind {
 
 /// Build the single-image (pipeline-fill) timeline from a sim result:
 /// stage i starts when stage i-1's transfer lands.
-pub fn fill_timeline(result: &SimResult) -> Vec<Span> {
+pub fn fill_timeline(result: &SimResult) -> Vec<Span<'_>> {
     let mut spans = Vec::new();
     let mut clock = 0.0;
     for l in &result.layers {
@@ -47,7 +49,7 @@ pub fn fill_timeline(result: &SimResult) -> Vec<Span> {
         for (kind, dur) in phases {
             if dur > 0.0 {
                 spans.push(Span {
-                    bank: l.name.clone(),
+                    bank: &l.name,
                     start_ns: clock,
                     end_ns: clock + dur,
                     kind,
@@ -60,15 +62,15 @@ pub fn fill_timeline(result: &SimResult) -> Vec<Span> {
 }
 
 /// ASCII Gantt: one row per bank, `width` character columns over the fill.
-pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
+pub fn ascii_gantt(spans: &[Span<'_>], width: usize) -> String {
     if spans.is_empty() {
         return String::new();
     }
     let total = spans.last().unwrap().end_ns.max(1e-9);
     let mut banks: Vec<&str> = Vec::new();
     for s in spans {
-        if banks.last() != Some(&s.bank.as_str()) {
-            banks.push(&s.bank);
+        if banks.last() != Some(&s.bank) {
+            banks.push(s.bank);
         }
     }
     let name_w = banks.iter().map(|b| b.len()).max().unwrap_or(4).max(4);
@@ -100,7 +102,7 @@ pub fn ascii_gantt(spans: &[Span], width: usize) -> String {
 }
 
 /// CSV export: `bank,kind,start_ns,end_ns`.
-pub fn to_csv(spans: &[Span]) -> String {
+pub fn to_csv(spans: &[Span<'_>]) -> String {
     let mut out = String::from("bank,kind,start_ns,end_ns\n");
     for s in spans {
         out.push_str(&format!(

@@ -209,6 +209,73 @@ fn session_reproduces_ks_sweeps() {
 }
 
 #[test]
+fn batched_serve_pricing_matches_per_request_job_reports() {
+    use pim_dram::api::{Job, Spec};
+    use pim_dram::coordinator::SimBackend;
+
+    let base = Spec::builtin("vgg16").with_preset("conservative");
+    let variants = vec![
+        base.clone(),
+        base.clone().with_grid(2, 4).with_shard(ShardPolicy::LayerSplit),
+        base.clone().with_grid(4, 4).with_shard(ShardPolicy::Hybrid { replicas: 2 }),
+        base.clone().with_ks(vec![2]),
+        // 16 layer banks overflow a 1×1 grid — a per-request failure that
+        // must poison only its own slot.
+        base.clone().with_grid(1, 1),
+    ];
+    let cfgs: Vec<SimConfig> = variants
+        .iter()
+        .map(|v| Job::new(v.clone()).unwrap().config().clone())
+        .collect();
+
+    let job = Job::new(base).unwrap();
+    let mut session = job.session();
+    let batched = SimBackend::price_batch(&mut session, &cfgs);
+    assert_eq!(batched.len(), variants.len());
+
+    let mut failures = 0usize;
+    for (variant, got) in variants.iter().zip(&batched) {
+        let ctx = format!("serve batch slot for {variant:?}");
+        let want = Job::new(variant.clone()).unwrap().report();
+        match (want, got) {
+            (Ok(want), Ok(got)) => {
+                assert_eq!(&want, got, "{ctx}");
+                assert_eq!(
+                    want.cycle_ns.to_bits(),
+                    got.cycle_ns.to_bits(),
+                    "{ctx}: cycle bits"
+                );
+                assert_eq!(
+                    want.latency_ns.to_bits(),
+                    got.latency_ns.to_bits(),
+                    "{ctx}: latency bits"
+                );
+                assert_eq!(
+                    want.hop_ns_total.to_bits(),
+                    got.hop_ns_total.to_bits(),
+                    "{ctx}: hop bits"
+                );
+            }
+            (Err(want), Err(got)) => {
+                assert_eq!(&want, got, "{ctx}: error");
+                failures += 1;
+            }
+            (want, got) => panic!("{ctx}: mismatch {want:?} vs {got:?}"),
+        }
+    }
+    assert_eq!(failures, 1, "exactly the 1x1 grid slot must fail");
+
+    // The shared pass prices each distinct layer once; the per-request
+    // loop above re-priced the network for every variant.
+    let (hits, misses) = session.cache_stats();
+    assert!(hits > 0, "grid/shard variants must hit the shared cache");
+    assert!(
+        misses < (job.network().layers.len() * variants.len()) as u64,
+        "batched pass must not re-price per request ({misses} misses)"
+    );
+}
+
+#[test]
 fn repeated_calls_are_stable_and_cached() {
     let net = pim_dram::workloads::nets::resnet18();
     let mut session = SimSession::new(&net);
