@@ -118,6 +118,7 @@ fn main() {
             devices: 2,
             policy: Policy::RoundRobin,
             batch_window: Duration::ZERO,
+            ..PoolConfig::default()
         },
         move |_| Ok(backend.clone()),
     )

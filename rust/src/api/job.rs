@@ -23,7 +23,10 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coordinator::{MultiDeviceServer, Policy, PoolConfig, SimBackend};
+use crate::coordinator::{
+    simulate_fleet, FaultSpec, FaultyBackend, FleetConfig, FleetReport, MultiDeviceServer,
+    Policy, PoolConfig, SimBackend,
+};
 use crate::plan::PlanError;
 use crate::sim::{SimConfig, SimReport, SimResult, SimSession};
 use crate::workloads::Network;
@@ -150,14 +153,21 @@ impl Job {
         let report = session.report(&self.cfg)?;
         let devices = opts.devices.unwrap_or(report.replicas).max(1);
         let backend = SimBackend::from_session(&mut session, &self.cfg, opts.batch)?;
-        let server = MultiDeviceServer::start(
-            PoolConfig {
-                devices,
-                policy: opts.policy,
-                batch_window: Duration::from_millis(opts.batch_window_ms),
-            },
-            move |_| Ok(backend.clone()),
-        )?;
+        let pool = PoolConfig {
+            devices,
+            policy: opts.policy,
+            batch_window: Duration::from_millis(opts.batch_window_ms),
+            resilience: opts.resilience.unwrap_or_default(),
+        };
+        // A noop fault section keeps the plain backend — the fault-free
+        // serve path stays bit-for-bit the legacy one.
+        let faults = opts.faults.clone().filter(|f| !f.is_noop());
+        let server = match faults {
+            Some(faults) => MultiDeviceServer::start(pool, move |d| {
+                Ok(FaultyBackend::new(backend.clone(), d, faults.clone()))
+            })?,
+            None => MultiDeviceServer::start(pool, move |_| Ok(backend.clone()))?,
+        };
         Ok(ServeHandle {
             server,
             report,
@@ -165,6 +175,28 @@ impl Job {
             policy: opts.policy,
             batch: opts.batch,
         })
+    }
+
+    /// Deterministic degraded-mode SLO report: replay this job's serving
+    /// fleet — same devices/policy/batch, same fault schedule, same
+    /// resilience policy — as a virtual-time simulation over `images`
+    /// offered requests. Same spec → bitwise-identical [`FleetReport`].
+    pub fn fleet_report(&self) -> Result<FleetReport> {
+        let opts = self.spec.serve.clone().unwrap_or_default();
+        let report = self.report()?;
+        let devices = opts.devices.unwrap_or(report.replicas).max(1);
+        let cfg = FleetConfig {
+            devices,
+            service_ns: report.cycle_ns,
+            batch: opts.batch,
+            policy: opts.policy,
+            seed: 0x5EED,
+            requests: (self.spec.images as u64).max(1),
+            load: opts.load.unwrap_or(0.9),
+            faults: opts.faults.unwrap_or_else(FaultSpec::none),
+            resilience: opts.resilience.unwrap_or_default(),
+        };
+        simulate_fleet(&cfg)
     }
 }
 

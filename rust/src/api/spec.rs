@@ -42,7 +42,9 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::config::toml::{Toml, Value};
-use crate::coordinator::Policy;
+use crate::coordinator::{
+    CrashSpec, FaultSpec, Policy, ResilienceSpec, StormSpec, StragglerSpec,
+};
 use crate::ir::{self, ActFn, Graph, NodeId, Op, Shape};
 use crate::plan::ShardPolicy;
 use crate::sim::SimConfig;
@@ -943,7 +945,7 @@ impl RunSpec {
 // ---- ServeSpec ------------------------------------------------------------
 
 /// Pool configuration for `Job::serve`.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeSpec {
     /// Worker/device count; `None` serves one worker per plan replica.
     pub devices: Option<usize>,
@@ -954,6 +956,15 @@ pub struct ServeSpec {
     /// Max time a request waits for its batch to fill before a partial
     /// batch is flushed.
     pub batch_window_ms: u64,
+    /// Optional deterministic fault schedule (the chaos layer). Absent =
+    /// fault-free serving, bit-for-bit the legacy path.
+    pub faults: Option<FaultSpec>,
+    /// Optional deadline/retry/failover/shedding policy. Absent = the
+    /// behavior-preserving defaults.
+    pub resilience: Option<ResilienceSpec>,
+    /// Offered load (fraction of full-batch fleet capacity) for the
+    /// virtual-time fleet report; `Job::fleet_report` defaults to 0.9.
+    pub load: Option<f64>,
 }
 
 impl Default for ServeSpec {
@@ -963,6 +974,9 @@ impl Default for ServeSpec {
             batch: 8,
             policy: Policy::RoundRobin,
             batch_window_ms: 2,
+            faults: None,
+            resilience: None,
+            load: None,
         }
     }
 }
@@ -973,12 +987,28 @@ impl ServeSpec {
         if let Some(d) = self.devices {
             anyhow::ensure!(d >= 1, "serve.devices must be >= 1");
         }
+        if let Some(f) = &self.faults {
+            f.validate()?;
+        }
+        if let Some(r) = &self.resilience {
+            r.validate()?;
+        }
+        if let Some(l) = self.load {
+            anyhow::ensure!(
+                l > 0.0 && l.is_finite(),
+                "serve.load must be positive, got {l}"
+            );
+        }
         Ok(())
     }
 
     fn from_json(v: &Json) -> Result<ServeSpec> {
         let obj = v.as_obj().context("`serve` must be an object")?;
-        check_keys("serve", obj, &["batch", "batch_window_ms", "devices", "policy"])?;
+        check_keys(
+            "serve",
+            obj,
+            &["batch", "batch_window_ms", "devices", "faults", "load", "policy", "resilience"],
+        )?;
         let mut s = ServeSpec::default();
         if let Some(d) = v.get("devices") {
             s.devices =
@@ -996,6 +1026,15 @@ impl ServeSpec {
                 .context("serve.batch_window_ms must be a non-negative integer")?
                 as u64;
         }
+        if let Some(f) = v.get("faults") {
+            s.faults = Some(faults_from_json(f)?);
+        }
+        if let Some(r) = v.get("resilience") {
+            s.resilience = Some(resilience_from_json(r)?);
+        }
+        if let Some(l) = v.get("load") {
+            s.load = Some(l.as_f64().context("serve.load must be a number")?);
+        }
         Ok(s)
     }
 
@@ -1006,9 +1045,221 @@ impl ServeSpec {
         if let Some(d) = self.devices {
             o.insert("devices".to_string(), num(d));
         }
+        if let Some(f) = &self.faults {
+            o.insert("faults".to_string(), faults_to_json(f));
+        }
+        if let Some(l) = self.load {
+            o.insert("load".to_string(), Json::Num(l));
+        }
         o.insert("policy".to_string(), Json::Str(policy_name(self.policy).to_string()));
+        if let Some(r) = &self.resilience {
+            o.insert("resilience".to_string(), resilience_to_json(r));
+        }
         Json::Obj(o)
     }
+}
+
+// ---- fault / resilience sections ------------------------------------------
+
+fn faults_from_json(v: &Json) -> Result<FaultSpec> {
+    let obj = v.as_obj().context("serve.faults must be an object")?;
+    check_keys(
+        "serve.faults",
+        obj,
+        &["crash", "seed", "storm", "straggler", "transient"],
+    )?;
+    let seed = v
+        .get("seed")
+        .context("serve.faults.seed is required (one seed reproduces the schedule)")?
+        .as_usize()
+        .context("serve.faults.seed must be a non-negative integer")? as u64;
+    let mut f = FaultSpec { seed, ..FaultSpec::none() };
+    if let Some(t) = v.get("transient") {
+        f.transient = t.as_f64().context("serve.faults.transient must be a number")?;
+    }
+    if let Some(s) = v.get("straggler") {
+        let so = s.as_obj().context("serve.faults.straggler must be an object")?;
+        check_keys("serve.faults.straggler", so, &["factor", "prob"])?;
+        f.straggler = Some(StragglerSpec {
+            prob: s
+                .get("prob")
+                .context("serve.faults.straggler.prob is required")?
+                .as_f64()
+                .context("serve.faults.straggler.prob must be a number")?,
+            factor: s
+                .get("factor")
+                .context("serve.faults.straggler.factor is required")?
+                .as_f64()
+                .context("serve.faults.straggler.factor must be a number")?,
+        });
+    }
+    if let Some(s) = v.get("storm") {
+        let so = s.as_obj().context("serve.faults.storm must be an object")?;
+        check_keys("serve.faults.storm", so, &["duty", "factor", "period"])?;
+        f.storm = Some(StormSpec {
+            period: s
+                .get("period")
+                .context("serve.faults.storm.period is required")?
+                .as_usize()
+                .context("serve.faults.storm.period must be a positive integer")?
+                as u64,
+            duty: s
+                .get("duty")
+                .context("serve.faults.storm.duty is required")?
+                .as_usize()
+                .context("serve.faults.storm.duty must be a non-negative integer")?
+                as u64,
+            factor: s
+                .get("factor")
+                .context("serve.faults.storm.factor is required")?
+                .as_f64()
+                .context("serve.faults.storm.factor must be a number")?,
+        });
+    }
+    if let Some(c) = v.get("crash") {
+        let arr = c.as_arr().context("serve.faults.crash must be an array")?;
+        for e in arr {
+            let eo = e.as_obj().context("serve.faults.crash entries must be objects")?;
+            check_keys("serve.faults.crash entry", eo, &["after", "device", "down_for"])?;
+            f.crash.push(CrashSpec {
+                device: e
+                    .get("device")
+                    .context("serve.faults.crash.device is required")?
+                    .as_usize()
+                    .context("serve.faults.crash.device must be a non-negative integer")?,
+                after: e
+                    .get("after")
+                    .map(|a| {
+                        a.as_usize()
+                            .context("serve.faults.crash.after must be a non-negative integer")
+                    })
+                    .transpose()?
+                    .unwrap_or(0) as u64,
+                down_for: e
+                    .get("down_for")
+                    .map(|d| {
+                        d.as_usize()
+                            .context("serve.faults.crash.down_for must be a positive integer")
+                            .map(|n| n as u64)
+                    })
+                    .transpose()?,
+            });
+        }
+    }
+    Ok(f)
+}
+
+fn faults_to_json(f: &FaultSpec) -> Json {
+    let mut o = BTreeMap::new();
+    if !f.crash.is_empty() {
+        o.insert(
+            "crash".to_string(),
+            Json::Arr(
+                f.crash
+                    .iter()
+                    .map(|c| {
+                        let mut e = BTreeMap::new();
+                        e.insert("after".to_string(), num(c.after as usize));
+                        e.insert("device".to_string(), num(c.device));
+                        if let Some(d) = c.down_for {
+                            e.insert("down_for".to_string(), num(d as usize));
+                        }
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    o.insert("seed".to_string(), num(f.seed as usize));
+    if let Some(s) = &f.storm {
+        let mut so = BTreeMap::new();
+        so.insert("duty".to_string(), num(s.duty as usize));
+        so.insert("factor".to_string(), Json::Num(s.factor));
+        so.insert("period".to_string(), num(s.period as usize));
+        o.insert("storm".to_string(), Json::Obj(so));
+    }
+    if let Some(s) = &f.straggler {
+        let mut so = BTreeMap::new();
+        so.insert("factor".to_string(), Json::Num(s.factor));
+        so.insert("prob".to_string(), Json::Num(s.prob));
+        o.insert("straggler".to_string(), Json::Obj(so));
+    }
+    o.insert("transient".to_string(), Json::Num(f.transient));
+    Json::Obj(o)
+}
+
+fn resilience_from_json(v: &Json) -> Result<ResilienceSpec> {
+    let obj = v.as_obj().context("serve.resilience must be an object")?;
+    check_keys(
+        "serve.resilience",
+        obj,
+        &[
+            "backoff_cap_ms",
+            "backoff_ms",
+            "deadline_ms",
+            "probe_after_ms",
+            "queue_cap",
+            "quarantine_after",
+            "retries",
+        ],
+    )?;
+    let mut r = ResilienceSpec::default();
+    if let Some(d) = v.get("deadline_ms") {
+        r.deadline_ms = Some(
+            d.as_usize().context("serve.resilience.deadline_ms must be a positive integer")?
+                as u64,
+        );
+    }
+    if let Some(n) = v.get("retries") {
+        r.retries = n
+            .as_usize()
+            .context("serve.resilience.retries must be a non-negative integer")?
+            as u32;
+    }
+    if let Some(n) = v.get("backoff_ms") {
+        r.backoff_ms = n
+            .as_usize()
+            .context("serve.resilience.backoff_ms must be a positive integer")?
+            as u64;
+    }
+    if let Some(n) = v.get("backoff_cap_ms") {
+        r.backoff_cap_ms = n
+            .as_usize()
+            .context("serve.resilience.backoff_cap_ms must be a positive integer")?
+            as u64;
+    }
+    if let Some(n) = v.get("queue_cap") {
+        r.queue_cap = n
+            .as_usize()
+            .context("serve.resilience.queue_cap must be a positive integer")?;
+    }
+    if let Some(n) = v.get("quarantine_after") {
+        r.quarantine_after = n
+            .as_usize()
+            .context("serve.resilience.quarantine_after must be a non-negative integer")?
+            as u32;
+    }
+    if let Some(n) = v.get("probe_after_ms") {
+        r.probe_after_ms = n
+            .as_usize()
+            .context("serve.resilience.probe_after_ms must be a positive integer")?
+            as u64;
+    }
+    Ok(r)
+}
+
+fn resilience_to_json(r: &ResilienceSpec) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("backoff_cap_ms".to_string(), num(r.backoff_cap_ms as usize));
+    o.insert("backoff_ms".to_string(), num(r.backoff_ms as usize));
+    if let Some(d) = r.deadline_ms {
+        o.insert("deadline_ms".to_string(), num(d as usize));
+    }
+    o.insert("probe_after_ms".to_string(), num(r.probe_after_ms as usize));
+    o.insert("queue_cap".to_string(), num(r.queue_cap));
+    o.insert("quarantine_after".to_string(), num(r.quarantine_after as usize));
+    o.insert("retries".to_string(), num(r.retries as usize));
+    Json::Obj(o)
 }
 
 // ---- Spec -----------------------------------------------------------------
@@ -1244,6 +1495,72 @@ mod tests {
         assert_eq!(parsed, spec);
         // Canonical: serialize is a fixed point.
         assert_eq!(parsed.to_json_text(), text);
+    }
+
+    #[test]
+    fn fault_injected_serve_spec_roundtrips() {
+        let spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(
+            ServeSpec {
+                devices: Some(4),
+                policy: Policy::TwoChoices,
+                faults: Some(FaultSpec {
+                    seed: 0xC0FFEE,
+                    transient: 0.1,
+                    straggler: Some(StragglerSpec { prob: 0.05, factor: 8.0 }),
+                    storm: Some(StormSpec { period: 64, duty: 8, factor: 2.5 }),
+                    crash: vec![CrashSpec { device: 1, after: 10, down_for: Some(20) }],
+                }),
+                resilience: Some(ResilienceSpec {
+                    deadline_ms: Some(50),
+                    retries: 3,
+                    quarantine_after: 4,
+                    ..ResilienceSpec::default()
+                }),
+                load: Some(0.8),
+                ..ServeSpec::default()
+            },
+        );
+        let text = spec.to_json_text();
+        let parsed = Spec::from_json_text(&text).unwrap();
+        assert_eq!(parsed, spec);
+        // Canonical: serialize is a fixed point.
+        assert_eq!(parsed.to_json_text(), text);
+        // And the sections carry through intact.
+        let s = parsed.serve.unwrap();
+        assert_eq!(s.faults.as_ref().unwrap().seed, 0xC0FFEE);
+        assert_eq!(s.resilience.unwrap().retries, 3);
+    }
+
+    #[test]
+    fn fault_section_errors_are_actionable() {
+        // Seed is required — the schedule must be reproducible.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet",
+                "serve": {"faults": {"transient": 0.1}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
+        // Unknown fault fields are rejected, not silently defaulted.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet",
+                "serve": {"faults": {"seed": 1, "transcient": 0.1}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("transcient"), "{err}");
+        // Out-of-range probabilities fail Job-level validation.
+        let spec = Spec::builtin("pimnet").with_serve(ServeSpec {
+            faults: Some(FaultSpec { seed: 1, transient: 1.5, ..FaultSpec::none() }),
+            ..ServeSpec::default()
+        });
+        let err = spec.validate().unwrap_err();
+        assert!(err.to_string().contains("transient"), "{err}");
+        // Unknown resilience fields are rejected too.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet",
+                "serve": {"resilience": {"retrys": 2}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("retrys"), "{err}");
     }
 
     #[test]

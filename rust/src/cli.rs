@@ -75,6 +75,15 @@ impl Args {
         }
     }
 
+    pub fn flag_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
     /// Error on any flag outside `accepted` — a typo'd flag must not
     /// silently fall back to its default.
     pub fn expect_flags(&self, accepted: &[&str]) -> Result<()> {
@@ -109,6 +118,8 @@ const OPTIMIZE_FLAGS: &[&str] = &[
 const SERVE_FLAGS: &[&str] = &[
     "spec", "network", "preset", "bits", "k", "channels", "ranks", "shard",
     "backend", "devices", "policy", "images", "batch",
+    "deadline-ms", "retries", "queue-cap", "fault-seed", "transient", "load",
+    "report",
 ];
 const SPEC_CMD_FLAGS: &[&str] = &["print"];
 const ROOFLINE_FLAGS: &[&str] = &["network"];
@@ -145,6 +156,10 @@ COMMANDS:
              --backend <sim|pjrt>  --devices <n>  --policy <{policies}>
              --images <n>  --batch <b>  (+ spec flags for sim devices;
              pjrt needs `make artifacts` and a `--features pjrt` build)
+             Resilience: --deadline-ms <ms>  --retries <n>  --queue-cap <n>
+             Fault injection: --fault-seed <s>  --transient <p>  --load <f>
+             --report prints the deterministic virtual-time fleet SLO
+             report (bitwise-reproducible per seed) instead of serving live
   help       Show this help
 
 Unknown flags are an error; the message lists the command's accepted set.
@@ -574,9 +589,50 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if args.flags.contains_key("batch") {
         serve.batch = args.flag_usize("batch", 8)?.max(1);
     }
+    // Resilience overrides (start from the spec's section, if any).
+    if args.flags.contains_key("deadline-ms")
+        || args.flags.contains_key("retries")
+        || args.flags.contains_key("queue-cap")
+    {
+        let mut r = serve.resilience.unwrap_or_default();
+        if args.flags.contains_key("deadline-ms") {
+            r.deadline_ms = Some(args.flag_usize("deadline-ms", 1)?.max(1) as u64);
+        }
+        if args.flags.contains_key("retries") {
+            r.retries = args.flag_usize("retries", 0)? as u32;
+        }
+        if args.flags.contains_key("queue-cap") {
+            r.queue_cap = args.flag_usize("queue-cap", 1024)?;
+        }
+        serve.resilience = Some(r);
+    }
+    // Fault-schedule overrides.
+    if args.flags.contains_key("fault-seed") || args.flags.contains_key("transient") {
+        let mut f = serve.faults.clone().unwrap_or_default();
+        if args.flags.contains_key("fault-seed") {
+            f.seed = args.flag_usize("fault-seed", 0)? as u64;
+        }
+        if args.flags.contains_key("transient") {
+            f.transient = args.flag_f64("transient", 0.0)?;
+        }
+        serve.faults = Some(f);
+    }
+    if args.flags.contains_key("load") {
+        serve.load = Some(args.flag_f64("load", 0.9)?);
+    }
     spec.serve = Some(serve);
     let images = args.flag_usize("images", spec.images)?;
+    spec.images = images; // --images drives both live traffic and the fleet replay
     let job = Job::new(spec)?;
+
+    // --report: the deterministic virtual-time fleet replay — same seed,
+    // bitwise-identical SLO report — instead of the live thread pool.
+    if args.flags.contains_key("report") {
+        let fleet = job.fleet_report()?;
+        print!("{}", fleet.render());
+        return Ok(());
+    }
+
     let handle = job.serve()?;
 
     println!(
@@ -773,6 +829,10 @@ mod tests {
             "tables",
             "serve --backend sim --network pimnet --preset conservative \
              --devices 2 --images 12 --batch 4",
+            "serve --backend sim --network pimnet --preset conservative \
+             --devices 2 --images 64 --batch 4 --report --fault-seed 7 \
+             --transient 0.2 --retries 2 --deadline-ms 50 --load 1.2 \
+             --queue-cap 32",
             "help",
         ] {
             run_str(cmd).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));

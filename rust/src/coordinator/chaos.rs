@@ -1,0 +1,695 @@
+//! Virtual-time fleet simulation: the deterministic chaos-report path.
+//!
+//! The live `MultiDeviceServer` is a real thread pool — wall-clock
+//! latencies and OS scheduling make its metrics non-reproducible. This
+//! module replays the *same* machinery (the [`Router`] policies, the
+//! [`HealthTracker`] state machine, the [`FaultSpec`] schedule, the
+//! deadline/retry/backoff/shed policy of [`ResilienceSpec`]) as a
+//! single-threaded discrete-event simulation over a virtual ns clock, so
+//! **one seed yields a bitwise-identical [`FleetReport`]** — the
+//! degraded-mode SLO numbers (p50/p95/p99, goodput vs offered load,
+//! shed/retried/failed-over counts, health transitions) the chaos tests
+//! and the `resilience_sweep` bench assert on.
+//!
+//! Model (documented simplifications):
+//!   * Open-loop arrivals: one request every
+//!     `service_ns / (devices × load)` ns — `load` is offered load as a
+//!     fraction of the fleet's full-batch capacity.
+//!   * An idle device starts a batch immediately with whatever is queued
+//!     (a zero batch window); fills accumulate while devices are busy.
+//!   * A batch (padded to `batch`) takes `batch × service_ns × slow` ns;
+//!     crash/transient faults surface after the batch's service time.
+//!   * Retry backoff delays re-dispatch by the same capped exponential
+//!     the live server sleeps; an expired deadline surfaces as a timeout
+//!     when the request's batch is formed (as in the live worker).
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::faults::FaultSpec;
+use super::resilience::{HealthTracker, HealthTransition, ResilienceSpec};
+use super::router::{Device, Policy, Router};
+
+/// Configuration of one fleet simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Devices in the pool.
+    pub devices: usize,
+    /// Steady-state per-image service time (ns) from the timing model.
+    pub service_ns: f64,
+    /// Compiled device batch (requests pad up to it).
+    pub batch: usize,
+    pub policy: Policy,
+    /// Router seed (two-choices sampling).
+    pub seed: u64,
+    /// Offered requests.
+    pub requests: u64,
+    /// Offered load as a fraction of full-batch fleet capacity.
+    pub load: f64,
+    pub faults: FaultSpec,
+    pub resilience: ResilienceSpec,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            devices: 1,
+            service_ns: 1000.0,
+            batch: 8,
+            policy: Policy::RoundRobin,
+            seed: 0x5EED,
+            requests: 256,
+            load: 0.9,
+            faults: FaultSpec::none(),
+            resilience: ResilienceSpec::default(),
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.devices >= 1, "fleet needs at least one device");
+        anyhow::ensure!(self.batch >= 1, "fleet batch must be >= 1");
+        anyhow::ensure!(self.requests >= 1, "fleet needs at least one request");
+        anyhow::ensure!(
+            self.service_ns > 0.0 && self.service_ns.is_finite(),
+            "fleet service_ns must be positive and finite, got {}",
+            self.service_ns
+        );
+        anyhow::ensure!(
+            self.load > 0.0 && self.load.is_finite(),
+            "fleet load must be positive, got {}",
+            self.load
+        );
+        self.faults.validate()?;
+        self.resilience.validate()?;
+        Ok(())
+    }
+
+    /// Virtual ns between arrivals.
+    fn interarrival_ns(&self) -> u64 {
+        ((self.service_ns / (self.devices as f64 * self.load)).round() as u64).max(1)
+    }
+}
+
+/// Injected-fault tallies (batch granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct InjectedCounts {
+    pub crashes: u64,
+    pub transients: u64,
+    pub stragglers: u64,
+    pub storms: u64,
+}
+
+/// The deterministic degraded-mode SLO report of one fleet simulation.
+/// Same config (incl. seeds) → bitwise-identical report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub devices: usize,
+    /// Requests offered by the arrival process.
+    pub offered: u64,
+    /// Requests answered with logits.
+    pub completed: u64,
+    /// Completed within deadline (== `completed` when no deadline is set).
+    pub goodput: u64,
+    /// Completed but past deadline.
+    pub late: u64,
+    /// Shed (queue full / no routable device), retries exhausted.
+    pub shed: u64,
+    /// Deadline expired before execution.
+    pub timeouts: u64,
+    /// Failed with a device-loss or transient fault, retries exhausted.
+    pub failed: u64,
+    /// Re-dispatch attempts made.
+    pub retried: u64,
+    /// Re-dispatches that landed on a different device.
+    pub failovers: u64,
+    pub injected: InjectedCounts,
+    /// Quarantine / reintegration event counts.
+    pub quarantines: u64,
+    pub reintegrations: u64,
+    /// Latency SLOs over completed requests, µs (0 when nothing completed).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    /// Virtual time of the last terminal outcome, ms.
+    pub makespan_ms: f64,
+    /// Offered arrival rate, requests/s.
+    pub offered_rps: f64,
+    /// Goodput rate over the makespan, requests/s.
+    pub goodput_rps: f64,
+    /// Batches attempted per device (the fault-schedule cursor).
+    pub per_device_batches: Vec<u64>,
+    /// Health transitions in virtual-time order.
+    pub transitions: Vec<HealthTransition>,
+}
+
+impl FleetReport {
+    /// Every offered request reaches exactly one terminal outcome — the
+    /// no-silent-drop invariant the chaos tests assert.
+    pub fn accounted(&self) -> u64 {
+        self.completed + self.shed + self.timeouts + self.failed
+    }
+
+    /// Canonical JSON (byte-stable for identical reports).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let n = |v: u64| Json::Num(v as f64);
+        let mut o = BTreeMap::new();
+        o.insert("devices".into(), Json::Num(self.devices as f64));
+        o.insert("offered".into(), n(self.offered));
+        o.insert("completed".into(), n(self.completed));
+        o.insert("goodput".into(), n(self.goodput));
+        o.insert("late".into(), n(self.late));
+        o.insert("shed".into(), n(self.shed));
+        o.insert("timeouts".into(), n(self.timeouts));
+        o.insert("failed".into(), n(self.failed));
+        o.insert("retried".into(), n(self.retried));
+        o.insert("failovers".into(), n(self.failovers));
+        o.insert("injected_crashes".into(), n(self.injected.crashes));
+        o.insert("injected_transients".into(), n(self.injected.transients));
+        o.insert("injected_stragglers".into(), n(self.injected.stragglers));
+        o.insert("injected_storms".into(), n(self.injected.storms));
+        o.insert("quarantines".into(), n(self.quarantines));
+        o.insert("reintegrations".into(), n(self.reintegrations));
+        o.insert("p50_us".into(), Json::Num(self.p50_us));
+        o.insert("p95_us".into(), Json::Num(self.p95_us));
+        o.insert("p99_us".into(), Json::Num(self.p99_us));
+        o.insert("mean_us".into(), Json::Num(self.mean_us));
+        o.insert("makespan_ms".into(), Json::Num(self.makespan_ms));
+        o.insert("offered_rps".into(), Json::Num(self.offered_rps));
+        o.insert("goodput_rps".into(), Json::Num(self.goodput_rps));
+        o.insert(
+            "per_device_batches".into(),
+            Json::Arr(self.per_device_batches.iter().map(|&b| n(b)).collect()),
+        );
+        o.insert(
+            "transitions".into(),
+            Json::Arr(
+                self.transitions
+                    .iter()
+                    .map(|t| {
+                        let mut e = BTreeMap::new();
+                        e.insert("at_ns".into(), n(t.at_ns));
+                        e.insert("device".into(), Json::Num(t.device as f64));
+                        e.insert("up".into(), Json::Bool(t.up));
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "fleet: {} devices, offered {} req @ {:.0} req/s\n",
+            self.devices, self.offered, self.offered_rps
+        ));
+        s.push_str(&format!(
+            "outcome: completed={} (goodput={} late={}) shed={} timeout={} failed={}\n",
+            self.completed, self.goodput, self.late, self.shed, self.timeouts,
+            self.failed
+        ));
+        s.push_str(&format!(
+            "latency: p50={:.1} µs p95={:.1} µs p99={:.1} µs mean={:.1} µs\n",
+            self.p50_us, self.p95_us, self.p99_us, self.mean_us
+        ));
+        s.push_str(&format!(
+            "resilience: retried={} failovers={} quarantines={} reintegrations={}\n",
+            self.retried, self.failovers, self.quarantines, self.reintegrations
+        ));
+        s.push_str(&format!(
+            "injected: crashes={} transients={} stragglers={} storms={}\n",
+            self.injected.crashes,
+            self.injected.transients,
+            self.injected.stragglers,
+            self.injected.storms
+        ));
+        s.push_str(&format!(
+            "goodput rate: {:.0} req/s over {:.2} ms makespan\n",
+            self.goodput_rps, self.makespan_ms
+        ));
+        s
+    }
+}
+
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum EvKind {
+    /// A request (re-)arrives for dispatch.
+    Arrive(usize),
+    /// Device finished its running batch.
+    Ready(usize),
+}
+
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Ev {
+    t: u64,
+    /// Push order: total, deterministic tie-break at equal times.
+    seq: u64,
+    kind: EvKind,
+}
+
+struct Req {
+    arrival_ns: u64,
+    /// Dispatch attempts so far (0 = first).
+    attempts: u32,
+    last_device: Option<usize>,
+}
+
+struct Dev {
+    queue: VecDeque<usize>,
+    busy: bool,
+    /// Batch-schedule cursor (the fault index).
+    batch_idx: u64,
+    /// Requests in the running batch + its fault verdict.
+    running: Vec<usize>,
+    running_fault: Option<super::faults::BatchFault>,
+}
+
+struct Fleet<'a> {
+    cfg: &'a FleetConfig,
+    heap: BinaryHeap<std::cmp::Reverse<Ev>>,
+    seq: u64,
+    reqs: Vec<Req>,
+    devs: Vec<Dev>,
+    router: Router,
+    health: HealthTracker,
+    deadline_ns: Option<u64>,
+    // outcome accounting
+    completed: u64,
+    goodput: u64,
+    late: u64,
+    shed: u64,
+    timeouts: u64,
+    failed: u64,
+    retried: u64,
+    failovers: u64,
+    injected: InjectedCounts,
+    latencies_us: Summary,
+    end_ns: u64,
+}
+
+impl<'a> Fleet<'a> {
+    fn push(&mut self, t: u64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(Ev { t, seq: self.seq, kind }));
+    }
+
+    fn expired(&self, req: usize, now: u64) -> bool {
+        self.deadline_ns
+            .map_or(false, |d| now > self.reqs[req].arrival_ns.saturating_add(d))
+    }
+
+    /// Terminal outcome bookkeeping happens at `now`.
+    fn finish_at(&mut self, now: u64) {
+        self.end_ns = self.end_ns.max(now);
+    }
+
+    /// Route + enqueue one request, honoring health, queue caps, and the
+    /// retry budget. Mirrors the live `classify` attempt loop.
+    fn dispatch(&mut self, req: usize, now: u64) {
+        if self.health.enabled() {
+            for d in 0..self.cfg.devices {
+                let up = self.health.can_route(d, now);
+                self.router.set_available(d, up);
+            }
+        }
+        let routed = self.router.try_route();
+        let Some(device) = routed else {
+            self.retry_or(req, now, Outcome::Shed);
+            return;
+        };
+        if self.devs[device].queue.len() >= self.cfg.resilience.queue_cap {
+            self.router
+                .complete(device)
+                .expect("routed immediately above");
+            self.retry_or(req, now, Outcome::Shed);
+            return;
+        }
+        if self.health.is_quarantined(device) {
+            self.health.begin_probe(device);
+        }
+        if self.reqs[req].attempts > 0 {
+            self.retried += 1;
+            if self.reqs[req].last_device.map_or(false, |p| p != device) {
+                self.failovers += 1;
+            }
+        }
+        self.reqs[req].last_device = Some(device);
+        self.devs[device].queue.push_back(req);
+        if !self.devs[device].busy {
+            self.start_batch(device, now);
+        }
+    }
+
+    /// A failed attempt: consume a retry (with backoff) or settle on the
+    /// terminal `outcome`.
+    fn retry_or(&mut self, req: usize, now: u64, outcome: Outcome) {
+        if self.reqs[req].attempts < self.cfg.resilience.retries {
+            let retry = self.reqs[req].attempts;
+            self.reqs[req].attempts += 1;
+            let backoff_ns =
+                self.cfg.resilience.backoff_ms_for(retry).saturating_mul(1_000_000);
+            self.push(now.saturating_add(backoff_ns), EvKind::Arrive(req));
+            return;
+        }
+        match outcome {
+            Outcome::Shed => self.shed += 1,
+            Outcome::Failed => self.failed += 1,
+        }
+        self.finish_at(now);
+    }
+
+    /// Form and launch the next batch on an idle device.
+    fn start_batch(&mut self, device: usize, now: u64) {
+        loop {
+            let mut live = Vec::new();
+            while live.len() < self.cfg.batch {
+                let Some(req) = self.devs[device].queue.pop_front() else { break };
+                if self.expired(req, now) {
+                    // The live worker replies Timeout when the batch pops
+                    // an expired request; terminal (no retry).
+                    self.router.complete(device).expect("queued implies routed");
+                    self.timeouts += 1;
+                    self.finish_at(now);
+                } else {
+                    live.push(req);
+                }
+            }
+            if live.is_empty() {
+                if self.devs[device].queue.is_empty() {
+                    self.devs[device].busy = false;
+                    return;
+                }
+                continue; // everything popped was expired; try again
+            }
+            let fault =
+                self.cfg.faults.batch_fault(device, self.devs[device].batch_idx);
+            self.devs[device].batch_idx += 1;
+            if fault.crashed {
+                self.injected.crashes += 1;
+            }
+            if fault.transient {
+                self.injected.transients += 1;
+            }
+            if fault.straggler {
+                self.injected.stragglers += 1;
+            }
+            if fault.storm {
+                self.injected.storms += 1;
+            }
+            let service =
+                fault.slow.apply_ns(self.cfg.service_ns * self.cfg.batch as f64);
+            let dur = (service.round() as u64).max(1);
+            self.devs[device].running = live;
+            self.devs[device].running_fault = Some(fault);
+            self.devs[device].busy = true;
+            self.push(now.saturating_add(dur), EvKind::Ready(device));
+            return;
+        }
+    }
+
+    /// A batch finished (successfully or with an injected fault).
+    fn finish_batch(&mut self, device: usize, now: u64) {
+        let batch = std::mem::take(&mut self.devs[device].running);
+        let fault = self.devs[device].running_fault.take().expect("batch was launched");
+        if fault.crashed || fault.transient {
+            // One execution failure per request in the failed batch — the
+            // live classify loop records health per request too.
+            for req in batch {
+                let _ = self.router.complete(device);
+                self.health.record_failure(device, now);
+                self.retry_or(req, now, Outcome::Failed);
+            }
+        } else {
+            self.health.record_success(device, now);
+            for req in batch {
+                let _ = self.router.complete(device);
+                let latency_ns = now - self.reqs[req].arrival_ns;
+                self.completed += 1;
+                if self.deadline_ns.map_or(true, |d| latency_ns <= d) {
+                    self.goodput += 1;
+                } else {
+                    self.late += 1;
+                }
+                self.latencies_us.push(latency_ns as f64 / 1000.0);
+                self.finish_at(now);
+            }
+        }
+        if self.devs[device].queue.is_empty() {
+            self.devs[device].busy = false;
+        } else {
+            self.start_batch(device, now);
+        }
+    }
+}
+
+enum Outcome {
+    Shed,
+    Failed,
+}
+
+/// Run the fleet simulation to completion and report. Deterministic:
+/// identical `cfg` (including both seeds) gives a bitwise-identical
+/// report.
+pub fn simulate_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+    cfg.validate()?;
+    let interarrival = cfg.interarrival_ns();
+    let devices = (0..cfg.devices)
+        .map(|d| Device::new(&format!("sim{d}"), 1.0))
+        .collect();
+    let mut fleet = Fleet {
+        cfg,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        reqs: Vec::with_capacity(cfg.requests as usize),
+        devs: (0..cfg.devices)
+            .map(|_| Dev {
+                queue: VecDeque::new(),
+                busy: false,
+                batch_idx: 0,
+                running: Vec::new(),
+                running_fault: None,
+            })
+            .collect(),
+        router: Router::new(devices, cfg.policy, cfg.seed),
+        health: HealthTracker::new(cfg.devices, &cfg.resilience),
+        deadline_ns: cfg.resilience.deadline_ms.map(|ms| ms.saturating_mul(1_000_000)),
+        completed: 0,
+        goodput: 0,
+        late: 0,
+        shed: 0,
+        timeouts: 0,
+        failed: 0,
+        retried: 0,
+        failovers: 0,
+        injected: InjectedCounts::default(),
+        latencies_us: Summary::new(),
+        end_ns: 0,
+    };
+    for i in 0..cfg.requests {
+        fleet.reqs.push(Req { arrival_ns: i * interarrival, attempts: 0, last_device: None });
+        fleet.push(i * interarrival, EvKind::Arrive(i as usize));
+    }
+    while let Some(std::cmp::Reverse(ev)) = fleet.heap.pop() {
+        match ev.kind {
+            EvKind::Arrive(req) => fleet.dispatch(req, ev.t),
+            EvKind::Ready(device) => fleet.finish_batch(device, ev.t),
+        }
+    }
+
+    let pct = |s: &Summary, p: f64| {
+        if fleet.completed == 0 { 0.0 } else { s.percentile(p) }
+    };
+    let makespan_ms = fleet.end_ns as f64 / 1e6;
+    let goodput_rps = if fleet.end_ns == 0 {
+        0.0
+    } else {
+        fleet.goodput as f64 * 1e9 / fleet.end_ns as f64
+    };
+    let transitions = fleet.health.transitions().to_vec();
+    let quarantines = transitions.iter().filter(|t| !t.up).count() as u64;
+    let reintegrations = transitions.iter().filter(|t| t.up).count() as u64;
+    Ok(FleetReport {
+        devices: cfg.devices,
+        offered: cfg.requests,
+        completed: fleet.completed,
+        goodput: fleet.goodput,
+        late: fleet.late,
+        shed: fleet.shed,
+        timeouts: fleet.timeouts,
+        failed: fleet.failed,
+        retried: fleet.retried,
+        failovers: fleet.failovers,
+        injected: fleet.injected,
+        quarantines,
+        reintegrations,
+        p50_us: pct(&fleet.latencies_us, 50.0),
+        p95_us: pct(&fleet.latencies_us, 95.0),
+        p99_us: pct(&fleet.latencies_us, 99.0),
+        mean_us: if fleet.completed == 0 { 0.0 } else { fleet.latencies_us.mean() },
+        makespan_ms,
+        offered_rps: 1e9 / interarrival as f64,
+        goodput_rps,
+        per_device_batches: fleet.devs.iter().map(|d| d.batch_idx).collect(),
+        transitions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::faults::{CrashSpec, StragglerSpec, StormSpec};
+
+    fn base() -> FleetConfig {
+        FleetConfig { devices: 4, requests: 400, ..FleetConfig::default() }
+    }
+
+    #[test]
+    fn clean_fleet_completes_everything() {
+        let r = simulate_fleet(&base()).unwrap();
+        assert_eq!(r.completed, 400);
+        assert_eq!(r.goodput, 400);
+        assert_eq!(r.accounted(), r.offered);
+        assert_eq!(r.shed + r.timeouts + r.failed + r.retried + r.failovers, 0);
+        assert!(r.p50_us > 0.0 && r.p99_us >= r.p95_us && r.p95_us >= r.p50_us);
+        assert!(r.makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn same_config_is_bitwise_identical() {
+        let cfg = FleetConfig {
+            faults: FaultSpec {
+                seed: 99,
+                transient: 0.15,
+                straggler: Some(StragglerSpec { prob: 0.1, factor: 4.0 }),
+                storm: Some(StormSpec { period: 16, duty: 4, factor: 2.0 }),
+                crash: vec![CrashSpec { device: 1, after: 4, down_for: Some(3) }],
+            },
+            resilience: ResilienceSpec {
+                retries: 2,
+                deadline_ms: Some(50),
+                quarantine_after: 2,
+                ..ResilienceSpec::default()
+            },
+            ..base()
+        };
+        let a = simulate_fleet(&cfg).unwrap();
+        let b = simulate_fleet(&cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+        // And latency floats are bit-equal, not just PartialEq-equal.
+        assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
+    }
+
+    #[test]
+    fn transient_faults_are_absorbed_by_retries() {
+        let faults = FaultSpec { seed: 21, transient: 0.3, ..FaultSpec::none() };
+        let fragile = simulate_fleet(&FleetConfig {
+            faults: faults.clone(),
+            ..base()
+        })
+        .unwrap();
+        let resilient = simulate_fleet(&FleetConfig {
+            faults,
+            resilience: ResilienceSpec { retries: 4, ..ResilienceSpec::default() },
+            ..base()
+        })
+        .unwrap();
+        assert!(fragile.failed > 0, "30% transients must fail a fragile fleet");
+        assert!(resilient.retried > 0);
+        assert!(
+            resilient.completed > fragile.completed,
+            "retries must recover completions: {} vs {}",
+            resilient.completed,
+            fragile.completed
+        );
+        assert_eq!(resilient.accounted(), resilient.offered);
+    }
+
+    #[test]
+    fn stragglers_and_storms_inflate_tail_latency() {
+        let clean = simulate_fleet(&base()).unwrap();
+        let slow = simulate_fleet(&FleetConfig {
+            faults: FaultSpec {
+                seed: 5,
+                straggler: Some(StragglerSpec { prob: 0.2, factor: 8.0 }),
+                storm: Some(StormSpec { period: 8, duty: 2, factor: 3.0 }),
+                ..FaultSpec::none()
+            },
+            ..base()
+        })
+        .unwrap();
+        assert!(slow.injected.stragglers > 0 && slow.injected.storms > 0);
+        assert!(
+            slow.p99_us > clean.p99_us,
+            "tail must inflate: {} vs {}",
+            slow.p99_us,
+            clean.p99_us
+        );
+        assert_eq!(slow.completed, slow.offered, "slowdowns lose nothing");
+    }
+
+    #[test]
+    fn deadline_converts_stragglers_into_timeouts_or_late() {
+        let r = simulate_fleet(&FleetConfig {
+            faults: FaultSpec {
+                seed: 13,
+                straggler: Some(StragglerSpec { prob: 0.3, factor: 200.0 }),
+                ..FaultSpec::none()
+            },
+            resilience: ResilienceSpec {
+                deadline_ms: Some(1),
+                ..ResilienceSpec::default()
+            },
+            ..base()
+        })
+        .unwrap();
+        assert!(r.timeouts + r.late > 0, "extreme stragglers must blow deadlines");
+        assert_eq!(r.accounted(), r.offered);
+        assert!(r.goodput < r.offered);
+    }
+
+    #[test]
+    fn queue_cap_sheds_under_overload() {
+        let r = simulate_fleet(&FleetConfig {
+            devices: 1,
+            load: 50.0, // way past capacity
+            requests: 600,
+            resilience: ResilienceSpec { queue_cap: 4, ..ResilienceSpec::default() },
+            ..FleetConfig::default()
+        })
+        .unwrap();
+        assert!(r.shed > 0, "bounded queue must shed under 50× overload");
+        assert_eq!(r.accounted(), r.offered);
+    }
+
+    #[test]
+    fn report_json_is_canonical_and_complete() {
+        let r = simulate_fleet(&base()).unwrap();
+        let text = r.to_json().pretty();
+        for key in ["goodput", "p99_us", "transitions", "per_device_batches"] {
+            assert!(text.contains(&format!("\"{key}\"")), "missing {key} in {text}");
+        }
+        assert!(r.render().contains("goodput"));
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_fleets() {
+        assert!(simulate_fleet(&FleetConfig { devices: 0, ..base() }).is_err());
+        assert!(simulate_fleet(&FleetConfig { batch: 0, ..base() }).is_err());
+        assert!(simulate_fleet(&FleetConfig { requests: 0, ..base() }).is_err());
+        assert!(simulate_fleet(&FleetConfig { load: 0.0, ..base() }).is_err());
+        assert!(
+            simulate_fleet(&FleetConfig { service_ns: f64::NAN, ..base() }).is_err()
+        );
+    }
+}

@@ -1,0 +1,444 @@
+//! Deterministic, seed-driven fault injection for the device fleet.
+//!
+//! A [`FaultSpec`] is a *schedule*, not a dice roll: every fault decision
+//! is a pure function of `(spec, device, batch index)` via the
+//! counter-based hash in [`crate::sim::perturb`], so the live thread-pool
+//! server and the virtual-time fleet simulation (`coordinator::chaos`) see
+//! the **same** faults for the same seed regardless of execution order.
+//! Four fault classes cover the failure modes real PIM deployments
+//! exhibit (stragglers, refresh storms, transient command errors, device
+//! loss):
+//!
+//!   * **crash** — a device stops answering for a window of its batch
+//!     sequence (or permanently); surfaces as [`InjectedFault::DeviceLost`].
+//!   * **transient** — one batch execution fails with probability `p`;
+//!     surfaces as [`InjectedFault::Transient`] and succeeds on retry.
+//!   * **straggler** — one batch runs `factor×` slower with probability
+//!     `p` (latency inflation, no error).
+//!   * **storm** — a periodic refresh storm slows every batch in the
+//!     storm's duty window by `factor×` (deterministic in the batch index,
+//!     modeling the refresh interference the analytic price path ignores).
+//!
+//! [`FaultyBackend`] wraps any [`Backend`] and applies the schedule to the
+//! live pool; the chaos simulation applies the same schedule to virtual
+//! time.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::sim::perturb::{fault_hash, Perturbation};
+use crate::util::rng::Rng;
+
+use super::backend::Backend;
+
+/// One device-loss window in a device's batch sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashSpec {
+    /// Device the crash hits.
+    pub device: usize,
+    /// Batches the device executes before it goes down.
+    pub after: u64,
+    /// How many batch *attempts* the device stays down (`None` =
+    /// permanent). Attempts made while down consume the window, so a
+    /// quarantined device recovers after `down_for` failed probes.
+    pub down_for: Option<u64>,
+}
+
+impl CrashSpec {
+    /// Is the device down for its `batch_idx`-th batch attempt?
+    pub fn hits(&self, device: usize, batch_idx: u64) -> bool {
+        self.device == device
+            && batch_idx >= self.after
+            && self.down_for.map_or(true, |d| batch_idx < self.after.saturating_add(d))
+    }
+}
+
+/// Probabilistic per-batch latency inflation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerSpec {
+    /// Probability a batch straggles.
+    pub prob: f64,
+    /// Service-time multiplier for a straggling batch (`>= 1`).
+    pub factor: f64,
+}
+
+/// Periodic refresh-storm slowdown: batches with
+/// `batch_idx % period < duty` run `factor×` slower.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StormSpec {
+    /// Storm cycle length in batches.
+    pub period: u64,
+    /// Leading batches of each cycle inside the storm.
+    pub duty: u64,
+    /// Service-time multiplier during the storm (`>= 1`).
+    pub factor: f64,
+}
+
+/// The full deterministic fault schedule for a fleet.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Seed of the schedule; one seed reproduces every decision exactly.
+    pub seed: u64,
+    /// Per-batch transient-failure probability.
+    pub transient: f64,
+    pub straggler: Option<StragglerSpec>,
+    pub storm: Option<StormSpec>,
+    pub crash: Vec<CrashSpec>,
+}
+
+/// The fault verdict for one `(device, batch)` coordinate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchFault {
+    /// Device is down: the batch fails with [`InjectedFault::DeviceLost`].
+    pub crashed: bool,
+    /// The batch fails once with [`InjectedFault::Transient`].
+    pub transient: bool,
+    /// The batch drew straggler latency inflation.
+    pub straggler: bool,
+    /// The batch falls inside a refresh-storm duty window.
+    pub storm: bool,
+    /// Combined service-time multiplier (straggler × storm; `>= 1`).
+    pub slow: Perturbation,
+}
+
+impl BatchFault {
+    /// No fault at all on this batch.
+    pub fn is_clean(&self) -> bool {
+        !self.crashed && !self.transient && self.slow.is_none()
+    }
+}
+
+impl FaultSpec {
+    /// A schedule that injects nothing (the `Default`).
+    pub fn none() -> FaultSpec {
+        FaultSpec::default()
+    }
+
+    /// Does this schedule ever inject anything?
+    pub fn is_noop(&self) -> bool {
+        self.transient <= 0.0
+            && self.straggler.is_none()
+            && self.storm.is_none()
+            && self.crash.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.transient),
+            "faults.transient must be a probability in [0, 1], got {}",
+            self.transient
+        );
+        if let Some(s) = &self.straggler {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&s.prob),
+                "faults.straggler.prob must be a probability in [0, 1], got {}",
+                s.prob
+            );
+            anyhow::ensure!(
+                s.factor >= 1.0,
+                "faults.straggler.factor must be >= 1, got {}",
+                s.factor
+            );
+        }
+        if let Some(s) = &self.storm {
+            anyhow::ensure!(s.period >= 1, "faults.storm.period must be >= 1");
+            anyhow::ensure!(
+                s.duty <= s.period,
+                "faults.storm.duty ({}) must be <= period ({})",
+                s.duty,
+                s.period
+            );
+            anyhow::ensure!(
+                s.factor >= 1.0,
+                "faults.storm.factor must be >= 1, got {}",
+                s.factor
+            );
+        }
+        for c in &self.crash {
+            anyhow::ensure!(
+                c.down_for != Some(0),
+                "faults.crash down_for must be >= 1 batch (omit for permanent)"
+            );
+        }
+        Ok(())
+    }
+
+    /// The schedule's verdict for device `device` executing its
+    /// `batch_idx`-th batch. Pure: no internal state advances, so callers
+    /// in any order (threads, virtual time) agree.
+    pub fn batch_fault(&self, device: usize, batch_idx: u64) -> BatchFault {
+        // Two fixed draws per coordinate keep the mapping stable even when
+        // one fault class is disabled.
+        let mut rng = Rng::new(fault_hash(self.seed, device as u64, batch_idx));
+        let t_draw = rng.uniform();
+        let s_draw = rng.uniform();
+
+        let crashed = self.crash.iter().any(|c| c.hits(device, batch_idx));
+        let transient = self.transient > 0.0 && t_draw < self.transient;
+        let straggler = self.straggler.map_or(false, |s| s.prob > 0.0 && s_draw < s.prob);
+        let storm = self.storm.map_or(false, |s| batch_idx % s.period < s.duty);
+
+        let mut slow = Perturbation::none();
+        if straggler {
+            slow = slow.and(Perturbation::slow(self.straggler.unwrap().factor));
+        }
+        if storm {
+            slow = slow.and(Perturbation::slow(self.storm.unwrap().factor));
+        }
+        BatchFault { crashed, transient, straggler, storm, slow }
+    }
+}
+
+/// A fault injected by the schedule — typed, so the server can tell device
+/// loss from a transient error and react differently (quarantine vs plain
+/// retry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectedFault {
+    /// The device is down (crash window active).
+    DeviceLost { device: usize, batch: u64 },
+    /// One batch execution failed; a retry may succeed.
+    Transient { device: usize, batch: u64 },
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InjectedFault::DeviceLost { device, batch } => {
+                write!(f, "injected device loss on device {device} (batch {batch})")
+            }
+            InjectedFault::Transient { device, batch } => {
+                write!(f, "injected transient fault on device {device} (batch {batch})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// A [`Backend`] wrapper that applies a [`FaultSpec`] schedule to the live
+/// pool: each `run_batch` call consults the schedule at this device's next
+/// batch index, fails with a typed [`InjectedFault`] when the schedule
+/// says so, and otherwise (optionally) stretches wall-clock by the drawn
+/// slowdown.
+#[derive(Debug, Clone)]
+pub struct FaultyBackend<B: Backend> {
+    inner: B,
+    device: usize,
+    spec: FaultSpec,
+    batch_idx: u64,
+    /// Wall-clock ns one *unperturbed* batch models; when > 0, slow
+    /// batches sleep the extra `(factor - 1) × stall_ns`. 0 (default)
+    /// keeps faults purely logical — no sleeping in tests.
+    stall_ns: f64,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    pub fn new(inner: B, device: usize, spec: FaultSpec) -> FaultyBackend<B> {
+        FaultyBackend { inner, device, spec, batch_idx: 0, stall_ns: 0.0 }
+    }
+
+    /// Replay straggler/storm slowdowns in wall-clock on top of a modeled
+    /// per-batch service time.
+    pub fn with_stall_ns(mut self, stall_ns: f64) -> Self {
+        self.stall_ns = stall_ns.max(0.0);
+        self
+    }
+
+    /// Batches attempted so far on this device (the schedule cursor).
+    pub fn batches(&self) -> u64 {
+        self.batch_idx
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn image_elems(&self) -> usize {
+        self.inner.image_elems()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+
+    fn run_batch(&mut self, images: &[i32]) -> Result<Vec<f32>> {
+        let batch = self.batch_idx;
+        self.batch_idx += 1;
+        let fault = self.spec.batch_fault(self.device, batch);
+        if fault.crashed {
+            return Err(anyhow::Error::new(InjectedFault::DeviceLost {
+                device: self.device,
+                batch,
+            }));
+        }
+        if fault.transient {
+            return Err(anyhow::Error::new(InjectedFault::Transient {
+                device: self.device,
+                batch,
+            }));
+        }
+        let out = self.inner.run_batch(images)?;
+        if !fault.slow.is_none() && self.stall_ns > 0.0 {
+            let extra = (fault.slow.factor - 1.0) * self.stall_ns;
+            std::thread::sleep(std::time::Duration::from_nanos(extra as u64));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SimBackend;
+
+    fn spec_with_everything() -> FaultSpec {
+        FaultSpec {
+            seed: 7,
+            transient: 0.2,
+            straggler: Some(StragglerSpec { prob: 0.1, factor: 4.0 }),
+            storm: Some(StormSpec { period: 8, duty: 2, factor: 2.0 }),
+            crash: vec![CrashSpec { device: 1, after: 3, down_for: Some(2) }],
+        }
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_coordinates() {
+        let spec = spec_with_everything();
+        // Query in two different orders; verdicts must match coordinate-wise.
+        let forward: Vec<BatchFault> =
+            (0..64).map(|i| spec.batch_fault(i % 4, i / 4)).collect();
+        let backward: Vec<BatchFault> =
+            (0..64).rev().map(|i| spec.batch_fault(i % 4, i / 4)).collect();
+        for (i, f) in forward.iter().enumerate() {
+            assert_eq!(*f, backward[63 - i], "coordinate {i}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_schedules() {
+        let mut a = spec_with_everything();
+        let mut b = spec_with_everything();
+        a.seed = 1;
+        b.seed = 2;
+        let fa: Vec<bool> = (0..200).map(|i| a.batch_fault(0, i).transient).collect();
+        let fb: Vec<bool> = (0..200).map(|i| b.batch_fault(0, i).transient).collect();
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn crash_window_hits_exactly_its_batches() {
+        let spec = spec_with_everything();
+        // Device 1 is down for batches 3 and 4, nothing else.
+        for batch in 0..8 {
+            let f = spec.batch_fault(1, batch);
+            assert_eq!(f.crashed, (3..5).contains(&batch), "batch {batch}");
+        }
+        // Other devices never crash.
+        assert!((0..8).all(|b| !spec.batch_fault(0, b).crashed));
+        // A permanent crash never ends.
+        let perm = FaultSpec {
+            crash: vec![CrashSpec { device: 0, after: 2, down_for: None }],
+            ..FaultSpec::none()
+        };
+        assert!(!perm.batch_fault(0, 1).crashed);
+        assert!(perm.batch_fault(0, 1_000_000).crashed);
+    }
+
+    #[test]
+    fn storm_is_periodic_and_stacks_with_stragglers() {
+        let spec = FaultSpec {
+            seed: 3,
+            straggler: Some(StragglerSpec { prob: 1.0, factor: 3.0 }),
+            storm: Some(StormSpec { period: 4, duty: 1, factor: 2.0 }),
+            ..FaultSpec::none()
+        };
+        let in_storm = spec.batch_fault(0, 4);
+        let outside = spec.batch_fault(0, 5);
+        assert!(in_storm.storm && in_storm.straggler);
+        assert_eq!(in_storm.slow.factor, 6.0, "straggler × storm stack");
+        assert!(!outside.storm && outside.straggler);
+        assert_eq!(outside.slow.factor, 3.0);
+    }
+
+    #[test]
+    fn transient_rate_tracks_probability() {
+        let spec = FaultSpec { seed: 11, transient: 0.25, ..FaultSpec::none() };
+        let hits = (0..4000).filter(|&b| spec.batch_fault(0, b).transient).count();
+        assert!((800..1200).contains(&hits), "rate off: {hits}/4000");
+    }
+
+    #[test]
+    fn noop_spec_is_always_clean() {
+        let spec = FaultSpec::none();
+        assert!(spec.is_noop());
+        assert!((0..100).all(|b| spec.batch_fault(0, b).is_clean()));
+    }
+
+    #[test]
+    fn validation_rejects_bad_probabilities_and_factors() {
+        let mut s = FaultSpec::none();
+        s.transient = 1.5;
+        assert!(s.validate().is_err());
+        s.transient = 0.0;
+        s.straggler = Some(StragglerSpec { prob: 0.1, factor: 0.5 });
+        assert!(s.validate().is_err());
+        s.straggler = None;
+        s.storm = Some(StormSpec { period: 4, duty: 5, factor: 2.0 });
+        assert!(s.validate().is_err());
+        s.storm = None;
+        s.crash = vec![CrashSpec { device: 0, after: 0, down_for: Some(0) }];
+        assert!(s.validate().is_err());
+        s.crash.clear();
+        assert!(s.validate().is_ok());
+        assert!(spec_with_everything().validate().is_ok());
+    }
+
+    #[test]
+    fn faulty_backend_injects_typed_errors_and_recovers() {
+        let spec = FaultSpec {
+            crash: vec![CrashSpec { device: 0, after: 1, down_for: Some(2) }],
+            ..FaultSpec::none()
+        };
+        let mut b = FaultyBackend::new(SimBackend::new(2, 4, 10), 0, spec);
+        let images = vec![1i32; 8];
+        assert!(b.run_batch(&images).is_ok(), "batch 0 is before the window");
+        for expect_batch in [1u64, 2] {
+            let err = b.run_batch(&images).unwrap_err();
+            match err.downcast_ref::<InjectedFault>() {
+                Some(&InjectedFault::DeviceLost { device: 0, batch }) => {
+                    assert_eq!(batch, expect_batch)
+                }
+                other => panic!("expected DeviceLost, got {other:?}"),
+            }
+        }
+        assert!(b.run_batch(&images).is_ok(), "window over: device recovered");
+        assert_eq!(b.batches(), 4);
+    }
+
+    #[test]
+    fn faulty_backend_matches_schedule_verdicts() {
+        let spec = FaultSpec { seed: 5, transient: 0.5, ..FaultSpec::none() };
+        let mut b = FaultyBackend::new(SimBackend::new(1, 4, 10), 2, spec.clone());
+        let images = vec![0i32; 4];
+        for batch in 0..50 {
+            let want = spec.batch_fault(2, batch).transient;
+            let got = b.run_batch(&images).is_err();
+            assert_eq!(got, want, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn faulty_backend_passes_dimensions_through() {
+        let b = FaultyBackend::new(SimBackend::new(4, 8, 10), 0, FaultSpec::none());
+        assert_eq!(b.batch_size(), 4);
+        assert_eq!(b.image_elems(), 8);
+        assert_eq!(b.num_classes(), 10);
+    }
+}

@@ -10,6 +10,19 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub padded_lanes: u64,
+    /// Requests refused because a queue or the fleet was full/down.
+    pub shed: u64,
+    /// Requests whose deadline expired before execution.
+    pub timeouts: u64,
+    /// Re-dispatch attempts after a retryable failure.
+    pub retries: u64,
+    /// Re-dispatches that landed on a different device.
+    pub failovers: u64,
+    /// Requests that exhausted retries on execution failures.
+    pub failures: u64,
+    /// Devices quarantined / reintegrated by the health tracker.
+    pub quarantines: u64,
+    pub reintegrations: u64,
     latencies_us: Summary,
     batch_exec_us: Summary,
     /// Requests dispatched per device (multi-device pool).
@@ -45,7 +58,15 @@ impl Metrics {
             requests: self.requests,
             batches: self.batches,
             padded_lanes: self.padded_lanes,
+            shed: self.shed,
+            timeouts: self.timeouts,
+            retries: self.retries,
+            failovers: self.failovers,
+            failures: self.failures,
+            quarantines: self.quarantines,
+            reintegrations: self.reintegrations,
             latency_p50_us: self.latencies_us.percentile(50.0),
+            latency_p95_us: self.latencies_us.percentile(95.0),
             latency_p99_us: self.latencies_us.percentile(99.0),
             latency_mean_us: self.latencies_us.mean(),
             batch_exec_mean_us: self.batch_exec_us.mean(),
@@ -60,7 +81,15 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub padded_lanes: u64,
+    pub shed: u64,
+    pub timeouts: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub failures: u64,
+    pub quarantines: u64,
+    pub reintegrations: u64,
     pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
     pub latency_p99_us: f64,
     pub latency_mean_us: f64,
     pub batch_exec_mean_us: f64,
@@ -69,23 +98,52 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Any degraded-mode activity at all? When false the report stays in
+    /// its legacy shape.
+    pub fn degraded(&self) -> bool {
+        self.shed != 0
+            || self.timeouts != 0
+            || self.retries != 0
+            || self.failovers != 0
+            || self.failures != 0
+            || self.quarantines != 0
+            || self.reintegrations != 0
+    }
+
     pub fn report(&self) -> String {
         let devices = if self.per_device.is_empty() {
             String::new()
         } else {
             format!(" per_device={:?}", self.per_device)
         };
+        let resilience = if self.degraded() {
+            format!(
+                " shed={} timeouts={} retries={} failovers={} failures={} \
+                 quarantines={} reintegrations={}",
+                self.shed,
+                self.timeouts,
+                self.retries,
+                self.failovers,
+                self.failures,
+                self.quarantines,
+                self.reintegrations,
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "requests={} batches={} padded={} latency(mean/p50/p99)=\
-             {:.0}/{:.0}/{:.0} µs batch_exec_mean={:.0} µs{}",
+            "requests={} batches={} padded={} latency(mean/p50/p95/p99)=\
+             {:.0}/{:.0}/{:.0}/{:.0} µs batch_exec_mean={:.0} µs{}{}",
             self.requests,
             self.batches,
             self.padded_lanes,
             self.latency_mean_us,
             self.latency_p50_us,
+            self.latency_p95_us,
             self.latency_p99_us,
             self.batch_exec_mean_us,
             devices,
+            resilience,
         )
     }
 }
@@ -106,6 +164,34 @@ mod tests {
         assert_eq!(s.padded_lanes, 2);
         assert!((s.latency_mean_us - 200.0).abs() < 1e-9);
         assert!(s.report().contains("requests=2"));
+    }
+
+    #[test]
+    fn resilience_counters_appear_only_when_degraded() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(100));
+        assert!(!m.snapshot().degraded());
+        assert!(!m.snapshot().report().contains("shed="));
+        m.shed += 2;
+        m.retries += 3;
+        m.quarantines += 1;
+        let s = m.snapshot();
+        assert!(s.degraded());
+        let r = s.report();
+        assert!(r.contains("shed=2") && r.contains("retries=3"), "{r}");
+        assert!(r.contains("quarantines=1"), "{r}");
+    }
+
+    #[test]
+    fn snapshot_reports_p95() {
+        let mut m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500] {
+            m.record_request(Duration::from_micros(us));
+        }
+        let s = m.snapshot();
+        assert!(s.latency_p50_us <= s.latency_p95_us);
+        assert!(s.latency_p95_us <= s.latency_p99_us);
+        assert!(s.report().contains("p95") || s.report().contains("/"));
     }
 
     #[test]

@@ -16,17 +16,31 @@
 //! (`backend::SimBackend`) serves without artifacts; the PJRT artifact
 //! executor compiles behind `--features pjrt`.
 
+//! Degraded-mode serving (DESIGN.md §Resilience): `faults` injects a
+//! deterministic, seed-driven fault schedule into any backend; `resilience`
+//! holds the deadline/retry/failover/quarantine policy and typed serving
+//! errors; `chaos` replays the whole fleet in virtual time for
+//! bitwise-reproducible SLO reports.
+
 pub mod backend;
 pub mod batcher;
+pub mod chaos;
+pub mod faults;
 pub mod metrics;
+pub mod resilience;
 pub mod router;
 pub mod server;
 
 pub use backend::{Backend, SimBackend};
 pub use batcher::Batcher;
+pub use chaos::{simulate_fleet, FleetConfig, FleetReport};
+pub use faults::{CrashSpec, FaultSpec, FaultyBackend, InjectedFault, StormSpec, StragglerSpec};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use resilience::{
+    HealthTracker, HealthTransition, ResilienceSpec, ServeError, ShedReason,
+};
 pub use router::{Device, Policy, Router};
-pub use server::{ClassifyResponse, MultiDeviceServer, PoolConfig};
+pub use server::{ClassifyResponse, MultiDeviceServer, Pending, PoolConfig};
 
 #[cfg(feature = "pjrt")]
 pub use server::{InferenceServer, ServerConfig};

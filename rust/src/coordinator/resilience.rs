@@ -1,0 +1,515 @@
+//! Resilience policy for the serving fleet: typed per-request errors,
+//! deadline/retry/backoff/shedding knobs, and the device health tracker.
+//!
+//! [`ServeError`] replaces the old stringly batch-failure path: every
+//! per-request outcome is a typed, matchable variant that preserves its
+//! source (a [`PlanError`] stays a `PlanError`; an injected fault is
+//! classified as `DeviceLost`/`Transient` by downcast before it reaches
+//! the client).
+//!
+//! [`ResilienceSpec`] defaults are **behavior-preserving**: no deadline,
+//! no retries, the pre-existing 1024-slot device queue, quarantine
+//! disabled. A default-configured pool serves exactly like the pre-chaos
+//! server (`tests/api_equivalence.rs` freezes this).
+//!
+//! [`HealthTracker`] is the quarantine state machine, shared by the live
+//! pool (wall-clock ns) and the virtual-time fleet simulation (virtual
+//! ns):
+//!
+//! ```text
+//!           quarantine_after consecutive failures
+//!  Healthy ─────────────────────────────────────────▶ Quarantined
+//!     ▲                                                   │
+//!     │ probe succeeds                  probe_after_ms up │
+//!     └──────────────────────── Probing ◀────────────────┘
+//!                                  │ probe fails: window restarts
+//!                                  └──▶ Quarantined
+//! ```
+//!
+//! While quarantined a device receives no traffic; after `probe_after_ms`
+//! one request is let through as a probe. Success reintegrates the
+//! device; failure restarts the quarantine window. Every transition is
+//! logged with its timestamp for the report.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::plan::PlanError;
+
+/// Serving resilience knobs. The `Default` reproduces the pre-resilience
+/// server bit-for-bit: no deadline, no retries, 1024-deep queues,
+/// quarantine off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResilienceSpec {
+    /// Per-request deadline; a request whose deadline passes before its
+    /// batch executes fails with [`ServeError::Timeout`]. `None` = never.
+    pub deadline_ms: Option<u64>,
+    /// Re-dispatch attempts after a retryable failure (0 = fail fast).
+    pub retries: u32,
+    /// Base backoff before retry `i`: `min(backoff_ms << i, backoff_cap_ms)`.
+    pub backoff_ms: u64,
+    /// Cap on the exponential backoff.
+    pub backoff_cap_ms: u64,
+    /// Bounded per-device queue; an admission that finds it full is shed
+    /// with [`ServeError::Shed`] instead of blocking.
+    pub queue_cap: usize,
+    /// Consecutive failures before a device is quarantined (0 disables
+    /// health tracking entirely).
+    pub quarantine_after: u32,
+    /// Quarantine dwell time before a probe request is allowed through.
+    pub probe_after_ms: u64,
+}
+
+impl Default for ResilienceSpec {
+    fn default() -> Self {
+        ResilienceSpec {
+            deadline_ms: None,
+            retries: 0,
+            backoff_ms: 1,
+            backoff_cap_ms: 64,
+            queue_cap: 1024,
+            quarantine_after: 0,
+            probe_after_ms: 50,
+        }
+    }
+}
+
+impl ResilienceSpec {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.queue_cap >= 1, "resilience.queue_cap must be >= 1");
+        anyhow::ensure!(
+            self.backoff_cap_ms >= self.backoff_ms,
+            "resilience.backoff_cap_ms ({}) must be >= backoff_ms ({})",
+            self.backoff_cap_ms,
+            self.backoff_ms
+        );
+        if let Some(d) = self.deadline_ms {
+            anyhow::ensure!(d >= 1, "resilience.deadline_ms must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Capped exponential backoff before retry number `retry` (0-based).
+    pub fn backoff_ms_for(&self, retry: u32) -> u64 {
+        let shifted = match 1u64.checked_shl(retry) {
+            Some(mul) => self.backoff_ms.saturating_mul(mul),
+            None => u64::MAX,
+        };
+        shifted.min(self.backoff_cap_ms)
+    }
+}
+
+/// Why a request was shed instead of served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The routed device's bounded queue was full.
+    QueueFull,
+    /// No routable device (every device down or quarantined).
+    NoDevice,
+    /// The pool is shutting down.
+    Shutdown,
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShedReason::QueueFull => write!(f, "queue full"),
+            ShedReason::NoDevice => write!(f, "no routable device"),
+            ShedReason::Shutdown => write!(f, "shutting down"),
+        }
+    }
+}
+
+/// Typed per-request serving failure. Replaces the old
+/// `anyhow!("batch execution failed: ..")` strings: callers can match on
+/// the variant and the source error survives (see
+/// [`std::error::Error::source`]).
+#[derive(Debug)]
+pub enum ServeError {
+    /// The request's deadline passed before its batch executed.
+    Timeout { device: usize },
+    /// Load was shed before execution.
+    Shed { device: Option<usize>, reason: ShedReason },
+    /// The device is lost (injected or real crash); retries exhausted.
+    DeviceLost { device: usize },
+    /// A transient execution failure; retries exhausted.
+    Transient { device: usize },
+    /// Plan/pricing failure (building the pool or the report).
+    Plan(PlanError),
+    /// The request never made it to a device (bad shape, dead server).
+    Rejected(String),
+    /// Backend execution failed for a reason the injector didn't cause;
+    /// the full source chain is preserved in `source`.
+    Backend { device: usize, source: std::sync::Arc<anyhow::Error> },
+}
+
+impl ServeError {
+    /// Wrap a backend execution error, classifying injected faults into
+    /// their typed variants. Cheap to clone per batched request (the
+    /// source chain is shared).
+    pub fn from_backend(device: usize, err: &std::sync::Arc<anyhow::Error>) -> ServeError {
+        use super::faults::InjectedFault;
+        match err.downcast_ref::<InjectedFault>() {
+            Some(InjectedFault::DeviceLost { .. }) => ServeError::DeviceLost { device },
+            Some(InjectedFault::Transient { .. }) => ServeError::Transient { device },
+            None => ServeError::Backend { device, source: std::sync::Arc::clone(err) },
+        }
+    }
+
+    /// The device the failure is attributed to, if any.
+    pub fn device(&self) -> Option<usize> {
+        match self {
+            ServeError::Timeout { device }
+            | ServeError::DeviceLost { device }
+            | ServeError::Transient { device }
+            | ServeError::Backend { device, .. } => Some(*device),
+            ServeError::Shed { device, .. } => *device,
+            ServeError::Plan(_) | ServeError::Rejected(_) => None,
+        }
+    }
+
+    /// Would re-dispatching (possibly to another device) plausibly help?
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            ServeError::DeviceLost { .. }
+                | ServeError::Transient { .. }
+                | ServeError::Backend { .. }
+                | ServeError::Shed { reason: ShedReason::QueueFull, .. }
+                | ServeError::Shed { reason: ShedReason::NoDevice, .. }
+        )
+    }
+
+    /// Does this failure count against the device's health (quarantine
+    /// accounting)? Sheds and timeouts signal overload, not sickness.
+    pub fn counts_against_health(&self) -> bool {
+        matches!(
+            self,
+            ServeError::DeviceLost { .. }
+                | ServeError::Transient { .. }
+                | ServeError::Backend { .. }
+        )
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Timeout { device } => {
+                write!(f, "request deadline expired on device {device}")
+            }
+            ServeError::Shed { device: Some(d), reason } => {
+                write!(f, "request shed at device {d}: {reason}")
+            }
+            ServeError::Shed { device: None, reason } => {
+                write!(f, "request shed: {reason}")
+            }
+            ServeError::DeviceLost { device } => {
+                write!(f, "device {device} lost")
+            }
+            ServeError::Transient { device } => {
+                write!(f, "transient failure on device {device}")
+            }
+            ServeError::Plan(e) => write!(f, "plan failure: {e}"),
+            ServeError::Rejected(msg) => write!(f, "{msg}"),
+            ServeError::Backend { device, source } => {
+                write!(f, "batch execution failed on device {device}: {source:#}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Plan(e) => Some(e),
+            ServeError::Backend { source, .. } => {
+                source.root_cause().map(|e| e as &(dyn std::error::Error + 'static))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl From<PlanError> for ServeError {
+    fn from(e: PlanError) -> Self {
+        ServeError::Plan(e)
+    }
+}
+
+/// A logged health-state transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthTransition {
+    /// Timestamp in ns (wall-clock since pool start, or virtual time).
+    pub at_ns: u64,
+    pub device: usize,
+    /// `false` = quarantined, `true` = reintegrated.
+    pub up: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HealthState {
+    Healthy,
+    Quarantined { since_ns: u64, probing: bool },
+}
+
+/// Per-device quarantine state machine (see module docs for the diagram).
+/// Time is a caller-supplied monotonic ns counter so the live pool
+/// (wall-clock) and the fleet simulation (virtual time) share one
+/// implementation.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    quarantine_after: u32,
+    probe_after_ns: u64,
+    consecutive: Vec<u32>,
+    state: Vec<HealthState>,
+    transitions: Vec<HealthTransition>,
+}
+
+impl HealthTracker {
+    pub fn new(devices: usize, spec: &ResilienceSpec) -> HealthTracker {
+        HealthTracker {
+            quarantine_after: spec.quarantine_after,
+            probe_after_ns: spec.probe_after_ms.saturating_mul(1_000_000),
+            consecutive: vec![0; devices],
+            state: vec![HealthState::Healthy; devices],
+            transitions: Vec::new(),
+        }
+    }
+
+    /// Health tracking is active (quarantine_after > 0).
+    pub fn enabled(&self) -> bool {
+        self.quarantine_after > 0
+    }
+
+    pub fn is_quarantined(&self, device: usize) -> bool {
+        matches!(self.state[device], HealthState::Quarantined { .. })
+    }
+
+    /// May the router send `device` traffic at `now_ns`? Healthy devices
+    /// always; quarantined devices only once their probe window is up and
+    /// no probe is already in flight.
+    pub fn can_route(&self, device: usize, now_ns: u64) -> bool {
+        match self.state[device] {
+            HealthState::Healthy => true,
+            HealthState::Quarantined { since_ns, probing } => {
+                !probing && now_ns >= since_ns.saturating_add(self.probe_after_ns)
+            }
+        }
+    }
+
+    /// Mark the single allowed probe as in flight (call after the router
+    /// picks a quarantined device).
+    pub fn begin_probe(&mut self, device: usize) {
+        if let HealthState::Quarantined { probing, .. } = &mut self.state[device] {
+            *probing = true;
+        }
+    }
+
+    /// Record a successful execution. Returns `true` when this
+    /// reintegrated a quarantined device.
+    pub fn record_success(&mut self, device: usize, now_ns: u64) -> bool {
+        self.consecutive[device] = 0;
+        if self.is_quarantined(device) {
+            self.state[device] = HealthState::Healthy;
+            self.transitions.push(HealthTransition { at_ns: now_ns, device, up: true });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record an execution failure. Returns `true` when this newly
+    /// quarantined the device.
+    pub fn record_failure(&mut self, device: usize, now_ns: u64) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        self.consecutive[device] = self.consecutive[device].saturating_add(1);
+        match self.state[device] {
+            HealthState::Quarantined { .. } => {
+                // Failed probe: restart the quarantine window.
+                self.state[device] =
+                    HealthState::Quarantined { since_ns: now_ns, probing: false };
+                false
+            }
+            HealthState::Healthy => {
+                if self.consecutive[device] >= self.quarantine_after {
+                    self.state[device] =
+                        HealthState::Quarantined { since_ns: now_ns, probing: false };
+                    self.transitions.push(HealthTransition {
+                        at_ns: now_ns,
+                        device,
+                        up: false,
+                    });
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// All transitions so far, in the order they happened.
+    pub fn transitions(&self) -> &[HealthTransition] {
+        &self.transitions
+    }
+
+    /// Devices currently quarantined.
+    pub fn quarantined(&self) -> usize {
+        (0..self.state.len()).filter(|&d| self.is_quarantined(d)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(quarantine_after: u32, probe_after_ms: u64) -> ResilienceSpec {
+        ResilienceSpec { quarantine_after, probe_after_ms, ..ResilienceSpec::default() }
+    }
+
+    #[test]
+    fn default_spec_preserves_legacy_behavior() {
+        let r = ResilienceSpec::default();
+        assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.retries, 0);
+        assert_eq!(r.queue_cap, 1024);
+        assert_eq!(r.quarantine_after, 0);
+        assert!(r.validate().is_ok());
+        assert!(!HealthTracker::new(4, &r).enabled());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let r = ResilienceSpec {
+            backoff_ms: 2,
+            backoff_cap_ms: 10,
+            ..ResilienceSpec::default()
+        };
+        assert_eq!(r.backoff_ms_for(0), 2);
+        assert_eq!(r.backoff_ms_for(1), 4);
+        assert_eq!(r.backoff_ms_for(2), 8);
+        assert_eq!(r.backoff_ms_for(3), 10, "capped");
+        assert_eq!(r.backoff_ms_for(200), 10, "shift overflow stays capped");
+    }
+
+    #[test]
+    fn validation_catches_inverted_backoff_and_zero_queue() {
+        let base = ResilienceSpec::default();
+        assert!(ResilienceSpec { queue_cap: 0, ..base }.validate().is_err());
+        assert!(ResilienceSpec { backoff_ms: 100, backoff_cap_ms: 10, ..base }
+            .validate()
+            .is_err());
+        assert!(ResilienceSpec { deadline_ms: Some(0), ..base }.validate().is_err());
+        assert!(ResilienceSpec { deadline_ms: Some(10), retries: 3, ..base }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn quarantine_after_consecutive_failures_only() {
+        let mut h = HealthTracker::new(2, &spec(3, 10));
+        assert!(!h.record_failure(0, 1));
+        assert!(!h.record_failure(0, 2));
+        // A success resets the streak.
+        h.record_success(0, 3);
+        assert!(!h.record_failure(0, 4));
+        assert!(!h.record_failure(0, 5));
+        assert!(h.record_failure(0, 6), "third consecutive quarantines");
+        assert!(h.is_quarantined(0));
+        assert!(!h.is_quarantined(1));
+        assert_eq!(
+            h.transitions(),
+            &[HealthTransition { at_ns: 6, device: 0, up: false }]
+        );
+    }
+
+    #[test]
+    fn probe_window_gates_routing_and_success_reintegrates() {
+        let ms = 1_000_000;
+        let mut h = HealthTracker::new(1, &spec(1, 10));
+        assert!(h.record_failure(0, 5 * ms));
+        // Quarantined: unroutable until the probe window is up.
+        assert!(!h.can_route(0, 10 * ms));
+        assert!(h.can_route(0, 15 * ms), "5ms + 10ms probe window");
+        // One probe at a time.
+        h.begin_probe(0);
+        assert!(!h.can_route(0, 20 * ms));
+        // Probe succeeds: reintegrated and routable again.
+        assert!(h.record_success(0, 20 * ms));
+        assert!(h.can_route(0, 20 * ms));
+        assert_eq!(h.transitions().len(), 2);
+        assert!(h.transitions()[1].up);
+    }
+
+    #[test]
+    fn failed_probe_restarts_the_window() {
+        let ms = 1_000_000;
+        let mut h = HealthTracker::new(1, &spec(1, 10));
+        h.record_failure(0, 0);
+        h.begin_probe(0);
+        assert!(!h.record_failure(0, 12 * ms), "re-quarantine is not a new transition");
+        assert!(!h.can_route(0, 15 * ms), "window restarted at 12ms");
+        assert!(h.can_route(0, 22 * ms));
+        assert_eq!(h.transitions().len(), 1, "still just the original quarantine");
+    }
+
+    #[test]
+    fn disabled_tracker_never_quarantines() {
+        let mut h = HealthTracker::new(1, &spec(0, 10));
+        for t in 0..100 {
+            assert!(!h.record_failure(0, t));
+        }
+        assert!(h.can_route(0, 1000));
+        assert!(h.transitions().is_empty());
+    }
+
+    #[test]
+    fn serve_error_classification_and_sources() {
+        use std::sync::Arc;
+        let plan_err =
+            PlanError::ReplicaTooLarge { needed_ranks: 9, ranks_per_channel: 4 };
+        let e = ServeError::from(plan_err.clone());
+        assert!(matches!(&e, ServeError::Plan(p) if *p == plan_err));
+        // The typed source survives.
+        let src = std::error::Error::source(&e).expect("plan source");
+        assert_eq!(src.to_string(), plan_err.to_string());
+        assert!(!e.is_retryable());
+
+        // Injected faults classify into their variants.
+        use crate::coordinator::faults::InjectedFault;
+        let lost = Arc::new(anyhow::Error::new(InjectedFault::DeviceLost {
+            device: 3,
+            batch: 7,
+        }));
+        let e = ServeError::from_backend(3, &lost);
+        assert!(matches!(e, ServeError::DeviceLost { device: 3 }));
+        assert!(e.is_retryable() && e.counts_against_health());
+
+        let transient = Arc::new(anyhow::Error::new(InjectedFault::Transient {
+            device: 1,
+            batch: 0,
+        }));
+        let e = ServeError::from_backend(1, &transient);
+        assert!(matches!(e, ServeError::Transient { device: 1 }));
+
+        // Non-injected backend errors keep their chain.
+        let other = Arc::new(anyhow::anyhow!("PJRT launch failed").context("run_batch"));
+        let e = ServeError::from_backend(0, &other);
+        assert!(matches!(e, ServeError::Backend { device: 0, .. }));
+        assert!(e.to_string().contains("PJRT launch failed"), "{e}");
+
+        // Sheds and timeouts never count against health.
+        let shed = ServeError::Shed { device: Some(0), reason: ShedReason::QueueFull };
+        assert!(shed.is_retryable() && !shed.counts_against_health());
+        let timeout = ServeError::Timeout { device: 0 };
+        assert!(!timeout.is_retryable() && !timeout.counts_against_health());
+        // `?` into anyhow::Result works (ServeError is a std error).
+        fn through_anyhow(e: ServeError) -> anyhow::Result<()> {
+            Err(e)?
+        }
+        assert!(through_anyhow(ServeError::Rejected("nope".into())).is_err());
+    }
+}

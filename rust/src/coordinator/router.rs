@@ -5,6 +5,8 @@
 //! simulator) and a queue depth; routing is least-loaded with
 //! power-of-two-choices sampling for O(1) decisions at scale.
 
+use anyhow::Result;
+
 use crate::util::rng::Rng;
 
 /// One attached PIM device (e.g. a DIMM running a pipelined network).
@@ -42,6 +44,9 @@ pub enum Policy {
 #[derive(Debug)]
 pub struct Router {
     devices: Vec<Device>,
+    /// Routability mask (health tracker / failover drives this); all
+    /// devices start available, so legacy callers see no change.
+    available: Vec<bool>,
     policy: Policy,
     rr_next: usize,
     rng: Rng,
@@ -51,50 +56,98 @@ pub struct Router {
 impl Router {
     pub fn new(devices: Vec<Device>, policy: Policy, seed: u64) -> Self {
         assert!(!devices.is_empty(), "router needs at least one device");
-        Router { devices, policy, rr_next: 0, rng: Rng::new(seed), dispatched: 0 }
+        let available = vec![true; devices.len()];
+        Router { devices, available, policy, rr_next: 0, rng: Rng::new(seed), dispatched: 0 }
     }
 
     pub fn devices(&self) -> &[Device] {
         &self.devices
     }
 
-    /// Route one image; returns the chosen device index.
-    pub fn route(&mut self) -> usize {
+    /// Mark a device (un)routable. Unavailable devices are skipped by
+    /// [`Router::try_route`]; outstanding work still completes normally.
+    pub fn set_available(&mut self, device: usize, up: bool) {
+        self.available[device] = up;
+    }
+
+    pub fn is_available(&self, device: usize) -> bool {
+        self.available[device]
+    }
+
+    /// Routable devices remaining.
+    pub fn available_count(&self) -> usize {
+        self.available.iter().filter(|&&u| u).count()
+    }
+
+    fn min_backlog_available(&self) -> Option<usize> {
+        self.devices
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.available[*i])
+            .min_by(|x, y| x.1.backlog_ns().total_cmp(&y.1.backlog_ns()))
+            .map(|(i, _)| i)
+    }
+
+    /// Route one image among the available devices; `None` when every
+    /// device is unavailable. With all devices up this makes exactly the
+    /// decisions (and RNG draws) [`Router::route`] always made.
+    pub fn try_route(&mut self) -> Option<usize> {
+        let n = self.devices.len();
         let idx = match self.policy {
             Policy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.devices.len();
+                // First available device at or after the cursor.
+                let i = (0..n)
+                    .map(|k| (self.rr_next + k) % n)
+                    .find(|&i| self.available[i])?;
+                self.rr_next = (i + 1) % n;
                 i
             }
             Policy::TwoChoices => {
-                let a = self.rng.below(self.devices.len());
-                let b = self.rng.below(self.devices.len());
-                if self.devices[a].backlog_ns() <= self.devices[b].backlog_ns() {
-                    a
-                } else {
-                    b
+                // Draw from the full range regardless of availability so
+                // the RNG stream is identical to the legacy router.
+                let a = self.rng.below(n);
+                let b = self.rng.below(n);
+                match (self.available[a], self.available[b]) {
+                    (true, true) => {
+                        if self.devices[a].backlog_ns() <= self.devices[b].backlog_ns() {
+                            a
+                        } else {
+                            b
+                        }
+                    }
+                    (true, false) => a,
+                    (false, true) => b,
+                    // Both sampled devices are down: fall back to a scan.
+                    (false, false) => self.min_backlog_available()?,
                 }
             }
-            Policy::LeastLoaded => self
-                .devices
-                .iter()
-                .enumerate()
-                .min_by(|x, y| {
-                    x.1.backlog_ns().partial_cmp(&y.1.backlog_ns()).unwrap()
-                })
-                .map(|(i, _)| i)
-                .unwrap(),
+            Policy::LeastLoaded => self.min_backlog_available()?,
         };
         self.devices[idx].in_flight += 1;
         self.dispatched += 1;
-        idx
+        Some(idx)
     }
 
-    /// Mark one image completed on `device`.
-    pub fn complete(&mut self, device: usize) {
-        let d = &mut self.devices[device];
-        assert!(d.in_flight > 0, "completion without dispatch on {}", d.name);
+    /// Route one image; returns the chosen device index. Panics if every
+    /// device has been marked unavailable — use [`Router::try_route`] when
+    /// failover is in play.
+    pub fn route(&mut self) -> usize {
+        self.try_route().expect("no routable device")
+    }
+
+    /// Mark one image completed on `device`. Errors (instead of corrupting
+    /// the backlog accounting) on a completion that was never dispatched.
+    pub fn complete(&mut self, device: usize) -> Result<()> {
+        let Some(d) = self.devices.get_mut(device) else {
+            anyhow::bail!("completion on unknown device index {device}");
+        };
+        anyhow::ensure!(
+            d.in_flight > 0,
+            "completion without dispatch on {}",
+            d.name
+        );
         d.in_flight -= 1;
+        Ok(())
     }
 
     /// Simulate dispatching `images` with completions as devices drain
@@ -104,7 +157,7 @@ impl Router {
         for _ in 0..images {
             let idx = self.route();
             finish[idx] += self.devices[idx].service_ns;
-            self.complete(idx);
+            self.complete(idx).expect("routed immediately above");
         }
         finish.into_iter().fold(0.0, f64::max)
     }
@@ -151,12 +204,15 @@ mod tests {
     }
 
     #[test]
-    fn completion_without_dispatch_panics() {
+    fn completion_without_dispatch_errors() {
         let mut r = Router::new(devs(&[1.0]), Policy::RoundRobin, 0);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            r.complete(0);
-        }));
-        assert!(result.is_err());
+        let err = r.complete(0).unwrap_err();
+        assert!(err.to_string().contains("completion without dispatch"), "{err:#}");
+        // Unknown indices are an error too, not a panic.
+        assert!(r.complete(7).is_err());
+        // And the error leaves accounting untouched: a real cycle still works.
+        let i = r.route();
+        r.complete(i).unwrap();
     }
 
     #[test]
@@ -200,7 +256,7 @@ mod tests {
                 inflight_fifo.push(i);
                 if step % 2 == 1 {
                     let j = inflight_fifo.remove(0);
-                    r.complete(j);
+                    r.complete(j).unwrap();
                     outstanding[j] -= 1;
                 }
                 let got: Vec<u64> =
@@ -241,8 +297,66 @@ mod tests {
         let second = r.route();
         assert_ne!(first, second, "second dispatch must avoid the loaded device");
         // Draining `first` makes it the unique minimum again.
-        r.complete(first);
+        r.complete(first).unwrap();
         assert_eq!(r.route(), first);
+    }
+
+    #[test]
+    fn try_route_skips_unavailable_devices() {
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+            let mut r = Router::new(devs(&[1.0, 1.0, 1.0]), policy, 11);
+            r.set_available(1, false);
+            assert_eq!(r.available_count(), 2);
+            for _ in 0..30 {
+                let i = r.try_route().expect("two devices remain");
+                assert_ne!(i, 1, "{policy:?} routed to a downed device");
+            }
+            assert_eq!(r.devices()[1].in_flight, 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn try_route_returns_none_when_fleet_is_down() {
+        let mut r = Router::new(devs(&[1.0, 1.0]), Policy::LeastLoaded, 0);
+        r.set_available(0, false);
+        r.set_available(1, false);
+        assert_eq!(r.try_route(), None);
+        assert_eq!(r.dispatched, 0, "failed routes must not count dispatches");
+        // Reintegration makes the device routable again.
+        r.set_available(1, true);
+        assert_eq!(r.try_route(), Some(1));
+    }
+
+    #[test]
+    fn try_route_with_all_devices_up_matches_legacy_route() {
+        // The failover-aware path must be decision- and RNG-identical to
+        // the legacy router when nothing is down — the no-faults
+        // equivalence freeze relies on this.
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+            let mut old = Router::new(devs(&[3.0, 1.0, 2.0, 1.0]), policy, 77);
+            let mut new = Router::new(devs(&[3.0, 1.0, 2.0, 1.0]), policy, 77);
+            for step in 0..200 {
+                let a = old.route();
+                let b = new.try_route().unwrap();
+                assert_eq!(a, b, "{policy:?} diverged at step {step}");
+                if step % 3 == 2 {
+                    old.complete(a).unwrap();
+                    new.complete(b).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_cursor_resumes_after_recovery() {
+        let mut r = Router::new(devs(&[1.0, 1.0, 1.0]), Policy::RoundRobin, 0);
+        assert_eq!(r.try_route(), Some(0));
+        r.set_available(1, false);
+        // Cursor points at 1; the scan skips to 2, then wraps to 0.
+        assert_eq!(r.try_route(), Some(2));
+        assert_eq!(r.try_route(), Some(0));
+        r.set_available(1, true);
+        assert_eq!(r.try_route(), Some(1), "recovered device rejoins rotation");
     }
 
     #[test]
@@ -257,7 +371,7 @@ mod tests {
             }
             // Drain all but the last round's dispatches.
             for &i in &picks[..picks.len() - 6] {
-                r.complete(i);
+                r.complete(i).unwrap();
             }
             picks.drain(..picks.len() - 6);
             let max = r.devices().iter().map(|d| d.in_flight).max().unwrap();

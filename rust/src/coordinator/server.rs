@@ -13,7 +13,7 @@
 //! artifact-executing [`InferenceServer`] (a pool of PJRT devices) sits on
 //! top behind `--features pjrt`.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -23,6 +23,7 @@ use anyhow::{Context, Result};
 use super::backend::Backend;
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::resilience::{HealthTracker, HealthTransition, ResilienceSpec, ServeError, ShedReason};
 use super::router::{Device, Policy, Router};
 
 /// Pool configuration.
@@ -35,6 +36,10 @@ pub struct PoolConfig {
     /// Max time a request waits for its device's batch to fill before a
     /// partial batch is flushed.
     pub batch_window: Duration,
+    /// Deadline / retry / failover / shedding policy. The default is
+    /// behavior-preserving: no deadline, no retries, the legacy queue
+    /// depth, health tracking off.
+    pub resilience: ResilienceSpec,
 }
 
 impl Default for PoolConfig {
@@ -43,6 +48,7 @@ impl Default for PoolConfig {
             devices: 1,
             policy: Policy::RoundRobin,
             batch_window: Duration::from_millis(5),
+            resilience: ResilienceSpec::default(),
         }
     }
 }
@@ -61,7 +67,10 @@ pub struct ClassifyResponse {
 struct Request {
     image: Vec<i32>,
     enqueued: Instant,
-    resp: Sender<Result<ClassifyResponse>>,
+    /// Absolute deadline; expired requests are answered with a typed
+    /// [`ServeError::Timeout`] when their batch forms.
+    deadline: Option<Instant>,
+    resp: Sender<Result<ClassifyResponse, ServeError>>,
 }
 
 enum Control {
@@ -74,6 +83,15 @@ struct Worker {
     handle: Option<JoinHandle<()>>,
 }
 
+/// Routing state: the policy router plus the health tracker that drives
+/// its availability mask. One mutex for both, so a route decision and the
+/// quarantine snapshot it uses are atomic (lock order is always
+/// `dispatch` before `metrics`, never the reverse).
+struct Dispatch {
+    router: Router,
+    health: HealthTracker,
+}
+
 /// Handle to a running device pool. Dispatch decisions delegate to the
 /// existing [`Router`] (each worker is one routed [`Device`]), so the
 /// offline router simulations and the live pool share one policy
@@ -81,9 +99,47 @@ struct Worker {
 pub struct MultiDeviceServer {
     workers: Vec<Worker>,
     metrics: Arc<Mutex<Metrics>>,
-    router: Mutex<Router>,
+    dispatch: Mutex<Dispatch>,
+    resilience: ResilienceSpec,
+    /// Epoch for the health tracker's monotonic clock.
+    t0: Instant,
     image_elems: usize,
     batch: usize,
+}
+
+/// An admitted in-flight request (from [`MultiDeviceServer::submit`]).
+/// Dropping it without waiting still releases the routed backlog slot.
+pub struct Pending<'a> {
+    server: &'a MultiDeviceServer,
+    rx: Receiver<Result<ClassifyResponse, ServeError>>,
+    device: usize,
+}
+
+impl Pending<'_> {
+    /// Device the request was routed to.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// Block for the response. A worker that dies before replying counts
+    /// as a shutdown shed — never a silent drop.
+    pub fn wait(self) -> Result<ClassifyResponse, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Shed {
+                device: Some(self.device),
+                reason: ShedReason::Shutdown,
+            }),
+        }
+    }
+}
+
+impl Drop for Pending<'_> {
+    fn drop(&mut self) {
+        // Admission routed us; completion must balance it even if the
+        // caller never waited (the reply channel just goes dead).
+        let _ = self.server.dispatch.lock().unwrap().router.complete(self.device);
+    }
 }
 
 impl MultiDeviceServer {
@@ -97,12 +153,13 @@ impl MultiDeviceServer {
         F: Fn(usize) -> Result<B> + Send + Sync + Clone + 'static,
     {
         anyhow::ensure!(cfg.devices > 0, "pool needs at least one device");
+        cfg.resilience.validate()?;
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let mut workers = Vec::with_capacity(cfg.devices);
         let mut ready_rxs = Vec::with_capacity(cfg.devices);
 
         for device in 0..cfg.devices {
-            let (tx, rx) = mpsc::sync_channel::<Control>(1024);
+            let (tx, rx) = mpsc::sync_channel::<Control>(cfg.resilience.queue_cap);
             let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
             let worker_factory = factory.clone();
             let worker_metrics = Arc::clone(&metrics);
@@ -140,10 +197,20 @@ impl MultiDeviceServer {
         Ok(MultiDeviceServer {
             workers,
             metrics,
-            router: Mutex::new(Router::new(devices, cfg.policy, 0x5EED)),
+            dispatch: Mutex::new(Dispatch {
+                router: Router::new(devices, cfg.policy, 0x5EED),
+                health: HealthTracker::new(cfg.devices, &cfg.resilience),
+            }),
+            resilience: cfg.resilience,
+            t0: Instant::now(),
             image_elems,
             batch,
         })
+    }
+
+    /// Monotonic ns since the pool started (the health tracker's clock).
+    fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
     }
 
     pub fn devices(&self) -> usize {
@@ -158,38 +225,179 @@ impl MultiDeviceServer {
         self.image_elems
     }
 
-    /// Blocking single-image classification, dispatched to one device.
-    pub fn classify(&self, image: Vec<i32>) -> Result<ClassifyResponse> {
-        anyhow::ensure!(
-            image.len() == self.image_elems,
-            "image must have {} elements, got {}",
-            self.image_elems,
-            image.len()
-        );
-        let device = self.router.lock().unwrap().route();
-        self.metrics.lock().unwrap().record_dispatch(device);
-        let result = self.dispatch_to(device, image);
-        self.router.lock().unwrap().complete(device);
-        result
+    /// Blocking single-image classification under the pool's resilience
+    /// policy: deadline, retry with capped exponential backoff, failover
+    /// to another device, explicit shedding. With the default
+    /// [`ResilienceSpec`] this is exactly the legacy one-shot dispatch.
+    pub fn classify(&self, image: Vec<i32>) -> Result<ClassifyResponse, ServeError> {
+        if image.len() != self.image_elems {
+            return Err(ServeError::Rejected(format!(
+                "image must have {} elements, got {}",
+                self.image_elems,
+                image.len()
+            )));
+        }
+        let retries = self.resilience.retries;
+        let mut image = image;
+        let mut last_device: Option<usize> = None;
+        let mut attempt: u32 = 0;
+        loop {
+            // Clone only while a later retry could still need the image;
+            // the zero-retry hot path moves it, allocation-free.
+            let img = if attempt < retries {
+                image.clone()
+            } else {
+                std::mem::take(&mut image)
+            };
+            let err = match self.submit_attempt(img, attempt, last_device) {
+                Ok(pending) => {
+                    let device = pending.device();
+                    last_device = Some(device);
+                    match pending.wait() {
+                        Ok(resp) => {
+                            self.record_health(device, true);
+                            return Ok(resp);
+                        }
+                        Err(e) => {
+                            if e.counts_against_health() {
+                                self.record_health(device, false);
+                            }
+                            e
+                        }
+                    }
+                }
+                Err(e) => e,
+            };
+            if attempt < retries && err.is_retryable() {
+                let backoff = self.resilience.backoff_ms_for(attempt);
+                attempt += 1;
+                std::thread::sleep(Duration::from_millis(backoff));
+                continue;
+            }
+            if matches!(
+                err,
+                ServeError::DeviceLost { .. }
+                    | ServeError::Transient { .. }
+                    | ServeError::Backend { .. }
+            ) {
+                self.metrics.lock().unwrap().failures += 1;
+            }
+            return Err(err);
+        }
     }
 
-    fn dispatch_to(&self, device: usize, image: Vec<i32>) -> Result<ClassifyResponse> {
+    /// Admit one image without blocking on the response: route, enqueue
+    /// (or shed), and return a [`Pending`] handle. No retries — callers
+    /// that want the full resilience policy use
+    /// [`MultiDeviceServer::classify`].
+    pub fn submit(&self, image: Vec<i32>) -> Result<Pending<'_>, ServeError> {
+        if image.len() != self.image_elems {
+            return Err(ServeError::Rejected(format!(
+                "image must have {} elements, got {}",
+                self.image_elems,
+                image.len()
+            )));
+        }
+        self.submit_attempt(image, 0, None)
+    }
+
+    /// One admission attempt: sync the router's availability mask with the
+    /// health tracker, route, and enqueue with explicit load-shedding.
+    fn submit_attempt(
+        &self,
+        image: Vec<i32>,
+        attempt: u32,
+        last_device: Option<usize>,
+    ) -> Result<Pending<'_>, ServeError> {
+        let device = {
+            let mut d = self.dispatch.lock().unwrap();
+            if d.health.enabled() {
+                let now = self.now_ns();
+                for dev in 0..self.workers.len() {
+                    let up = d.health.can_route(dev, now);
+                    d.router.set_available(dev, up);
+                }
+            }
+            let Some(device) = d.router.try_route() else {
+                self.metrics.lock().unwrap().shed += 1;
+                return Err(ServeError::Shed { device: None, reason: ShedReason::NoDevice });
+            };
+            if d.health.is_quarantined(device) {
+                // Routed to a quarantined device past its probe window:
+                // this request is the (single) reintegration probe.
+                d.health.begin_probe(device);
+            }
+            device
+        };
         let (resp_tx, resp_rx) = mpsc::channel();
-        self.workers[device]
-            .tx
-            .send(Control::Req(Request {
-                image,
-                enqueued: Instant::now(),
-                resp: resp_tx,
-            }))
-            .map_err(|_| anyhow::anyhow!("server is down"))?;
-        resp_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+        let enqueued = Instant::now();
+        let req = Request {
+            image,
+            enqueued,
+            deadline: self
+                .resilience
+                .deadline_ms
+                .map(|ms| enqueued + Duration::from_millis(ms)),
+            resp: resp_tx,
+        };
+        match self.workers[device].tx.try_send(Control::Req(req)) {
+            Ok(()) => {
+                let mut m = self.metrics.lock().unwrap();
+                m.record_dispatch(device);
+                if attempt > 0 {
+                    m.retries += 1;
+                    if last_device.map_or(false, |p| p != device) {
+                        m.failovers += 1;
+                    }
+                }
+                Ok(Pending { server: self, rx: resp_rx, device })
+            }
+            Err(err) => {
+                let _ = self.dispatch.lock().unwrap().router.complete(device);
+                let reason = match err {
+                    TrySendError::Full(_) => ShedReason::QueueFull,
+                    TrySendError::Disconnected(_) => ShedReason::Shutdown,
+                };
+                self.metrics.lock().unwrap().shed += 1;
+                Err(ServeError::Shed { device: Some(device), reason })
+            }
+        }
+    }
+
+    /// Record a request outcome with the health tracker and surface its
+    /// quarantine / reintegration transitions in the metrics.
+    fn record_health(&self, device: usize, ok: bool) {
+        let mut d = self.dispatch.lock().unwrap();
+        if !d.health.enabled() {
+            return;
+        }
+        let now = self.now_ns();
+        if ok {
+            if d.health.record_success(device, now) {
+                self.metrics.lock().unwrap().reintegrations += 1;
+            }
+        } else if d.health.record_failure(device, now) {
+            self.metrics.lock().unwrap().quarantines += 1;
+        }
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Health transitions (quarantines and reintegrations) so far, in
+    /// wall-clock order.
+    pub fn health_transitions(&self) -> Vec<HealthTransition> {
+        self.dispatch.lock().unwrap().health.transitions().to_vec()
+    }
+
+    /// Devices currently quarantined.
+    pub fn quarantined_devices(&self) -> usize {
+        self.dispatch.lock().unwrap().health.quarantined()
+    }
+
+    pub fn resilience(&self) -> &ResilienceSpec {
+        &self.resilience
     }
 
     pub fn shutdown(mut self) {
@@ -214,11 +422,12 @@ impl Drop for MultiDeviceServer {
     }
 }
 
-/// Index of the max logit in one row.
+/// Index of the max logit in one row (`total_cmp`: a NaN logit must not
+/// panic the worker thread and poison the pool).
 fn argmax(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -230,6 +439,22 @@ fn execute_batch<B: Backend>(
     reqs: Vec<Request>,
     metrics: &Mutex<Metrics>,
 ) {
+    // Deadline enforcement happens as the batch forms: expired requests
+    // get a typed Timeout reply instead of burning a batch lane.
+    let now = Instant::now();
+    let (live, expired): (Vec<Request>, Vec<Request>) =
+        reqs.into_iter().partition(|r| r.deadline.map_or(true, |d| now <= d));
+    if !expired.is_empty() {
+        metrics.lock().unwrap().timeouts += expired.len() as u64;
+        for r in expired {
+            let _ = r.resp.send(Err(ServeError::Timeout { device }));
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let reqs = live;
+
     let batch_size = backend.batch_size();
     let image_elems = backend.image_elems();
     let fill = reqs.len();
@@ -263,9 +488,12 @@ fn execute_batch<B: Backend>(
             }
         }
         Err(e) => {
-            let msg = format!("batch execution failed: {e:#}");
+            // One shared source chain, one typed error per request — an
+            // injected DeviceLost/Transient stays distinguishable from a
+            // real backend failure.
+            let shared = Arc::new(e);
             for r in reqs {
-                let _ = r.resp.send(Err(anyhow::anyhow!(msg.clone())));
+                let _ = r.resp.send(Err(ServeError::from_backend(device, &shared)));
             }
         }
     }
@@ -329,9 +557,22 @@ fn worker_main<B, F>(
             execute_batch(&mut backend, device, reqs, &metrics);
         }
     }
-    // Drain requests that raced the shutdown.
+    // Drain: everything already admitted executes (or times out, typed) —
+    // an in-flight request is never silently dropped by shutdown.
     while let Some(reqs) = batcher.pop_full().or_else(|| batcher.pop_partial()) {
         execute_batch(&mut backend, device, reqs, &metrics);
+    }
+    // `stop` has exclusive access, so Shutdown is the channel's last
+    // message and this loop should find nothing; defensively, anything
+    // that somehow raced in is reported shed, not dropped.
+    while let Ok(ctl) = rx.try_recv() {
+        if let Control::Req(r) = ctl {
+            metrics.lock().unwrap().shed += 1;
+            let _ = r.resp.send(Err(ServeError::Shed {
+                device: Some(device),
+                reason: ShedReason::Shutdown,
+            }));
+        }
     }
 }
 
@@ -428,6 +669,7 @@ mod pjrt_server {
                     devices: cfg.devices,
                     policy: cfg.policy,
                     batch_window: cfg.batch_window,
+                    resilience: ResilienceSpec::default(),
                 },
                 move |_| PjrtBackend::load(&artifacts, per_layer_chain),
             )?;
@@ -438,8 +680,9 @@ mod pjrt_server {
             self.inner.batch_size()
         }
 
-        /// Blocking single-image classification.
-        pub fn classify(&self, image: Vec<i32>) -> Result<ClassifyResponse> {
+        /// Blocking single-image classification (typed serving errors;
+        /// `?` still converts into `anyhow::Result` contexts).
+        pub fn classify(&self, image: Vec<i32>) -> Result<ClassifyResponse, ServeError> {
             self.inner.classify(image)
         }
 
@@ -467,7 +710,12 @@ mod tests {
 
     fn pool(devices: usize, policy: Policy) -> MultiDeviceServer {
         MultiDeviceServer::start(
-            PoolConfig { devices, policy, batch_window: Duration::from_millis(2) },
+            PoolConfig {
+                devices,
+                policy,
+                batch_window: Duration::from_millis(2),
+                ..PoolConfig::default()
+            },
             |_| Ok(SimBackend::new(4, 8, 10)),
         )
         .unwrap()
@@ -501,7 +749,78 @@ mod tests {
     #[test]
     fn wrong_image_size_rejected() {
         let s = pool(1, Policy::RoundRobin);
-        assert!(s.classify(vec![0; 3]).is_err());
+        let err = s.classify(vec![0; 3]).unwrap_err();
+        assert!(matches!(err, ServeError::Rejected(_)), "{err}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn submit_and_wait_round_trip() {
+        let s = pool(2, Policy::RoundRobin);
+        let a = s.submit(vec![1; 8]).unwrap();
+        let b = s.submit(vec![2; 8]).unwrap();
+        assert_eq!((a.device(), b.device()), (0, 1));
+        let ra = a.wait().unwrap();
+        let rb = b.wait().unwrap();
+        assert_eq!((ra.device, rb.device), (0, 1));
+        assert_eq!(s.metrics().requests, 2);
+        s.shutdown();
+    }
+
+    #[test]
+    fn dropping_pending_releases_the_backlog_slot() {
+        let s = pool(1, Policy::LeastLoaded);
+        for _ in 0..5 {
+            // Admit and abandon: the reply is discarded, but the router's
+            // in_flight accounting must drain back to zero each time.
+            let p = s.submit(vec![7; 8]).unwrap();
+            drop(p);
+        }
+        assert_eq!(s.dispatch.lock().unwrap().router.devices()[0].in_flight, 0);
+        // The pool still serves normally afterwards.
+        assert!(s.classify(vec![1; 8]).is_ok());
+        s.shutdown();
+    }
+
+    #[test]
+    fn default_resilience_reports_no_degraded_activity() {
+        let s = pool(2, Policy::TwoChoices);
+        for i in 0..8 {
+            s.classify(vec![i; 8]).unwrap();
+        }
+        let m = s.metrics();
+        assert!(!m.degraded(), "clean serving must stay in the legacy shape");
+        assert_eq!(m.requests, 8);
+        s.shutdown();
+    }
+
+    #[test]
+    fn backend_error_is_typed_with_source_chain() {
+        struct Broken;
+        impl Backend for Broken {
+            fn batch_size(&self) -> usize {
+                2
+            }
+            fn image_elems(&self) -> usize {
+                4
+            }
+            fn num_classes(&self) -> usize {
+                10
+            }
+            fn run_batch(&mut self, _images: &[i32]) -> Result<Vec<f32>> {
+                Err(anyhow::anyhow!("bank short-circuit").context("device fault"))
+            }
+        }
+        let s = MultiDeviceServer::start(PoolConfig::default(), |_| Ok(Broken)).unwrap();
+        let err = s.classify(vec![0; 4]).unwrap_err();
+        match &err {
+            ServeError::Backend { device, source } => {
+                assert_eq!(*device, 0);
+                assert!(format!("{source:#}").contains("bank short-circuit"));
+            }
+            other => panic!("expected Backend error, got {other}"),
+        }
+        assert_eq!(s.metrics().failures, 1);
         s.shutdown();
     }
 

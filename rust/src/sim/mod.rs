@@ -9,10 +9,12 @@
 #![warn(clippy::redundant_clone)]
 
 pub mod engine;
+pub mod perturb;
 pub mod session;
 pub mod trace;
 
 pub use engine::{
     price_layers, simulate, DeviceSim, LayerSim, ScaleOutReport, SimConfig, SimResult,
 };
+pub use perturb::{fault_hash, Perturbation};
 pub use session::{SimReport, SimSession};

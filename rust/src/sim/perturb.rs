@@ -1,0 +1,101 @@
+//! Deterministic latency-perturbation substrate for the serving layer.
+//!
+//! Fault injection (coordinator::faults) and the virtual-time fleet
+//! simulation (coordinator::chaos) both need per-(device, batch) decisions
+//! that are **order-independent**: the live pool executes batches from
+//! concurrent worker threads while the fleet simulation replays them in
+//! virtual-time order, and the two must see the same schedule. The trick
+//! is counter-based randomness — every decision draws from an `Rng` seeded
+//! by a hash of `(seed, device, tick)` instead of consuming a shared
+//! stream, so the draw for batch 17 on device 3 is the same no matter how
+//! many other batches ran first.
+//!
+//! [`Perturbation`] is the composable output: a multiplicative factor on a
+//! modeled service time (straggler inflation × refresh-storm slowdown ×
+//! anything a future model stacks on top).
+
+/// SplitMix64-style avalanche of `(seed, device, tick)` into one 64-bit
+/// stream seed. Distinct inputs land in distinct, well-mixed states, so
+/// `Rng::new(fault_hash(..))` behaves like an independent generator per
+/// (device, batch) coordinate.
+pub fn fault_hash(seed: u64, device: u64, tick: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(device.wrapping_mul(0x9E3779B97F4A7C15))
+        .wrapping_add(tick.wrapping_mul(0xBF58476D1CE4E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A multiplicative slowdown applied to a modeled service time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Perturbation {
+    /// `>= 1.0`; 1.0 is the unperturbed service time.
+    pub factor: f64,
+}
+
+impl Perturbation {
+    /// The identity perturbation (no slowdown).
+    pub fn none() -> Perturbation {
+        Perturbation { factor: 1.0 }
+    }
+
+    /// A slowdown by `factor` (clamped below at 1.0 — perturbations model
+    /// interference, never speedups).
+    pub fn slow(factor: f64) -> Perturbation {
+        Perturbation { factor: factor.max(1.0) }
+    }
+
+    /// Stack another perturbation on top (factors multiply: a straggler
+    /// inside a refresh storm pays both).
+    pub fn and(self, other: Perturbation) -> Perturbation {
+        Perturbation { factor: self.factor * other.factor }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.factor == 1.0
+    }
+
+    /// Apply to a service time in ns.
+    pub fn apply_ns(&self, ns: f64) -> f64 {
+        ns * self.factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_hash_is_deterministic_and_coordinate_sensitive() {
+        assert_eq!(fault_hash(7, 3, 17), fault_hash(7, 3, 17));
+        assert_ne!(fault_hash(7, 3, 17), fault_hash(7, 3, 18));
+        assert_ne!(fault_hash(7, 3, 17), fault_hash(7, 4, 17));
+        assert_ne!(fault_hash(7, 3, 17), fault_hash(8, 3, 17));
+    }
+
+    #[test]
+    fn fault_hash_mixes_small_inputs() {
+        // Neighbouring coordinates must not land in neighbouring states.
+        let a = fault_hash(0, 0, 0);
+        let b = fault_hash(0, 0, 1);
+        let c = fault_hash(0, 1, 0);
+        assert!(a.abs_diff(b) > 1 << 32, "{a} vs {b}");
+        assert!(a.abs_diff(c) > 1 << 32, "{a} vs {c}");
+    }
+
+    #[test]
+    fn perturbations_compose_multiplicatively() {
+        let p = Perturbation::slow(4.0).and(Perturbation::slow(2.5));
+        assert_eq!(p.factor, 10.0);
+        assert_eq!(p.apply_ns(100.0), 1000.0);
+        assert!(Perturbation::none().is_none());
+        assert!(!p.is_none());
+    }
+
+    #[test]
+    fn perturbations_never_speed_up() {
+        assert_eq!(Perturbation::slow(0.25).factor, 1.0);
+        assert_eq!(Perturbation::slow(-3.0).factor, 1.0);
+    }
+}

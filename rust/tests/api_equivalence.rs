@@ -219,5 +219,54 @@ fn inline_network_runs_end_to_end() {
     let m = handle.server.metrics();
     assert_eq!(m.requests, 6);
     assert_eq!(m.per_device.len(), 2);
+    assert!(!m.degraded(), "fault-free serving must stay in the legacy shape");
     handle.server.shutdown();
+}
+
+#[test]
+fn serve_without_faults_is_bitwise_legacy() {
+    // The resilience/fault sections are strictly additive: a spec that
+    // omits them (legacy) and one that spells out the noop schedule and
+    // the default policy must classify bitwise-identically and report
+    // clean (non-degraded) metrics.
+    use pim_dram::coordinator::{FaultSpec, ResilienceSpec};
+
+    let legacy = Spec::inline(tinynet())
+        .with_preset("conservative")
+        .with_serve(ServeSpec { devices: Some(2), batch: 4, ..ServeSpec::default() });
+    let spelled = Spec::inline(tinynet()).with_preset("conservative").with_serve(ServeSpec {
+        devices: Some(2),
+        batch: 4,
+        faults: Some(FaultSpec::none()),
+        resilience: Some(ResilienceSpec::default()),
+        ..ServeSpec::default()
+    });
+
+    // Absent sections stay absent in canonical JSON (old documents are
+    // byte-stable), and both specs survive their round-trips.
+    let legacy_json = legacy.to_json_text();
+    assert!(!legacy_json.contains("\"faults\""), "{legacy_json}");
+    assert!(!legacy_json.contains("\"resilience\""), "{legacy_json}");
+    assert_eq!(Spec::from_json_text(&legacy_json).unwrap(), legacy);
+    assert_eq!(Spec::from_json_text(&spelled.to_json_text()).unwrap(), spelled);
+
+    let a = Job::new(legacy).unwrap().serve().unwrap();
+    let b = Job::new(spelled).unwrap().serve().unwrap();
+    let elems = a.server.image_elems();
+    for i in 0..8i32 {
+        let img: Vec<i32> = (0..elems).map(|e| i * 31 + e as i32).collect();
+        let ra = a.server.classify(img.clone()).unwrap();
+        let rb = b.server.classify(img).unwrap();
+        assert_eq!(ra.class, rb.class);
+        assert_eq!(ra.device, rb.device, "routing must not shift");
+        for (x, y) in ra.logits.iter().zip(&rb.logits) {
+            assert_eq!(x.to_bits(), y.to_bits(), "logits must match bitwise");
+        }
+    }
+    for m in [a.server.metrics(), b.server.metrics()] {
+        assert_eq!(m.requests, 8);
+        assert!(!m.degraded(), "{}", m.report());
+    }
+    a.server.shutdown();
+    b.server.shutdown();
 }

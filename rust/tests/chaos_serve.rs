@@ -1,0 +1,273 @@
+//! Chaos suite: fault-injected serving end-to-end (no artifacts, no
+//! PJRT), through the versioned `api` surface and the live pool.
+//!
+//! Three properties are pinned here:
+//!   1. **Determinism** — one seed reproduces the exact fault schedule
+//!      and a bitwise-identical [`FleetReport`] (the virtual-time path).
+//!   2. **Resilience** — the fleet sustains goodput through device crash
+//!      and recovery: retries absorb transients, failover reroutes around
+//!      a lost device, quarantine/probe reintegrates it.
+//!   3. **No silent drops** — every offered request reaches exactly one
+//!      terminal outcome (`accounted() == offered` in virtual time; in
+//!      the live pool, shutdown drains every admitted request).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use pim_dram::api::{Job, ServeSpec, Spec};
+use pim_dram::coordinator::{
+    simulate_fleet, Backend, CrashSpec, FaultSpec, FleetConfig, MultiDeviceServer,
+    Policy, PoolConfig, ResilienceSpec, ServeError, StormSpec, StragglerSpec,
+};
+
+/// A fully loaded fault-injected serve spec over a builtin network.
+fn chaotic_spec(fault_seed: u64) -> Spec {
+    let mut spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
+        devices: Some(3),
+        batch: 4,
+        policy: Policy::RoundRobin,
+        faults: Some(FaultSpec {
+            seed: fault_seed,
+            transient: 0.1,
+            straggler: Some(StragglerSpec { prob: 0.05, factor: 4.0 }),
+            storm: Some(StormSpec { period: 16, duty: 2, factor: 2.0 }),
+            crash: vec![CrashSpec { device: 0, after: 5, down_for: Some(10) }],
+        }),
+        resilience: Some(ResilienceSpec {
+            retries: 2,
+            quarantine_after: 2,
+            probe_after_ms: 1,
+            ..ResilienceSpec::default()
+        }),
+        load: Some(1.1),
+        ..ServeSpec::default()
+    });
+    spec.images = 512;
+    spec
+}
+
+#[test]
+fn fault_injected_spec_yields_bitwise_identical_fleet_reports() {
+    // Two independent Jobs from the same spec: the virtual-time replay
+    // must agree to the last bit — floats included.
+    let a = Job::new(chaotic_spec(0xC0FFEE)).unwrap().fleet_report().unwrap();
+    let b = Job::new(chaotic_spec(0xC0FFEE)).unwrap().fleet_report().unwrap();
+    assert_eq!(a, b, "same spec must reproduce the same report");
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "canonical JSON is byte-stable");
+    assert_eq!(a.p99_us.to_bits(), b.p99_us.to_bits());
+    assert_eq!(a.mean_us.to_bits(), b.mean_us.to_bits());
+
+    // The schedule actually fired, and nothing vanished.
+    assert_eq!(a.offered, 512);
+    assert_eq!(a.accounted(), a.offered, "every request has one terminal outcome");
+    assert!(a.injected.crashes > 0, "crash window must hit: {:?}", a.injected);
+    assert!(a.injected.transients > 0, "{:?}", a.injected);
+    assert!(a.completed > 0 && a.goodput > 0);
+}
+
+#[test]
+fn fleet_report_seed_changes_the_schedule() {
+    let a = Job::new(chaotic_spec(1)).unwrap().fleet_report().unwrap();
+    let b = Job::new(chaotic_spec(2)).unwrap().fleet_report().unwrap();
+    // Same fleet, same load — only the fault seed differs, so the
+    // degraded-mode numbers must move.
+    assert_eq!(a.offered, b.offered);
+    assert_ne!(a, b, "the fault seed drives the schedule");
+}
+
+#[test]
+fn fleet_sustains_goodput_through_crash_and_recovery() {
+    let cfg = FleetConfig {
+        devices: 3,
+        service_ns: 1_000_000.0, // 1 ms/image so probe windows fit the run
+        batch: 4,
+        requests: 1500,
+        load: 1.0,
+        faults: FaultSpec {
+            seed: 0x5EED,
+            crash: vec![CrashSpec { device: 0, after: 5, down_for: Some(10) }],
+            ..FaultSpec::none()
+        },
+        resilience: ResilienceSpec {
+            retries: 2,
+            quarantine_after: 2,
+            probe_after_ms: 10,
+            ..ResilienceSpec::default()
+        },
+        ..FleetConfig::default()
+    };
+    let r = simulate_fleet(&cfg).unwrap();
+
+    // No hang (we got here), no silent drop, and the fleet kept serving.
+    assert_eq!(r.accounted(), r.offered);
+    assert!(r.goodput > r.offered / 2, "fleet must sustain goodput: {}", r.render());
+    // The crash was seen, the device was quarantined, failover rerouted
+    // its traffic, and the probe reintegrated it once the window passed.
+    assert!(r.injected.crashes > 0, "{}", r.render());
+    assert!(r.quarantines >= 1, "{}", r.render());
+    assert!(r.reintegrations >= 1, "device must come back: {}", r.render());
+    assert!(r.failovers >= 1, "{}", r.render());
+    assert!(r.retried >= r.failovers);
+    // The recovered device worked through its crash window (probes count
+    // as batch attempts) and served again afterwards.
+    assert!(r.per_device_batches[0] > 15, "{:?}", r.per_device_batches);
+    // Transitions pair up: down then up for device 0.
+    assert!(!r.transitions.is_empty());
+    assert_eq!(r.transitions[0].device, 0);
+    assert!(!r.transitions[0].up);
+    assert!(r.transitions.iter().any(|t| t.up && t.device == 0));
+}
+
+#[test]
+fn noop_fault_section_serves_clean() {
+    // `faults` present but injecting nothing: the live pool must behave
+    // exactly like a spec with no fault section at all.
+    let mut spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
+        devices: Some(2),
+        batch: 4,
+        faults: Some(FaultSpec::none()),
+        ..ServeSpec::default()
+    });
+    spec.images = 8;
+    let handle = Job::new(spec).unwrap().serve().unwrap();
+    let elems = handle.server.image_elems();
+    for i in 0..8 {
+        let resp = handle.server.classify(vec![i as i32; elems]).unwrap();
+        assert!(resp.class < 10);
+    }
+    let m = handle.server.metrics();
+    assert_eq!(m.requests, 8);
+    assert!(!m.degraded(), "noop faults must leave the legacy metrics shape: {}", m.report());
+    handle.server.shutdown();
+}
+
+#[test]
+fn live_pool_fails_over_quarantines_and_reintegrates() {
+    // Device 0 is down for exactly its first batch attempt; one failure
+    // quarantines it, failover reroutes to device 1, and the first probe
+    // after the (1 ms) window reintegrates it.
+    let spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
+        devices: Some(2),
+        batch: 4,
+        policy: Policy::RoundRobin,
+        faults: Some(FaultSpec {
+            seed: 3,
+            crash: vec![CrashSpec { device: 0, after: 0, down_for: Some(1) }],
+            ..FaultSpec::none()
+        }),
+        resilience: Some(ResilienceSpec {
+            retries: 2,
+            quarantine_after: 1,
+            probe_after_ms: 1,
+            ..ResilienceSpec::default()
+        }),
+        ..ServeSpec::default()
+    });
+    let handle = Job::new(spec).unwrap().serve().unwrap();
+    let s = &handle.server;
+    let elems = s.image_elems();
+
+    // First request hits the crash, retries, and lands on device 1.
+    let resp = s.classify(vec![1; elems]).unwrap();
+    assert_eq!(resp.device, 1, "failover away from the crashed device");
+    let m = s.metrics();
+    assert_eq!(m.quarantines, 1);
+    assert!(m.retries >= 1 && m.failovers >= 1, "{}", m.report());
+    assert_eq!(s.quarantined_devices(), 1);
+
+    // Past the probe window the round-robin cursor probes device 0; its
+    // crash window is spent, so the probe succeeds and reintegrates it.
+    std::thread::sleep(Duration::from_millis(5));
+    for i in 0..6 {
+        s.classify(vec![i + 2; elems]).unwrap();
+    }
+    let m = s.metrics();
+    assert_eq!(m.reintegrations, 1, "{}", m.report());
+    assert_eq!(s.quarantined_devices(), 0);
+    assert_eq!(m.requests, 7);
+    assert_eq!(m.failures, 0, "every request eventually succeeded");
+
+    let transitions = s.health_transitions();
+    assert_eq!(transitions.len(), 2, "{transitions:?}");
+    assert!(!transitions[0].up && transitions[0].device == 0);
+    assert!(transitions[1].up && transitions[1].device == 0);
+    assert!(transitions[0].at_ns < transitions[1].at_ns);
+    assert!(m.degraded());
+}
+
+#[test]
+fn transient_fault_without_retries_is_typed() {
+    // retries = 0 (the default): the injected fault surfaces to the
+    // caller as the typed variant, not a stringly anyhow error.
+    let spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
+        devices: Some(1),
+        batch: 4,
+        faults: Some(FaultSpec { seed: 9, transient: 1.0, ..FaultSpec::none() }),
+        ..ServeSpec::default()
+    });
+    let handle = Job::new(spec).unwrap().serve().unwrap();
+    let elems = handle.server.image_elems();
+    let err = handle.server.classify(vec![5; elems]).unwrap_err();
+    assert!(matches!(err, ServeError::Transient { device: 0 }), "{err}");
+    assert!(err.to_string().contains("transient"), "{err}");
+    let m = handle.server.metrics();
+    assert_eq!(m.failures, 1);
+    assert_eq!(m.requests, 0, "a failed request never counts as served");
+    handle.server.shutdown();
+}
+
+/// A deliberately slow backend that tallies every *real* (non-padding)
+/// image it executes — the witness that shutdown drains admitted work.
+#[derive(Clone)]
+struct SlowCounting {
+    seen: Arc<AtomicU64>,
+}
+
+impl Backend for SlowCounting {
+    fn batch_size(&self) -> usize {
+        4
+    }
+    fn image_elems(&self) -> usize {
+        4
+    }
+    fn num_classes(&self) -> usize {
+        10
+    }
+    fn run_batch(&mut self, images: &[i32]) -> anyhow::Result<Vec<f32>> {
+        // Admitted images carry a nonzero marker; padding is zeros.
+        let real = images.chunks(4).filter(|c| c[0] != 0).count() as u64;
+        self.seen.fetch_add(real, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(3));
+        Ok(vec![0.0; 4 * 10])
+    }
+}
+
+#[test]
+fn shutdown_drains_admitted_requests_without_silent_drops() {
+    let seen = Arc::new(AtomicU64::new(0));
+    let backend_seen = Arc::clone(&seen);
+    let server = MultiDeviceServer::start(
+        PoolConfig {
+            devices: 1,
+            batch_window: Duration::from_millis(1),
+            ..PoolConfig::default()
+        },
+        move |_| Ok(SlowCounting { seen: Arc::clone(&backend_seen) }),
+    )
+    .unwrap();
+
+    // Admit a multi-batch backlog, abandon the replies, and drop the
+    // server while the worker is still mid-batch.
+    let n = 10u64;
+    let pendings: Vec<_> =
+        (0..n).map(|i| server.submit(vec![i as i32 + 1; 4]).unwrap()).collect();
+    drop(pendings);
+    drop(server); // joins the worker: the drain must execute the backlog
+
+    assert_eq!(
+        seen.load(Ordering::SeqCst),
+        n,
+        "every admitted request must execute (or be reported shed) across shutdown"
+    );
+}

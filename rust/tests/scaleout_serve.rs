@@ -16,7 +16,12 @@ fn start_pool(devices: usize, policy: Policy) -> (MultiDeviceServer, usize) {
     let backend = SimBackend::from_sim(&r, &net, 8);
     let elems = backend.image_elems();
     let server = MultiDeviceServer::start(
-        PoolConfig { devices, policy, batch_window: Duration::from_millis(5) },
+        PoolConfig {
+            devices,
+            policy,
+            batch_window: Duration::from_millis(5),
+            ..PoolConfig::default()
+        },
         move |_| Ok(backend.clone()),
     )
     .unwrap();
