@@ -1,0 +1,189 @@
+//! Mapping/capacity proofs: per-layer residency analysis over the
+//! Algorithm-1 arithmetic, flagged statically — before the k-optimizer's
+//! binary search or any pricing runs.
+//!
+//! The paper prices every layer as if its operand expansion were resident
+//! (weights stacked in bank rows, one round per k-group). The mapper
+//! (`mapping::map_layer`) quietly absorbs violations instead: extra
+//! sequential *waves* when a group wants more subarrays than the bank
+//! has, *restaged rounds* when the column stack overflows
+//! `pairs_per_column`, and a silent clamp when the configured k exceeds a
+//! layer's outer-loop count. All legal — and all serialization the spec's
+//! author probably did not intend. This pass proves which layers are
+//! resident and warns about the rest:
+//!
+//!   * `W021` — configured k exceeds the outer count (the mapper clamps).
+//!   * `W020` — the layer is not fully resident at its effective k.
+//!   * `W022` — *no* fully-resident k exists: probing the top of the
+//!     feasible range (`outer.min(pairs_per_column)`, where waves are
+//!     fewest and restaging is zero — the same bound the k-optimizer
+//!     searches under) still leaves waves. The weights simply exceed the
+//!     bank; only a geometry or precision change helps.
+//!   * `W023` — the feasible k range is degenerate (the column stack caps
+//!     k at 1 while the outer loop has room): the parallelism knob
+//!     cannot move this layer at all.
+//!
+//! Residency at the configured k is read off the already-lowered plan's
+//! mapping (no recomputation); only the `W022` probe maps again, once,
+//! at the top of the range — O(1) per layer, no binary search.
+
+use crate::mapping::{map_layer, outer_count, MapConfig};
+use crate::plan::ExecutionPlan;
+use crate::sim::SimConfig;
+use crate::workloads::Network;
+
+use super::codes;
+use super::{Diagnostics, Location};
+
+pub fn capacity_pass(net: &Network, cfg: &SimConfig, plan: &ExecutionPlan, d: &mut Diagnostics) {
+    let g = &cfg.geometry;
+    let max_pairs = g.pairs_per_column(cfg.n_bits).max(1);
+
+    for (i, layer) in net.layers.iter().enumerate() {
+        let loc = || Location::Layer { index: i, name: layer.name.clone() };
+        let outer = outer_count(layer);
+        let k_cfg = cfg.k_for(i);
+        // The top of the feasible k range: beyond `outer` there is nothing
+        // to divide; beyond `pairs_per_column` every extra group restages.
+        let hi = outer.min(max_pairs);
+
+        if k_cfg > outer {
+            d.warn(
+                codes::W_K_CLAMPED,
+                loc(),
+                format!(
+                    "run.ks wants k={k_cfg} but the outer loop has only \
+                     {outer} units; the mapper clamps to k={outer}"
+                ),
+            );
+        }
+        if hi == 1 && outer > 1 {
+            d.warn(
+                codes::W_DEGENERATE_K,
+                loc(),
+                format!(
+                    "feasible k range is degenerate: {max_pairs} operand \
+                     pair(s) fit a column at {} bits, so only k=1 maps \
+                     without restaging (outer loop has {outer} units)",
+                    cfg.n_bits
+                ),
+            );
+        }
+
+        let m = &plan.mapping.layers[i];
+        if m.fully_resident() {
+            continue;
+        }
+        d.warn(
+            codes::W_NOT_RESIDENT,
+            loc(),
+            format!(
+                "not fully resident at k={}: {} wave(s), {} restaged \
+                 round(s) — rounds serialize beyond the paper's resident \
+                 pricing assumption",
+                m.k, m.waves, m.restaged_rounds
+            ),
+        );
+
+        // Could *any* k fix it? Probe the top of the range, where waves
+        // are minimal and restaging is still zero.
+        let probe = MapConfig {
+            geometry: g.clone(),
+            n_bits: cfg.n_bits,
+            ks: vec![hi],
+        };
+        let resident_k_exists = match map_layer(i, i, layer, &probe) {
+            Ok(p) => p.fully_resident(),
+            Err(_) => false,
+        };
+        if !resident_k_exists {
+            d.warn(
+                codes::W_NO_RESIDENT_K,
+                loc(),
+                format!(
+                    "no fully-resident k exists (probed k={hi}, the top of \
+                     the feasible range): the layer's weights exceed bank \
+                     capacity at {} bits under this geometry",
+                    cfg.n_bits
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::optimizer::min_resident_k;
+    use crate::workloads::nets::{pimnet, vgg16};
+
+    fn run(net: &Network, cfg: &SimConfig) -> Diagnostics {
+        let mut d = Diagnostics::default();
+        let plan = crate::plan::lower(
+            net,
+            &super::super::plan_check::map_config(cfg),
+            cfg.shard,
+        )
+        .unwrap();
+        capacity_pass(net, cfg, &plan, &mut d);
+        d
+    }
+
+    #[test]
+    fn clamp_is_w021() {
+        // pimnet's head layer has fewer output channels than k=64 wants.
+        let mut cfg = SimConfig::conservative(8);
+        cfg.ks = vec![64];
+        let d = run(&pimnet(), &cfg);
+        assert!(
+            d.iter().any(|f| f.code == codes::W_K_CLAMPED),
+            "{}",
+            d.render_text()
+        );
+    }
+
+    #[test]
+    fn residency_findings_agree_with_the_optimizer() {
+        // The analyzer's W020/W022 verdicts must match the mapper and the
+        // k-optimizer: W020 ⇔ !fully_resident at the effective k, and
+        // W022 ⇔ min_resident_k() = None.
+        for net in [pimnet(), vgg16()] {
+            let cfg = SimConfig::conservative(8);
+            let d = run(&net, &cfg);
+            let mc = super::super::plan_check::map_config(&cfg);
+            let mapping = crate::mapping::map_network(&net, &mc).unwrap();
+            for (i, layer) in net.layers.iter().enumerate() {
+                let loc = Location::Layer { index: i, name: layer.name.clone() };
+                let flagged_w020 = d
+                    .iter()
+                    .any(|f| f.code == codes::W_NOT_RESIDENT && f.location == loc);
+                assert_eq!(
+                    flagged_w020,
+                    !mapping.layers[i].fully_resident(),
+                    "W020 disagrees with the mapper on {} layer {i}",
+                    net.name
+                );
+                let flagged_w022 = d
+                    .iter()
+                    .any(|f| f.code == codes::W_NO_RESIDENT_K && f.location == loc);
+                let optimizer_says_none =
+                    min_resident_k(layer, &cfg.geometry, cfg.n_bits).is_none();
+                assert_eq!(
+                    flagged_w022, optimizer_says_none,
+                    "W022 disagrees with min_resident_k on {} layer {i}",
+                    net.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resident_config_is_silent() {
+        // paper_ideal has effectively unlimited subarrays: everything is
+        // resident at k=1 and the pass stays quiet.
+        let mut cfg = SimConfig::conservative(8);
+        cfg.geometry = crate::dram::DramGeometry::paper_ideal();
+        let d = run(&pimnet(), &cfg);
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+}

@@ -1,0 +1,123 @@
+//! The diagnostic code registry (DESIGN.md §Static analysis).
+//!
+//! Codes are the machine-readable contract of the analyzer: `E0xx` are
+//! errors (the spec cannot run, or would fail when it does), `W0xx` are
+//! warnings (the spec runs, but something is degenerate, silently
+//! clamped, or guaranteed to misbehave under load). Once published a
+//! code's *meaning* is frozen — a code is never reused for a different
+//! condition; retired codes leave a tombstone in DESIGN.md. Tooling that
+//! matches on codes (CI sweeps, the golden corpus under
+//! `examples/specs/bad/`) must keep working across releases.
+//!
+//! Every constant here must appear in DESIGN.md's registry table; CI
+//! greps for exactly that.
+
+// ---- Errors: spec documents -----------------------------------------------
+
+/// The document is not valid JSON at all.
+pub const E_JSON: &str = "E001";
+/// The document parses but is not an accepted spec (unknown field, bad
+/// `api_version`, wrong value type or range).
+pub const E_SPEC: &str = "E002";
+/// The spec parses but does not resolve into a runnable `Job` (unknown
+/// builtin network, invalid inline network or geometry, malformed ks).
+pub const E_RESOLVE: &str = "E003";
+
+// ---- Errors: IR ----------------------------------------------------------
+
+/// Structural graph violation: duplicate names, non-topological operand
+/// references, wrong arity, no input, no compute node.
+pub const E_IR_STRUCTURE: &str = "E010";
+/// Shape inference failed: adjacent operators disagree about the tensor
+/// flowing between them.
+pub const E_IR_SHAPE: &str = "E011";
+/// Fusion/legalization rejected the graph: an SFU op without a sole
+/// compute consumer, a residual add off the compute spine, an op the
+/// bank-op legalizer has no lowering for.
+pub const E_IR_LOWER: &str = "E012";
+
+// ---- Errors: mapping / plan ----------------------------------------------
+
+/// The network's bank demand (layers + residual reserves) exceeds the
+/// device grid's total banks.
+pub const E_BANK_OVERFLOW: &str = "E021";
+/// A full-network replica needs more ranks than one channel has
+/// (`ShardPolicy::Replicate`).
+pub const E_REPLICA_TOO_LARGE: &str = "E030";
+/// A layer-split segment exceeds its channel's bank budget.
+pub const E_SEGMENT_OVERFLOW: &str = "E031";
+/// Hybrid replica count is zero or exceeds the channel count.
+pub const E_BAD_HYBRID: &str = "E032";
+/// A lowered plan violates its own invariants (overlapping rank claims,
+/// duplicate bank assignment, an empty replica chain). Defensive: the
+/// lowering code should make this unreachable.
+pub const E_PLAN_INVARIANT: &str = "E033";
+
+// ---- Warnings: IR --------------------------------------------------------
+
+/// A non-terminal node has no consumers: dead compute that still gets a
+/// bank, prices rounds, and feeds nothing.
+pub const W_DEAD_NODE: &str = "W010";
+
+// ---- Warnings: mapping / capacity ----------------------------------------
+
+/// A layer is not fully resident at its configured k: extra waves or
+/// operand restaging serialize what the paper prices as parallel.
+pub const W_NOT_RESIDENT: &str = "W020";
+/// The configured k exceeds the layer's outer-loop count; the mapper
+/// silently clamps it.
+pub const W_K_CLAMPED: &str = "W021";
+/// No fully-resident k exists for this layer at any feasible k — the
+/// weights exceed bank capacity however the parallelism knob is set.
+pub const W_NO_RESIDENT_K: &str = "W022";
+/// The feasible k range is degenerate (only k=1 fits the column stack)
+/// while the outer loop has room: the parallelism knob is unusable.
+pub const W_DEGENERATE_K: &str = "W023";
+
+// ---- Warnings: plan ------------------------------------------------------
+
+/// A residual shortcut crosses a device boundary; every image pays the
+/// inter-channel hop premium on that edge.
+pub const W_RESIDUAL_HOP: &str = "W030";
+
+// ---- Warnings: serve / resilience ----------------------------------------
+
+/// The per-request deadline sits below the plan's analytic latency lower
+/// bound: every request times out.
+pub const W_DEADLINE_UNREACHABLE: &str = "W040";
+/// The bounded queue is smaller than the serve batch: a full batch can
+/// never accumulate, so admission sheds under any sustained load.
+pub const W_QUEUE_UNDERSIZED: &str = "W041";
+/// A crash window opens only after the replay horizon (all offered
+/// batches already executed): the fault never fires.
+pub const W_CRASH_BEYOND_HORIZON: &str = "W042";
+/// Faults are configured with seed 0 (the unset default): the schedule
+/// is valid but almost certainly not the intended experiment.
+pub const W_FAULTS_SEED_ZERO: &str = "W043";
+
+/// The full registry: `(code, one-line meaning)`. The uniqueness test in
+/// `tests/analysis_check.rs` and CI's DESIGN.md grep guard both walk this
+/// table.
+pub const REGISTRY: &[(&str, &str)] = &[
+    (E_JSON, "spec document is not valid JSON"),
+    (E_SPEC, "document is not an accepted spec (field/version/value)"),
+    (E_RESOLVE, "spec does not resolve into a runnable Job"),
+    (E_IR_STRUCTURE, "graph structure violation (names/arity/topology)"),
+    (E_IR_SHAPE, "shape inference failed between adjacent operators"),
+    (E_IR_LOWER, "fusion/legalization rejected the graph"),
+    (E_BANK_OVERFLOW, "bank demand exceeds the device grid"),
+    (E_REPLICA_TOO_LARGE, "replica does not fit one channel"),
+    (E_SEGMENT_OVERFLOW, "layer-split segment exceeds channel budget"),
+    (E_BAD_HYBRID, "hybrid replica count out of range"),
+    (E_PLAN_INVARIANT, "lowered plan violates its own invariants"),
+    (W_DEAD_NODE, "dead node: compute output nothing consumes"),
+    (W_NOT_RESIDENT, "layer not fully resident at configured k"),
+    (W_K_CLAMPED, "configured k exceeds outer count; clamped"),
+    (W_NO_RESIDENT_K, "no fully-resident k exists for layer"),
+    (W_DEGENERATE_K, "feasible k range collapsed to k=1"),
+    (W_RESIDUAL_HOP, "residual edge crosses a device boundary"),
+    (W_DEADLINE_UNREACHABLE, "deadline below analytic latency bound"),
+    (W_QUEUE_UNDERSIZED, "queue_cap below serve batch"),
+    (W_CRASH_BEYOND_HORIZON, "crash window beyond replay horizon"),
+    (W_FAULTS_SEED_ZERO, "fault schedule configured with seed 0"),
+];

@@ -1,0 +1,162 @@
+//! IR lints: structural validation, staged shape inference, lowering
+//! legality and dead-node detection over `pim::ir` operator graphs.
+//!
+//! The pass pipeline itself (`ir::lower`) already *rejects* bad graphs —
+//! but as one opaque `anyhow` error at resolve time. This pass re-runs
+//! the same stages separately so each failure gets its own stable code
+//! and, where derivable, a node-level location:
+//!
+//!   * `E010` — `Graph::validate` (names, arity, topological operand
+//!     order, exactly one input, ≥ 1 compute node).
+//!   * `E011` — shape inference, walked node-by-node here (instead of
+//!     through `shape::infer`) so the diagnostic lands on the first node
+//!     whose operands disagree.
+//!   * `E012` — SFU fusion / bank-op legalization rejections.
+//!   * `W010` — dead nodes: a non-terminal node nothing consumes. The
+//!     lowering accepts these, maps them to bank stages, and prices their
+//!     rounds — compute that feeds nothing.
+//!
+//! Stages short-circuit: a graph that fails `validate` is not
+//! shape-walked (operand indices may be out of range), and a graph that
+//! fails shape inference is not fused.
+
+use crate::ir::passes::{fuse, legalize};
+use crate::ir::shape::{output_shape, Shape};
+use crate::ir::Graph;
+
+use super::codes;
+use super::{Diagnostics, Location};
+
+/// Run every IR stage over `g`, appending findings to `d`.
+pub fn lint_graph(g: &Graph, d: &mut Diagnostics) {
+    if let Err(e) = g.validate() {
+        d.error(codes::E_IR_STRUCTURE, Location::Global, format!("{e:#}"));
+        return;
+    }
+
+    // Dead nodes are detectable as soon as the structure is sound. The
+    // last node is the graph output — having no consumers is its job.
+    let counts = g.consumer_counts();
+    let last = g.nodes.len() - 1;
+    for (i, node) in g.nodes.iter().enumerate() {
+        if i != last && counts[i] == 0 {
+            d.warn(
+                codes::W_DEAD_NODE,
+                Location::Node { node: node.name.clone() },
+                format!(
+                    "node `{}` ({:?}) has no consumers and is not the graph \
+                     output; it still lowers to a bank stage and prices rounds",
+                    node.name, node.op
+                ),
+            );
+        }
+    }
+
+    // Shape walk, node-attributed: the same arithmetic as `shape::infer`,
+    // stepped here so the first disagreement names its node.
+    let mut shapes: Vec<Shape> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let ins: Vec<Shape> = node.inputs.iter().map(|id| shapes[id.0]).collect();
+        match output_shape(node, &ins) {
+            Ok(s) => shapes.push(s),
+            Err(e) => {
+                d.error(
+                    codes::E_IR_SHAPE,
+                    Location::Node { node: node.name.clone() },
+                    format!("{e:#}"),
+                );
+                return;
+            }
+        }
+    }
+
+    // Fusion + legalization: sole-consumer SFU rules, residual spine
+    // placement, bank-op coverage.
+    let fused = match fuse(g) {
+        Ok(f) => f,
+        Err(e) => {
+            d.error(codes::E_IR_LOWER, Location::Global, format!("{e:#}"));
+            return;
+        }
+    };
+    if let Err(e) = legalize(g, &shapes, &fused) {
+        d.error(codes::E_IR_LOWER, Location::Global, format!("{e:#}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(g: &Graph) -> Diagnostics {
+        let mut d = Diagnostics::default();
+        lint_graph(g, &mut d);
+        d
+    }
+
+    fn base_graph() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 1 });
+        let c = g.conv("c1", x, 4, 3, 1, 1);
+        g.relu("relu", c);
+        g
+    }
+
+    #[test]
+    fn clean_graph_lints_clean() {
+        let d = lint(&base_graph());
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn structural_violation_is_e010() {
+        let mut g = base_graph();
+        // Second input node: validate demands exactly one.
+        g.input("x2", Shape::Flat { n: 4 });
+        let d = lint(&g);
+        assert_eq!(d.iter().next().unwrap().code, codes::E_IR_STRUCTURE);
+    }
+
+    #[test]
+    fn shape_disagreement_is_e011_on_the_node() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Mat { rows: 4, cols: 8 });
+        let w = g.linear("w", x, 16); // 4×16
+        // Contraction mismatch: (4×16)·(4×16) without transpose.
+        g.matmul("mm", w, w);
+        let d = lint(&g);
+        let first = d.iter().next().unwrap();
+        assert_eq!(first.code, codes::E_IR_SHAPE);
+        assert_eq!(first.location, Location::Node { node: "mm".into() });
+    }
+
+    #[test]
+    fn fusion_violation_is_e012() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::Map { h: 8, w: 8, c: 1 });
+        // SFU op directly on the input (no compute producer to fuse into).
+        g.relu("relu", x);
+        g.conv("c1", x, 4, 3, 1, 1);
+        let d = lint(&g);
+        assert!(d.iter().any(|f| f.code == codes::E_IR_LOWER), "{}", d.render_text());
+    }
+
+    #[test]
+    fn dead_node_is_w010() {
+        let mut g = base_graph();
+        // A second conv off the input; it becomes the terminal node, which
+        // strands `relu` (the previous terminal) with zero consumers.
+        let x = crate::ir::NodeId(0);
+        g.conv("orphan", x, 2, 1, 1, 0);
+        let d = lint(&g);
+        let dead: Vec<_> =
+            d.iter().filter(|f| f.code == codes::W_DEAD_NODE).collect();
+        // `relu` (previous terminal) now has no consumers either — both
+        // it and nothing else may be flagged; `orphan` is terminal so NOT
+        // flagged.
+        assert!(dead
+            .iter()
+            .all(|f| f.location == Location::Node { node: "relu".into() }));
+        assert_eq!(dead.len(), 1, "{}", d.render_text());
+    }
+}

@@ -1,0 +1,413 @@
+//! `pim::analysis` — the static Spec → IR → Plan verifier
+//! (DESIGN.md §Static analysis).
+//!
+//! The mapping pipeline only works when static invariants hold: weights
+//! resident in bank rows given the k knob and the DRAM geometry, legal
+//! bank-stage schedules, shard grids that fit channels × ranks, serve
+//! policies that can actually meet their own deadlines. Before this
+//! module those constraints surfaced as mid-pricing errors or
+//! silently-degenerate plans. The analyzer proves or refutes them *before
+//! any pricing runs*, and reports findings as [`Diagnostic`]s with stable
+//! machine-readable codes ([`codes`]) — cheap, explainable rejection for
+//! the thousands of machine-made candidate specs the ROADMAP's optimizer
+//! items will generate.
+//!
+//! Passes, in order (each sees only what the previous proved exists):
+//!
+//!   1. **Document** — JSON parse / spec schema / resolution into a
+//!      [`Job`] (`E001`–`E003`).
+//!   2. **IR lints** — graph structure, staged shape inference,
+//!      fusion/legalization, dead-node detection (`E010`–`E012`, `W010`).
+//!      Only operator-graph specs have an IR to lint.
+//!   3. **Plan** — the exact lowering the pricing session performs
+//!      (`plan::lower` on the same `MapConfig`), so a plan error found
+//!      here *is* the error pricing would hit (`E021`, `E030`–`E032`),
+//!      plus post-lowering invariant checks (`E033`, `W030`).
+//!   4. **Capacity** — per-layer residency proofs over the mapping
+//!      arithmetic, flagged before any binary search runs
+//!      (`W020`–`W023`).
+//!   5. **Serve** — deadline/queue/fault-schedule sanity
+//!      (`W040`–`W043`).
+//!
+//! The analyzer is *pure*: it never changes a priced result. Errors are
+//! findings pricing would also report (fail-fast, identical error
+//! values); warnings never block anything. Three surfaces:
+//! `pim-dram check` (text or `--json`), [`Job::check`] (invoked
+//! fail-fast at the head of `report()`/`serve()`), and the CI sweep over
+//! `examples/specs/` + the golden corpus in `examples/specs/bad/`.
+
+pub mod codes;
+
+mod capacity;
+mod ir_lints;
+mod plan_check;
+mod serve_check;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::api::{Job, NetworkSpec, Spec};
+use crate::plan::PlanError;
+use crate::util::json::Json;
+
+/// How bad a finding is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// The spec cannot run, or is guaranteed to fail when it does.
+    Error,
+    /// The spec runs, but something is degenerate or silently clamped.
+    Warning,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Error => write!(f, "error"),
+            Severity::Warning => write!(f, "warning"),
+        }
+    }
+}
+
+/// Where in the spec → IR → plan stack a finding anchors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Location {
+    /// The document as a whole.
+    Global,
+    /// A dotted spec path, e.g. `serve.resilience.deadline_ms`.
+    Spec { path: String },
+    /// An operator-graph node, by name.
+    Node { node: String },
+    /// A lowered bank-stage layer.
+    Layer { index: usize, name: String },
+    /// A planned device slot.
+    Device { device: usize, channel: usize },
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Location::Global => write!(f, "spec"),
+            Location::Spec { path } => write!(f, "spec:{path}"),
+            Location::Node { node } => write!(f, "node:{node}"),
+            Location::Layer { index, name } => write!(f, "layer[{index}]:{name}"),
+            Location::Device { device, channel } => {
+                write!(f, "device[{device}]@ch{channel}")
+            }
+        }
+    }
+}
+
+/// One finding: a stable code, a severity, a structured location and a
+/// human message. Plan-stage errors additionally carry the exact
+/// [`PlanError`] the pricing path would return, so fail-fast callers
+/// ([`Job::report`]/[`Job::serve`]) surface a bitwise-identical error.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub location: Location,
+    pub message: String,
+    /// The underlying plan error, when this diagnostic *is* one.
+    pub plan_error: Option<PlanError>,
+}
+
+impl Diagnostic {
+    /// The stable one-line form golden files and grep-driven tooling
+    /// match on: `severity[code] location` (no message — messages may
+    /// improve without breaking the contract).
+    pub fn summary(&self) -> String {
+        format!("{}[{}] {}", self.severity, self.code, self.location)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("code".to_string(), Json::Str(self.code.to_string()));
+        o.insert("severity".to_string(), Json::Str(self.severity.to_string()));
+        o.insert("location".to_string(), Json::Str(self.location.to_string()));
+        o.insert("message".to_string(), Json::Str(self.message.clone()));
+        Json::Obj(o)
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.summary(), self.message)
+    }
+}
+
+/// An ordered bag of findings from one analysis run.
+#[derive(Debug, Clone, Default)]
+pub struct Diagnostics {
+    diags: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn error(&mut self, code: &'static str, location: Location, message: String) {
+        self.diags.push(Diagnostic {
+            code,
+            severity: Severity::Error,
+            location,
+            message,
+            plan_error: None,
+        });
+    }
+
+    /// An error that carries the exact plan error pricing would return.
+    pub fn plan_failure(&mut self, code: &'static str, location: Location, cause: PlanError) {
+        self.diags.push(Diagnostic {
+            code,
+            severity: Severity::Error,
+            location,
+            message: cause.to_string(),
+            plan_error: Some(cause),
+        });
+    }
+
+    pub fn warn(&mut self, code: &'static str, location: Location, message: String) {
+        self.diags.push(Diagnostic {
+            code,
+            severity: Severity::Warning,
+            location,
+            message,
+            plan_error: None,
+        });
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diags.iter()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.diags.len()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// The first carried [`PlanError`], if any finding is one — what the
+    /// fail-fast read paths return.
+    pub fn plan_error(&self) -> Option<&PlanError> {
+        self.diags.iter().find_map(|d| d.plan_error.as_ref())
+    }
+
+    /// One `severity[code] location` line per finding — the stable form
+    /// the golden corpus pins (newline-terminated; empty string when
+    /// clean).
+    pub fn summary_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.summary());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Human rendering: one full line per finding.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Canonical JSON (byte-stable under `Json::pretty`): the findings in
+    /// order plus the totals.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "diagnostics".to_string(),
+            Json::Arr(self.diags.iter().map(Diagnostic::to_json).collect()),
+        );
+        o.insert("errors".to_string(), Json::Num(self.error_count() as f64));
+        o.insert("warnings".to_string(), Json::Num(self.warning_count() as f64));
+        Json::Obj(o)
+    }
+}
+
+/// Analyze a JSON spec document. Never panics, never errors: malformed
+/// input *is* the finding (`E001`/`E002`).
+pub fn check_text(text: &str) -> Diagnostics {
+    match Spec::from_json_text(text) {
+        Ok(spec) => check_spec(&spec),
+        Err(e) => {
+            let mut d = Diagnostics::default();
+            let msg = format!("{e:#}");
+            // `util::json` errors have a fixed prefix; anything else the
+            // parser accepted but the spec schema rejected.
+            let code = if msg.contains("json parse error at byte") {
+                codes::E_JSON
+            } else {
+                codes::E_SPEC
+            };
+            d.error(code, Location::Global, msg);
+            d
+        }
+    }
+}
+
+/// Analyze a parsed [`Spec`]. IR errors short-circuit (a graph that does
+/// not lower has no plan to analyze); a spec that does not resolve is a
+/// single `E003`.
+pub fn check_spec(spec: &Spec) -> Diagnostics {
+    let mut d = Diagnostics::default();
+    if let NetworkSpec::Graph(g) = &spec.network {
+        ir_lints::lint_graph(g, &mut d);
+        if d.has_errors() {
+            return d;
+        }
+    }
+    match Job::new(spec.clone()) {
+        Ok(job) => {
+            check_resolved(&job, &mut d);
+            d
+        }
+        Err(e) => {
+            d.error(codes::E_RESOLVE, Location::Global, format!("{e:#}"));
+            d
+        }
+    }
+}
+
+/// Analyze an already-resolved [`Job`] — the `Job::check` entry point.
+/// Resolution already succeeded, so the IR stage can only contribute
+/// warnings here.
+pub fn check_job(job: &Job) -> Diagnostics {
+    let mut d = Diagnostics::default();
+    if let NetworkSpec::Graph(g) = &job.spec().network {
+        ir_lints::lint_graph(g, &mut d);
+    }
+    check_resolved(job, &mut d);
+    d
+}
+
+/// The post-resolution passes: plan, then (only on a lowered plan)
+/// capacity, invariants and serve sanity.
+fn check_resolved(job: &Job, d: &mut Diagnostics) {
+    let Some(plan) = plan_check::plan_pass(job.network(), job.config(), d) else {
+        return;
+    };
+    plan_check::invariants(&plan, d);
+    plan_check::residual_hops(job.network(), &plan, d);
+    capacity::capacity_pass(job.network(), job.config(), &plan, d);
+    serve_check::serve_pass(job, d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ShardPolicy;
+
+    #[test]
+    fn clean_builtin_spec_has_no_findings() {
+        // paper_favorable's geometry keeps every pimnet layer resident.
+        let d = check_spec(&Spec::builtin("pimnet"));
+        assert!(d.is_empty(), "{}", d.render_text());
+        // The conservative die is tighter — conv2 wants 74 subarrays of a
+        // 32-subarray bank, a W020 wave warning — but still error-free.
+        let d = check_spec(&Spec::builtin("pimnet").with_preset("conservative"));
+        assert_eq!(d.error_count(), 0, "{}", d.render_text());
+        assert!(
+            d.iter().any(|f| f.code == codes::W_NOT_RESIDENT),
+            "{}",
+            d.render_text()
+        );
+    }
+
+    #[test]
+    fn document_errors_are_coded() {
+        // Truncated JSON → E001.
+        let d = check_text("{\"api_version\": 1");
+        assert_eq!(d.error_count(), 1);
+        assert_eq!(d.iter().next().unwrap().code, codes::E_JSON);
+        // Parses, but not a spec → E002.
+        let d = check_text("{\"api_version\": 1, \"speed\": \"max\"}");
+        assert_eq!(d.iter().next().unwrap().code, codes::E_SPEC);
+        let d = check_text("{\"api_version\": 2, \"network\": \"pimnet\"}");
+        assert_eq!(d.iter().next().unwrap().code, codes::E_SPEC);
+        // A spec that does not resolve → E003.
+        let d = check_spec(&Spec::builtin("lenet"));
+        assert_eq!(d.iter().next().unwrap().code, codes::E_RESOLVE);
+        assert!(d.iter().next().unwrap().message.contains("alexnet"));
+    }
+
+    #[test]
+    fn plan_errors_carry_the_exact_plan_error() {
+        // vgg16 needs 16 banks; a 1×1 grid of 8 banks overflows.
+        let spec = Spec::builtin("vgg16").with_preset("conservative").with_grid(1, 1);
+        let d = check_spec(&spec);
+        assert!(d.has_errors());
+        let diag = d.iter().next().unwrap();
+        assert_eq!(diag.code, codes::E_BANK_OVERFLOW);
+        // The carried error is the one pricing returns.
+        let job = Job::new(spec).unwrap();
+        let mut session = job.session();
+        let want = session.report(job.config()).unwrap_err();
+        assert_eq!(d.plan_error(), Some(&want));
+    }
+
+    #[test]
+    fn replica_too_large_and_bad_hybrid_are_distinct_codes() {
+        let spec = Spec::builtin("resnet18")
+            .with_preset("conservative")
+            .with_grid(4, 1);
+        let d = check_spec(&spec);
+        assert_eq!(d.iter().next().unwrap().code, codes::E_REPLICA_TOO_LARGE);
+
+        let spec = Spec::builtin("pimnet")
+            .with_preset("conservative")
+            .with_grid(2, 4)
+            .with_shard(ShardPolicy::Hybrid { replicas: 3 });
+        let d = check_spec(&spec);
+        assert_eq!(d.iter().next().unwrap().code, codes::E_BAD_HYBRID);
+    }
+
+    #[test]
+    fn rendering_is_stable_and_json_is_canonical() {
+        let mut d = Diagnostics::default();
+        d.warn(
+            codes::W_K_CLAMPED,
+            Location::Layer { index: 3, name: "conv4".into() },
+            "k=8 exceeds outer count 4; mapper clamps to 4".into(),
+        );
+        d.error(codes::E_RESOLVE, Location::Global, "boom".into());
+        assert_eq!(
+            d.summary_text(),
+            "warning[W021] layer[3]:conv4\nerror[E003] spec\n"
+        );
+        assert!(d.render_text().contains("warning[W021] layer[3]:conv4: k=8"));
+        let text = d.to_json().pretty();
+        // Byte-stable: parse → pretty is a fixed point.
+        let reparsed = Json::parse(&text).unwrap();
+        assert_eq!(reparsed.pretty(), text);
+        assert_eq!(reparsed.get("errors").unwrap().as_i64(), Some(1));
+        assert_eq!(reparsed.get("warnings").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn location_display_forms() {
+        for (loc, want) in [
+            (Location::Global, "spec"),
+            (Location::Spec { path: "serve.batch".into() }, "spec:serve.batch"),
+            (Location::Node { node: "q_proj".into() }, "node:q_proj"),
+            (Location::Layer { index: 0, name: "c1".into() }, "layer[0]:c1"),
+            (Location::Device { device: 2, channel: 1 }, "device[2]@ch1"),
+        ] {
+            assert_eq!(loc.to_string(), want);
+        }
+    }
+}

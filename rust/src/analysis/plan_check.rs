@@ -1,0 +1,183 @@
+//! Plan legality: run the exact lowering the pricing session performs and
+//! turn its failure modes into coded diagnostics, then verify invariants
+//! of the lowered plan the lowering code itself only promises implicitly.
+//!
+//! The lowering here is *identical* to `SimSession::report`'s (same
+//! `MapConfig` from the same `SimConfig`, same `plan::lower` arithmetic),
+//! so a plan error found statically is — by `PlanError: PartialEq`
+//! construction — the very value `report()`/`serve()` would return. The
+//! diagnostic carries it, which is what lets `Job::report` fail fast
+//! without changing a single priced or errored result.
+
+use crate::mapping::{MapConfig, MapError};
+use crate::plan::{self, ExecutionPlan, PlanError};
+use crate::sim::SimConfig;
+use crate::workloads::Network;
+
+use super::codes;
+use super::{Diagnostics, Location};
+
+/// The `MapConfig` the pricing session derives from a resolved
+/// `SimConfig` — shared with the capacity pass so every probe sees the
+/// same geometry the plan was lowered under.
+pub fn map_config(cfg: &SimConfig) -> MapConfig {
+    MapConfig {
+        geometry: cfg.geometry.clone(),
+        n_bits: cfg.n_bits,
+        ks: cfg.ks.clone(),
+    }
+}
+
+/// Lower `net` onto the grid; on failure emit the coded diagnostic
+/// (carrying the exact [`PlanError`]) and return `None`.
+pub fn plan_pass(net: &Network, cfg: &SimConfig, d: &mut Diagnostics) -> Option<ExecutionPlan> {
+    match plan::lower(net, &map_config(cfg), cfg.shard) {
+        Ok(plan) => Some(plan),
+        Err(e) => {
+            let code = match &e {
+                PlanError::Map(MapError::BankOverflow { .. }) => codes::E_BANK_OVERFLOW,
+                // `map_network` clamps k before mapping, so a KTooLarge
+                // escaping it would breach its own contract.
+                PlanError::Map(MapError::KTooLarge { .. }) => codes::E_PLAN_INVARIANT,
+                PlanError::ReplicaTooLarge { .. } => codes::E_REPLICA_TOO_LARGE,
+                PlanError::SegmentOverflow { .. } => codes::E_SEGMENT_OVERFLOW,
+                PlanError::BadHybrid { .. } => codes::E_BAD_HYBRID,
+            };
+            d.plan_failure(code, Location::Global, e);
+            None
+        }
+    }
+}
+
+/// Invariants a lowered plan must satisfy (all `E033` — defensive: the
+/// lowering should make them unreachable) plus the residual-hop warning.
+pub fn invariants(plan: &ExecutionPlan, d: &mut Diagnostics) {
+    // Every replica pipeline must have at least one device.
+    for (r, chain) in plan.chains.iter().enumerate() {
+        if chain.is_empty() {
+            d.error(
+                codes::E_PLAN_INVARIANT,
+                Location::Global,
+                format!("replica {r} lowered to an empty device chain"),
+            );
+        }
+    }
+
+    // No two devices may claim the same (channel, rank) slot.
+    let mut claimed: Vec<(usize, usize, usize)> = Vec::new(); // (ch, rank, dev)
+    for dev in &plan.devices {
+        for rank in dev.ranks.clone() {
+            if let Some(&(_, _, other)) =
+                claimed.iter().find(|&&(ch, r, _)| ch == dev.channel && r == rank)
+            {
+                d.error(
+                    codes::E_PLAN_INVARIANT,
+                    Location::Device { device: dev.id, channel: dev.channel },
+                    format!(
+                        "device {} claims rank {} on channel {} already owned \
+                         by device {other}",
+                        dev.id, rank, dev.channel
+                    ),
+                );
+            } else {
+                claimed.push((dev.channel, rank, dev.id));
+            }
+        }
+    }
+
+    // One bank per stage: the mapping may not assign two layers one bank.
+    let mut banks: Vec<usize> =
+        plan.mapping.layers.iter().map(|m| m.bank).collect();
+    banks.sort_unstable();
+    if banks.windows(2).any(|w| w[0] == w[1]) {
+        d.error(
+            codes::E_PLAN_INVARIANT,
+            Location::Global,
+            "two bank stages claim the same bank in the layer mapping".to_string(),
+        );
+    }
+}
+
+/// Residual edges whose endpoints land on different devices: legal (the
+/// engine prices the inter-channel hop), but every image pays the premium
+/// — worth surfacing before a sweep bakes it in.
+pub fn residual_hops(net: &Network, plan: &ExecutionPlan, d: &mut Diagnostics) {
+    if plan.replicas == 0 {
+        return;
+    }
+    // Replica chains are structurally identical; inspect replica 0.
+    for res in &net.residuals {
+        let from = plan.device_hosting(0, res.from_layer);
+        let into = plan.device_hosting(0, res.into_layer);
+        if let (Some(from), Some(into)) = (from, into) {
+            if from != into {
+                let name = &net.layers[res.into_layer].name;
+                d.warn(
+                    codes::W_RESIDUAL_HOP,
+                    Location::Layer { index: res.into_layer, name: name.clone() },
+                    format!(
+                        "residual from layer {} ({}) crosses devices {} → {}: \
+                         every image pays the inter-channel hop on this edge",
+                        res.from_layer, net.layers[res.from_layer].name, from, into
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ShardPolicy;
+    use crate::workloads::nets::{pimnet, resnet18};
+
+    fn check(net: &Network, cfg: &SimConfig) -> Diagnostics {
+        let mut d = Diagnostics::default();
+        if let Some(plan) = plan_pass(net, cfg, &mut d) {
+            invariants(&plan, &mut d);
+            residual_hops(net, &plan, &mut d);
+        }
+        d
+    }
+
+    #[test]
+    fn healthy_plans_have_no_findings() {
+        let cfg = SimConfig::conservative(8);
+        let d = check(&pimnet(), &cfg);
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn plan_failure_codes_match_variants() {
+        let net = pimnet();
+        let mut cfg = SimConfig::conservative(8);
+        cfg.geometry.channels = 2;
+        cfg.shard = ShardPolicy::Hybrid { replicas: 5 };
+        let d = check(&net, &cfg);
+        assert_eq!(d.iter().next().unwrap().code, codes::E_BAD_HYBRID);
+        assert!(d.plan_error().is_some());
+    }
+
+    #[test]
+    fn residual_crossing_a_split_is_w030() {
+        // resnet18 layer-split across 2 channels: at least one of its 8
+        // shortcuts spans the segment boundary.
+        let net = resnet18();
+        let mut cfg = SimConfig::conservative(8);
+        cfg.geometry.channels = 2;
+        cfg.shard = ShardPolicy::LayerSplit;
+        let d = check(&net, &cfg);
+        assert!(!d.has_errors(), "{}", d.render_text());
+        assert!(
+            d.iter().any(|f| f.code == codes::W_RESIDUAL_HOP),
+            "{}",
+            d.render_text()
+        );
+        // Replicated single-device plans never cross.
+        let mut rep = SimConfig::conservative(8);
+        rep.geometry.channels = 2;
+        let d = check(&net, &rep);
+        assert!(d.iter().all(|f| f.code != codes::W_RESIDUAL_HOP));
+    }
+}

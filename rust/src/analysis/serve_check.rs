@@ -1,0 +1,205 @@
+//! Serve/resilience sanity: misconfigurations the serving layer accepts
+//! and then quietly turns into a degenerate experiment — every request
+//! timing out, every admission shed, a carefully-specified crash that can
+//! never fire.
+//!
+//!   * `W040` — a per-request deadline below the plan's analytic latency
+//!     bound. One batch takes at least `latency_ns` even with a fault-free
+//!     fleet, so every request is dead on arrival.
+//!   * `W041` — `queue_cap` smaller than the serve batch: a full batch
+//!     can never accumulate behind one device, so sustained load sheds.
+//!   * `W042` — a crash window that opens at or after the replay horizon
+//!     (the number of batches the run offers): the fault never fires and
+//!     the "degraded" experiment silently measures a healthy fleet.
+//!   * `W043` — a non-noop fault schedule with `seed: 0` (the unset
+//!     default): valid, deterministic, and almost never the intended
+//!     experiment.
+//!
+//! `W040` is the one pass that needs a priced number; it prices through a
+//! *fresh* `job.session()` (never `job.report()`, which itself runs this
+//! analyzer fail-fast — pricing through it would recurse).
+
+use crate::api::Job;
+use crate::util::ceil_div;
+
+use super::codes;
+use super::{Diagnostics, Location};
+
+fn spec_path(path: &str) -> Location {
+    Location::Spec { path: path.to_string() }
+}
+
+pub fn serve_pass(job: &Job, d: &mut Diagnostics) {
+    let Some(serve) = &job.spec().serve else { return };
+    let batch = serve.batch.max(1);
+
+    if let Some(res) = &serve.resilience {
+        if res.queue_cap < batch {
+            d.warn(
+                codes::W_QUEUE_UNDERSIZED,
+                spec_path("serve.resilience.queue_cap"),
+                format!(
+                    "queue_cap {} is smaller than the serve batch {batch}: a \
+                     full batch can never queue behind one device, so \
+                     sustained load is shed",
+                    res.queue_cap
+                ),
+            );
+        }
+        if let Some(deadline_ms) = res.deadline_ms {
+            // Analytic lower bound: one batch on a fault-free device. A
+            // fresh session — `job.report()` would recurse through check().
+            let mut session = job.session();
+            if let Ok(report) = session.report(job.config()) {
+                let deadline_ns = deadline_ms as f64 * 1e6;
+                if deadline_ns < report.latency_ns {
+                    d.warn(
+                        codes::W_DEADLINE_UNREACHABLE,
+                        spec_path("serve.resilience.deadline_ms"),
+                        format!(
+                            "deadline {deadline_ms} ms is below the plan's \
+                             analytic batch latency {:.3} ms: every request \
+                             times out even on a fault-free fleet",
+                            report.latency_ns / 1e6
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    if let Some(faults) = &serve.faults {
+        if faults.is_noop() {
+            return;
+        }
+        if faults.seed == 0 {
+            d.warn(
+                codes::W_FAULTS_SEED_ZERO,
+                spec_path("serve.faults.seed"),
+                "fault schedule uses seed 0 (the unset default); set an \
+                 explicit seed so the experiment is the one you meant"
+                    .to_string(),
+            );
+        }
+        // Batches the run actually offers each device, at most: a crash
+        // whose window opens later can never fire.
+        let horizon = ceil_div(job.spec().images.max(1), batch) as u64;
+        for (ci, crash) in faults.crash.iter().enumerate() {
+            if crash.after >= horizon {
+                d.warn(
+                    codes::W_CRASH_BEYOND_HORIZON,
+                    spec_path(&format!("serve.faults.crash[{ci}]")),
+                    format!(
+                        "crash of device {} opens after {} batch(es) but the \
+                         run offers only {horizon}: the fault never fires",
+                        crash.device, crash.after
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Spec;
+    use crate::coordinator::{CrashSpec, FaultSpec, ResilienceSpec};
+
+    fn check(spec: Spec) -> Diagnostics {
+        let job = Job::new(spec).unwrap();
+        let mut d = Diagnostics::default();
+        serve_pass(&job, &mut d);
+        d
+    }
+
+    fn serving_spec() -> Spec {
+        let mut spec = Spec::builtin("pimnet").with_preset("conservative");
+        spec.serve = Some(Default::default());
+        spec
+    }
+
+    #[test]
+    fn specs_without_serve_are_silent() {
+        let d = check(Spec::builtin("pimnet").with_preset("conservative"));
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn undersized_queue_is_w041() {
+        let mut spec = serving_spec();
+        let serve = spec.serve.as_mut().unwrap();
+        serve.batch = 8;
+        serve.resilience =
+            Some(ResilienceSpec { queue_cap: 4, ..Default::default() });
+        let d = check(spec);
+        let f = d.iter().next().unwrap();
+        assert_eq!(f.code, codes::W_QUEUE_UNDERSIZED);
+        assert_eq!(
+            f.location,
+            Location::Spec { path: "serve.resilience.queue_cap".into() }
+        );
+    }
+
+    #[test]
+    fn impossible_deadline_is_w040_and_a_generous_one_is_not() {
+        // Self-calibrating: price the batch first, then set deadlines on
+        // either side of it.
+        let job = Job::new(serving_spec()).unwrap();
+        let mut session = job.session();
+        let latency_ns = session.report(job.config()).unwrap().latency_ns;
+        let lo_ms = (latency_ns / 1e6 / 2.0).floor() as u64;
+        let hi_ms = (latency_ns / 1e6 * 2.0).ceil() as u64 + 1;
+
+        for (deadline_ms, want) in [(lo_ms, true), (hi_ms, false)] {
+            let mut spec = serving_spec();
+            spec.serve.as_mut().unwrap().resilience = Some(ResilienceSpec {
+                deadline_ms: Some(deadline_ms),
+                ..Default::default()
+            });
+            let d = check(spec);
+            assert_eq!(
+                d.iter().any(|f| f.code == codes::W_DEADLINE_UNREACHABLE),
+                want,
+                "deadline {deadline_ms} ms vs latency {latency_ns} ns:\n{}",
+                d.render_text()
+            );
+        }
+    }
+
+    #[test]
+    fn fault_schedule_findings_are_w042_and_w043() {
+        let mut spec = serving_spec();
+        spec.images = 64;
+        let serve = spec.serve.as_mut().unwrap();
+        serve.batch = 8; // horizon: 64 / 8 = 8 batches
+        serve.faults = Some(FaultSpec {
+            seed: 0,
+            transient: 0.1,
+            crash: vec![
+                CrashSpec { device: 0, after: 2, down_for: None },
+                CrashSpec { device: 1, after: 8, down_for: Some(2) },
+            ],
+            ..Default::default()
+        });
+        let d = check(spec);
+        assert!(d.iter().any(|f| f.code == codes::W_FAULTS_SEED_ZERO));
+        let beyond: Vec<_> = d
+            .iter()
+            .filter(|f| f.code == codes::W_CRASH_BEYOND_HORIZON)
+            .collect();
+        assert_eq!(beyond.len(), 1, "{}", d.render_text());
+        assert_eq!(
+            beyond[0].location,
+            Location::Spec { path: "serve.faults.crash[1]".into() }
+        );
+    }
+
+    #[test]
+    fn noop_faults_do_not_warn_about_their_seed() {
+        let mut spec = serving_spec();
+        spec.serve.as_mut().unwrap().faults = Some(FaultSpec::default());
+        let d = check(spec);
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+}

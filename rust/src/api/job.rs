@@ -97,9 +97,23 @@ impl Job {
         SimSession::new(&self.net)
     }
 
+    /// Run the static analyzer (`pim::analysis`) over this job: plan
+    /// legality, per-layer residency, serve sanity. Warnings never block;
+    /// errors carry the exact [`PlanError`] pricing would return.
+    pub fn check(&self) -> crate::analysis::Diagnostics {
+        crate::analysis::check_job(self)
+    }
+
     /// Scalar report (the sweep read path). One-shot: uses a fresh
     /// session; hold a [`Job::session`] to amortize across calls.
+    ///
+    /// Fails fast through [`Job::check`]: a statically-provable plan
+    /// failure returns *the identical error value* pricing would have
+    /// produced, without starting the session.
     pub fn report(&self) -> Result<SimReport, PlanError> {
+        if let Some(e) = self.check().plan_error() {
+            return Err(e.clone());
+        }
         let mut session = self.session();
         session.report(&self.cfg)
     }
@@ -148,6 +162,11 @@ impl Job {
     /// backend, then `coordinator::PoolConfig`/`MultiDeviceServer` are
     /// built from the spec's serve options (defaults if absent).
     pub fn serve(&self) -> Result<ServeHandle> {
+        // Same fail-fast as `report()`: don't start worker threads for a
+        // plan the analyzer can already prove unpriceable.
+        if let Some(e) = self.check().plan_error() {
+            return Err(e.clone().into());
+        }
         let opts = self.spec.serve.clone().unwrap_or_default();
         let mut session = self.session();
         let report = session.report(&self.cfg)?;
@@ -212,6 +231,7 @@ pub struct ServeHandle {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests assert by panicking
 mod tests {
     use super::*;
     use crate::plan::ShardPolicy;
@@ -258,6 +278,29 @@ mod tests {
         spec.device.rows = Some(4);
         let err = Job::new(spec).unwrap_err();
         assert!(err.to_string().contains("rows"), "{err}");
+    }
+
+    #[test]
+    fn check_fails_fast_with_the_pricing_error() {
+        // 16 banks overflow a 1×1 grid: the analyzer proves it, and
+        // `report()` returns the carried error without pricing.
+        let job = Job::new(
+            Spec::builtin("vgg16").with_preset("conservative").with_grid(1, 1),
+        )
+        .unwrap();
+        let d = job.check();
+        assert!(d.has_errors());
+        let fast = job.report().unwrap_err();
+        assert_eq!(Some(&fast), d.plan_error());
+        // A healthy job checks clean and still prices; a warnings-only job
+        // (conservative pimnet carries a W020 residency wave) prices too —
+        // only carried errors block the read path.
+        let ok = Job::new(Spec::builtin("pimnet")).unwrap();
+        assert!(ok.check().is_empty(), "{}", ok.check().render_text());
+        ok.report().unwrap();
+        let warned = Job::new(Spec::builtin("pimnet").with_preset("conservative")).unwrap();
+        assert!(!warned.check().has_errors());
+        warned.report().unwrap();
     }
 
     #[test]

@@ -28,6 +28,12 @@
 //! `tests/spec_roundtrip.rs` keeps them parseable and byte-stable, and
 //! `pim-dram spec` validates or reprints them from the CLI.
 
+// The api layer is the public construction path: callers hand it
+// arbitrary documents, so panicking on them (unwrap) or cloning specs to
+// pass by value are bugs, not style. CI runs clippy with -D warnings.
+#![warn(clippy::needless_pass_by_value)]
+#![warn(clippy::unwrap_used)]
+
 pub mod job;
 pub mod spec;
 

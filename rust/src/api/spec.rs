@@ -1464,6 +1464,7 @@ impl Spec {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests assert by panicking
 mod tests {
     use super::*;
 

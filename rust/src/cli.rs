@@ -31,11 +31,17 @@ pub struct Args {
     pub flags: BTreeMap<String, String>,
 }
 
+/// Flags that never take a value. Without this list `--print spec.json`
+/// would swallow the path as the flag's value instead of leaving it a
+/// positional.
+const BOOLEAN_FLAGS: &[&str] = &["balanced", "deny-warnings", "json", "print", "report"];
+
 impl Args {
     /// Parse `argv`. Both `--key value` and `--key=value` are accepted;
     /// a value may start with a single `-` (e.g. a negative offset). A
-    /// `--key` followed by another `--flag` (or by nothing) is a boolean
-    /// set to `"true"`. A repeated flag keeps its last value.
+    /// `--key` followed by another `--flag` (or by nothing), or named in
+    /// [`BOOLEAN_FLAGS`], is a boolean set to `"true"`. A repeated flag
+    /// keeps its last value.
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
@@ -50,6 +56,7 @@ impl Args {
                     args.flags.insert(key.to_string(), val.to_string());
                 } else {
                     let val = match it.peek() {
+                        _ if BOOLEAN_FLAGS.contains(&body) => "true".to_string(),
                         Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
                         _ => "true".to_string(),
                     };
@@ -122,6 +129,7 @@ const SERVE_FLAGS: &[&str] = &[
     "report",
 ];
 const SPEC_CMD_FLAGS: &[&str] = &["print"];
+const CHECK_FLAGS: &[&str] = &["json", "deny-warnings"];
 const ROOFLINE_FLAGS: &[&str] = &["network"];
 const CIRCUIT_FLAGS: &[&str] = &["samples"];
 
@@ -147,6 +155,9 @@ COMMANDS:
   optimize   Plan the per-layer parallelism vector  --balanced
   spec       Validate spec JSON files: pim-dram spec [--print] <file>...
              (--print emits the canonical form examples/specs/ uses)
+  check      Static Spec→IR→Plan analysis with coded diagnostics:
+             pim-dram check [--json] [--deny-warnings] <file>...
+             (exit 1 on any error; --deny-warnings also fails on warnings)
   roofline   Fig 1: Titan Xp roofline for a network  --network <name>
   circuit    Fig 14/15: AND transient + Monte Carlo  --samples <n>
   tables     Tables I/II: bank peripheral area & power
@@ -191,6 +202,10 @@ pub fn run(argv: &[String]) -> Result<()> {
         "spec" => {
             args.expect_flags(SPEC_CMD_FLAGS)?;
             cmd_spec(&args)
+        }
+        "check" => {
+            args.expect_flags(CHECK_FLAGS)?;
+            cmd_check(&args)
         }
         "roofline" => {
             args.expect_flags(ROOFLINE_FLAGS)?;
@@ -433,18 +448,36 @@ fn cmd_optimize(args: &Args) -> Result<()> {
 
 /// Validate spec files and show what they resolve to; `--print` emits the
 /// canonical JSON form instead (regenerates `examples/specs/` content).
+/// A file that fails validation prints its coded diagnostics and the
+/// command exits nonzero — after every file has been processed.
 fn cmd_spec(args: &Args) -> Result<()> {
     anyhow::ensure!(
         !args.positional.is_empty(),
         "usage: pim-dram spec [--print] <file.json>..."
     );
+    let mut failures = 0usize;
     for path in &args.positional {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {path}"))?;
-        let spec = Spec::from_json_text(&text)
-            .map_err(|e| e.context(format!("parsing {path}")))?;
-        let job = Job::new(spec.clone())
-            .map_err(|e| e.context(format!("validating {path}")))?;
+        let resolved = Spec::from_json_text(&text)
+            .map_err(anyhow::Error::from)
+            .and_then(|spec| {
+                let job = Job::new(spec.clone())?;
+                Ok((spec, job))
+            });
+        let (spec, job) = match resolved {
+            Ok(pair) => pair,
+            Err(_) => {
+                // Re-derive the failure as coded diagnostics (E001-E003,
+                // or node-attributed IR errors for inline graphs).
+                let findings = crate::analysis::check_text(&text);
+                for line in findings.render_text().lines() {
+                    println!("{path}: {line}");
+                }
+                failures += 1;
+                continue;
+            }
+        };
         if args.flags.contains_key("print") {
             print!("{}", spec.to_json_text());
         } else {
@@ -462,6 +495,62 @@ fn cmd_spec(args: &Args) -> Result<()> {
                 if spec.serve.is_some() { ", servable" } else { "" }
             );
         }
+    }
+    if failures > 0 {
+        anyhow::bail!(
+            "{failures} of {} spec file(s) failed validation",
+            args.positional.len()
+        );
+    }
+    Ok(())
+}
+
+/// Static Spec → IR → Plan analysis (`pim::analysis`, DESIGN.md §Static
+/// analysis) over one or more spec documents. Every finding carries a
+/// stable code; errors — or warnings under `--deny-warnings` — fail the
+/// command after all files are reported.
+fn cmd_check(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "usage: pim-dram check [--json] [--deny-warnings] <file.json>..."
+    );
+    let deny_warnings = args.flags.contains_key("deny-warnings");
+    let as_json = args.flags.contains_key("json");
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    let mut files = BTreeMap::new();
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        let d = crate::analysis::check_text(&text);
+        errors += d.error_count();
+        warnings += d.warning_count();
+        if as_json {
+            files.insert(path.clone(), d.to_json());
+        } else if d.is_empty() {
+            println!("{path}: ok");
+        } else {
+            for line in d.render_text().lines() {
+                println!("{path}: {line}");
+            }
+        }
+    }
+    if as_json {
+        let mut o = BTreeMap::new();
+        o.insert("files".to_string(), crate::util::json::Json::Obj(files));
+        o.insert("errors".to_string(), crate::util::json::Json::Num(errors as f64));
+        o.insert(
+            "warnings".to_string(),
+            crate::util::json::Json::Num(warnings as f64),
+        );
+        print!("{}", crate::util::json::Json::Obj(o).pretty());
+    }
+    if errors > 0 || (deny_warnings && warnings > 0) {
+        anyhow::bail!(
+            "check failed: {errors} error(s), {warnings} warning(s) across {} \
+             file(s){}",
+            args.positional.len(),
+            if deny_warnings { " (--deny-warnings)" } else { "" }
+        );
     }
     Ok(())
 }
@@ -782,6 +871,17 @@ mod tests {
     }
 
     #[test]
+    fn boolean_flags_do_not_swallow_positionals() {
+        let a = parse("check spec.json --deny-warnings other.json --json");
+        assert_eq!(a.flag("deny-warnings", "false"), "true");
+        assert_eq!(a.flag("json", "false"), "true");
+        assert_eq!(a.positional, vec!["spec.json", "other.json"]);
+        let a = parse("spec --print spec.json");
+        assert_eq!(a.flag("print", "false"), "true");
+        assert_eq!(a.positional, vec!["spec.json"]);
+    }
+
+    #[test]
     fn malformed_flags_rejected() {
         for bad in ["simulate --", "simulate --=3"] {
             let v: Vec<String> = bad.split_whitespace().map(String::from).collect();
@@ -841,18 +941,55 @@ mod tests {
 
     #[test]
     fn spec_files_drive_the_cli() {
-        let spec = Spec::builtin("pimnet").with_preset("conservative");
+        // Default (paper_favorable) preset: resident everywhere, so the
+        // spec survives `check --deny-warnings` below.
+        let spec = Spec::builtin("pimnet");
         let path = std::env::temp_dir()
             .join(format!("pim_cli_spec_{}.json", std::process::id()));
         std::fs::write(&path, spec.to_json_text()).unwrap();
         let p = path.display();
         run_str(&format!("spec {p}")).unwrap();
         run_str(&format!("spec --print {p}")).unwrap();
+        run_str(&format!("check {p}")).unwrap();
+        run_str(&format!("check --json --deny-warnings {p}")).unwrap();
         run_str(&format!("simulate --spec {p}")).unwrap();
         // Flags override the file.
         run_str(&format!("simulate --spec {p} --network alexnet --k 2")).unwrap();
         run_str(&format!("config {p}")).unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spec_and_check_fail_on_bad_documents() {
+        let dir = std::env::temp_dir();
+        let bad = dir.join(format!("pim_cli_bad_{}.json", std::process::id()));
+        std::fs::write(&bad, "{\"api_version\": 1").unwrap();
+        let good = dir.join(format!("pim_cli_good_{}.json", std::process::id()));
+        std::fs::write(&good, Spec::builtin("pimnet").to_json_text()).unwrap();
+        let (b, g) = (bad.display(), good.display());
+
+        // `spec` processes every file, then exits nonzero.
+        let err = run_str(&format!("spec {g} {b}")).unwrap_err().to_string();
+        assert!(err.contains("1 of 2"), "{err}");
+        // `check` fails on errors, and --deny-warnings promotes warnings.
+        assert!(run_str(&format!("check {b}")).is_err());
+        run_str(&format!("check {g}")).unwrap();
+
+        // A spec with a warning (k exceeds pimnet's head outer count)
+        // passes by default and fails under --deny-warnings.
+        let warn = dir.join(format!("pim_cli_warn_{}.json", std::process::id()));
+        let spec = Spec::builtin("pimnet").with_preset("conservative").with_ks(vec![64]);
+        std::fs::write(&warn, spec.to_json_text()).unwrap();
+        let w = warn.display();
+        run_str(&format!("check {w}")).unwrap();
+        let err = run_str(&format!("check --deny-warnings {w}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--deny-warnings"), "{err}");
+
+        for f in [bad, good, warn] {
+            std::fs::remove_file(f).ok();
+        }
     }
 
     #[test]

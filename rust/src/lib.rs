@@ -30,6 +30,11 @@
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for reproduction results.
 
+// Crate-wide: a reintroduced clone anywhere fails CI (clippy runs with
+// -D warnings). Previously scoped to the sim/plan hot paths only.
+#![warn(clippy::redundant_clone)]
+
+pub mod analysis;
 pub mod api;
 pub mod arch;
 pub mod bench_harness;

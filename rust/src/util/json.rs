@@ -4,6 +4,12 @@
 //! files use: objects, arrays, strings (with escapes), numbers, booleans,
 //! null. Numbers are kept as `f64` plus an exact `i64` when integral.
 
+// This parser faces arbitrary caller documents: every malformed input
+// must come back as a `JsonError`, never a panic. CI runs clippy with
+// -D warnings.
+#![warn(clippy::needless_pass_by_value)]
+#![warn(clippy::unwrap_used)]
+
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -404,7 +410,10 @@ impl<'a> Parser<'a> {
                     let rest = &self.bytes[self.pos..];
                     let s = std::str::from_utf8(rest)
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let ch = s.chars().next().unwrap();
+                    let ch = s
+                        .chars()
+                        .next()
+                        .ok_or_else(|| self.err("unexpected end of string"))?;
                     out.push(ch);
                     self.pos += ch.len_utf8();
                 }
@@ -444,6 +453,7 @@ impl<'a> Parser<'a> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests assert by panicking
 mod tests {
     use super::*;
 

@@ -1,0 +1,119 @@
+//! The analyzer's external contract (DESIGN.md §Static analysis):
+//!
+//!   * every spec in `examples/specs/` checks with **zero errors**;
+//!   * every case in `examples/specs/bad/` reproduces its `.diag` golden
+//!     (`severity[code] location` lines) **exactly**;
+//!   * diagnostic codes are unique and every emitted code is registered;
+//!   * the fail-fast read path returns the identical error value the
+//!     pricing path would have produced.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use pim_dram::analysis::{check_text, codes};
+use pim_dram::api::{Job, Spec};
+
+fn specs_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/specs")
+}
+
+fn json_files(dir: &Path) -> Vec<PathBuf> {
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.expect("readable dir entry").path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .collect();
+    paths.sort();
+    paths
+}
+
+#[test]
+fn example_specs_check_without_errors() {
+    let paths = json_files(&specs_dir());
+    assert!(paths.len() >= 4, "corpus went missing");
+    for path in paths {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let d = check_text(&text);
+        assert_eq!(
+            d.error_count(),
+            0,
+            "{} must check clean:\n{}",
+            path.display(),
+            d.render_text()
+        );
+    }
+}
+
+#[test]
+fn bad_corpus_matches_the_goldens_exactly() {
+    let paths = json_files(&specs_dir().join("bad"));
+    assert!(paths.len() >= 7, "bad corpus went missing");
+    for path in paths {
+        let golden = path.with_extension("diag");
+        let want = std::fs::read_to_string(&golden)
+            .unwrap_or_else(|e| panic!("{}: {e}", golden.display()));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let d = check_text(&text);
+        assert!(!d.is_empty(), "{} must have findings", path.display());
+        assert_eq!(
+            d.summary_text(),
+            want,
+            "{} drifted from its golden — codes/locations are a frozen \
+             contract (full output:\n{})",
+            path.display(),
+            d.render_text()
+        );
+    }
+}
+
+#[test]
+fn registry_codes_are_unique_and_findings_are_registered() {
+    let mut seen = BTreeSet::new();
+    for (code, meaning) in codes::REGISTRY {
+        assert!(seen.insert(*code), "code {code} registered twice");
+        assert!(!meaning.is_empty(), "{code} has no meaning");
+        let (kind, num) = code.split_at(1);
+        assert!(kind == "E" || kind == "W", "{code}: bad prefix");
+        assert_eq!(num.len(), 3, "{code}: codes are <E|W>NNN");
+        num.parse::<u32>().unwrap_or_else(|_| panic!("{code}: bad number"));
+    }
+    // Every code the corpus actually emits is in the registry.
+    let registered: BTreeSet<_> = codes::REGISTRY.iter().map(|(c, _)| *c).collect();
+    for path in json_files(&specs_dir().join("bad")) {
+        let text = std::fs::read_to_string(&path).unwrap();
+        for diag in check_text(&text).iter() {
+            assert!(
+                registered.contains(diag.code),
+                "{}: {} not in codes::REGISTRY",
+                path.display(),
+                diag.code
+            );
+        }
+    }
+}
+
+#[test]
+fn fail_fast_error_is_the_pricing_error() {
+    let text =
+        std::fs::read_to_string(specs_dir().join("bad/plan_overflow.json")).unwrap();
+    let d = check_text(&text);
+    let carried = d.plan_error().expect("plan_overflow carries its PlanError");
+
+    let job = Job::new(Spec::from_json_text(&text).unwrap()).unwrap();
+    // The fail-fast read path returns it...
+    assert_eq!(&job.report().unwrap_err(), carried);
+    // ...and it is exactly what the session would have produced.
+    let mut session = job.session();
+    assert_eq!(&session.report(job.config()).unwrap_err(), carried);
+}
+
+#[test]
+fn deny_warnings_severity_split_is_real() {
+    // The serve case is all warnings: no errors, nonzero warnings — the
+    // boundary `--deny-warnings` exists to promote.
+    let text = std::fs::read_to_string(specs_dir().join("bad/serve_misconfigured.json"))
+        .unwrap();
+    let d = check_text(&text);
+    assert_eq!(d.error_count(), 0, "{}", d.render_text());
+    assert_eq!(d.warning_count(), 3, "{}", d.render_text());
+}
