@@ -95,6 +95,20 @@ pub const W_CRASH_BEYOND_HORIZON: &str = "W042";
 /// is valid but almost certainly not the intended experiment.
 pub const W_FAULTS_SEED_ZERO: &str = "W043";
 
+// ---- Warnings: mapping search (pim::mapopt) -------------------------------
+
+/// The search mapper is selected with a candidate budget of zero: no
+/// candidate beyond the paper mapping is ever priced, so the "search"
+/// degenerates to the paper result.
+pub const W_SEARCH_BUDGET_ZERO: &str = "W050";
+/// A layer's tiling knob is degenerate at the spec's k (MAC wider than a
+/// row, no inner dimension, or the outer loop collapses): the search can
+/// only revisit the paper staging for it.
+pub const W_TILING_DEGENERATE: &str = "W051";
+/// The configured beam width is below 1; the optimizer silently clamps
+/// it to 1, expanding only the single best-bounded k-branch.
+pub const W_BEAM_CLAMPED: &str = "W052";
+
 /// The full registry: `(code, one-line meaning)`. The uniqueness test in
 /// `tests/analysis_check.rs` and CI's DESIGN.md grep guard both walk this
 /// table.
@@ -120,4 +134,7 @@ pub const REGISTRY: &[(&str, &str)] = &[
     (W_QUEUE_UNDERSIZED, "queue_cap below serve batch"),
     (W_CRASH_BEYOND_HORIZON, "crash window beyond replay horizon"),
     (W_FAULTS_SEED_ZERO, "fault schedule configured with seed 0"),
+    (W_SEARCH_BUDGET_ZERO, "search mapper with a zero candidate budget"),
+    (W_TILING_DEGENERATE, "tiling knob degenerate at the spec's k"),
+    (W_BEAM_CLAMPED, "beam width below 1; clamped to 1"),
 ];

@@ -1,0 +1,128 @@
+//! Mapping-search sanity (`pim::mapopt`): knob settings the optimizer
+//! accepts and then quietly neutralizes. All three passes run only when
+//! the spec opts into `run.mapper: "search"` — the paper mapper has none
+//! of these knobs.
+//!
+//!   * `W050` — `search_budget: 0`: no candidate beyond the paper
+//!     mapping is ever priced, so the search degenerates to the paper
+//!     result (byte-identical, just slower to ask for).
+//!   * `W052` — `beam: 0`: the optimizer clamps the beam to 1, so only
+//!     the single best-bounded k-branch is expanded.
+//!   * `W051` — per layer: the tiling knob is degenerate at the spec's k
+//!     (MAC wider than a DRAM row, no inner dimension, or the outer loop
+//!     collapses under k), so the search can only revisit the paper
+//!     staging for that layer. Purely arithmetic — nothing is priced.
+
+use crate::api::{Job, Mapper};
+use crate::mapping::candidates::tiling_applicable;
+use crate::mapping::outer_count;
+
+use super::codes;
+use super::{Diagnostics, Location};
+
+pub fn mapopt_pass(job: &Job, d: &mut Diagnostics) {
+    let run = &job.spec().run;
+    if run.mapper != Mapper::Search {
+        return;
+    }
+
+    if run.search_budget == 0 {
+        d.warn(
+            codes::W_SEARCH_BUDGET_ZERO,
+            Location::Spec { path: "run.search_budget".to_string() },
+            "search_budget 0 prices no candidate beyond the paper \
+             mapping: the search degenerates to the paper result"
+                .to_string(),
+        );
+    }
+    if run.beam == 0 {
+        d.warn(
+            codes::W_BEAM_CLAMPED,
+            Location::Spec { path: "run.beam".to_string() },
+            "beam 0 is clamped to 1: only the single best-bounded \
+             k-branch is expanded per layer"
+                .to_string(),
+        );
+    }
+
+    let cfg = job.config();
+    for (i, layer) in job.network().layers.iter().enumerate() {
+        let paper_k = cfg.k_for(i).min(outer_count(layer));
+        if !tiling_applicable(layer, &cfg.geometry, paper_k) {
+            d.warn(
+                codes::W_TILING_DEGENERATE,
+                Location::Layer { index: i, name: layer.name.clone() },
+                format!(
+                    "tiling is degenerate at k={paper_k}: the search can \
+                     only revisit the paper staging for this layer"
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Spec;
+
+    fn check(spec: Spec) -> Diagnostics {
+        let job = Job::new(spec).unwrap();
+        let mut d = Diagnostics::default();
+        mapopt_pass(&job, &mut d);
+        d
+    }
+
+    #[test]
+    fn paper_mapper_is_silent() {
+        let d = check(Spec::builtin("pimnet").with_preset("conservative"));
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn zero_knobs_are_w050_and_w052() {
+        let mut spec = Spec::builtin("pimnet")
+            .with_preset("conservative")
+            .with_mapper(Mapper::Search);
+        spec.run.search_budget = 0;
+        spec.run.beam = 0;
+        let d = check(spec);
+        assert!(d.iter().any(|f| f.code == codes::W_SEARCH_BUDGET_ZERO));
+        assert!(d.iter().any(|f| f.code == codes::W_BEAM_CLAMPED));
+        assert!(d
+            .iter()
+            .any(|f| f.location == Location::Spec { path: "run.search_budget".into() }));
+    }
+
+    #[test]
+    fn degenerate_tiling_is_w051_per_layer() {
+        // mobilenet_mini's depthwise layers have macs_per_outer == 1 on
+        // the conservative die, so their tiling knob is unsearchable.
+        let spec = Spec::builtin("mobilenet_mini")
+            .with_preset("conservative")
+            .with_mapper(Mapper::Search);
+        let job = Job::new(spec.clone()).unwrap();
+        let cfg = job.config();
+        let want: Vec<usize> = job
+            .network()
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(i, l)| {
+                let k = cfg.k_for(*i).min(outer_count(l));
+                !tiling_applicable(l, &cfg.geometry, k)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let d = check(spec);
+        let got: Vec<usize> = d
+            .iter()
+            .filter(|f| f.code == codes::W_TILING_DEGENERATE)
+            .filter_map(|f| match &f.location {
+                Location::Layer { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(got, want, "{}", d.render_text());
+    }
+}

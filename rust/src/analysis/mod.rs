@@ -26,7 +26,9 @@
 //!   4. **Capacity** — per-layer residency proofs over the mapping
 //!      arithmetic, flagged before any binary search runs
 //!      (`W020`–`W023`).
-//!   5. **Serve** — deadline/queue/fault-schedule sanity
+//!   5. **Mapping search** — knob sanity for `run.mapper: "search"`
+//!      (`W050`–`W052`); silent under the paper mapper.
+//!   6. **Serve** — deadline/queue/fault-schedule sanity
 //!      (`W040`–`W043`).
 //!
 //! The analyzer is *pure*: it never changes a priced result. Errors are
@@ -40,6 +42,7 @@ pub mod codes;
 
 mod capacity;
 mod ir_lints;
+mod mapopt_check;
 mod plan_check;
 mod serve_check;
 
@@ -304,6 +307,7 @@ fn check_resolved(job: &Job, d: &mut Diagnostics) {
     plan_check::invariants(&plan, d);
     plan_check::residual_hops(job.network(), &plan, d);
     capacity::capacity_pass(job.network(), job.config(), &plan, d);
+    mapopt_check::mapopt_pass(job, d);
     serve_check::serve_pass(job, d);
 }
 

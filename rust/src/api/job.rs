@@ -27,11 +27,17 @@ use crate::coordinator::{
     simulate_fleet, FaultSpec, FaultyBackend, FleetConfig, FleetReport, MultiDeviceServer,
     Policy, PoolConfig, SimBackend,
 };
+use crate::mapopt::{self, SearchKnobs, SearchOutcome};
 use crate::plan::PlanError;
 use crate::sim::{SimConfig, SimReport, SimResult, SimSession};
 use crate::workloads::Network;
 
-use super::spec::Spec;
+use super::spec::{Mapper, RunSpec, Spec};
+
+/// Search knobs resolved from a spec's run section.
+fn search_knobs(run: &RunSpec) -> SearchKnobs {
+    SearchKnobs { beam: run.beam, budget: run.search_budget }
+}
 
 /// The broadcast rule: a `run.ks` vector is either a single value (applied
 /// to every layer) or exactly one entry per layer of `net`.
@@ -110,12 +116,39 @@ impl Job {
     /// Fails fast through [`Job::check`]: a statically-provable plan
     /// failure returns *the identical error value* pricing would have
     /// produced, without starting the session.
+    ///
+    /// With `run.mapper: "search"` this is the searched mapping's report
+    /// ([`Job::search`]'s `searched`); the default `"paper"` path is
+    /// bitwise-frozen.
     pub fn report(&self) -> Result<SimReport, PlanError> {
         if let Some(e) = self.check().plan_error() {
             return Err(e.clone());
         }
         let mut session = self.session();
+        if self.spec.run.mapper == Mapper::Search {
+            return Ok(self.search_with(&mut session)?.searched);
+        }
         session.report(&self.cfg)
+    }
+
+    /// Run the `mapopt` per-layer mapping search for this job (whatever
+    /// the spec's `mapper` field says) and return the full outcome —
+    /// per-layer choices, the paper baseline report and the searched
+    /// report, which is never worse on latency.
+    pub fn search(&self) -> Result<SearchOutcome, PlanError> {
+        if let Some(e) = self.check().plan_error() {
+            return Err(e.clone());
+        }
+        let mut session = self.session();
+        self.search_with(&mut session)
+    }
+
+    /// [`Job::search`] through a caller-held session (from
+    /// [`Job::session`]) — repeated searches and paper reports share the
+    /// per-layer arena, so the sweep is absorbed by the fingerprint
+    /// cache.
+    pub fn search_with(&self, session: &mut SimSession<'_>) -> Result<SearchOutcome, PlanError> {
+        mapopt::optimize(session, &self.cfg, &search_knobs(&self.spec.run))
     }
 
     /// Full-fidelity result — bitwise-identical to the legacy free
@@ -141,6 +174,10 @@ impl Job {
         );
         check_ks(&self.net, &spec.run.ks)?;
         let cfg = spec.resolve_config()?;
+        if spec.run.mapper == Mapper::Search {
+            let out = mapopt::optimize(session, &cfg, &search_knobs(&spec.run))?;
+            return Ok(out.searched);
+        }
         Ok(session.report(&cfg)?)
     }
 
@@ -161,6 +198,10 @@ impl Job {
     /// incremental session prices the plan summary *and* the worker
     /// backend, then `coordinator::PoolConfig`/`MultiDeviceServer` are
     /// built from the spec's serve options (defaults if absent).
+    ///
+    /// Serving always prices the paper mapping — `run.mapper: "search"`
+    /// applies to [`Job::report`]/[`Job::search`]; a searched serving
+    /// backend is an open roadmap item.
     pub fn serve(&self) -> Result<ServeHandle> {
         // Same fail-fast as `report()`: don't start worker threads for a
         // plan the analyzer can already prove unpriceable.

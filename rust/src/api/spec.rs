@@ -877,7 +877,39 @@ impl std::fmt::Display for ShardSpec {
     }
 }
 
-/// One simulation run: operand precision, the paper's P vector, sharding.
+/// Which mapping optimizer prices the run. JSON form is the lowercase
+/// name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mapper {
+    /// Algorithm 1 with the spec's P vector — the frozen default path.
+    #[default]
+    Paper,
+    /// The `mapopt` beam search over k, tiling and data layout; never
+    /// worse than the paper mapping under the analytic cost.
+    Search,
+}
+
+impl Mapper {
+    pub fn parse(s: &str) -> Result<Mapper> {
+        match s {
+            "paper" => Ok(Mapper::Paper),
+            "search" => Ok(Mapper::Search),
+            other => anyhow::bail!("unknown run.mapper `{other}` (try paper|search)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Mapper {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Mapper::Paper => write!(f, "paper"),
+            Mapper::Search => write!(f, "search"),
+        }
+    }
+}
+
+/// One simulation run: operand precision, the paper's P vector, sharding,
+/// and the (additive) mapping-search knobs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RunSpec {
     /// Operand bit width n.
@@ -885,15 +917,33 @@ pub struct RunSpec {
     /// Per-layer parallelism (broadcast if length 1) — the paper's P factor.
     pub ks: Vec<usize>,
     pub shard: ShardSpec,
+    /// Mapping optimizer; `paper` (the default) is bitwise-frozen.
+    pub mapper: Mapper,
+    /// `mapopt` beam width (k-branches expanded per layer). Values below
+    /// 1 are clamped to 1 at search time (diagnostic W052).
+    pub beam: usize,
+    /// `mapopt` exact-pricing budget per layer beyond the always-priced
+    /// paper candidate; 0 degenerates to the paper mapping (W050).
+    pub search_budget: usize,
 }
 
 impl Default for RunSpec {
     fn default() -> Self {
-        RunSpec { precision: 8, ks: vec![1], shard: ShardSpec::default() }
+        RunSpec {
+            precision: 8,
+            ks: vec![1],
+            shard: ShardSpec::default(),
+            mapper: Mapper::default(),
+            beam: RunSpec::DEFAULT_BEAM,
+            search_budget: RunSpec::DEFAULT_SEARCH_BUDGET,
+        }
     }
 }
 
 impl RunSpec {
+    pub const DEFAULT_BEAM: usize = 4;
+    pub const DEFAULT_SEARCH_BUDGET: usize = 64;
+
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
             (1..=64).contains(&self.precision),
@@ -911,7 +961,7 @@ impl RunSpec {
 
     fn from_json(v: &Json) -> Result<RunSpec> {
         let obj = v.as_obj().context("`run` must be an object")?;
-        check_keys("run", obj, &["ks", "precision", "shard"])?;
+        check_keys("run", obj, &["beam", "ks", "mapper", "precision", "search_budget", "shard"])?;
         let mut run = RunSpec::default();
         if let Some(k) = v.get("ks") {
             let ints = k.i64_vec().context("run.ks must be an array of integers")?;
@@ -930,6 +980,17 @@ impl RunSpec {
             run.shard =
                 ShardSpec::parse(s.as_str().context("run.shard must be a string")?)?;
         }
+        if let Some(m) = v.get("mapper") {
+            run.mapper =
+                Mapper::parse(m.as_str().context("run.mapper must be a string")?)?;
+        }
+        if let Some(b) = v.get("beam") {
+            run.beam = b.as_usize().context("run.beam must be a non-negative integer")?;
+        }
+        if let Some(b) = v.get("search_budget") {
+            run.search_budget =
+                b.as_usize().context("run.search_budget must be a non-negative integer")?;
+        }
         Ok(run)
     }
 
@@ -938,6 +999,17 @@ impl RunSpec {
         o.insert("ks".to_string(), Json::Arr(self.ks.iter().map(|&k| num(k)).collect()));
         o.insert("precision".to_string(), num(self.precision));
         o.insert("shard".to_string(), Json::Str(self.shard.to_string()));
+        // Search knobs are emitted only off their defaults, keeping the
+        // pre-search canonical corpus byte-stable.
+        if self.mapper != Mapper::Paper {
+            o.insert("mapper".to_string(), Json::Str(self.mapper.to_string()));
+        }
+        if self.beam != RunSpec::DEFAULT_BEAM {
+            o.insert("beam".to_string(), num(self.beam));
+        }
+        if self.search_budget != RunSpec::DEFAULT_SEARCH_BUDGET {
+            o.insert("search_budget".to_string(), num(self.search_budget));
+        }
         Json::Obj(o)
     }
 }
@@ -1326,6 +1398,13 @@ impl Spec {
 
     pub fn with_shard(mut self, policy: ShardPolicy) -> Spec {
         self.run.shard = ShardSpec { policy };
+        self
+    }
+
+    /// Select the mapping path: `Mapper::Paper` (the frozen default) or
+    /// `Mapper::Search` (the `pim::mapopt` beam search).
+    pub fn with_mapper(mut self, mapper: Mapper) -> Spec {
+        self.run.mapper = mapper;
         self
     }
 

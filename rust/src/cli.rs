@@ -120,7 +120,7 @@ const SPEC_FLAGS: &[&str] =
     &["spec", "network", "preset", "bits", "k", "channels", "ranks", "shard"];
 const OPTIMIZE_FLAGS: &[&str] = &[
     "spec", "network", "preset", "bits", "k", "channels", "ranks", "shard",
-    "balanced",
+    "balanced", "mapper", "beam", "budget", "json",
 ];
 const SERVE_FLAGS: &[&str] = &[
     "spec", "network", "preset", "bits", "k", "channels", "ranks", "shard",
@@ -152,7 +152,10 @@ Spec-driven commands (simulate, map, optimize, serve) accept
 COMMANDS:
   simulate   Run the PIM timing simulator on a network
   map        Print the Algorithm-1 mapping and the device plan
-  optimize   Plan the per-layer parallelism vector  --balanced
+  optimize   Plan the per-layer mapping  --balanced  --json
+             --mapper <paper|search>  --beam <n>  --budget <n>
+             (search explores k x tiling x layout per layer and prints
+             the chosen mapping; paper plans the k vector only)
   spec       Validate spec JSON files: pim-dram spec [--print] <file>...
              (--print emits the canonical form examples/specs/ uses)
   check      Static Spec→IR→Plan analysis with coded diagnostics:
@@ -402,8 +405,30 @@ fn cmd_map(args: &Args) -> Result<()> {
 }
 
 fn cmd_optimize(args: &Args) -> Result<()> {
+    let mut spec = spec_from(args, "pimnet")?;
+    if let Some(m) = args.flags.get("mapper") {
+        spec.run.mapper = api::Mapper::parse(m)?;
+    }
+    if args.flags.contains_key("beam") {
+        spec.run.beam = args.flag_usize("beam", spec.run.beam)?;
+    }
+    if args.flags.contains_key("budget") {
+        spec.run.search_budget = args.flag_usize("budget", spec.run.search_budget)?;
+    }
+    let as_json = args.flags.contains_key("json");
+    if spec.run.mapper == api::Mapper::Search {
+        cmd_optimize_search(&spec, as_json)
+    } else {
+        cmd_optimize_paper(args, &spec, as_json)
+    }
+}
+
+/// The pre-search optimizer: plan the per-layer k vector with
+/// Algorithm 1's residency arithmetic and price it against the spec's
+/// own ks.
+fn cmd_optimize_paper(args: &Args, spec: &Spec, as_json: bool) -> Result<()> {
     use crate::mapping::optimizer::{plan_ks, Objective};
-    let spec = spec_from(args, "pimnet")?;
+    use crate::util::json::Json;
     let job = Job::new(spec.clone())?;
     let net = job.network();
     let cfg = job.config();
@@ -413,6 +438,40 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         Objective::MinResidentK
     };
     let plan = plan_ks(net, &cfg.geometry, cfg.n_bits, objective);
+
+    // Simulate the plan vs the spec's own k vector — one incremental
+    // session, so layers whose planned k is unchanged are priced once.
+    let mut session = job.session();
+    let naive = job.report_variant(&mut session, spec)?;
+    let planned = job.report_variant(&mut session, &spec.clone().with_ks(plan.ks.clone()))?;
+
+    if as_json {
+        let layers: Vec<Json> = net
+            .layers
+            .iter()
+            .zip(&plan.ks)
+            .map(|(l, &k)| {
+                let mut o = BTreeMap::new();
+                o.insert("k".to_string(), Json::Num(k as f64));
+                o.insert("name".to_string(), Json::Str(l.name.clone()));
+                o.insert(
+                    "resident".to_string(),
+                    Json::Bool(!plan.overflow_layers.contains(&l.name)),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut cycle = BTreeMap::new();
+        cycle.insert("planned".to_string(), Json::Num(planned.cycle_ns));
+        cycle.insert("spec".to_string(), Json::Num(naive.cycle_ns));
+        let mut o = BTreeMap::new();
+        o.insert("cycle_ns".to_string(), Json::Obj(cycle));
+        o.insert("layers".to_string(), Json::Arr(layers));
+        o.insert("mapper".to_string(), Json::Str("paper".to_string()));
+        o.insert("network".to_string(), Json::Str(net.name.clone()));
+        print!("{}", Json::Obj(o).pretty());
+        return Ok(());
+    }
 
     let mut t = Table::new(&["layer", "k", "resident"])
         .aligns(&[Align::Left, Align::Right, Align::Right]);
@@ -430,18 +489,112 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             plan.overflow_layers
         );
     }
-    // Simulate the plan vs the spec's own k vector — one incremental
-    // session, so layers whose planned k is unchanged are priced once.
-    let mut session = job.session();
-    let naive = job.report_variant(&mut session, &spec)?;
-    let planned =
-        job.report_variant(&mut session, &spec.clone().with_ks(plan.ks.clone()))?;
     println!(
         "spec ks {:?}: {:.3} ms/img   planned: {:.3} ms/img ({:+.1}%)",
         spec.run.ks,
         naive.cycle_ns / 1e6,
         planned.cycle_ns / 1e6,
         100.0 * (planned.cycle_ns - naive.cycle_ns) / naive.cycle_ns
+    );
+    Ok(())
+}
+
+/// The `pim::mapopt` beam search: per-layer chosen mapping (k, tiling,
+/// layout) plus the paper-vs-searched end-to-end comparison. `--json`
+/// emits the canonical form (`Json::pretty`, byte-stable).
+fn cmd_optimize_search(spec: &Spec, as_json: bool) -> Result<()> {
+    use crate::mapping::DataLayout;
+    use crate::util::json::Json;
+    let job = Job::new(spec.clone())?;
+    let out = job.search()?;
+    let layout_name = |l: DataLayout| match l {
+        DataLayout::Sequential => "seq",
+        DataLayout::RowAligned => "row",
+    };
+
+    if as_json {
+        let layers: Vec<Json> = out
+            .choices
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("k".to_string(), Json::Num(c.cand.k as f64));
+                o.insert(
+                    "layout".to_string(),
+                    Json::Str(layout_name(c.cand.layout).to_string()),
+                );
+                o.insert("name".to_string(), Json::Str(c.name.clone()));
+                o.insert("paper_stage_ns".to_string(), Json::Num(c.paper_stage_ns));
+                o.insert("resident".to_string(), Json::Bool(c.resident));
+                o.insert("stage_ns".to_string(), Json::Num(c.stage_ns));
+                o.insert("tile".to_string(), Json::Num(c.cand.tile as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut latency = BTreeMap::new();
+        latency.insert("paper".to_string(), Json::Num(out.paper.latency_ns));
+        latency.insert("searched".to_string(), Json::Num(out.searched.latency_ns));
+        let mut o = BTreeMap::new();
+        o.insert(
+            "candidates_priced".to_string(),
+            Json::Num(out.candidates_priced as f64),
+        );
+        o.insert(
+            "changed_layers".to_string(),
+            Json::Num(out.changed_layers() as f64),
+        );
+        o.insert("fell_back".to_string(), Json::Bool(out.fell_back));
+        o.insert("latency_ns".to_string(), Json::Obj(latency));
+        o.insert("layers".to_string(), Json::Arr(layers));
+        o.insert("mapper".to_string(), Json::Str("search".to_string()));
+        o.insert("network".to_string(), Json::Str(job.network().name.clone()));
+        o.insert(
+            "pruned_branches".to_string(),
+            Json::Num(out.pruned_branches as f64),
+        );
+        print!("{}", Json::Obj(o).pretty());
+        return Ok(());
+    }
+
+    let mut t = Table::new(&[
+        "layer", "k", "tile", "layout", "resident", "paper", "chosen", "gain%",
+    ])
+    .aligns(&[
+        Align::Left, Align::Right, Align::Right, Align::Left, Align::Right,
+        Align::Right, Align::Right, Align::Right,
+    ]);
+    for c in &out.choices {
+        t.row(&[
+            c.name.clone(),
+            c.cand.k.to_string(),
+            if c.cand.tile == 0 { "-".to_string() } else { c.cand.tile.to_string() },
+            layout_name(c.cand.layout).to_string(),
+            c.resident.to_string(),
+            format!("{:.1}us", c.paper_stage_ns / 1e3),
+            format!("{:.1}us", c.stage_ns / 1e3),
+            format!("{:.1}", 100.0 * (c.paper_stage_ns - c.stage_ns) / c.paper_stage_ns),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper: {:.3} ms/img   searched: {:.3} ms/img ({:+.2}%) — {} of {} \
+         layer(s) changed",
+        out.paper.latency_ns / 1e6,
+        out.searched.latency_ns / 1e6,
+        100.0 * (out.searched.latency_ns - out.paper.latency_ns) / out.paper.latency_ns,
+        out.changed_layers(),
+        out.choices.len()
+    );
+    println!(
+        "search: {} candidate(s) priced, {} branch(es) pruned by the lower \
+         bound{}",
+        out.candidates_priced,
+        out.pruned_branches,
+        if out.fell_back {
+            " — end-to-end fallback to the paper mapping"
+        } else {
+            ""
+        }
     );
     Ok(())
 }
@@ -924,6 +1077,10 @@ mod tests {
             "map --network resnet18 --preset conservative --channels 2 --shard layersplit",
             "optimize --network pimnet --preset conservative",
             "optimize --network alexnet --preset conservative --balanced",
+            "optimize --network pimnet --preset conservative --json",
+            "optimize --network mobilenet_mini --preset conservative --mapper search",
+            "optimize --network tinyformer --preset conservative --mapper search \
+             --beam 2 --budget 16 --json",
             "roofline --network vgg16",
             "circuit --samples 2000",
             "tables",

@@ -47,6 +47,7 @@ pub mod dram;
 pub mod energy;
 pub mod gpu;
 pub mod ir;
+pub mod mapopt;
 pub mod mapping;
 pub mod plan;
 pub mod primitives;

@@ -1,0 +1,280 @@
+//! Search-candidate mapping: the enlarged per-layer design space the
+//! `mapopt` beam search explores (DESIGN.md §Mapping optimizer).
+//!
+//! The paper's Algorithm 1 exposes one knob (the parallelism divisor k).
+//! A candidate adds two more, both about *how operands are staged* rather
+//! than how many groups fold:
+//!
+//!   * **tile** — outer units staged per chunk. The untiled mapper lands
+//!     a whole wave of operands before its first multiply round; a tiled
+//!     mapping streams tile j+1 over the internal bus while tile j
+//!     multiplies, so a re-staging event exposes only one tile's rows.
+//!   * **layout** — [`DataLayout`]: sequential packing keeps the paper's
+//!     footprint but a tile straddling a subarray boundary costs extra
+//!     row activations every group stream; row-aligned placement zeroes
+//!     the crossings by starting every tile at a fresh subarray, paying
+//!     footprint padding (and possibly extra waves) instead.
+//!
+//! `tile == 0` IS the paper mapping: [`map_candidate`] then returns
+//! `map_layer`'s result untouched, which keeps the default path
+//! bitwise-frozen.
+
+use crate::dram::DramGeometry;
+use crate::util::ceil_div;
+use crate::workloads::LayerDesc;
+
+use super::optimizer::min_resident_k;
+use super::{map_layer, outer_count, DataLayout, LayerMapping, MapConfig, MapError};
+
+/// Tiled variants enumerated per (k, layout) branch — the tile ladder is
+/// powers of two, so 6 values cover a 64× staging-granularity range.
+const MAX_TILE_VALUES: usize = 6;
+
+/// One point of the per-layer search space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerCandidate {
+    /// Parallelism divisor (must already be clamped to the outer count).
+    pub k: usize,
+    /// Staging-tile size in outer units; 0 = untiled (the paper mapping).
+    pub tile: usize,
+    pub layout: DataLayout,
+}
+
+impl LayerCandidate {
+    /// The paper mapping at parallelism `k`.
+    pub fn paper(k: usize) -> Self {
+        LayerCandidate { k, tile: 0, layout: DataLayout::Sequential }
+    }
+
+    pub fn is_paper(&self) -> bool {
+        self.tile == 0
+    }
+}
+
+/// Map one layer under a search candidate. `probe.ks[0]` is overwritten
+/// with the candidate's k — the sweep reuses one probe config across all
+/// candidates, mirroring `optimizer::min_resident_k_with`.
+pub fn map_candidate(
+    layer_idx: usize,
+    bank: usize,
+    layer: &LayerDesc,
+    probe: &mut MapConfig,
+    cand: &LayerCandidate,
+) -> Result<LayerMapping, MapError> {
+    probe.ks[0] = cand.k;
+    let mut m = map_layer(layer_idx, bank, layer, probe)?;
+    if cand.tile == 0 {
+        return Ok(m);
+    }
+    let outer = outer_count(layer);
+    let macs_per_outer = m.macs_total / outer;
+    let outer_per_group = ceil_div(outer, m.k);
+    // Tiling needs narrow MACs (a wide MAC already spans whole subarrays)
+    // and at least two tiles per group; otherwise the candidate
+    // degenerates to the paper mapping.
+    if m.macs_per_subarray == 0 || macs_per_outer == 0 || cand.tile >= outer_per_group {
+        return Ok(m);
+    }
+    let g = &probe.geometry;
+    let per_sub = m.macs_per_subarray;
+    let tile_macs = cand.tile * macs_per_outer;
+    m.tile = cand.tile;
+    m.layout = cand.layout;
+    m.tile_subarrays = ceil_div(tile_macs, per_sub).max(1);
+    match cand.layout {
+        DataLayout::Sequential => {
+            // Packing unchanged; each boundary-straddling tile pays 2n
+            // extra row activations, once per group stream per image.
+            let crossings = tile_crossings(m.macs_per_group, tile_macs, per_sub);
+            m.extra_row_acts = m.k as u64 * crossings * 2 * probe.n_bits as u64;
+        }
+        DataLayout::RowAligned => {
+            // Every tile starts at a fresh subarray: the group footprint
+            // pads up to tiles × per-tile span, which can add waves.
+            let tiles = ceil_div(outer_per_group, cand.tile);
+            m.subarrays_ideal = tiles * m.tile_subarrays;
+            m.subarrays_used = m.subarrays_ideal.min(g.subarrays_per_bank);
+            m.waves = ceil_div(m.subarrays_ideal, g.subarrays_per_bank).max(1);
+            let used_cols = (m.macs_total * m.mac_size) as f64;
+            let alloc_cols = (m.subarrays_ideal * g.cols * m.k) as f64;
+            m.utilization = (used_cols / alloc_cols).min(1.0);
+        }
+    }
+    Ok(m)
+}
+
+/// Subarray boundaries straddled by a group's tiles under sequential
+/// packing: MAC j lives in subarray `j / per_sub` (`map_layer`'s
+/// consecutive-columns rule), tile i covers MACs `[i·w, (i+1)·w)`, and a
+/// tile's crossings are the subarray-index span of its MACs. For w and
+/// per_sub coprime this reproduces the GCD periodic analysis — a
+/// `(w − gcd(w, per_sub)) / per_sub` fraction of tiles straddle.
+pub fn tile_crossings(group_macs: usize, tile_macs: usize, per_sub: usize) -> u64 {
+    if tile_macs == 0 || per_sub == 0 {
+        return 0;
+    }
+    let mut crossings = 0u64;
+    let mut start = 0usize;
+    while start < group_macs {
+        let end = (start + tile_macs).min(group_macs);
+        crossings += ((end - 1) / per_sub - start / per_sub) as u64;
+        start = end;
+    }
+    crossings
+}
+
+/// Whether the tiling knob is searchable for `layer` at parallelism `k`:
+/// narrow MACs and more than one outer unit per group. When this is
+/// false the search space collapses to the paper default (W051).
+pub fn tiling_applicable(layer: &LayerDesc, geometry: &DramGeometry, k: usize) -> bool {
+    let outer = outer_count(layer);
+    let macs_per_outer = layer.num_macs() / outer;
+    layer.mac_size() <= geometry.cols
+        && macs_per_outer > 0
+        && ceil_div(outer, k.max(1).min(outer)) > 1
+}
+
+/// Deterministic candidate-k ladder for one layer: the spec's (clamped)
+/// paper k first — ties in the exact pricing then resolve toward the
+/// paper choice — then 1, the minimum resident k, and powers of two up
+/// to the outer/stack-capacity limit.
+pub fn candidate_ks(
+    layer: &LayerDesc,
+    geometry: &DramGeometry,
+    n_bits: usize,
+    paper_k: usize,
+) -> Vec<usize> {
+    let outer = outer_count(layer);
+    let hi = outer.min(geometry.pairs_per_column(n_bits).max(1)).max(1);
+    let mut ks = vec![paper_k.min(outer).max(1)];
+    let mut push = |ks: &mut Vec<usize>, k: usize| {
+        if k >= 1 && k <= hi && !ks.contains(&k) {
+            ks.push(k);
+        }
+    };
+    push(&mut ks, 1);
+    if let Some(k) = min_resident_k(layer, geometry, n_bits) {
+        push(&mut ks, k);
+    }
+    let mut p = 2usize;
+    while p <= hi {
+        push(&mut ks, p);
+        p *= 2;
+    }
+    push(&mut ks, hi);
+    ks
+}
+
+/// Deterministic candidates under one k: untiled first, then — when the
+/// untiled mapping is not fully resident and tiling is applicable —
+/// tiled variants, coarse to fine, Sequential before RowAligned. A
+/// resident mapping has nothing to re-stage, so tiling can only add
+/// crossing or padding cost and is skipped to save search budget.
+pub fn candidates_at_k(
+    layer: &LayerDesc,
+    probe: &mut MapConfig,
+    k: usize,
+) -> Vec<LayerCandidate> {
+    let mut out = vec![LayerCandidate::paper(k)];
+    let Ok(untiled) = map_candidate(0, 0, layer, probe, &out[0]) else {
+        return out;
+    };
+    if untiled.fully_resident() || !tiling_applicable(layer, &probe.geometry, k) {
+        return out;
+    }
+    let outer_per_group = ceil_div(outer_count(layer), k);
+    // Tile ladder: powers of two below the group size, coarse to fine.
+    let mut tiles = Vec::new();
+    let mut t = 1usize;
+    while t * 2 <= outer_per_group && tiles.len() < MAX_TILE_VALUES {
+        tiles.push(t);
+        t *= 2;
+    }
+    for &tile in tiles.iter().rev() {
+        for layout in [DataLayout::Sequential, DataLayout::RowAligned] {
+            out.push(LayerCandidate { k, tile, layout });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::nets::{mobilenet_mini, vgg16};
+
+    fn probe() -> MapConfig {
+        MapConfig::uniform(DramGeometry::paper_default(), 8, 1)
+    }
+
+    #[test]
+    fn untiled_candidate_is_bitwise_paper_mapping() {
+        let net = mobilenet_mini();
+        let mut p = probe();
+        for (i, l) in net.layers.iter().enumerate() {
+            let cand = LayerCandidate::paper(1);
+            let m = map_candidate(i, i, l, &mut p, &cand).unwrap();
+            p.ks[0] = 1;
+            let paper = map_layer(i, i, l, &p).unwrap();
+            assert_eq!(m, paper, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn crossings_match_gcd_period() {
+        // w=3, c=8 over one full period of lcm(3,8)=24 MACs → 8 tiles, of
+        // which (w − gcd)/c · tiles = (3−1)/8 · 8 = 2 straddle.
+        assert_eq!(tile_crossings(24, 3, 8), 2);
+        // Tiles aligned to the subarray never cross.
+        assert_eq!(tile_crossings(64, 4, 8), 0);
+        // A tile wider than a subarray always crosses.
+        assert_eq!(tile_crossings(32, 16, 8), 2);
+    }
+
+    #[test]
+    fn row_aligned_pads_footprint_and_zeroes_crossings() {
+        let net = vgg16();
+        // conv1_2 is never resident on real DDR3 — tiling applies.
+        let idx = net.layers.iter().position(|l| l.name == "conv1_2").unwrap();
+        let l = &net.layers[idx];
+        let mut p = probe();
+        let seq_cand = LayerCandidate { k: 1, tile: 2, layout: DataLayout::Sequential };
+        let row_cand = LayerCandidate { k: 1, tile: 2, layout: DataLayout::RowAligned };
+        let seq = map_candidate(idx, idx, l, &mut p, &seq_cand).unwrap();
+        let row = map_candidate(idx, idx, l, &mut p, &row_cand).unwrap();
+        let untiled = map_candidate(idx, idx, l, &mut p, &LayerCandidate::paper(1)).unwrap();
+        assert!(seq.extra_row_acts > 0);
+        assert_eq!(seq.subarrays_ideal, untiled.subarrays_ideal);
+        assert_eq!(row.extra_row_acts, 0);
+        assert!(row.subarrays_ideal >= untiled.subarrays_ideal);
+        assert!(row.waves >= untiled.waves);
+    }
+
+    #[test]
+    fn resident_layers_enumerate_only_paper() {
+        let net = mobilenet_mini();
+        let mut p = probe();
+        // dw1 is resident at k=1 → no tiled candidates.
+        let idx = net.layers.iter().position(|l| l.name == "dw1").unwrap();
+        let cands = candidates_at_k(&net.layers[idx], &mut p, 1);
+        assert_eq!(cands, vec![LayerCandidate::paper(1)]);
+    }
+
+    #[test]
+    fn candidate_ks_start_with_paper_and_stay_bounded() {
+        let net = mobilenet_mini();
+        for l in &net.layers {
+            let ks = candidate_ks(l, &DramGeometry::paper_default(), 8, 1);
+            assert_eq!(ks[0], 1);
+            let outer = outer_count(l);
+            for &k in &ks {
+                assert!(k >= 1 && k <= outer, "{}: k={k} outer={outer}", l.name);
+            }
+            // Dedup holds.
+            let mut sorted = ks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), ks.len());
+        }
+    }
+}

@@ -24,6 +24,7 @@
 //!     unbounded, reproducing the paper's assumption (Fig 16); the default
 //!     geometry shows what a real DDR3 die does (ablation_subarray bench).
 
+pub mod candidates;
 pub mod footprint;
 pub mod optimizer;
 
@@ -54,6 +55,23 @@ impl MapConfig {
             self.ks[layer_idx]
         }
     }
+}
+
+/// Operand placement of a staging tile's MACs within the subarray row
+/// space (DESIGN.md §Mapping optimizer). The paper's mapper always packs
+/// sequentially; the search mapper may trade row-aligned padding against
+/// the extra row activations that boundary-straddling tiles cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DataLayout {
+    /// Tiles packed back-to-back; a tile whose MACs straddle a subarray
+    /// boundary pays extra row activations per round (tile-crossing
+    /// analysis against the row width).
+    #[default]
+    Sequential,
+    /// Every tile starts at a fresh subarray: zero crossings, but the
+    /// per-tile padding inflates the subarray footprint (and possibly the
+    /// wave count).
+    RowAligned,
 }
 
 /// Result of mapping one layer to one bank.
@@ -88,6 +106,18 @@ pub struct LayerMapping {
     pub utilization: f64,
     /// Total operand storage in bits (both operands of every mult).
     pub footprint_bits: u64,
+    /// Staging-tile size in outer units (0 = the paper's untiled mapping;
+    /// the default everywhere outside the search mapper).
+    pub tile: usize,
+    /// Subarrays one staging tile occupies (0 when untiled) — the unit of
+    /// operand traffic a re-staging event exposes under tiled staging.
+    pub tile_subarrays: usize,
+    /// Operand placement of the staging tiles ([`DataLayout::Sequential`]
+    /// for the paper mapping).
+    pub layout: DataLayout,
+    /// Extra row activations per image charged by tile-crossing analysis
+    /// (0 for the paper mapping and for row-aligned tiles).
+    pub extra_row_acts: u64,
 }
 
 impl LayerMapping {
@@ -192,6 +222,10 @@ pub fn map_layer(
         restaged_rounds: k.saturating_sub(max_pairs),
         utilization: (used_cols / alloc_cols).min(1.0),
         footprint_bits: 2 * (n as u64) * macs_total as u64 * mac_size as u64,
+        tile: 0,
+        tile_subarrays: 0,
+        layout: DataLayout::Sequential,
+        extra_row_acts: 0,
     })
 }
 

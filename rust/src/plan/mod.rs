@@ -268,13 +268,27 @@ pub fn lower(
     policy: ShardPolicy,
 ) -> Result<ExecutionPlan, PlanError> {
     let mapping = map_network(net, cfg)?;
+    lower_mapped(net, &cfg.geometry, mapping, policy)
+}
+
+/// Lower a network whose mapping is already built — the search mapper's
+/// path: the chosen per-layer mappings (tiling and layout included)
+/// replace Algorithm-1's defaults, and the split-balancing weights come
+/// from the *chosen* round counts, so a row-aligned candidate that pays
+/// extra waves also shifts the layer-split boundaries it implies.
+pub fn lower_mapped(
+    net: &Network,
+    geometry: &DramGeometry,
+    mapping: NetworkMapping,
+    policy: ShardPolicy,
+) -> Result<ExecutionPlan, PlanError> {
     let weights: Vec<u64> = mapping.layers.iter().map(|m| m.rounds() as u64).collect();
-    let l = layout(net, &weights, mapping.total_banks, &cfg.geometry, policy)?;
+    let l = layout(net, &weights, mapping.total_banks, geometry, policy)?;
     let chains = l.chains_vec();
     Ok(ExecutionPlan {
         net_name: net.name.clone(),
         policy,
-        geometry: cfg.geometry.clone(),
+        geometry: geometry.clone(),
         mapping,
         devices: l.devices,
         replicas: l.replicas,

@@ -321,10 +321,24 @@ pub(crate) fn price_layer_owned(
     // active subarrays' operand rows over the internal bus.
     let restage_events = (m.waves - 1) + m.restaged_rounds;
     let rows_per_subarray = 2 * n;
-    let restage_ns = restage_events as f64
-        * m.subarrays_used as f64
-        * rows_per_subarray as f64
-        * cfg.timing.interbank_copy_ns(cfg.geometry.cols);
+    let restage_ns = if m.tile > 0 {
+        // Tiled staging (search mapper only): tile j+1 streams in over
+        // the otherwise-idle internal bus while tile j multiplies, so a
+        // re-staging event exposes only the first tile's rows. Sequential
+        // tiles additionally pay the crossing row activations counted by
+        // the tile-crossing analysis at mapping time.
+        let exposed = m.tile_subarrays.max(1).min(m.subarrays_used.max(1));
+        restage_events as f64
+            * exposed as f64
+            * rows_per_subarray as f64
+            * cfg.timing.interbank_copy_ns(cfg.geometry.cols)
+            + m.extra_row_acts as f64 * ctx.aap_ns
+    } else {
+        restage_events as f64
+            * m.subarrays_used as f64
+            * rows_per_subarray as f64
+            * cfg.timing.interbank_copy_ns(cfg.geometry.cols)
+    };
 
     // Residual edges execute in their own reserved banks (Fig 13) —
     // they become separate pipeline stages below; nothing lands here.
@@ -337,8 +351,8 @@ pub(crate) fn price_layer_owned(
         &cfg.timing,
     );
 
-    let aaps = m.rounds() as u64 * ctx.mul_cost * m.subarrays_used as u64;
-    let dram_energy_nj = aaps as f64
+    let mut aaps = m.rounds() as u64 * ctx.mul_cost * m.subarrays_used as u64;
+    let mut dram_energy_nj = aaps as f64
         * (cfg.timing.act_pre_energy_nj + cfg.timing.multi_act_energy(3))
         + crate::dataflow::transfer::transfer_bits(
             layer.out_elems(),
@@ -347,6 +361,12 @@ pub(crate) fn price_layer_owned(
         ) as f64
             * cfg.timing.bus_energy_pj_per_bit
             / 1000.0;
+    if m.extra_row_acts > 0 {
+        // Crossing activations are plain ACT/PRE pairs, not triple-row
+        // AAP multiplies (search mapper only; 0 on the paper path).
+        aaps += m.extra_row_acts;
+        dram_energy_nj += m.extra_row_acts as f64 * cfg.timing.act_pre_energy_nj;
+    }
 
     LayerSim {
         name: layer.name.clone(),
@@ -372,6 +392,28 @@ pub fn price_layers(net: &Network, mapping: &NetworkMapping, cfg: &SimConfig) ->
         .zip(&mapping.layers)
         .map(|(layer, m)| price_layer(layer, m, cfg, &ctx))
         .collect()
+}
+
+/// Monotone lower bound on `stage_ns` for **any** search candidate of
+/// this layer at the mapping's parallelism: the refresh-stretched
+/// multiply term plus the outbound transfer, computed with the exact
+/// arithmetic of [`price_layer_owned`]. Soundness (DESIGN.md §Mapping
+/// optimizer): pass the *untiled* mapping at k — sequential tiling never
+/// changes its round count and row-aligned tiling only pads the wave
+/// count upward, and every other stage-cost term is nonnegative, so
+/// pruning a k-branch whose bound already exceeds the best exact price
+/// cannot discard the optimum.
+pub(crate) fn stage_lower_bound_ns(
+    layer: &LayerDesc,
+    m: &LayerMapping,
+    cfg: &SimConfig,
+    ctx: &PriceCtx,
+) -> f64 {
+    let mut multiply_ns = m.rounds() as f64 * ctx.mul_cost as f64 * ctx.aap_ns;
+    if let Some(refresh) = &cfg.refresh {
+        multiply_ns = refresh.stretch_ns(multiply_ns);
+    }
+    multiply_ns + transfer_ns(layer.out_elems(), cfg.n_bits, cfg.geometry.cols, &cfg.timing)
 }
 
 /// Inter-channel hop time for `values` n-bit activations.

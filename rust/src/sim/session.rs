@@ -42,7 +42,8 @@ use std::collections::HashMap;
 use std::hash::Hasher;
 
 use crate::gpu::GpuModel;
-use crate::mapping::{map_layer, outer_count, MapConfig, MapError, NetworkMapping};
+use crate::mapping::candidates::{map_candidate, LayerCandidate};
+use crate::mapping::{map_layer, outer_count, DataLayout, MapConfig, MapError, NetworkMapping};
 use crate::plan::{self, ExecutionPlan, PlanError, PlanLayout, ShardPolicy};
 use crate::primitives::CostModel;
 use crate::workloads::Network;
@@ -93,12 +94,36 @@ pub(crate) fn price_fingerprint(cfg: &SimConfig) -> u64 {
     h.finish()
 }
 
-/// Cache key for one layer's mapped + priced artifact.
+/// Cache key for one layer's mapped + priced artifact. `tile` and
+/// `layout` are the search mapper's extra knobs; the paper path always
+/// keys `(tile: 0, layout: 0)`, so searched candidates share the arena
+/// with — but never collide with — the default mapping.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct LayerKey {
     fingerprint: u64,
     layer: usize,
     k: usize,
+    tile: usize,
+    layout: u8,
+}
+
+impl LayerKey {
+    fn paper(fingerprint: u64, layer: usize, k: usize) -> Self {
+        LayerKey { fingerprint, layer, k, tile: 0, layout: 0 }
+    }
+
+    fn for_candidate(fingerprint: u64, layer: usize, cand: &LayerCandidate) -> Self {
+        LayerKey {
+            fingerprint,
+            layer,
+            k: cand.k,
+            tile: cand.tile,
+            layout: match cand.layout {
+                DataLayout::Sequential => 0,
+                DataLayout::RowAligned => 1,
+            },
+        }
+    }
 }
 
 /// Scalar view of one simulation — everything the sweeps read, none of
@@ -238,7 +263,7 @@ impl<'a> SimSession<'a> {
         // single-entry `ks`, so only `ks[0]` changes between layers.
         let mut probe: Option<MapConfig> = None;
         for (i, layer) in net.layers.iter().enumerate() {
-            let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
+            let key = LayerKey::paper(fp, i, self.k_for(cfg, i));
             if self.cache.contains_key(&key) {
                 self.hits += 1;
                 continue;
@@ -267,7 +292,7 @@ impl<'a> SimSession<'a> {
         self.slots.clear();
         self.weights.clear();
         for i in 0..net.layers.len() {
-            let key = LayerKey { fingerprint: fp, layer: i, k: self.k_for(cfg, i) };
+            let key = LayerKey::paper(fp, i, self.k_for(cfg, i));
             let slot = self.cache[&key];
             let rounds = self.arena[slot as usize].mapping.rounds() as u64;
             self.slots.push(slot);
@@ -320,7 +345,18 @@ impl<'a> SimSession<'a> {
         let fp = price_fingerprint(cfg);
         self.ensure_priced(cfg, fp)?;
         self.resolve_slots(cfg, fp);
+        self.fold_report(cfg, banks_needed)
+    }
 
+    /// Lower + aggregate over the already-resolved `slots`/`weights`
+    /// scratch — the shared tail of [`SimSession::report`] and
+    /// [`SimSession::report_with`]. Folds run in `simulate()`'s order so
+    /// the numbers match the full report exactly.
+    fn fold_report(
+        &mut self,
+        cfg: &SimConfig,
+        banks_needed: usize,
+    ) -> Result<SimReport, PlanError> {
         // Lower: grid layout from the cached per-layer round counts, into
         // the session-owned layout scratch.
         plan::layout_into(
@@ -428,6 +464,88 @@ impl<'a> SimSession<'a> {
             bottleneck,
             fully_resident,
         })
+    }
+
+    /// Price one layer under an explicit search candidate, filling the
+    /// arena on miss. `probe.ks[0]` is clobbered.
+    fn ensure_candidate(
+        &mut self,
+        cfg: &SimConfig,
+        fp: u64,
+        probe: &mut MapConfig,
+        ctx: &PriceCtx,
+        layer_idx: usize,
+        cand: &LayerCandidate,
+    ) -> Result<u32, PlanError> {
+        let key = LayerKey::for_candidate(fp, layer_idx, cand);
+        if let Some(&slot) = self.cache.get(&key) {
+            self.hits += 1;
+            return Ok(slot);
+        }
+        self.misses += 1;
+        let layer = &self.net.layers[layer_idx];
+        let m = map_candidate(layer_idx, layer_idx, layer, probe, cand).map_err(PlanError::Map)?;
+        let slot = self.arena.len() as u32;
+        self.arena.push(price_layer_owned(layer, m, cfg, ctx));
+        self.cache.insert(key, slot);
+        Ok(slot)
+    }
+
+    /// Exact pricing of one layer under a search candidate — the mapopt
+    /// beam search's surviving-candidate path. Returns the arena slot
+    /// (stable until [`SimSession::clear`]); the search holds slots, not
+    /// references, so it can keep pricing new candidates while comparing
+    /// earlier ones via [`SimSession::layer_sim`]. Candidates differing
+    /// only in the searched knobs share the fingerprint, so a sweep is
+    /// one cache fill per distinct candidate, ever.
+    pub fn candidate_slot(
+        &mut self,
+        cfg: &SimConfig,
+        layer_idx: usize,
+        cand: &LayerCandidate,
+    ) -> Result<u32, PlanError> {
+        let fp = price_fingerprint(cfg);
+        let mut probe = MapConfig {
+            geometry: cfg.geometry.clone(),
+            n_bits: cfg.n_bits,
+            ks: vec![cand.k],
+        };
+        let ctx = PriceCtx::new(cfg);
+        self.ensure_candidate(cfg, fp, &mut probe, &ctx, layer_idx, cand)
+    }
+
+    /// Read a priced artifact by arena slot.
+    pub fn layer_sim(&self, slot: u32) -> &LayerSim {
+        &self.arena[slot as usize]
+    }
+
+    /// Price the network under an explicit per-layer candidate assignment
+    /// (the search mapper's chosen mapping): the same lower + aggregate
+    /// folds as [`SimSession::report`], so a searched report is exactly
+    /// comparable to the paper report. `cands` must cover every layer.
+    pub fn report_with(
+        &mut self,
+        cfg: &SimConfig,
+        cands: &[LayerCandidate],
+    ) -> Result<SimReport, PlanError> {
+        assert_eq!(cands.len(), self.net.layers.len(), "one candidate per layer");
+        let banks_needed = self.check_banks(cfg)?;
+        let fp = price_fingerprint(cfg);
+        let mut probe = MapConfig {
+            geometry: cfg.geometry.clone(),
+            n_bits: cfg.n_bits,
+            ks: vec![1],
+        };
+        let ctx = PriceCtx::new(cfg);
+        self.slots.clear();
+        self.weights.clear();
+        for (i, cand) in cands.iter().enumerate() {
+            let slot = self.ensure_candidate(cfg, fp, &mut probe, &ctx, i, cand)?;
+            let rounds = self.arena[slot as usize].mapping.rounds() as u64;
+            self.slots.push(slot);
+            self.weights.push(rounds);
+        }
+        self.fold_report(cfg, banks_needed)
     }
 
     /// Price a whole admission batch through one session pass — the serve

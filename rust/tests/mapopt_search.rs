@@ -1,0 +1,178 @@
+//! `pim::mapopt` search contract (DESIGN.md §Mapping optimizer):
+//!
+//!   * **Never worse** — across every builtin network × preset × spec k,
+//!     the searched report's latency is ≤ the paper report's, and every
+//!     per-layer choice is ≤ its paper stage cost (the analytic-cost
+//!     property behind the branch-and-bound pruning rule).
+//!   * **Deterministic** — two independent searches choose identical
+//!     assignments and bitwise-identical latencies.
+//!   * **Cache-friendly** — a repeated search on the same session adds
+//!     zero arena misses (the sweep is absorbed by the fingerprint cache).
+//!   * **API surface** — `run.mapper: "search"` routes `Job::report`
+//!     through the search; the field round-trips through canonical JSON;
+//!     its absence parses to the frozen paper default.
+
+use pim_dram::api::{Job, Mapper, Spec};
+use pim_dram::mapopt::{optimize, SearchKnobs};
+use pim_dram::sim::{SimConfig, SimSession};
+use pim_dram::workloads::nets::all_networks;
+
+#[test]
+fn search_is_never_worse_across_builtins_presets_and_ks() {
+    let mut points = 0usize;
+    for net in all_networks() {
+        let mut session = SimSession::new(&net);
+        for cfg in [
+            SimConfig::conservative(8),
+            SimConfig::paper_favorable(8),
+            SimConfig::conservative(8).with_ks(vec![2]),
+            SimConfig::conservative(4).with_ks(vec![3]),
+        ] {
+            let out = match optimize(&mut session, &cfg, &SearchKnobs::default()) {
+                Ok(out) => out,
+                Err(_) => continue, // a point the paper path cannot lower either
+            };
+            points += 1;
+            assert!(
+                out.searched.latency_ns <= out.paper.latency_ns,
+                "{}: searched worse than paper",
+                net.name
+            );
+            for c in &out.choices {
+                assert!(
+                    c.stage_ns <= c.paper_stage_ns,
+                    "{}/{}: chosen stage worse than paper",
+                    net.name,
+                    c.name
+                );
+                assert!(c.stage_ns.is_finite() && c.stage_ns > 0.0);
+            }
+            assert!(out.candidates_priced >= net.layers.len());
+        }
+    }
+    assert!(points > 0, "the sweep must exercise successful searches");
+}
+
+#[test]
+fn search_strictly_improves_staging_constrained_networks() {
+    for name in ["mobilenet_mini", "tinyformer"] {
+        let net = all_networks().into_iter().find(|n| n.name == name).unwrap();
+        let mut session = SimSession::new(&net);
+        let cfg = SimConfig::conservative(8);
+        let out = optimize(&mut session, &cfg, &SearchKnobs::default()).unwrap();
+        assert!(
+            out.improved(),
+            "{name}: paper {} ns vs searched {} ns",
+            out.paper.latency_ns,
+            out.searched.latency_ns
+        );
+        assert!(out.changed_layers() > 0, "{name}: no layer changed");
+        assert!(!out.fell_back, "{name}: unexpected fallback");
+    }
+}
+
+#[test]
+fn independent_searches_choose_identical_mappings() {
+    for net in all_networks() {
+        let cfg = SimConfig::conservative(8);
+        let mut s1 = SimSession::new(&net);
+        let mut s2 = SimSession::new(&net);
+        let (a, b) = (
+            optimize(&mut s1, &cfg, &SearchKnobs::default()),
+            optimize(&mut s2, &cfg, &SearchKnobs::default()),
+        );
+        let (Ok(a), Ok(b)) = (a, b) else { continue };
+        assert_eq!(a.assignment(), b.assignment(), "{}", net.name);
+        assert_eq!(
+            a.searched.latency_ns.to_bits(),
+            b.searched.latency_ns.to_bits(),
+            "{}",
+            net.name
+        );
+        assert_eq!(a.candidates_priced, b.candidates_priced, "{}", net.name);
+        assert_eq!(a.pruned_branches, b.pruned_branches, "{}", net.name);
+    }
+}
+
+#[test]
+fn repeated_search_is_fully_cached() {
+    let net = all_networks().into_iter().find(|n| n.name == "vgg16").unwrap();
+    let mut session = SimSession::new(&net);
+    let cfg = SimConfig::conservative(8);
+    let first = optimize(&mut session, &cfg, &SearchKnobs::default()).unwrap();
+    let (_, misses_first) = session.cache_stats();
+    let second = optimize(&mut session, &cfg, &SearchKnobs::default()).unwrap();
+    let (_, misses_second) = session.cache_stats();
+    assert_eq!(misses_first, misses_second, "second search must be all hits");
+    assert_eq!(first.assignment(), second.assignment());
+    assert_eq!(
+        first.searched.latency_ns.to_bits(),
+        second.searched.latency_ns.to_bits()
+    );
+}
+
+#[test]
+fn job_report_routes_through_the_search_mapper() {
+    let spec = Spec::builtin("mobilenet_mini")
+        .with_preset("conservative")
+        .with_mapper(Mapper::Search);
+    let job = Job::new(spec.clone()).unwrap();
+    let report = job.report().unwrap();
+    let out = job.search().unwrap();
+    assert_eq!(report.latency_ns.to_bits(), out.searched.latency_ns.to_bits());
+    // The searched report strictly beats the same spec under the paper
+    // mapper.
+    let paper = Job::new(spec.with_mapper(Mapper::Paper)).unwrap().report().unwrap();
+    assert!(report.latency_ns < paper.latency_ns);
+    assert_eq!(paper.latency_ns.to_bits(), out.paper.latency_ns.to_bits());
+}
+
+#[test]
+fn mapper_field_round_trips_and_defaults_to_paper() {
+    // Absent → the frozen default.
+    let spec = Spec::builtin("pimnet");
+    assert_eq!(spec.run.mapper, Mapper::Paper);
+    let text = spec.to_json_text();
+    assert!(!text.contains("mapper"), "default mapper must not be emitted");
+    assert_eq!(Spec::from_json_text(&text).unwrap().run.mapper, Mapper::Paper);
+
+    // Present → round-trips through the canonical form (fixed point).
+    let mut spec = Spec::builtin("tinyformer")
+        .with_preset("conservative")
+        .with_mapper(Mapper::Search);
+    spec.run.beam = 2;
+    spec.run.search_budget = 16;
+    let text = spec.to_json_text();
+    assert!(text.contains("\"mapper\": \"search\""), "{text}");
+    let reparsed = Spec::from_json_text(&text).unwrap();
+    assert_eq!(reparsed.run.mapper, Mapper::Search);
+    assert_eq!(reparsed.run.beam, 2);
+    assert_eq!(reparsed.run.search_budget, 16);
+    assert_eq!(reparsed.to_json_text(), text, "canonical form must be a fixed point");
+
+    // Unknown spelling is a schema error.
+    let bad = text.replace("\"search\"", "\"exhaustive\"");
+    assert!(Spec::from_json_text(&bad).is_err());
+}
+
+#[test]
+fn search_knob_warnings_surface_through_check() {
+    use pim_dram::analysis::{check_spec, codes};
+    let mut spec = Spec::builtin("pimnet")
+        .with_preset("conservative")
+        .with_mapper(Mapper::Search);
+    spec.run.search_budget = 0;
+    spec.run.beam = 0;
+    let d = check_spec(&spec);
+    assert_eq!(d.error_count(), 0, "{}", d.render_text());
+    for code in [codes::W_SEARCH_BUDGET_ZERO, codes::W_BEAM_CLAMPED] {
+        assert!(d.iter().any(|f| f.code == code), "{code}:\n{}", d.render_text());
+    }
+    // The same spec under the paper mapper has no W05x findings.
+    let d = check_spec(&Spec::builtin("pimnet").with_preset("conservative"));
+    assert!(
+        d.iter().all(|f| !f.code.starts_with("W05")),
+        "{}",
+        d.render_text()
+    );
+}
