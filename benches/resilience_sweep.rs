@@ -44,6 +44,8 @@ fn run(transient: f64, retries: u32, requests: u64) -> FleetReport {
             probe_after_ms: 10,
             ..ResilienceSpec::default()
         },
+        traffic: None,
+        service_ns_per_device: None,
     };
     simulate_fleet(&cfg).expect("fleet config is valid")
 }

@@ -1,0 +1,289 @@
+//! Saturation sweep: open-loop arrival rate × fleet size × device mix on
+//! the deterministic virtual-time fleet (`coordinator::chaos`), with
+//! service times priced by the real timing model (`api::Job`) — not made
+//! up. The sweep locates the saturation knee (goodput-rate plateau / p99
+//! blow-up) per fleet, and the two serving-at-scale claims double as
+//! regression assertions in full (non-FAST) runs:
+//!
+//!   * On a mixed edge/cloud fleet under deadline pressure, the
+//!     backlog-aware router achieves strictly higher goodput than
+//!     round-robin at at least one arrival rate (`backlog_goodput_gain_x`).
+//!   * Searched-plan dispatch (`run.mapper: "search"`) is never worse on
+//!     end-to-end serve p50 at any swept rate, and strictly faster at at
+//!     least one (`searched_p50_speedup_x`) — on whichever of
+//!     mobilenet_mini/tinyformer the mapping search improves more.
+//!
+//! Every cell accounts for every offered request, and the whole sweep is
+//! bitwise reproducible (virtual time, pinned seeds). Wall-clock targets
+//! (`saturation_cell`, `searched_fleet_price`) land in the shared
+//! `BENCH_PERF.json` next to the `perf_hotpath` ones.
+
+use pim_dram::api::{Job, Mapper, Spec};
+use pim_dram::bench_harness::{
+    banner, check_regression, read_baseline, write_bench_json, Bencher,
+};
+use pim_dram::coordinator::{
+    simulate_fleet, ArrivalKind, FaultSpec, FleetConfig, FleetReport, Policy,
+    ResilienceSpec, TrafficSpec,
+};
+use pim_dram::util::table::{Align, Table};
+
+/// Every run — fast or full — must measure these. A fast-mode change that
+/// silently drops one fails here, not in a later CI grep.
+const REQUIRED: [&str; 2] = ["saturation_cell", "searched_fleet_price"];
+
+/// Per-image service time (ns) of `net` on `preset`, from the timing
+/// model — searched through `mapopt` when asked.
+fn price(net: &str, preset: &str, mapper: Mapper) -> f64 {
+    let spec = Spec::builtin(net).with_preset(preset).with_mapper(mapper);
+    Job::new(spec)
+        .expect("builtin spec resolves")
+        .report()
+        .expect("builtin network prices")
+        .cycle_ns
+}
+
+/// One sweep cell: Poisson arrivals at `rate_rps` against a fleet with
+/// the given per-device service times, under a deadline scaled to the
+/// slowest device (so overload shows up as lost goodput, not just queue
+/// depth).
+fn run_cell(service: &[f64], policy: Policy, rate_rps: f64, requests: u64) -> FleetReport {
+    let slow = service.iter().cloned().fold(0.0f64, f64::max);
+    let mean = service.iter().sum::<f64>() / service.len() as f64;
+    let cfg = FleetConfig {
+        devices: service.len(),
+        service_ns: mean,
+        batch: 1,
+        policy,
+        seed: 0x5EED,
+        requests,
+        load: 1.0,
+        faults: FaultSpec::none(),
+        resilience: ResilienceSpec {
+            deadline_ms: Some(((slow * 10.0) / 1e6).ceil().max(1.0) as u64),
+            ..ResilienceSpec::default()
+        },
+        traffic: Some(TrafficSpec {
+            kind: ArrivalKind::Poisson,
+            rate_rps,
+            ..TrafficSpec::default()
+        }),
+        service_ns_per_device: Some(service.to_vec()),
+    };
+    simulate_fleet(&cfg).expect("fleet config is valid")
+}
+
+/// Aggregate fleet capacity (requests/s) at batch 1: the sum of each
+/// device's service rate. The sweep expresses arrival rates as multiples
+/// of this.
+fn capacity_rps(service: &[f64]) -> f64 {
+    service.iter().map(|&s| 1e9 / s).sum()
+}
+
+fn main() {
+    banner(
+        "Saturation sweep",
+        "open-loop arrival rate × fleet size × device mix (virtual time)",
+    );
+    let fast = std::env::var("PIM_BENCH_FAST").is_ok();
+    let requests: u64 = if fast { 300 } else { 2500 };
+    let mut b = Bencher::from_env();
+
+    // Real per-device service times from the timing model.
+    let cloud = price("mobilenet_mini", "cloud", Mapper::Paper);
+    let edge = price("mobilenet_mini", "edge", Mapper::Paper);
+    println!(
+        "priced mobilenet_mini: cloud {:.1} µs/img, edge {:.1} µs/img\n",
+        cloud / 1e3,
+        edge / 1e3
+    );
+
+    let mixes: [(&str, Vec<f64>); 4] = [
+        ("cloud x2", vec![cloud, cloud]),
+        ("edge x2", vec![edge, edge]),
+        ("mixed x2", vec![cloud, edge]),
+        ("mixed x4", vec![cloud, cloud, edge, edge]),
+    ];
+    let rates: [f64; 6] = [0.6, 0.8, 1.0, 1.3, 1.6, 2.0];
+
+    let mut t = Table::new(&[
+        "mix", "rate/cap", "policy", "offered rps", "goodput %", "p50 ms", "p99 ms",
+        "lost",
+    ])
+    .aligns(&[
+        Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
+        Align::Right, Align::Right, Align::Right,
+    ]);
+
+    let mut backlog_gain: f64 = 0.0;
+    let mut knee_rps: f64 = 0.0;
+    for (name, service) in &mixes {
+        let cap = capacity_rps(service);
+        let mut low_rate_p99: Option<f64> = None;
+        let mut knee_found = false;
+        for &mult in &rates {
+            let rate = cap * mult;
+            for policy in [Policy::RoundRobin, Policy::Backlog] {
+                let r = run_cell(service, policy, rate, requests);
+                assert_eq!(
+                    r.accounted(),
+                    r.offered,
+                    "{name} x{mult} {policy:?}: every offered request must \
+                     reach exactly one terminal outcome"
+                );
+                t.row(&[
+                    name.to_string(),
+                    format!("{mult:.1}"),
+                    format!("{policy:?}"),
+                    format!("{:.0}", r.offered_rps),
+                    format!("{:.1}", 100.0 * r.goodput as f64 / r.offered as f64),
+                    format!("{:.3}", r.p50_us / 1e3),
+                    format!("{:.3}", r.p99_us / 1e3),
+                    (r.shed + r.timeouts + r.late).to_string(),
+                ]);
+                if policy == Policy::Backlog {
+                    // Knee: first rate where the backlog fleet stops
+                    // serving ≥ 95% of offered within deadline, or p99
+                    // blows past 5x its low-rate value.
+                    let served = r.goodput as f64 / r.offered as f64;
+                    let p99_blown = low_rate_p99
+                        .map(|base| base > 0.0 && r.p99_us > 5.0 * base)
+                        .unwrap_or(false);
+                    low_rate_p99.get_or_insert(r.p99_us);
+                    if !knee_found && (served < 0.95 || p99_blown) {
+                        knee_found = true;
+                        println!(
+                            "knee[{name}]: {:.0} rps ({mult:.1}x capacity)",
+                            r.offered_rps
+                        );
+                        if name.starts_with("mixed x2") {
+                            knee_rps = r.offered_rps;
+                        }
+                    }
+                }
+            }
+            // Mixed fleets are where capability-aware routing pays: track
+            // the best goodput gain of backlog over round-robin.
+            if name.starts_with("mixed") {
+                let rr = run_cell(service, Policy::RoundRobin, rate, requests);
+                let bl = run_cell(service, Policy::Backlog, rate, requests);
+                backlog_gain = backlog_gain.max(bl.goodput as f64 / rr.goodput as f64);
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- claim A: backlog beats round-robin on a mixed fleet -------------
+    println!("backlog-vs-rr best goodput gain on mixed fleets: {backlog_gain:.2}x");
+    if !fast {
+        assert!(
+            backlog_gain > 1.0,
+            "backlog-aware routing must beat round-robin goodput on a mixed \
+             edge/cloud fleet at >= 1 arrival rate (got {backlog_gain:.3}x)"
+        );
+    }
+
+    // ---- claim B: searched-plan dispatch serves faster -------------------
+    // Pick whichever generality workload the mapping search improves more.
+    let (net, paper_ns, searched_ns) = ["mobilenet_mini", "tinyformer"]
+        .iter()
+        .map(|net| {
+            let p = price(net, "cloud", Mapper::Paper);
+            let s = price(net, "cloud", Mapper::Search);
+            (*net, p, s)
+        })
+        .max_by(|a, b| (a.1 / a.2).partial_cmp(&(b.1 / b.2)).unwrap())
+        .unwrap();
+    println!(
+        "\nsearched dispatch on {net}: paper {:.1} µs/img, searched {:.1} µs/img",
+        paper_ns / 1e3,
+        searched_ns / 1e3
+    );
+    let mut searched_speedup: f64 = 0.0;
+    let paper_fleet = vec![paper_ns, paper_ns];
+    let searched_fleet = vec![searched_ns, searched_ns];
+    let cap = capacity_rps(&paper_fleet);
+    for &mult in &[0.6, 0.8, 1.0] {
+        let p = run_cell(&paper_fleet, Policy::Backlog, cap * mult, requests);
+        let s = run_cell(&searched_fleet, Policy::Backlog, cap * mult, requests);
+        assert!(
+            s.p50_us <= p.p50_us,
+            "searched dispatch must never be slower on serve p50 \
+             ({net} x{mult}: searched {:.1} µs vs paper {:.1} µs)",
+            s.p50_us,
+            p.p50_us
+        );
+        searched_speedup = searched_speedup.max(p.p50_us / s.p50_us);
+    }
+    println!("searched serve p50 speedup on {net}: {searched_speedup:.2}x");
+    if !fast {
+        assert!(
+            searched_speedup > 1.0,
+            "searched-plan dispatch must be strictly faster on serve p50 for \
+             at least one rate on {net} (got {searched_speedup:.3}x)"
+        );
+    }
+
+    // ---- determinism: same seeds, same bits ------------------------------
+    let once = run_cell(&mixes[2].1, Policy::Backlog, capacity_rps(&mixes[2].1), requests);
+    let again = run_cell(&mixes[2].1, Policy::Backlog, capacity_rps(&mixes[2].1), requests);
+    assert_eq!(once, again, "fleet replay must be bitwise reproducible");
+
+    // ---- wall-clock targets ----------------------------------------------
+    let mixed = mixes[2].1.clone();
+    let mid_rate = capacity_rps(&mixed);
+    b.bench_items("saturation_cell", requests as f64, || {
+        run_cell(&mixed, Policy::Backlog, mid_rate, requests).completed
+    });
+    b.bench("searched_fleet_price", || {
+        price("mobilenet_mini", "cloud", Mapper::Search).to_bits()
+    });
+
+    // ---- structural fast-mode guard --------------------------------------
+    for name in REQUIRED {
+        assert!(
+            b.results().iter().any(|m| m.name == name),
+            "required perf target `{name}` was not measured — fast mode may \
+             shrink iteration counts but never skip a target"
+        );
+    }
+
+    // ---- machine-readable perf record + regression gate ------------------
+    let json_path = std::env::var("PIM_BENCH_JSON").unwrap_or_else(|_| {
+        format!("{}/../BENCH_PERF.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let baseline_path =
+        std::env::var("PIM_BENCH_BASELINE").unwrap_or_else(|_| json_path.clone());
+    let baseline = read_baseline(&baseline_path);
+    let baseline_pairs = baseline.clone().unwrap_or_default();
+    write_bench_json(
+        &json_path,
+        "regenerate with: cargo bench --bench perf_hotpath && cargo bench \
+         --bench saturation_sweep (PIM_BENCH_FAST=1 for smoke runs)",
+        b.results(),
+        &[
+            ("backlog_goodput_gain_x", backlog_gain),
+            ("searched_p50_speedup_x", searched_speedup),
+            ("saturation_knee_rps", knee_rps),
+        ],
+        &baseline_pairs,
+    )
+    .expect("writing BENCH_PERF.json");
+    println!("\nwrote {json_path}  (record the table in EXPERIMENTS.md §Perf)");
+
+    match baseline {
+        None => println!(
+            "no perf baseline at {baseline_path} (missing or empty seed) — \
+             regression gate skipped"
+        ),
+        Some(base) => match check_regression(&base, b.results(), 0.25) {
+            Ok(()) => println!(
+                "regression gate: all shared targets within +25% of {baseline_path}"
+            ),
+            Err(report) => {
+                eprintln!("perf regression vs {baseline_path}:\n{report}");
+                std::process::exit(1);
+            }
+        },
+    }
+}

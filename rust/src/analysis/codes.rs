@@ -109,6 +109,20 @@ pub const W_TILING_DEGENERATE: &str = "W051";
 /// it to 1, expanding only the single best-bounded k-branch.
 pub const W_BEAM_CLAMPED: &str = "W052";
 
+// ---- Warnings: traffic / fleet --------------------------------------------
+
+/// An open-loop arrival process is configured with `rate: 0`: no request
+/// ever arrives, so the serve run measures an idle fleet.
+pub const W_ARRIVAL_RATE_ZERO: &str = "W053";
+/// A bursty arrival process whose on/off period is shorter than the
+/// batching window: the batcher integrates over whole bursts, so the
+/// carefully-shaped traffic is indistinguishable from uniform.
+pub const W_BURST_INSIDE_WINDOW: &str = "W054";
+/// A heterogeneous fleet (two or more distinct device presets) dispatched
+/// round-robin: the capability-blind policy paces the whole fleet at the
+/// slowest device; use `policy: "backlog"`.
+pub const W_HETERO_BLIND_POLICY: &str = "W055";
+
 /// The full registry: `(code, one-line meaning)`. The uniqueness test in
 /// `tests/analysis_check.rs` and CI's DESIGN.md grep guard both walk this
 /// table.
@@ -137,4 +151,7 @@ pub const REGISTRY: &[(&str, &str)] = &[
     (W_SEARCH_BUDGET_ZERO, "search mapper with a zero candidate budget"),
     (W_TILING_DEGENERATE, "tiling knob degenerate at the spec's k"),
     (W_BEAM_CLAMPED, "beam width below 1; clamped to 1"),
+    (W_ARRIVAL_RATE_ZERO, "open-loop arrival configured with rate 0"),
+    (W_BURST_INSIDE_WINDOW, "burst period shorter than the batch window"),
+    (W_HETERO_BLIND_POLICY, "heterogeneous fleet with round-robin dispatch"),
 ];

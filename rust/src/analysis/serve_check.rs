@@ -14,12 +14,21 @@
 //!   * `W043` — a non-noop fault schedule with `seed: 0` (the unset
 //!     default): valid, deterministic, and almost never the intended
 //!     experiment.
+//!   * `W053` — an open-loop arrival process with `rate: 0`: the rate
+//!     silently falls back to capacity-derived pacing, so the "open-loop"
+//!     experiment is really the closed-loop one.
+//!   * `W054` — a bursty arrival whose on/off period fits inside the
+//!     batching window: the batcher integrates over whole bursts and the
+//!     shaped traffic degenerates to uniform.
+//!   * `W055` — a heterogeneous fleet dispatched round-robin: the
+//!     capability-blind policy paces the fleet at its slowest device.
 //!
 //! `W040` is the one pass that needs a priced number; it prices through a
 //! *fresh* `job.session()` (never `job.report()`, which itself runs this
 //! analyzer fail-fast — pricing through it would recurse).
 
-use crate::api::Job;
+use crate::api::{DevicesSpec, Job};
+use crate::coordinator::{ArrivalKind, Policy};
 use crate::util::ceil_div;
 
 use super::codes;
@@ -68,6 +77,47 @@ pub fn serve_pass(job: &Job, d: &mut Diagnostics) {
         }
     }
 
+    if let Some(arrival) = &serve.arrival {
+        if arrival.rate_rps == 0.0 {
+            d.warn(
+                codes::W_ARRIVAL_RATE_ZERO,
+                spec_path("serve.arrival.rate"),
+                "open-loop arrival has rate 0: pacing falls back to the \
+                 capacity-derived closed-loop schedule; set an explicit \
+                 requests/s rate for a real open-loop experiment"
+                    .to_string(),
+            );
+        }
+        if arrival.kind == ArrivalKind::Bursty
+            && arrival.period_ms < serve.batch_window_ms
+        {
+            d.warn(
+                codes::W_BURST_INSIDE_WINDOW,
+                spec_path("serve.arrival.period_ms"),
+                format!(
+                    "burst period {} ms fits inside the {} ms batching \
+                     window: the batcher integrates over whole bursts, so \
+                     the shaped traffic is indistinguishable from uniform",
+                    arrival.period_ms, serve.batch_window_ms
+                ),
+            );
+        }
+    }
+
+    if let Some(fleet) = serve.devices.as_ref().and_then(DevicesSpec::fleet) {
+        let hetero = fleet.iter().any(|dev| *dev != fleet[0]);
+        if hetero && serve.policy == Policy::RoundRobin {
+            d.warn(
+                codes::W_HETERO_BLIND_POLICY,
+                spec_path("serve.policy"),
+                "heterogeneous fleet dispatched round-robin: the \
+                 capability-blind policy paces the whole fleet at its \
+                 slowest device; use policy \"backlog\""
+                    .to_string(),
+            );
+        }
+    }
+
     if let Some(faults) = &serve.faults {
         if faults.is_noop() {
             return;
@@ -103,8 +153,8 @@ pub fn serve_pass(job: &Job, d: &mut Diagnostics) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::Spec;
-    use crate::coordinator::{CrashSpec, FaultSpec, ResilienceSpec};
+    use crate::api::{DeviceSpec, Spec};
+    use crate::coordinator::{CrashSpec, FaultSpec, ResilienceSpec, TrafficSpec};
 
     fn check(spec: Spec) -> Diagnostics {
         let job = Job::new(spec).unwrap();
@@ -193,6 +243,77 @@ mod tests {
             beyond[0].location,
             Location::Spec { path: "serve.faults.crash[1]".into() }
         );
+    }
+
+    #[test]
+    fn zero_rate_arrival_is_w053_and_an_explicit_rate_is_not() {
+        for (rate_rps, want) in [(0.0, true), (500.0, false)] {
+            let mut spec = serving_spec();
+            spec.serve.as_mut().unwrap().arrival =
+                Some(TrafficSpec { rate_rps, ..Default::default() });
+            let d = check(spec);
+            assert_eq!(
+                d.iter().any(|f| f.code == codes::W_ARRIVAL_RATE_ZERO),
+                want,
+                "rate {rate_rps}:\n{}",
+                d.render_text()
+            );
+        }
+    }
+
+    #[test]
+    fn burst_period_inside_the_batch_window_is_w054() {
+        let mut spec = serving_spec();
+        let serve = spec.serve.as_mut().unwrap();
+        serve.batch_window_ms = 10;
+        serve.arrival = Some(TrafficSpec {
+            kind: ArrivalKind::Bursty,
+            rate_rps: 1000.0,
+            period_ms: 4,
+            ..Default::default()
+        });
+        let d = check(spec);
+        let f = d.iter().next().unwrap();
+        assert_eq!(f.code, codes::W_BURST_INSIDE_WINDOW);
+        assert_eq!(
+            f.location,
+            Location::Spec { path: "serve.arrival.period_ms".into() }
+        );
+        // A Poisson process with the same short period is shapeless — no
+        // burst to smooth away, no warning.
+        let mut spec = serving_spec();
+        let serve = spec.serve.as_mut().unwrap();
+        serve.batch_window_ms = 10;
+        serve.arrival =
+            Some(TrafficSpec { rate_rps: 1000.0, period_ms: 4, ..Default::default() });
+        assert!(check(spec).is_empty());
+    }
+
+    #[test]
+    fn hetero_fleet_under_round_robin_is_w055() {
+        let cloud = DeviceSpec { preset: "cloud".into(), ..Default::default() };
+        let edge = DeviceSpec { preset: "edge".into(), ..Default::default() };
+
+        let mut spec = serving_spec();
+        spec.serve.as_mut().unwrap().devices =
+            Some(DevicesSpec::Fleet(vec![cloud.clone(), edge.clone()]));
+        let d = check(spec);
+        let f = d.iter().next().unwrap();
+        assert_eq!(f.code, codes::W_HETERO_BLIND_POLICY);
+        assert_eq!(f.location, Location::Spec { path: "serve.policy".into() });
+
+        // Backlog policy on the same fleet, and a homogeneous fleet under
+        // round-robin, are both fine.
+        let mut spec = serving_spec();
+        let serve = spec.serve.as_mut().unwrap();
+        serve.devices = Some(DevicesSpec::Fleet(vec![cloud.clone(), edge]));
+        serve.policy = Policy::Backlog;
+        assert!(check(spec).is_empty());
+
+        let mut spec = serving_spec();
+        spec.serve.as_mut().unwrap().devices =
+            Some(DevicesSpec::Fleet(vec![cloud.clone(), cloud]));
+        assert!(check(spec).is_empty());
     }
 
     #[test]

@@ -32,7 +32,7 @@ use crate::plan::PlanError;
 use crate::sim::{SimConfig, SimReport, SimResult, SimSession};
 use crate::workloads::Network;
 
-use super::spec::{Mapper, RunSpec, Spec};
+use super::spec::{DeviceSpec, DevicesSpec, Mapper, RunSpec, ServeSpec, Spec};
 
 /// Search knobs resolved from a spec's run section.
 fn search_knobs(run: &RunSpec) -> SearchKnobs {
@@ -194,14 +194,59 @@ impl Job {
             .collect()
     }
 
+    /// Resolve one heterogeneous-fleet entry against this job's run
+    /// section — the same preset + override + ks/shard sequence as
+    /// `Spec::resolve_config`, just with the fleet entry's device.
+    fn fleet_device_config(&self, dev: &DeviceSpec) -> Result<SimConfig> {
+        let mut cfg = dev.resolve(self.spec.run.precision)?;
+        cfg.ks = self.spec.run.ks.clone();
+        cfg.shard = self.spec.run.shard.policy;
+        Ok(cfg)
+    }
+
+    /// Per-device serving backends. Homogeneous paper fleets return one
+    /// backend cloned per worker (the frozen legacy pricing); a
+    /// heterogeneous fleet and/or `run.mapper: "search"` prices each
+    /// device's own geometry — searched per device when asked, with the
+    /// session's fingerprint cache absorbing the shared layers.
+    fn serve_backends(
+        &self,
+        session: &mut SimSession<'_>,
+        opts: &ServeSpec,
+        devices: usize,
+    ) -> Result<Vec<SimBackend>> {
+        let fleet = opts.devices.as_ref().and_then(DevicesSpec::fleet);
+        let searched = self.spec.run.mapper == Mapper::Search;
+        if fleet.is_none() && !searched {
+            let backend = SimBackend::from_session(session, &self.cfg, opts.batch)?;
+            return Ok(vec![backend; devices]);
+        }
+        let image_elems = self.net.layers[0].in_elems();
+        let mut backends = Vec::with_capacity(devices);
+        for d in 0..devices {
+            let cfg = match fleet {
+                Some(f) => self.fleet_device_config(&f[d])?,
+                None => self.cfg.clone(),
+            };
+            let report = if searched {
+                mapopt::optimize(session, &cfg, &search_knobs(&self.spec.run))?.searched
+            } else {
+                session.report(&cfg)?
+            };
+            backends.push(SimBackend::from_report(&report, image_elems, opts.batch));
+        }
+        Ok(backends)
+    }
+
     /// Start a pool of simulated PIM devices serving this job's plan: one
     /// incremental session prices the plan summary *and* the worker
-    /// backend, then `coordinator::PoolConfig`/`MultiDeviceServer` are
+    /// backends, then `coordinator::PoolConfig`/`MultiDeviceServer` are
     /// built from the spec's serve options (defaults if absent).
     ///
-    /// Serving always prices the paper mapping — `run.mapper: "search"`
-    /// applies to [`Job::report`]/[`Job::search`]; a searched serving
-    /// backend is an open roadmap item.
+    /// A heterogeneous `serve.devices` fleet prices every device's own
+    /// geometry (so the backlog policy can weigh real service times), and
+    /// `run.mapper: "search"` serves each device its mapopt-searched plan.
+    /// The homogeneous paper path stays bit-for-bit the legacy one.
     pub fn serve(&self) -> Result<ServeHandle> {
         // Same fail-fast as `report()`: don't start worker threads for a
         // plan the analyzer can already prove unpriceable.
@@ -210,23 +255,38 @@ impl Job {
         }
         let opts = self.spec.serve.clone().unwrap_or_default();
         let mut session = self.session();
-        let report = session.report(&self.cfg)?;
-        let devices = opts.devices.unwrap_or(report.replicas).max(1);
-        let backend = SimBackend::from_session(&mut session, &self.cfg, opts.batch)?;
+        let report = if self.spec.run.mapper == Mapper::Search {
+            self.search_with(&mut session)?.searched
+        } else {
+            session.report(&self.cfg)?
+        };
+        let devices = match &opts.devices {
+            None => report.replicas.max(1),
+            Some(d) => d.count().max(1),
+        };
+        let backends = self.serve_backends(&mut session, &opts, devices)?;
+        // Only a heterogeneous fleet carries per-device weights into the
+        // router; uniform fleets keep the legacy unit weights.
+        let service_ns = opts
+            .devices
+            .as_ref()
+            .and_then(DevicesSpec::fleet)
+            .map(|_| backends.iter().map(SimBackend::service_ns).collect());
         let pool = PoolConfig {
             devices,
             policy: opts.policy,
             batch_window: Duration::from_millis(opts.batch_window_ms),
             resilience: opts.resilience.unwrap_or_default(),
+            service_ns,
         };
         // A noop fault section keeps the plain backend — the fault-free
         // serve path stays bit-for-bit the legacy one.
         let faults = opts.faults.clone().filter(|f| !f.is_noop());
         let server = match faults {
             Some(faults) => MultiDeviceServer::start(pool, move |d| {
-                Ok(FaultyBackend::new(backend.clone(), d, faults.clone()))
+                Ok(FaultyBackend::new(backends[d].clone(), d, faults.clone()))
             })?,
-            None => MultiDeviceServer::start(pool, move |_| Ok(backend.clone()))?,
+            None => MultiDeviceServer::start(pool, move |d| Ok(backends[d].clone()))?,
         };
         Ok(ServeHandle {
             server,
@@ -238,13 +298,39 @@ impl Job {
     }
 
     /// Deterministic degraded-mode SLO report: replay this job's serving
-    /// fleet — same devices/policy/batch, same fault schedule, same
-    /// resilience policy — as a virtual-time simulation over `images`
-    /// offered requests. Same spec → bitwise-identical [`FleetReport`].
+    /// fleet — same devices/policy/batch, same arrival process, same fault
+    /// schedule, same resilience policy — as a virtual-time simulation
+    /// over `images` offered requests. Same spec → bitwise-identical
+    /// [`FleetReport`].
     pub fn fleet_report(&self) -> Result<FleetReport> {
         let opts = self.spec.serve.clone().unwrap_or_default();
         let report = self.report()?;
-        let devices = opts.devices.unwrap_or(report.replicas).max(1);
+        let devices = match &opts.devices {
+            None => report.replicas.max(1),
+            Some(d) => d.count().max(1),
+        };
+        // A heterogeneous fleet replays with each device's own priced
+        // (searched, under `mapper: "search"`) service time.
+        let service_ns_per_device = match opts.devices.as_ref().and_then(DevicesSpec::fleet)
+        {
+            None => None,
+            Some(fleet) => {
+                let mut session = self.session();
+                let searched = self.spec.run.mapper == Mapper::Search;
+                let mut v = Vec::with_capacity(fleet.len());
+                for dev in fleet {
+                    let cfg = self.fleet_device_config(dev)?;
+                    let rep = if searched {
+                        mapopt::optimize(&mut session, &cfg, &search_knobs(&self.spec.run))?
+                            .searched
+                    } else {
+                        session.report(&cfg)?
+                    };
+                    v.push(rep.cycle_ns);
+                }
+                Some(v)
+            }
+        };
         let cfg = FleetConfig {
             devices,
             service_ns: report.cycle_ns,
@@ -255,6 +341,8 @@ impl Job {
             load: opts.load.unwrap_or(0.9),
             faults: opts.faults.unwrap_or_else(FaultSpec::none),
             resilience: opts.resilience.unwrap_or_default(),
+            traffic: opts.arrival,
+            service_ns_per_device,
         };
         simulate_fleet(&cfg)
     }
@@ -373,6 +461,89 @@ mod tests {
         // A foreign network is rejected per-slot, not a panic.
         let mixed = job.report_batch(&[Spec::builtin("alexnet")]);
         assert!(mixed[0].as_ref().unwrap_err().to_string().contains("network"));
+    }
+
+    fn hetero_fleet() -> DevicesSpec {
+        DevicesSpec::Fleet(vec![
+            DeviceSpec { preset: "cloud".to_string(), ..DeviceSpec::default() },
+            DeviceSpec { preset: "edge".to_string(), ..DeviceSpec::default() },
+        ])
+    }
+
+    #[test]
+    fn hetero_fleet_serves_with_per_device_pricing() {
+        let spec = Spec::builtin("pimnet").with_serve(ServeSpec {
+            devices: Some(hetero_fleet()),
+            policy: Policy::Backlog,
+            batch: 2,
+            batch_window_ms: 1,
+            ..ServeSpec::default()
+        });
+        let job = Job::new(spec).unwrap();
+        let handle = job.serve().unwrap();
+        assert_eq!(handle.devices, 2);
+        let image = vec![1; handle.server.image_elems()];
+        for _ in 0..4 {
+            let resp = handle.server.classify(image.clone()).unwrap();
+            assert_eq!(resp.logits.len(), 10);
+        }
+        assert_eq!(handle.server.metrics().requests, 4);
+        handle.server.shutdown();
+    }
+
+    #[test]
+    fn hetero_fleet_report_routes_by_device_speed() {
+        let spec = Spec::builtin("pimnet").with_serve(ServeSpec {
+            devices: Some(hetero_fleet()),
+            policy: Policy::Backlog,
+            batch: 1,
+            ..ServeSpec::default()
+        });
+        let mut spec = spec;
+        spec.images = 512;
+        let job = Job::new(spec).unwrap();
+        let r = job.fleet_report().unwrap();
+        assert_eq!(r.devices, 2);
+        assert_eq!(r.completed, r.offered);
+        // The cloud device (paper-favorable timing) is strictly faster, so
+        // the backlog policy must send it strictly more batches.
+        assert!(
+            r.per_device_batches[0] > r.per_device_batches[1],
+            "cloud={} edge={}",
+            r.per_device_batches[0],
+            r.per_device_batches[1]
+        );
+    }
+
+    #[test]
+    fn searched_serving_prices_the_searched_plan() {
+        let serve = ServeSpec {
+            devices: Some(DevicesSpec::Count(2)),
+            batch: 2,
+            batch_window_ms: 1,
+            ..ServeSpec::default()
+        };
+        let paper = Job::new(
+            Spec::builtin("mobilenet_mini").with_serve(serve.clone()),
+        )
+        .unwrap();
+        let searched = Job::new(
+            Spec::builtin("mobilenet_mini")
+                .with_serve(serve)
+                .with_mapper(Mapper::Search),
+        )
+        .unwrap();
+        let p = paper.serve().unwrap();
+        let s = searched.serve().unwrap();
+        // The searched mapping is never worse under the analytic cost, and
+        // the serve handle's report is the one the backends were priced by.
+        assert!(s.report.cycle_ns <= p.report.cycle_ns);
+        assert_eq!(
+            s.report.cycle_ns.to_bits(),
+            searched.report().unwrap().cycle_ns.to_bits()
+        );
+        p.server.shutdown();
+        s.server.shutdown();
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod spec;
 
 pub use job::{Job, ServeHandle};
 pub use spec::{
-    parse_policy, policy_name, DeviceSpec, Mapper, NetworkSpec, RunSpec, ServeSpec,
-    ShardSpec, Spec, API_VERSION, BUILTIN_NETWORKS, POLICIES, PRESETS, SHARD_FORMS,
+    parse_policy, policy_name, DeviceSpec, DevicesSpec, Mapper, NetworkSpec, RunSpec,
+    ServeSpec, ShardSpec, Spec, API_VERSION, BUILTIN_NETWORKS, POLICIES, PRESETS,
+    SHARD_FORMS,
 };

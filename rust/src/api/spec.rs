@@ -43,7 +43,8 @@ use anyhow::{Context, Result};
 
 use crate::config::toml::{Toml, Value};
 use crate::coordinator::{
-    CrashSpec, FaultSpec, Policy, ResilienceSpec, StormSpec, StragglerSpec,
+    arrival_name, parse_arrival, CrashSpec, FaultSpec, Policy, ResilienceSpec,
+    StormSpec, StragglerSpec, TrafficSpec,
 };
 use crate::ir::{self, ActFn, Graph, NodeId, Op, Shape};
 use crate::plan::ShardPolicy;
@@ -56,11 +57,14 @@ pub use crate::workloads::nets::NAMES as BUILTIN_NETWORKS;
 /// The one spec-schema version this build reads and writes.
 pub const API_VERSION: i64 = 1;
 
-/// Device preset names [`DeviceSpec::preset`] accepts.
-pub const PRESETS: [&str; 2] = ["paper_favorable", "conservative"];
+/// Device preset names [`DeviceSpec::preset`] accepts. `edge` and `cloud`
+/// are serving-fleet aliases for the two timing points: an `edge` device
+/// is the conservative DDR3 geometry, a `cloud` device the paper-favorable
+/// one — so a heterogeneous `serve.devices` fleet reads naturally.
+pub const PRESETS: [&str; 4] = ["paper_favorable", "conservative", "edge", "cloud"];
 
 /// Canonical dispatch-policy spellings [`ServeSpec::policy`] accepts.
-pub const POLICIES: [&str; 3] = ["rr", "least", "two"];
+pub const POLICIES: [&str; 4] = ["rr", "least", "two", "backlog"];
 
 /// Shard-policy grammar ([`ShardSpec`]).
 pub const SHARD_FORMS: &str = "replicate|layersplit|hybrid:<n>";
@@ -72,6 +76,7 @@ pub fn parse_policy(s: &str) -> Result<Policy> {
         "rr" | "roundrobin" => Ok(Policy::RoundRobin),
         "least" | "leastloaded" => Ok(Policy::LeastLoaded),
         "two" | "twochoices" => Ok(Policy::TwoChoices),
+        "backlog" => Ok(Policy::Backlog),
         other => anyhow::bail!(
             "unknown policy `{other}` (accepted: {})",
             POLICIES.join("|")
@@ -85,6 +90,7 @@ pub fn policy_name(p: Policy) -> &'static str {
         Policy::RoundRobin => "rr",
         Policy::LeastLoaded => "least",
         Policy::TwoChoices => "two",
+        Policy::Backlog => "backlog",
     }
 }
 
@@ -749,8 +755,8 @@ impl DeviceSpec {
     /// field) as the legacy CLI and TOML paths.
     pub fn resolve(&self, n_bits: usize) -> Result<SimConfig> {
         let mut cfg = match self.preset.as_str() {
-            "paper_favorable" => SimConfig::paper_favorable(n_bits),
-            "conservative" => SimConfig::conservative(n_bits),
+            "paper_favorable" | "cloud" => SimConfig::paper_favorable(n_bits),
+            "conservative" | "edge" => SimConfig::conservative(n_bits),
             other => anyhow::bail!(
                 "unknown device preset `{other}` (accepted: {})",
                 PRESETS.join("|")
@@ -1016,11 +1022,41 @@ impl RunSpec {
 
 // ---- ServeSpec ------------------------------------------------------------
 
+/// Serving-fleet shape: either a homogeneous worker count (the legacy JSON
+/// number form) or an explicit heterogeneous list of per-device presets
+/// plus overrides (JSON array of `device` objects).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DevicesSpec {
+    /// `n` identical devices, each running the job's own device config.
+    Count(usize),
+    /// One entry per device; each resolves its own `SimConfig`, so an
+    /// `edge`/`cloud` mix serves with per-device service times.
+    Fleet(Vec<DeviceSpec>),
+}
+
+impl DevicesSpec {
+    /// Number of devices this spec describes.
+    pub fn count(&self) -> usize {
+        match self {
+            DevicesSpec::Count(n) => *n,
+            DevicesSpec::Fleet(f) => f.len(),
+        }
+    }
+
+    /// The per-device specs, when the fleet is heterogeneous.
+    pub fn fleet(&self) -> Option<&[DeviceSpec]> {
+        match self {
+            DevicesSpec::Count(_) => None,
+            DevicesSpec::Fleet(f) => Some(f),
+        }
+    }
+}
+
 /// Pool configuration for `Job::serve`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeSpec {
-    /// Worker/device count; `None` serves one worker per plan replica.
-    pub devices: Option<usize>,
+    /// Fleet shape; `None` serves one worker per plan replica.
+    pub devices: Option<DevicesSpec>,
     /// Fixed device batch (requests are padded up to it).
     pub batch: usize,
     /// Dispatch policy across devices.
@@ -1037,6 +1073,9 @@ pub struct ServeSpec {
     /// Offered load (fraction of full-batch fleet capacity) for the
     /// virtual-time fleet report; `Job::fleet_report` defaults to 0.9.
     pub load: Option<f64>,
+    /// Optional open-loop arrival process (the traffic layer). Absent =
+    /// the legacy uniform capacity-derived arrivals, bit-for-bit.
+    pub arrival: Option<TrafficSpec>,
 }
 
 impl Default for ServeSpec {
@@ -1049,6 +1088,7 @@ impl Default for ServeSpec {
             faults: None,
             resilience: None,
             load: None,
+            arrival: None,
         }
     }
 }
@@ -1056,8 +1096,17 @@ impl Default for ServeSpec {
 impl ServeSpec {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.batch >= 1, "serve.batch must be >= 1");
-        if let Some(d) = self.devices {
-            anyhow::ensure!(d >= 1, "serve.devices must be >= 1");
+        match &self.devices {
+            Some(DevicesSpec::Count(n)) => {
+                anyhow::ensure!(*n >= 1, "serve.devices must be >= 1");
+            }
+            Some(DevicesSpec::Fleet(f)) => {
+                anyhow::ensure!(!f.is_empty(), "serve.devices fleet must not be empty");
+            }
+            None => {}
+        }
+        if let Some(a) = &self.arrival {
+            a.validate()?;
         }
         if let Some(f) = &self.faults {
             f.validate()?;
@@ -1079,12 +1128,22 @@ impl ServeSpec {
         check_keys(
             "serve",
             obj,
-            &["batch", "batch_window_ms", "devices", "faults", "load", "policy", "resilience"],
+            &[
+                "arrival", "batch", "batch_window_ms", "devices", "faults", "load",
+                "policy", "resilience",
+            ],
         )?;
         let mut s = ServeSpec::default();
         if let Some(d) = v.get("devices") {
-            s.devices =
-                Some(d.as_usize().context("serve.devices must be a positive integer")?);
+            s.devices = Some(match d {
+                Json::Arr(items) => DevicesSpec::Fleet(
+                    items.iter().map(DeviceSpec::from_json).collect::<Result<Vec<_>>>()?,
+                ),
+                _ => DevicesSpec::Count(d.as_usize().context(
+                    "serve.devices must be a positive integer or an array of \
+                     device objects",
+                )?),
+            });
         }
         if let Some(b) = v.get("batch") {
             s.batch = b.as_usize().context("serve.batch must be a positive integer")?;
@@ -1107,15 +1166,30 @@ impl ServeSpec {
         if let Some(l) = v.get("load") {
             s.load = Some(l.as_f64().context("serve.load must be a number")?);
         }
+        if let Some(a) = v.get("arrival") {
+            s.arrival = Some(arrival_from_json(a)?);
+        }
         Ok(s)
     }
 
     fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
+        if let Some(a) = &self.arrival {
+            o.insert("arrival".to_string(), arrival_to_json(a));
+        }
         o.insert("batch".to_string(), num(self.batch));
         o.insert("batch_window_ms".to_string(), num(self.batch_window_ms as usize));
-        if let Some(d) = self.devices {
-            o.insert("devices".to_string(), num(d));
+        match &self.devices {
+            Some(DevicesSpec::Count(n)) => {
+                o.insert("devices".to_string(), num(*n));
+            }
+            Some(DevicesSpec::Fleet(f)) => {
+                o.insert(
+                    "devices".to_string(),
+                    Json::Arr(f.iter().map(DeviceSpec::to_json).collect()),
+                );
+            }
+            None => {}
         }
         if let Some(f) = &self.faults {
             o.insert("faults".to_string(), faults_to_json(f));
@@ -1331,6 +1405,68 @@ fn resilience_to_json(r: &ResilienceSpec) -> Json {
     o.insert("queue_cap".to_string(), num(r.queue_cap));
     o.insert("quarantine_after".to_string(), num(r.quarantine_after as usize));
     o.insert("retries".to_string(), num(r.retries as usize));
+    Json::Obj(o)
+}
+
+// ---- arrival section ------------------------------------------------------
+
+fn arrival_from_json(v: &Json) -> Result<TrafficSpec> {
+    let obj = v.as_obj().context("serve.arrival must be an object")?;
+    check_keys(
+        "serve.arrival",
+        obj,
+        &["amplitude", "duty", "period_ms", "process", "rate", "seed"],
+    )?;
+    let mut t = TrafficSpec::default();
+    if let Some(p) = v.get("process") {
+        t.kind =
+            parse_arrival(p.as_str().context("serve.arrival.process must be a string")?)?;
+    }
+    if let Some(r) = v.get("rate") {
+        t.rate_rps = r.as_f64().context("serve.arrival.rate must be a number")?;
+    }
+    if let Some(s) = v.get("seed") {
+        t.seed = s
+            .as_usize()
+            .context("serve.arrival.seed must be a non-negative integer")?
+            as u64;
+    }
+    if let Some(p) = v.get("period_ms") {
+        t.period_ms = p
+            .as_usize()
+            .context("serve.arrival.period_ms must be a positive integer")?
+            as u64;
+    }
+    if let Some(d) = v.get("duty") {
+        t.duty = d.as_f64().context("serve.arrival.duty must be a number")?;
+    }
+    if let Some(a) = v.get("amplitude") {
+        t.amplitude = a.as_f64().context("serve.arrival.amplitude must be a number")?;
+    }
+    Ok(t)
+}
+
+/// Canonical arrival JSON: `process` always, every other knob only off its
+/// default — specs written before the traffic layer stay byte-stable.
+fn arrival_to_json(t: &TrafficSpec) -> Json {
+    let d = TrafficSpec::default();
+    let mut o = BTreeMap::new();
+    if t.amplitude != d.amplitude {
+        o.insert("amplitude".to_string(), Json::Num(t.amplitude));
+    }
+    if t.duty != d.duty {
+        o.insert("duty".to_string(), Json::Num(t.duty));
+    }
+    if t.period_ms != d.period_ms {
+        o.insert("period_ms".to_string(), num(t.period_ms as usize));
+    }
+    o.insert("process".to_string(), Json::Str(arrival_name(t.kind).to_string()));
+    if t.rate_rps != d.rate_rps {
+        o.insert("rate".to_string(), Json::Num(t.rate_rps));
+    }
+    if t.seed != d.seed {
+        o.insert("seed".to_string(), num(t.seed as usize));
+    }
     Json::Obj(o)
 }
 
@@ -1566,7 +1702,7 @@ mod tests {
             .with_grid(2, 4)
             .with_shard(ShardPolicy::LayerSplit)
             .with_serve(ServeSpec {
-                devices: Some(3),
+                devices: Some(DevicesSpec::Count(3)),
                 policy: Policy::LeastLoaded,
                 ..ServeSpec::default()
             });
@@ -1581,7 +1717,7 @@ mod tests {
     fn fault_injected_serve_spec_roundtrips() {
         let spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(
             ServeSpec {
-                devices: Some(4),
+                devices: Some(DevicesSpec::Count(4)),
                 policy: Policy::TwoChoices,
                 faults: Some(FaultSpec {
                     seed: 0xC0FFEE,
@@ -1941,9 +2077,89 @@ mod tests {
         assert_eq!(parse_policy("rr").unwrap(), Policy::RoundRobin);
         assert_eq!(parse_policy("leastloaded").unwrap(), Policy::LeastLoaded);
         assert_eq!(parse_policy("two").unwrap(), Policy::TwoChoices);
+        assert_eq!(parse_policy("backlog").unwrap(), Policy::Backlog);
         assert!(parse_policy("rand").is_err());
-        for p in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+        for p in [
+            Policy::RoundRobin,
+            Policy::LeastLoaded,
+            Policy::TwoChoices,
+            Policy::Backlog,
+        ] {
             assert_eq!(parse_policy(policy_name(p)).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn edge_and_cloud_presets_alias_the_timing_points() {
+        let edge =
+            Spec::builtin("pimnet").with_preset("edge").resolve_config().unwrap();
+        let cloud =
+            Spec::builtin("pimnet").with_preset("cloud").resolve_config().unwrap();
+        // `edge` is the conservative point, `cloud` the paper-favorable one.
+        assert!(!edge.tree_per_subarray && edge.refresh.is_some());
+        assert!(cloud.tree_per_subarray && cloud.refresh.is_none());
+        // Unknown presets still name the full accepted set.
+        let err = Spec::builtin("pimnet")
+            .with_preset("datacenter")
+            .resolve_config()
+            .unwrap_err();
+        assert!(err.to_string().contains("edge"), "{err}");
+    }
+
+    #[test]
+    fn hetero_fleet_and_arrival_roundtrip() {
+        let spec = Spec::builtin("mobilenet_mini").with_serve(ServeSpec {
+            devices: Some(DevicesSpec::Fleet(vec![
+                DeviceSpec { preset: "cloud".to_string(), ..DeviceSpec::default() },
+                DeviceSpec { preset: "edge".to_string(), ..DeviceSpec::default() },
+            ])),
+            policy: Policy::Backlog,
+            arrival: Some(TrafficSpec {
+                kind: crate::coordinator::ArrivalKind::Bursty,
+                rate_rps: 2000.0,
+                duty: 0.25,
+                ..TrafficSpec::default()
+            }),
+            ..ServeSpec::default()
+        });
+        let text = spec.to_json_text();
+        let parsed = Spec::from_json_text(&text).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.to_json_text(), text, "canonical fixed point");
+        let s = parsed.serve.unwrap();
+        assert_eq!(s.devices.as_ref().unwrap().count(), 2);
+        assert_eq!(s.devices.unwrap().fleet().unwrap()[1].preset, "edge");
+        // The legacy count form still parses (and stays a number on write).
+        let spec = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet", "serve": {"devices": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.serve.as_ref().unwrap().devices, Some(DevicesSpec::Count(2)));
+        assert!(spec.to_json_text().contains("\"devices\": 2"));
+    }
+
+    #[test]
+    fn arrival_errors_are_actionable() {
+        // An unknown process names the accepted set.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet",
+                "serve": {"arrival": {"process": "sine"}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("poisson"), "{err}");
+        // Degenerate knobs fail value validation.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet",
+                "serve": {"arrival": {"duty": 0}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duty"), "{err}");
+        // Unknown arrival fields are rejected, not silently defaulted.
+        let err = Spec::from_json_text(
+            r#"{"api_version": 1, "network": "pimnet",
+                "serve": {"arrival": {"rps": 100}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("`rps`"), "{err}");
     }
 }

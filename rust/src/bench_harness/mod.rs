@@ -198,6 +198,11 @@ where
 /// scalars (e.g. the fresh-vs-session sweep speedup), and the `baseline`
 /// ns/op this run was diffed against (empty when no baseline existed).
 /// The schema is stable so CI and trend tooling can diff runs.
+///
+/// The file is merged, not clobbered: targets, derived scalars and
+/// baseline entries recorded by a *different* bench binary (names absent
+/// from this run) are carried over, so `perf_hotpath` and
+/// `saturation_sweep` share the one tracked report.
 pub fn write_bench_json(
     path: &str,
     note: &str,
@@ -208,6 +213,71 @@ pub fn write_bench_json(
     fn esc(s: &str) -> String {
         s.replace('\\', "\\\\").replace('"', "\\\"")
     }
+    let mut target_rows: Vec<String> = results
+        .iter()
+        .map(|m| {
+            format!(
+                "    \"{}\": {{\"ns_per_op\": {:.1}, \"median_ns\": {:.1}, \
+                 \"std_ns\": {:.1}, \"iters\": {}}}",
+                esc(&m.name),
+                m.mean.as_secs_f64() * 1e9,
+                m.median.as_secs_f64() * 1e9,
+                m.std.as_secs_f64() * 1e9,
+                m.iters,
+            )
+        })
+        .collect();
+    let mut derived_rows: Vec<String> = derived
+        .iter()
+        .map(|(k, v)| format!("    \"{}\": {v:.3}", esc(k)))
+        .collect();
+    let mut baseline_rows: Vec<String> = baseline
+        .iter()
+        .map(|(k, v)| format!("    \"{}\": {v:.1}", esc(k)))
+        .collect();
+    if let Some(doc) = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| crate::util::json::Json::parse(&t).ok())
+    {
+        if let Some(obj) = doc.get("targets").and_then(|t| t.as_obj()) {
+            for (name, t) in obj {
+                if results.iter().any(|m| &m.name == name) {
+                    continue;
+                }
+                let f = |k: &str| t.get(k).and_then(|v| v.as_f64());
+                if let (Some(ns), Some(med), Some(std), Some(iters)) =
+                    (f("ns_per_op"), f("median_ns"), f("std_ns"), f("iters"))
+                {
+                    target_rows.push(format!(
+                        "    \"{}\": {{\"ns_per_op\": {ns:.1}, \"median_ns\": \
+                         {med:.1}, \"std_ns\": {std:.1}, \"iters\": {}}}",
+                        esc(name),
+                        iters as u64,
+                    ));
+                }
+            }
+        }
+        if let Some(obj) = doc.get("derived").and_then(|d| d.as_obj()) {
+            for (name, v) in obj {
+                if derived.iter().any(|(k, _)| *k == name.as_str()) {
+                    continue;
+                }
+                if let Some(v) = v.as_f64() {
+                    derived_rows.push(format!("    \"{}\": {v:.3}", esc(name)));
+                }
+            }
+        }
+        if let Some(obj) = doc.get("baseline").and_then(|b| b.as_obj()) {
+            for (name, v) in obj {
+                if baseline.iter().any(|(k, _)| k == name) {
+                    continue;
+                }
+                if let Some(v) = v.as_f64() {
+                    baseline_rows.push(format!("    \"{}\": {v:.1}", esc(name)));
+                }
+            }
+        }
+    }
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"schema\": \"pim-dram/bench-perf/v2\",\n");
@@ -217,35 +287,19 @@ pub fn write_bench_json(
     ));
     out.push_str(&format!("  \"note\": \"{}\",\n", esc(note)));
     out.push_str("  \"targets\": {\n");
-    for (i, m) in results.iter().enumerate() {
-        out.push_str(&format!(
-            "    \"{}\": {{\"ns_per_op\": {:.1}, \"median_ns\": {:.1}, \
-             \"std_ns\": {:.1}, \"iters\": {}}}{}\n",
-            esc(&m.name),
-            m.mean.as_secs_f64() * 1e9,
-            m.median.as_secs_f64() * 1e9,
-            m.std.as_secs_f64() * 1e9,
-            m.iters,
-            if i + 1 == results.len() { "" } else { "," }
-        ));
+    out.push_str(&target_rows.join(",\n"));
+    if !target_rows.is_empty() {
+        out.push('\n');
     }
     out.push_str("  },\n  \"derived\": {\n");
-    for (i, (k, v)) in derived.iter().enumerate() {
-        out.push_str(&format!(
-            "    \"{}\": {:.3}{}\n",
-            esc(k),
-            v,
-            if i + 1 == derived.len() { "" } else { "," }
-        ));
+    out.push_str(&derived_rows.join(",\n"));
+    if !derived_rows.is_empty() {
+        out.push('\n');
     }
     out.push_str("  },\n  \"baseline\": {\n");
-    for (i, (k, v)) in baseline.iter().enumerate() {
-        out.push_str(&format!(
-            "    \"{}\": {:.1}{}\n",
-            esc(k),
-            v,
-            if i + 1 == baseline.len() { "" } else { "," }
-        ));
+    out.push_str(&baseline_rows.join(",\n"));
+    if !baseline_rows.is_empty() {
+        out.push('\n');
     }
     out.push_str("  }\n}\n");
     std::fs::write(path, out)
@@ -395,6 +449,7 @@ mod tests {
         let m = measurement("simulate(vgg16, \"quoted\")", 1500);
         let path = std::env::temp_dir().join("pim_dram_bench_perf_test.json");
         let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
         write_bench_json(
             path,
             "unit test",
@@ -429,6 +484,7 @@ mod tests {
     fn read_baseline_skips_empty_placeholders() {
         let path = std::env::temp_dir().join("pim_dram_bench_baseline_test.json");
         let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
         // The committed seed placeholder has no targets → no baseline.
         write_bench_json(path, "seed", &[], &[], &[]).unwrap();
         assert!(read_baseline(path).is_none());
@@ -439,6 +495,53 @@ mod tests {
             .unwrap();
         let base = read_baseline(path).unwrap();
         assert_eq!(base, vec![("lower".to_string(), 2000.0)]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bench_json_merges_other_binaries_targets() {
+        let path = std::env::temp_dir().join("pim_dram_bench_merge_test.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        write_bench_json(
+            path,
+            "hotpath run",
+            &[measurement("price_layer", 1000)],
+            &[("sweep_speedup_x", 4.2)],
+            &[("price_layer".to_string(), 900.0)],
+        )
+        .unwrap();
+        // A different binary writes its own targets: both sets survive,
+        // and a re-measured target takes the fresh numbers.
+        write_bench_json(
+            path,
+            "saturation run",
+            &[measurement("saturation_knee", 2000), measurement("price_layer", 1100)],
+            &[("backlog_goodput_gain_x", 1.3)],
+            &[],
+        )
+        .unwrap();
+        let doc = crate::util::json::Json::parse(&std::fs::read_to_string(path).unwrap())
+            .unwrap();
+        let targets = doc.get("targets").unwrap();
+        assert_eq!(
+            targets.get("price_layer").unwrap().req_f64("ns_per_op").unwrap(),
+            1100.0
+        );
+        assert_eq!(
+            targets.get("saturation_knee").unwrap().req_f64("ns_per_op").unwrap(),
+            2000.0
+        );
+        let derived = doc.get("derived").unwrap();
+        assert!((derived.req_f64("sweep_speedup_x").unwrap() - 4.2).abs() < 1e-9);
+        assert!(
+            (derived.req_f64("backlog_goodput_gain_x").unwrap() - 1.3).abs() < 1e-9
+        );
+        // The earlier baseline entry is carried when the new run has none.
+        assert_eq!(
+            doc.get("baseline").unwrap().req_f64("price_layer").unwrap(),
+            900.0
+        );
         let _ = std::fs::remove_file(path);
     }
 

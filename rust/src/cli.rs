@@ -126,7 +126,7 @@ const SERVE_FLAGS: &[&str] = &[
     "spec", "network", "preset", "bits", "k", "channels", "ranks", "shard",
     "backend", "devices", "policy", "images", "batch",
     "deadline-ms", "retries", "queue-cap", "fault-seed", "transient", "load",
-    "report",
+    "arrival", "rate", "report",
 ];
 const SPEC_CMD_FLAGS: &[&str] = &["print"];
 const CHECK_FLAGS: &[&str] = &["json", "deny-warnings"];
@@ -167,11 +167,16 @@ COMMANDS:
   config     Run an experiment from a TOML or spec-JSON file:
              pim-dram config <file>
   serve      Serve batched classification from a multi-device pool
-             --backend <sim|pjrt>  --devices <n>  --policy <{policies}>
-             --images <n>  --batch <b>  (+ spec flags for sim devices;
-             pjrt needs `make artifacts` and a `--features pjrt` build)
+             --backend <sim|pjrt>  --devices <n|{presets_csv}>
+             --policy <{policies}>  --images <n>  --batch <b>
+             (+ spec flags for sim devices; a comma-separated --devices
+             builds a heterogeneous fleet from presets; pjrt needs
+             `make artifacts` and a `--features pjrt` build)
              Resilience: --deadline-ms <ms>  --retries <n>  --queue-cap <n>
              Fault injection: --fault-seed <s>  --transient <p>  --load <f>
+             Open loop: --arrival <{arrivals}>  --rate <req/s>
+             (submissions paced by the arrival process, never the fleet;
+             prints the offered-vs-goodput open-loop report)
              --report prints the deterministic virtual-time fleet SLO
              report (bitwise-reproducible per seed) instead of serving live
   help       Show this help
@@ -181,8 +186,10 @@ Unknown flags are an error; the message lists the command's accepted set.
         version = api::API_VERSION,
         nets = api::BUILTIN_NETWORKS.join("|"),
         presets = api::PRESETS.join("|"),
+        presets_csv = "cloud,edge,...",
         shard = api::SHARD_FORMS,
         policies = api::POLICIES.join("|"),
+        arrivals = crate::coordinator::ARRIVALS.join("|"),
     )
 }
 
@@ -816,14 +823,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// `--devices` accepts a worker count (`--devices 4`) or a comma-separated
+/// preset list for a heterogeneous fleet (`--devices cloud,edge`), each
+/// worker priced for its own geometry.
+fn parse_devices(v: &str) -> Result<api::DevicesSpec> {
+    if let Ok(n) = v.parse::<usize>() {
+        return Ok(api::DevicesSpec::Count(n.max(1)));
+    }
+    let fleet: Vec<api::DeviceSpec> = v
+        .split(',')
+        .map(|p| api::DeviceSpec { preset: p.trim().to_string(), ..Default::default() })
+        .collect();
+    for dev in &fleet {
+        anyhow::ensure!(
+            api::PRESETS.contains(&dev.preset.as_str()),
+            "--devices expects a count or comma-separated presets \
+             ({}), got `{v}`",
+            api::PRESETS.join("|")
+        );
+    }
+    Ok(api::DevicesSpec::Fleet(fleet))
+}
+
 /// Serve synthetic traffic from a pool of *simulated* PIM devices via
 /// `Job::serve`: each worker stands in for one replica of the planned
 /// network, priced by the timing model. Hermetic — no artifacts, no PJRT.
 fn cmd_serve_sim(args: &Args) -> Result<()> {
     let mut spec = spec_from(args, "pimnet")?;
     let mut serve = spec.serve.clone().unwrap_or_default();
-    if args.flags.contains_key("devices") {
-        serve.devices = Some(args.flag_usize("devices", 1)?.max(1));
+    if let Some(v) = args.flags.get("devices") {
+        serve.devices = Some(parse_devices(v)?);
     }
     if let Some(p) = args.flags.get("policy") {
         serve.policy = api::parse_policy(p)?;
@@ -862,6 +891,18 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
     if args.flags.contains_key("load") {
         serve.load = Some(args.flag_f64("load", 0.9)?);
     }
+    // Open-loop arrival overrides (start from the spec's section, if any).
+    if args.flags.contains_key("arrival") || args.flags.contains_key("rate") {
+        let mut a = serve.arrival.clone().unwrap_or_default();
+        if let Some(p) = args.flags.get("arrival") {
+            a.kind = crate::coordinator::parse_arrival(p)?;
+        }
+        if args.flags.contains_key("rate") {
+            a.rate_rps = args.flag_f64("rate", 0.0)?;
+        }
+        serve.arrival = Some(a);
+    }
+    let arrival = serve.arrival.clone();
     spec.serve = Some(serve);
     let images = args.flag_usize("images", spec.images)?;
     spec.images = images; // --images drives both live traffic and the fleet replay
@@ -887,6 +928,26 @@ fn cmd_serve_sim(args: &Args) -> Result<()> {
         handle.policy,
         handle.batch
     );
+
+    // Open loop: pace submissions by the arrival schedule alone — never by
+    // client backpressure — then reconcile the driver's accounting against
+    // the pool's metrics (offered == completed + shed + timeouts + failed).
+    if let Some(a) = &arrival {
+        let interarrival = a.interarrival_ns().unwrap_or_else(|| {
+            // No explicit rate: derive one from fleet capacity × load,
+            // exactly like the virtual-time replay does.
+            let load = job.spec().serve.as_ref().and_then(|s| s.load).unwrap_or(0.9);
+            let per_image = handle.report.cycle_ns / handle.devices.max(1) as f64;
+            ((per_image / load).round() as u64).max(1)
+        });
+        let offsets = a.schedule(images as u64, interarrival);
+        let report = crate::coordinator::drive(&handle.server, &offsets, 0x5EED);
+        report.reconcile(&handle.server.metrics())?;
+        print!("{}", report.render());
+        println!("coordinator: {}", handle.server.metrics().report());
+        handle.server.shutdown();
+        return Ok(());
+    }
 
     let server = &handle.server;
     let elems = server.image_elems();
@@ -1064,6 +1125,19 @@ mod tests {
     }
 
     #[test]
+    fn serve_devices_flag_rejects_unknown_presets() {
+        let err = run_str("serve --backend sim --devices cloud,datacenter --images 4")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--devices"), "{err}");
+        assert!(err.contains("edge"), "{err}");
+        let err = run_str("serve --backend sim --arrival sine --images 4")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("poisson"), "{err}");
+    }
+
+    #[test]
     fn subcommands_run() {
         for cmd in [
             "simulate --network pimnet",
@@ -1090,6 +1164,13 @@ mod tests {
              --devices 2 --images 64 --batch 4 --report --fault-seed 7 \
              --transient 0.2 --retries 2 --deadline-ms 50 --load 1.2 \
              --queue-cap 32",
+            "serve --backend sim --network pimnet --preset conservative \
+             --devices cloud,edge --policy backlog --images 12 --batch 2",
+            "serve --backend sim --network pimnet --preset conservative \
+             --devices 2 --images 16 --batch 4 --arrival poisson --rate 2000",
+            "serve --backend sim --network pimnet --preset conservative \
+             --devices cloud,edge --policy backlog --images 64 --batch 4 \
+             --arrival bursty --rate 4000 --report",
             "help",
         ] {
             run_str(cmd).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));

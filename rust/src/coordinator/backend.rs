@@ -85,6 +85,16 @@ impl SimBackend {
         Ok(b)
     }
 
+    /// Build a device from an already-priced report — the searched-plan
+    /// dispatch path: the caller ran `mapopt` for this device's geometry
+    /// and hands over the winning plan's report, so the worker serves at
+    /// the searched (not paper) service time.
+    pub fn from_report(report: &SimReport, image_elems: usize, batch: usize) -> Self {
+        let mut b = SimBackend::new(batch, image_elems, 10);
+        b.service_ns_per_image = report.cycle_ns;
+        b
+    }
+
     /// Price a whole admission batch through **one** session pass — the
     /// batched serve-pricing path. Each request keeps its own `Result`
     /// (a failing plan poisons only its own slot) and its report is
@@ -294,6 +304,22 @@ mod tests {
             assert_eq!(got.batch_size(), want.batch_size());
             assert_eq!(got.image_elems(), want.image_elems());
         }
+    }
+
+    #[test]
+    fn from_report_matches_from_session() {
+        use crate::sim::{SimConfig, SimSession};
+        use crate::workloads::nets::pimnet;
+        let net = pimnet();
+        let cfg = SimConfig::conservative(8);
+        let mut session = SimSession::new(&net);
+        let report = session.report(&cfg).unwrap();
+        let b = SimBackend::from_report(&report, net.layers[0].in_elems(), 4);
+        let mut fresh = SimSession::new(&net);
+        let want = SimBackend::from_session(&mut fresh, &cfg, 4).unwrap();
+        assert_eq!(b.service_ns().to_bits(), want.service_ns().to_bits());
+        assert_eq!(b.image_elems(), want.image_elems());
+        assert_eq!(b.batch_size(), 4);
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //! Model (documented simplifications):
 //!   * Open-loop arrivals: one request every
 //!     `service_ns / (devices × load)` ns — `load` is offered load as a
-//!     fraction of the fleet's full-batch capacity.
+//!     fraction of the fleet's full-batch capacity. A [`TrafficSpec`]
+//!     swaps the uniform spacing for a seed-deterministic Poisson /
+//!     bursty / diurnal schedule (and an explicit rate, when set).
 //!   * An idle device starts a batch immediately with whatever is queued
 //!     (a zero batch window); fills accumulate while devices are busy.
 //!   * A batch (padded to `batch`) takes `batch × service_ns × slow` ns;
@@ -31,8 +33,10 @@ use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 use super::faults::FaultSpec;
+use super::metrics::LatencyStats;
 use super::resilience::{HealthTracker, HealthTransition, ResilienceSpec};
 use super::router::{Device, Policy, Router};
+use super::traffic::TrafficSpec;
 
 /// Configuration of one fleet simulation.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +56,15 @@ pub struct FleetConfig {
     pub load: f64,
     pub faults: FaultSpec,
     pub resilience: ResilienceSpec,
+    /// Arrival process. `None` keeps the legacy uniform spacing, bitwise.
+    /// With `Some`, the spec's schedule replaces it; an explicit
+    /// `rate_rps` overrides the `load`-derived interarrival.
+    pub traffic: Option<TrafficSpec>,
+    /// Per-device service time per image (ns) for heterogeneous fleets.
+    /// `None` keeps the legacy homogeneous fleet (`service_ns` everywhere,
+    /// unit router weights), bitwise. With `Some`, the router scores with
+    /// real per-device speeds and each device's batches take its own time.
+    pub service_ns_per_device: Option<Vec<f64>>,
 }
 
 impl Default for FleetConfig {
@@ -66,6 +79,8 @@ impl Default for FleetConfig {
             load: 0.9,
             faults: FaultSpec::none(),
             resilience: ResilienceSpec::default(),
+            traffic: None,
+            service_ns_per_device: None,
         }
     }
 }
@@ -87,12 +102,36 @@ impl FleetConfig {
         );
         self.faults.validate()?;
         self.resilience.validate()?;
+        if let Some(t) = &self.traffic {
+            t.validate()?;
+        }
+        if let Some(s) = &self.service_ns_per_device {
+            anyhow::ensure!(
+                s.len() == self.devices,
+                "service_ns_per_device has {} entries for {} devices",
+                s.len(),
+                self.devices
+            );
+            anyhow::ensure!(
+                s.iter().all(|&v| v.is_finite() && v > 0.0),
+                "service_ns_per_device entries must be finite and positive: {s:?}"
+            );
+        }
         Ok(())
     }
 
-    /// Virtual ns between arrivals.
+    /// Virtual ns between arrivals: the traffic spec's explicit rate when
+    /// set, else derived from the fleet's capacity and `load`.
     fn interarrival_ns(&self) -> u64 {
+        if let Some(ns) = self.traffic.as_ref().and_then(|t| t.interarrival_ns()) {
+            return ns;
+        }
         ((self.service_ns / (self.devices as f64 * self.load)).round() as u64).max(1)
+    }
+
+    /// Per-image service time of `device`.
+    fn service_ns_for(&self, device: usize) -> f64 {
+        self.service_ns_per_device.as_ref().map_or(self.service_ns, |s| s[device])
     }
 }
 
@@ -320,6 +359,9 @@ impl<'a> Fleet<'a> {
             for d in 0..self.cfg.devices {
                 let up = self.health.can_route(d, now);
                 self.router.set_available(d, up);
+                // Mirror the live dispatcher: an open probe window lets the
+                // backlog policy pre-empt the score for the probe request.
+                self.router.set_probe_candidate(d, up && self.health.is_quarantined(d));
             }
         }
         let routed = self.router.try_route();
@@ -407,7 +449,7 @@ impl<'a> Fleet<'a> {
                 self.injected.storms += 1;
             }
             let service =
-                fault.slow.apply_ns(self.cfg.service_ns * self.cfg.batch as f64);
+                fault.slow.apply_ns(self.cfg.service_ns_for(device) * self.cfg.batch as f64);
             let dur = (service.round() as u64).max(1);
             self.devs[device].running = live;
             self.devs[device].running_fault = Some(fault);
@@ -463,8 +505,14 @@ enum Outcome {
 pub fn simulate_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
     cfg.validate()?;
     let interarrival = cfg.interarrival_ns();
+    // Legacy homogeneous fleets keep unit router weights (backlog ==
+    // queue depth, bitwise-frozen); heterogeneous fleets hand the router
+    // real per-device speeds so capability-aware policies can score.
     let devices = (0..cfg.devices)
-        .map(|d| Device::new(&format!("sim{d}"), 1.0))
+        .map(|d| {
+            let weight = cfg.service_ns_per_device.as_ref().map_or(1.0, |s| s[d]);
+            Device::new(&format!("sim{d}"), weight)
+        })
         .collect();
     let mut fleet = Fleet {
         cfg,
@@ -495,9 +543,26 @@ pub fn simulate_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
         latencies_us: Summary::new(),
         end_ns: 0,
     };
-    for i in 0..cfg.requests {
-        fleet.reqs.push(Req { arrival_ns: i * interarrival, attempts: 0, last_device: None });
-        fleet.push(i * interarrival, EvKind::Arrive(i as usize));
+    match &cfg.traffic {
+        // Legacy arrivals stay byte-for-byte: one request every
+        // `interarrival` ns starting at t=0.
+        None => {
+            for i in 0..cfg.requests {
+                fleet.reqs.push(Req {
+                    arrival_ns: i * interarrival,
+                    attempts: 0,
+                    last_device: None,
+                });
+                fleet.push(i * interarrival, EvKind::Arrive(i as usize));
+            }
+        }
+        Some(traffic) => {
+            for (i, at) in traffic.schedule(cfg.requests, interarrival).into_iter().enumerate()
+            {
+                fleet.reqs.push(Req { arrival_ns: at, attempts: 0, last_device: None });
+                fleet.push(at, EvKind::Arrive(i));
+            }
+        }
     }
     while let Some(std::cmp::Reverse(ev)) = fleet.heap.pop() {
         match ev.kind {
@@ -506,9 +571,9 @@ pub fn simulate_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
         }
     }
 
-    let pct = |s: &Summary, p: f64| {
-        if fleet.completed == 0 { 0.0 } else { s.percentile(p) }
-    };
+    // completed == 0 ⇔ no latency samples, so the shared zero-on-empty
+    // convention reproduces the legacy zeroed percentiles bitwise.
+    let lat = LatencyStats::from_summary_or_zero(&fleet.latencies_us);
     let makespan_ms = fleet.end_ns as f64 / 1e6;
     let goodput_rps = if fleet.end_ns == 0 {
         0.0
@@ -532,10 +597,10 @@ pub fn simulate_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
         injected: fleet.injected,
         quarantines,
         reintegrations,
-        p50_us: pct(&fleet.latencies_us, 50.0),
-        p95_us: pct(&fleet.latencies_us, 95.0),
-        p99_us: pct(&fleet.latencies_us, 99.0),
-        mean_us: if fleet.completed == 0 { 0.0 } else { fleet.latencies_us.mean() },
+        p50_us: lat.p50_us,
+        p95_us: lat.p95_us,
+        p99_us: lat.p99_us,
+        mean_us: lat.mean_us,
         makespan_ms,
         offered_rps: 1e9 / interarrival as f64,
         goodput_rps,
@@ -690,6 +755,73 @@ mod tests {
         assert!(simulate_fleet(&FleetConfig { load: 0.0, ..base() }).is_err());
         assert!(
             simulate_fleet(&FleetConfig { service_ns: f64::NAN, ..base() }).is_err()
+        );
+        assert!(simulate_fleet(&FleetConfig {
+            service_ns_per_device: Some(vec![1000.0]),
+            ..base()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn uniform_traffic_matches_the_legacy_arrivals_bitwise() {
+        use crate::coordinator::traffic::ArrivalKind;
+        let legacy = simulate_fleet(&base()).unwrap();
+        let uniform = simulate_fleet(&FleetConfig {
+            traffic: Some(TrafficSpec { kind: ArrivalKind::Uniform, ..TrafficSpec::default() }),
+            ..base()
+        })
+        .unwrap();
+        assert_eq!(legacy, uniform);
+        assert_eq!(legacy.to_json().pretty(), uniform.to_json().pretty());
+    }
+
+    #[test]
+    fn poisson_traffic_is_deterministic_and_fully_accounted() {
+        use crate::coordinator::traffic::ArrivalKind;
+        let cfg = FleetConfig {
+            traffic: Some(TrafficSpec {
+                kind: ArrivalKind::Poisson,
+                rate_rps: 500_000.0,
+                ..TrafficSpec::default()
+            }),
+            resilience: ResilienceSpec { queue_cap: 64, ..ResilienceSpec::default() },
+            ..base()
+        };
+        let a = simulate_fleet(&cfg).unwrap();
+        let b = simulate_fleet(&cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.accounted(), a.offered);
+        // The explicit rate (500k req/s = one per 2 µs) overrides load.
+        assert!((a.offered_rps - 500_000.0).abs() < 1.0, "{}", a.offered_rps);
+    }
+
+    #[test]
+    fn backlog_policy_beats_round_robin_on_a_mixed_fleet() {
+        // A 500 ns/image device paired with a 4000 ns/image device under a
+        // deadline: round-robin drowns the slow device's queue while the
+        // backlog score steers traffic to the fast one.
+        let mixed = |policy| FleetConfig {
+            devices: 2,
+            batch: 1,
+            requests: 2000,
+            policy,
+            service_ns_per_device: Some(vec![500.0, 4000.0]),
+            resilience: ResilienceSpec {
+                deadline_ms: Some(1),
+                ..ResilienceSpec::default()
+            },
+            ..FleetConfig::default()
+        };
+        let rr = simulate_fleet(&mixed(Policy::RoundRobin)).unwrap();
+        let bl = simulate_fleet(&mixed(Policy::Backlog)).unwrap();
+        assert_eq!(rr.accounted(), rr.offered);
+        assert_eq!(bl.accounted(), bl.offered);
+        assert!(
+            bl.goodput > rr.goodput,
+            "backlog goodput {} must beat round-robin {}",
+            bl.goodput,
+            rr.goodput
         );
     }
 }

@@ -4,6 +4,42 @@ use std::time::Duration;
 
 use crate::util::stats::Summary;
 
+/// Shared latency percentile summary (µs): the one computation both the
+/// live pool's [`MetricsSnapshot`] and the virtual-time fleet replay's
+/// [`FleetReport`](super::chaos::FleetReport) build their latency fields
+/// from, so live and replay numbers can never drift to different
+/// percentile conventions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl LatencyStats {
+    /// Summarize a sample set, inheriting [`Summary`]'s NaN-on-empty
+    /// convention (the live `Metrics` contract).
+    pub fn from_summary(s: &Summary) -> LatencyStats {
+        LatencyStats {
+            mean_us: s.mean(),
+            p50_us: s.percentile(50.0),
+            p95_us: s.percentile(95.0),
+            p99_us: s.percentile(99.0),
+        }
+    }
+
+    /// Like [`LatencyStats::from_summary`] but all-zero on an empty
+    /// sample set — the fleet-replay convention (its JSON report has no
+    /// NaN representation).
+    pub fn from_summary_or_zero(s: &Summary) -> LatencyStats {
+        if s.is_empty() {
+            return LatencyStats { mean_us: 0.0, p50_us: 0.0, p95_us: 0.0, p99_us: 0.0 };
+        }
+        LatencyStats::from_summary(s)
+    }
+}
+
 /// Mutable metrics accumulator (lives behind the server's mutex).
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -54,6 +90,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = LatencyStats::from_summary(&self.latencies_us);
         MetricsSnapshot {
             requests: self.requests,
             batches: self.batches,
@@ -65,10 +102,10 @@ impl Metrics {
             failures: self.failures,
             quarantines: self.quarantines,
             reintegrations: self.reintegrations,
-            latency_p50_us: self.latencies_us.percentile(50.0),
-            latency_p95_us: self.latencies_us.percentile(95.0),
-            latency_p99_us: self.latencies_us.percentile(99.0),
-            latency_mean_us: self.latencies_us.mean(),
+            latency_p50_us: lat.p50_us,
+            latency_p95_us: lat.p95_us,
+            latency_p99_us: lat.p99_us,
+            latency_mean_us: lat.mean_us,
             batch_exec_mean_us: self.batch_exec_us.mean(),
             per_device: self.per_device.clone(),
         }
@@ -199,5 +236,17 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert!(s.latency_mean_us.is_nan());
         assert_eq!(s.requests, 0);
+    }
+
+    #[test]
+    fn latency_stats_conventions_differ_only_when_empty() {
+        let empty = Summary::new();
+        assert!(LatencyStats::from_summary(&empty).p99_us.is_nan());
+        let z = LatencyStats::from_summary_or_zero(&empty);
+        assert_eq!((z.mean_us, z.p50_us, z.p95_us, z.p99_us), (0.0, 0.0, 0.0, 0.0));
+
+        let s = Summary::from_values(vec![100.0, 200.0, 300.0]);
+        assert_eq!(LatencyStats::from_summary(&s), LatencyStats::from_summary_or_zero(&s));
+        assert!((LatencyStats::from_summary(&s).mean_us - 200.0).abs() < 1e-9);
     }
 }

@@ -30,12 +30,17 @@ pub mod metrics;
 pub mod resilience;
 pub mod router;
 pub mod server;
+pub mod traffic;
 
 pub use backend::{Backend, SimBackend};
 pub use batcher::Batcher;
 pub use chaos::{simulate_fleet, FleetConfig, FleetReport};
 pub use faults::{CrashSpec, FaultSpec, FaultyBackend, InjectedFault, StormSpec, StragglerSpec};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use traffic::{
+    arrival_name, drive, parse_arrival, ArrivalKind, OpenLoopReport, TrafficSpec,
+    ARRIVALS,
+};
 pub use resilience::{
     HealthTracker, HealthTransition, ResilienceSpec, ServeError, ShedReason,
 };

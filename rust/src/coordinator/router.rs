@@ -38,6 +38,14 @@ pub enum Policy {
     TwoChoices,
     /// Scan all devices for the minimum backlog.
     LeastLoaded,
+    /// Capability- and backlog-aware: score every available device by its
+    /// estimated completion delay — per-image service ns (from the
+    /// device's cached simulator price) × queued depth — and take the
+    /// minimum. On a heterogeneous fleet this sends proportionally more
+    /// traffic to the faster geometry; reintegration probes flagged via
+    /// [`Router::set_probe_candidate`] pre-empt the score so a quarantined
+    /// fast device is never starved of its comeback request.
+    Backlog,
 }
 
 /// The router: owns device states and dispatch accounting.
@@ -47,6 +55,11 @@ pub struct Router {
     /// Routability mask (health tracker / failover drives this); all
     /// devices start available, so legacy callers see no change.
     available: Vec<bool>,
+    /// Reintegration-probe flags: a flagged available device wins the next
+    /// [`Policy::Backlog`] decision outright (then the flag clears), so a
+    /// quarantined device whose score lost to every healthy peer still
+    /// gets its probe request. Legacy policies ignore the flags entirely.
+    probe: Vec<bool>,
     policy: Policy,
     rr_next: usize,
     rng: Rng,
@@ -57,7 +70,8 @@ impl Router {
     pub fn new(devices: Vec<Device>, policy: Policy, seed: u64) -> Self {
         assert!(!devices.is_empty(), "router needs at least one device");
         let available = vec![true; devices.len()];
-        Router { devices, available, policy, rr_next: 0, rng: Rng::new(seed), dispatched: 0 }
+        let probe = vec![false; devices.len()];
+        Router { devices, available, probe, policy, rr_next: 0, rng: Rng::new(seed), dispatched: 0 }
     }
 
     pub fn devices(&self) -> &[Device] {
@@ -72,6 +86,15 @@ impl Router {
 
     pub fn is_available(&self, device: usize) -> bool {
         self.available[device]
+    }
+
+    /// Flag (or clear) `device` as a reintegration-probe candidate. Under
+    /// [`Policy::Backlog`] the next routing decision sends one request to a
+    /// flagged available device before consulting the score, guaranteeing a
+    /// freshly-reintegrated fast device cannot be starved of probes by
+    /// lower-backlog healthy peers.
+    pub fn set_probe_candidate(&mut self, device: usize, probe: bool) {
+        self.probe[device] = probe;
     }
 
     /// Routable devices remaining.
@@ -122,6 +145,17 @@ impl Router {
                 }
             }
             Policy::LeastLoaded => self.min_backlog_available()?,
+            Policy::Backlog => {
+                // Probe fairness first: a flagged available device takes
+                // this request regardless of score, consuming its flag.
+                match (0..n).find(|&i| self.probe[i] && self.available[i]) {
+                    Some(i) => {
+                        self.probe[i] = false;
+                        i
+                    }
+                    None => self.min_backlog_available()?,
+                }
+            }
         };
         self.devices[idx].in_flight += 1;
         self.dispatched += 1;
@@ -246,7 +280,9 @@ mod tests {
         // route() increments exactly the chosen device's in_flight and
         // complete() decrements it, under an interleaved dispatch/complete
         // stream — for each policy.
-        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+        for policy in
+            [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices, Policy::Backlog]
+        {
             let mut r = Router::new(devs(&[1.0, 2.0, 3.0]), policy, 42);
             let mut outstanding = vec![0u64; 3];
             let mut inflight_fifo = Vec::new();
@@ -303,7 +339,9 @@ mod tests {
 
     #[test]
     fn try_route_skips_unavailable_devices() {
-        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+        for policy in
+            [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices, Policy::Backlog]
+        {
             let mut r = Router::new(devs(&[1.0, 1.0, 1.0]), policy, 11);
             r.set_available(1, false);
             assert_eq!(r.available_count(), 2);
@@ -379,5 +417,64 @@ mod tests {
         }
         let total: u64 = r.devices().iter().map(|d| d.in_flight).sum();
         assert_eq!(total, 6, "exactly the undrained round stays in flight");
+    }
+
+    #[test]
+    fn backlog_policy_prefers_the_capable_device() {
+        // service 4.0 vs 1.0: the score (in_flight+1)·service_ns must
+        // concentrate traffic on the fast device.
+        let mut r = Router::new(devs(&[4.0, 1.0]), Policy::Backlog, 0);
+        let mut counts = [0u64; 2];
+        for _ in 0..100 {
+            let i = r.route();
+            counts[i] += 1;
+            r.complete(i).unwrap();
+        }
+        // Completions drain instantly, so every decision sees empty queues
+        // and the fast device's lower per-image score always wins.
+        assert!(counts[1] > counts[0] * 3, "{counts:?}");
+    }
+
+    #[test]
+    fn backlog_makespan_beats_round_robin_on_mixed_fleet() {
+        let bl = Router::new(devs(&[4.0, 1.0]), Policy::Backlog, 0).simulate_makespan(1000);
+        let rr = Router::new(devs(&[4.0, 1.0]), Policy::RoundRobin, 0).simulate_makespan(1000);
+        assert!(bl < rr, "backlog {bl} vs round-robin {rr}");
+    }
+
+    #[test]
+    fn probe_candidate_is_not_starved_by_lower_backlog_peers() {
+        // Regression: the fastest device gets quarantined while holding a
+        // deep queue; its peers drain to idle. A pure score comparison
+        // would then route every request to the idle peers and the fast
+        // device could never carry the probe that proves it healthy again.
+        let mut r = Router::new(devs(&[1.0, 2.0, 2.0]), Policy::Backlog, 0);
+        // Load the fast device: with idle peers its per-image score wins
+        // most decisions (deterministic trace: 0, 0, 1, 2, 0, 0).
+        let picks: Vec<usize> = (0..6).map(|_| r.route()).collect();
+        assert_eq!(picks, vec![0, 0, 1, 2, 0, 0]);
+        // Quarantine it mid-backlog; the peers drain completely.
+        r.set_available(0, false);
+        r.complete(1).unwrap();
+        r.complete(2).unwrap();
+        // Reintegrated but score-loser: backlog 5·1.0 vs idle peers at 2.0.
+        r.set_available(0, true);
+        assert_eq!(r.try_route(), Some(1), "plain score still starves device 0");
+        // The probe flag must win the very next decision — exactly once.
+        r.set_probe_candidate(0, true);
+        assert_eq!(r.try_route(), Some(0), "probe flag must pre-empt the score");
+        assert_ne!(r.try_route(), Some(0), "flag is consumed; score resumes");
+    }
+
+    #[test]
+    fn probe_flag_is_inert_for_legacy_policies() {
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::TwoChoices] {
+            let mut flagged = Router::new(devs(&[1.0, 1.0, 1.0]), policy, 5);
+            let mut plain = Router::new(devs(&[1.0, 1.0, 1.0]), policy, 5);
+            flagged.set_probe_candidate(2, true);
+            for step in 0..50 {
+                assert_eq!(flagged.try_route(), plain.try_route(), "{policy:?} step {step}");
+            }
+        }
     }
 }

@@ -40,6 +40,12 @@ pub struct PoolConfig {
     /// behavior-preserving: no deadline, no retries, the legacy queue
     /// depth, health tracking off.
     pub resilience: ResilienceSpec,
+    /// Per-device estimated service time per image (ns), from each
+    /// device's cached simulator price. `None` (the default) keeps the
+    /// legacy homogeneous assumption — unit service time, so backlog
+    /// scoring reduces to plain queue depth. Heterogeneous fleets set this
+    /// so capability-aware policies can weigh queue depth by device speed.
+    pub service_ns: Option<Vec<f64>>,
 }
 
 impl Default for PoolConfig {
@@ -49,6 +55,7 @@ impl Default for PoolConfig {
             policy: Policy::RoundRobin,
             batch_window: Duration::from_millis(5),
             resilience: ResilienceSpec::default(),
+            service_ns: None,
         }
     }
 }
@@ -154,6 +161,18 @@ impl MultiDeviceServer {
     {
         anyhow::ensure!(cfg.devices > 0, "pool needs at least one device");
         cfg.resilience.validate()?;
+        if let Some(s) = &cfg.service_ns {
+            anyhow::ensure!(
+                s.len() == cfg.devices,
+                "service_ns has {} entries for {} devices",
+                s.len(),
+                cfg.devices
+            );
+            anyhow::ensure!(
+                s.iter().all(|&v| v.is_finite() && v > 0.0),
+                "service_ns entries must be finite and positive: {s:?}"
+            );
+        }
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let mut workers = Vec::with_capacity(cfg.devices);
         let mut ready_rxs = Vec::with_capacity(cfg.devices);
@@ -189,10 +208,15 @@ impl MultiDeviceServer {
         }
 
         let (image_elems, batch) = dims.expect("devices > 0");
-        // Workers are homogeneous, so unit service time makes the router's
-        // backlog estimate proportional to plain queue depth.
+        // Without per-device prices the workers are assumed homogeneous:
+        // unit service time makes the router's backlog estimate
+        // proportional to plain queue depth. Heterogeneous fleets pass the
+        // simulator's per-device service estimates instead.
         let devices = (0..cfg.devices)
-            .map(|d| Device::new(&format!("worker{d}"), 1.0))
+            .map(|d| {
+                let service = cfg.service_ns.as_ref().map_or(1.0, |s| s[d]);
+                Device::new(&format!("worker{d}"), service)
+            })
             .collect();
         Ok(MultiDeviceServer {
             workers,
@@ -316,6 +340,10 @@ impl MultiDeviceServer {
                 for dev in 0..self.workers.len() {
                     let up = d.health.can_route(dev, now);
                     d.router.set_available(dev, up);
+                    // A quarantined device whose probe window opened is
+                    // routable exactly once; under the backlog policy the
+                    // probe flag lets it pre-empt lower-score peers.
+                    d.router.set_probe_candidate(dev, up && d.health.is_quarantined(dev));
                 }
             }
             let Some(device) = d.router.try_route() else {
@@ -670,6 +698,7 @@ mod pjrt_server {
                     policy: cfg.policy,
                     batch_window: cfg.batch_window,
                     resilience: ResilienceSpec::default(),
+                    service_ns: None,
                 },
                 move |_| PjrtBackend::load(&artifacts, per_layer_chain),
             )?;
@@ -839,5 +868,48 @@ mod tests {
         assert!(
             MultiDeviceServer::start(cfg, |_| Ok(SimBackend::new(1, 1, 2))).is_err()
         );
+    }
+
+    #[test]
+    fn backlog_policy_weighs_per_device_service_times() {
+        // service 4.0 vs 1.0 ns/image: submits held in flight, so the
+        // backlog score steers most traffic to the fast device
+        // (deterministic trace: 1, 1, 1, 0, 1, 1).
+        let s = MultiDeviceServer::start(
+            PoolConfig {
+                devices: 2,
+                policy: Policy::Backlog,
+                batch_window: Duration::from_millis(2),
+                service_ns: Some(vec![4.0, 1.0]),
+                ..PoolConfig::default()
+            },
+            |_| Ok(SimBackend::new(4, 8, 10)),
+        )
+        .unwrap();
+        let pendings: Vec<_> =
+            (0..6).map(|i| s.submit(vec![i; 8]).unwrap()).collect();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        let m = s.metrics();
+        assert_eq!(m.requests, 6);
+        assert!(
+            m.per_device[1] > m.per_device[0] * 3,
+            "fast device should absorb most traffic: {:?}",
+            m.per_device
+        );
+        s.shutdown();
+    }
+
+    #[test]
+    fn mismatched_service_ns_length_rejected() {
+        let cfg = PoolConfig {
+            devices: 2,
+            service_ns: Some(vec![1.0]),
+            ..PoolConfig::default()
+        };
+        let err =
+            MultiDeviceServer::start(cfg, |_| Ok(SimBackend::new(1, 1, 2))).unwrap_err();
+        assert!(err.to_string().contains("service_ns"), "{err:#}");
     }
 }

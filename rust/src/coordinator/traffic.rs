@@ -1,0 +1,512 @@
+//! Open-loop traffic generation against the live serving pool.
+//!
+//! The virtual-time chaos replay (`chaos.rs`) drives uniform arrivals; a
+//! real front-end does not. This module generates **seed-deterministic**
+//! arrival schedules — uniform, Poisson, bursty (Markov-modulated
+//! on/off), and diurnal (sinusoid-modulated rate) — and [`drive`]s them
+//! against the real [`MultiDeviceServer`] through its non-blocking
+//! `submit`/`Pending` path, open-loop: a slow fleet does not slow the
+//! arrival process down, it just grows queues until the shed policy bites.
+//!
+//! Accounting is exact: every offered request reaches one terminal
+//! outcome (completed / shed / timeout / failed), and
+//! [`OpenLoopReport::reconcile`] cross-checks the driver's tallies
+//! against the pool's own [`Metrics`](super::metrics::Metrics).
+//!
+//! The schedule (ns offsets from stream start) is pure data, so the same
+//! [`TrafficSpec`] also drives the virtual-time fleet replay — live and
+//! simulated serving see identical arrival sequences for a given seed.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+use super::metrics::{LatencyStats, MetricsSnapshot};
+use super::resilience::ServeError;
+use super::server::MultiDeviceServer;
+
+/// Arrival process families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Evenly spaced: one request every interarrival — exactly the legacy
+    /// chaos-replay arrivals.
+    Uniform,
+    /// Memoryless: exponential interarrival gaps at the nominal rate.
+    Poisson,
+    /// Markov-modulated on/off: exponential gaps at the within-burst rate
+    /// during the on-window of each period, silence in the off-window.
+    /// The within-burst mean is scaled by `duty` so the long-run offered
+    /// rate matches the nominal one.
+    Bursty,
+    /// Poisson with a sinusoid-modulated instantaneous rate:
+    /// `rate · (1 + amplitude · sin(2π t / period))` — a compressed
+    /// day/night cycle.
+    Diurnal,
+}
+
+/// Accepted arrival-process spellings, in canonical order.
+pub const ARRIVALS: [&str; 4] = ["uniform", "poisson", "bursty", "diurnal"];
+
+/// Parse an arrival-process name (CLI `--arrival`, spec `serve.arrival.process`).
+pub fn parse_arrival(s: &str) -> Result<ArrivalKind> {
+    Ok(match s {
+        "uniform" => ArrivalKind::Uniform,
+        "poisson" => ArrivalKind::Poisson,
+        "bursty" => ArrivalKind::Bursty,
+        "diurnal" => ArrivalKind::Diurnal,
+        other => anyhow::bail!(
+            "unknown arrival process '{other}' (expected {})",
+            ARRIVALS.join("|")
+        ),
+    })
+}
+
+/// Canonical name of an arrival process.
+pub fn arrival_name(kind: ArrivalKind) -> &'static str {
+    match kind {
+        ArrivalKind::Uniform => "uniform",
+        ArrivalKind::Poisson => "poisson",
+        ArrivalKind::Bursty => "bursty",
+        ArrivalKind::Diurnal => "diurnal",
+    }
+}
+
+/// An arrival-process specification. `rate_rps == 0` (the default) means
+/// "no explicit rate": callers derive the interarrival from fleet
+/// capacity and `serve.load`, exactly like the chaos replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    pub kind: ArrivalKind,
+    /// Offered arrival rate, requests/s; 0 derives the rate from load.
+    pub rate_rps: f64,
+    /// Schedule seed — same spec and interarrival give a bitwise-identical
+    /// schedule.
+    pub seed: u64,
+    /// Modulation period for bursty/diurnal processes (ms).
+    pub period_ms: u64,
+    /// Bursty on-fraction of each period, in (0, 1].
+    pub duty: f64,
+    /// Diurnal rate swing, in [0, 1).
+    pub amplitude: f64,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        TrafficSpec {
+            kind: ArrivalKind::Poisson,
+            rate_rps: 0.0,
+            seed: 0x5EED,
+            period_ms: 1000,
+            duty: 0.5,
+            amplitude: 0.5,
+        }
+    }
+}
+
+impl TrafficSpec {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.rate_rps.is_finite() && self.rate_rps >= 0.0,
+            "arrival rate must be finite and >= 0, got {}",
+            self.rate_rps
+        );
+        anyhow::ensure!(self.period_ms >= 1, "arrival period_ms must be >= 1");
+        anyhow::ensure!(
+            self.duty > 0.0 && self.duty <= 1.0,
+            "arrival duty must be in (0, 1], got {}",
+            self.duty
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.amplitude),
+            "arrival amplitude must be in [0, 1), got {}",
+            self.amplitude
+        );
+        Ok(())
+    }
+
+    /// Interarrival from the explicit rate, when one is set.
+    pub fn interarrival_ns(&self) -> Option<u64> {
+        if self.rate_rps > 0.0 {
+            Some(((1e9 / self.rate_rps).round() as u64).max(1))
+        } else {
+            None
+        }
+    }
+
+    /// Generate `requests` arrival offsets (ns from stream start,
+    /// non-decreasing) at a nominal `interarrival_ns` spacing. Pure and
+    /// seed-deterministic: the same spec and interarrival are
+    /// bitwise-identical on every call.
+    pub fn schedule(&self, requests: u64, interarrival_ns: u64) -> Vec<u64> {
+        let mean = interarrival_ns.max(1) as f64;
+        let period = (self.period_ms.max(1) * 1_000_000) as f64;
+        let mut rng = Rng::new(self.seed);
+        let mut gap = |mean: f64| -(1.0 - rng.uniform()).ln() * mean;
+        let mut out = Vec::with_capacity(requests as usize);
+        match self.kind {
+            ArrivalKind::Uniform => {
+                for i in 0..requests {
+                    out.push(i * interarrival_ns);
+                }
+            }
+            ArrivalKind::Poisson => {
+                let mut t = 0.0f64;
+                for _ in 0..requests {
+                    t += gap(mean);
+                    out.push(t.round() as u64);
+                }
+            }
+            ArrivalKind::Bursty => {
+                let on = period * self.duty;
+                let mut t = 0.0f64;
+                for _ in 0..requests {
+                    // Within-burst rate is 1/duty × nominal, so the
+                    // long-run offered rate stays at the nominal one.
+                    t += gap(mean * self.duty);
+                    let phase = t % period;
+                    if phase > on {
+                        // Landed in the off-window: the burst source is
+                        // silent until the next period starts.
+                        t += period - phase;
+                    }
+                    out.push(t.round() as u64);
+                }
+            }
+            ArrivalKind::Diurnal => {
+                let mut t = 0.0f64;
+                for _ in 0..requests {
+                    let factor = 1.0
+                        + self.amplitude * (std::f64::consts::TAU * t / period).sin();
+                    t += gap(mean / factor.max(1e-9));
+                    out.push(t.round() as u64);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Outcome accounting of one open-loop run against the live pool.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    /// Requests the arrival process offered.
+    pub offered: u64,
+    /// Requests answered with logits.
+    pub completed: u64,
+    /// Refused at admission or by a dying worker.
+    pub shed: u64,
+    /// Deadline expired before execution.
+    pub timeouts: u64,
+    /// Typed backend/device failures.
+    pub failed: u64,
+    /// End-to-end request latencies of completed requests.
+    pub latency: LatencyStats,
+    /// Wall-clock from first submit to last terminal outcome.
+    pub makespan: Duration,
+}
+
+impl OpenLoopReport {
+    /// Every offered request reaches exactly one terminal outcome.
+    pub fn accounted(&self) -> u64 {
+        self.completed + self.shed + self.timeouts + self.failed
+    }
+
+    /// Goodput over the makespan, requests/s.
+    pub fn goodput_rps(&self) -> f64 {
+        let secs = self.makespan.as_secs_f64();
+        if secs > 0.0 {
+            self.completed as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Offered rate over the makespan, requests/s.
+    pub fn offered_rps(&self) -> f64 {
+        let secs = self.makespan.as_secs_f64();
+        if secs > 0.0 {
+            self.offered as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Cross-check the driver's accounting against the pool's own
+    /// metrics: no request may vanish (`accounted == offered`) and both
+    /// sides must agree on what completed (`completed == requests`).
+    pub fn reconcile(&self, m: &MetricsSnapshot) -> Result<()> {
+        anyhow::ensure!(
+            self.accounted() == self.offered,
+            "open-loop accounting leak: {} accounted of {} offered",
+            self.accounted(),
+            self.offered
+        );
+        anyhow::ensure!(
+            self.completed == m.requests,
+            "driver saw {} completions but the pool recorded {}",
+            self.completed,
+            m.requests
+        );
+        Ok(())
+    }
+
+    /// Human-readable summary (the `serve --arrival` output block).
+    pub fn render(&self) -> String {
+        format!(
+            "open-loop: offered={} ({:.0} req/s) completed={} ({:.0} req/s goodput) \
+             shed={} timeouts={} failed={}\n\
+             latency: mean={:.0} µs p50={:.0} µs p99={:.0} µs over {:.2} ms makespan\n",
+            self.offered,
+            self.offered_rps(),
+            self.completed,
+            self.goodput_rps(),
+            self.shed,
+            self.timeouts,
+            self.failed,
+            self.latency.mean_us,
+            self.latency.p50_us,
+            self.latency.p99_us,
+            self.makespan.as_secs_f64() * 1e3,
+        )
+    }
+}
+
+fn tally(err: &ServeError, shed: &mut u64, timeouts: &mut u64, failed: &mut u64) {
+    match err {
+        ServeError::Shed { .. } => *shed += 1,
+        ServeError::Timeout { .. } => *timeouts += 1,
+        _ => *failed += 1,
+    }
+}
+
+/// Drive an arrival schedule (ns offsets from stream start) against a
+/// live pool, open-loop: submissions are paced by the schedule alone —
+/// never by the fleet — via the non-blocking `submit` path, and every
+/// admitted request's `Pending` is drained afterwards. `seed` generates
+/// the deterministic image payloads.
+pub fn drive(server: &MultiDeviceServer, offsets: &[u64], seed: u64) -> OpenLoopReport {
+    let elems = server.image_elems();
+    let mut rng = Rng::new(seed);
+    let mut latencies = Summary::new();
+    let (mut shed, mut timeouts, mut failed) = (0u64, 0u64, 0u64);
+    let mut admitted = Vec::with_capacity(offsets.len());
+    let t0 = Instant::now();
+    for &at in offsets {
+        let target = Duration::from_nanos(at);
+        let elapsed = t0.elapsed();
+        if elapsed < target {
+            std::thread::sleep(target - elapsed);
+        }
+        let image: Vec<i32> = (0..elems).map(|_| rng.int_range(0, 255) as i32).collect();
+        match server.submit(image) {
+            Ok(pending) => admitted.push(pending),
+            Err(e) => tally(&e, &mut shed, &mut timeouts, &mut failed),
+        }
+    }
+    for pending in admitted {
+        match pending.wait() {
+            Ok(resp) => latencies.push(resp.latency.as_secs_f64() * 1e6),
+            Err(e) => tally(&e, &mut shed, &mut timeouts, &mut failed),
+        }
+    }
+    OpenLoopReport {
+        offered: offsets.len() as u64,
+        completed: latencies.len() as u64,
+        shed,
+        timeouts,
+        failed,
+        latency: LatencyStats::from_summary_or_zero(&latencies),
+        makespan: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{Backend, SimBackend};
+    use crate::coordinator::resilience::ResilienceSpec;
+    use crate::coordinator::router::Policy;
+    use crate::coordinator::server::PoolConfig;
+
+    fn spec(kind: ArrivalKind) -> TrafficSpec {
+        TrafficSpec { kind, ..TrafficSpec::default() }
+    }
+
+    #[test]
+    fn same_seed_schedules_are_bitwise_identical() {
+        for kind in
+            [ArrivalKind::Uniform, ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal]
+        {
+            let s = spec(kind);
+            assert_eq!(s.schedule(500, 1000), s.schedule(500, 1000), "{kind:?}");
+            let reseeded = TrafficSpec { seed: 1, ..spec(kind) };
+            if kind != ArrivalKind::Uniform {
+                assert_ne!(
+                    s.schedule(500, 1000),
+                    reseeded.schedule(500, 1000),
+                    "{kind:?} must consume the seed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_are_nondecreasing() {
+        for kind in
+            [ArrivalKind::Uniform, ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal]
+        {
+            let offs = spec(kind).schedule(2000, 1000);
+            assert_eq!(offs.len(), 2000);
+            assert!(offs.windows(2).all(|w| w[0] <= w[1]), "{kind:?} went backwards");
+        }
+    }
+
+    #[test]
+    fn uniform_matches_the_legacy_spacing_exactly() {
+        let offs = spec(ArrivalKind::Uniform).schedule(5, 1234);
+        assert_eq!(offs, vec![0, 1234, 2468, 3702, 4936]);
+    }
+
+    #[test]
+    fn poisson_empirical_mean_is_close_to_nominal() {
+        let n = 20_000u64;
+        let offs = spec(ArrivalKind::Poisson).schedule(n, 1000);
+        let mean = *offs.last().unwrap() as f64 / n as f64;
+        assert!((mean - 1000.0).abs() < 50.0, "empirical mean {mean} vs nominal 1000");
+    }
+
+    #[test]
+    fn bursty_respects_the_duty_cycle() {
+        let s = TrafficSpec {
+            kind: ArrivalKind::Bursty,
+            period_ms: 1,
+            duty: 0.25,
+            ..TrafficSpec::default()
+        };
+        let period = 1_000_000u64;
+        let on = (period as f64 * s.duty) as u64;
+        for &off in &s.schedule(2000, 1000) {
+            assert!(
+                off % period <= on + 1,
+                "arrival at {off} ns falls {} ns into the off-window",
+                off % period
+            );
+        }
+    }
+
+    #[test]
+    fn diurnal_concentrates_arrivals_in_the_high_rate_half() {
+        let s = TrafficSpec {
+            kind: ArrivalKind::Diurnal,
+            period_ms: 1,
+            amplitude: 0.9,
+            ..TrafficSpec::default()
+        };
+        let period = 1_000_000u64;
+        let offs = s.schedule(4000, 1000);
+        let first_half =
+            offs.iter().filter(|&&o| o % period < period / 2).count();
+        let second_half = offs.len() - first_half;
+        // ∫(1 + 0.9 sin) over the first half vs the second gives ≈ 3.7×.
+        assert!(
+            first_half > second_half * 2,
+            "sin-modulated rate must skew arrivals: {first_half} vs {second_half}"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_specs() {
+        assert!(TrafficSpec::default().validate().is_ok());
+        assert!(TrafficSpec { rate_rps: f64::NAN, ..TrafficSpec::default() }
+            .validate()
+            .is_err());
+        assert!(TrafficSpec { rate_rps: -1.0, ..TrafficSpec::default() }
+            .validate()
+            .is_err());
+        assert!(TrafficSpec { duty: 0.0, ..TrafficSpec::default() }.validate().is_err());
+        assert!(TrafficSpec { amplitude: 1.0, ..TrafficSpec::default() }
+            .validate()
+            .is_err());
+        assert!(TrafficSpec { period_ms: 0, ..TrafficSpec::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn arrival_names_round_trip() {
+        for name in ARRIVALS {
+            assert_eq!(arrival_name(parse_arrival(name).unwrap()), name);
+        }
+        let err = parse_arrival("tidal").unwrap_err();
+        assert!(err.to_string().contains("poisson"), "{err}");
+    }
+
+    /// A backend slow enough that an instantaneous burst overflows the
+    /// bounded admission queue.
+    struct SlowBackend(SimBackend);
+
+    impl Backend for SlowBackend {
+        fn batch_size(&self) -> usize {
+            self.0.batch_size()
+        }
+        fn image_elems(&self) -> usize {
+            self.0.image_elems()
+        }
+        fn num_classes(&self) -> usize {
+            self.0.num_classes()
+        }
+        fn run_batch(&mut self, images: &[i32]) -> anyhow::Result<Vec<f32>> {
+            std::thread::sleep(Duration::from_millis(2));
+            self.0.run_batch(images)
+        }
+    }
+
+    #[test]
+    fn overloaded_pool_sheds_but_accounts_every_request() {
+        let server = MultiDeviceServer::start(
+            PoolConfig {
+                devices: 1,
+                policy: Policy::Backlog,
+                batch_window: Duration::from_millis(1),
+                resilience: ResilienceSpec { queue_cap: 2, ..ResilienceSpec::default() },
+                ..PoolConfig::default()
+            },
+            |_| Ok(SlowBackend(SimBackend::new(4, 8, 10))),
+        )
+        .unwrap();
+        // An instantaneous burst of 64 requests against a 2-deep queue.
+        let offsets = vec![0u64; 64];
+        let report = drive(&server, &offsets, 7);
+        assert_eq!(report.offered, 64);
+        assert!(report.shed > 0, "2-deep queue must shed an instantaneous burst");
+        assert!(report.completed > 0, "the queue head must still be served");
+        assert!(report.completed <= report.offered, "goodput cannot exceed offered");
+        assert_eq!(report.accounted(), report.offered);
+        report.reconcile(&server.metrics()).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn clean_pool_completes_the_whole_schedule() {
+        let server = MultiDeviceServer::start(
+            PoolConfig {
+                devices: 2,
+                batch_window: Duration::from_millis(1),
+                ..PoolConfig::default()
+            },
+            |_| Ok(SimBackend::new(4, 8, 10)),
+        )
+        .unwrap();
+        let offsets = spec(ArrivalKind::Poisson).schedule(40, 50_000);
+        let report = drive(&server, &offsets, 11);
+        assert_eq!(report.completed, 40);
+        assert_eq!(report.accounted(), report.offered);
+        assert!(report.latency.p50_us > 0.0);
+        assert!(report.render().contains("offered=40"), "{}", report.render());
+        report.reconcile(&server.metrics()).unwrap();
+        server.shutdown();
+    }
+}

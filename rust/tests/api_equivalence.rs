@@ -6,7 +6,7 @@
 //! fails. Plus: an inline `NetworkSpec` with custom layers runs
 //! end-to-end through `report()` and `serve()`.
 
-use pim_dram::api::{Job, ServeSpec, Spec};
+use pim_dram::api::{DevicesSpec, Job, ServeSpec, Spec};
 use pim_dram::plan::ShardPolicy;
 use pim_dram::sim::{simulate, SimConfig, SimResult};
 use pim_dram::workloads::nets::all_networks;
@@ -196,7 +196,11 @@ fn tinynet() -> Network {
 fn inline_network_runs_end_to_end() {
     let spec = Spec::inline(tinynet())
         .with_preset("conservative")
-        .with_serve(ServeSpec { devices: Some(2), batch: 4, ..ServeSpec::default() });
+        .with_serve(ServeSpec {
+            devices: Some(DevicesSpec::Count(2)),
+            batch: 4,
+            ..ServeSpec::default()
+        });
     // The inline spec survives a JSON round-trip before running.
     let parsed = Spec::from_json_text(&spec.to_json_text()).unwrap();
     assert_eq!(parsed, spec);
@@ -233,9 +237,13 @@ fn serve_without_faults_is_bitwise_legacy() {
 
     let legacy = Spec::inline(tinynet())
         .with_preset("conservative")
-        .with_serve(ServeSpec { devices: Some(2), batch: 4, ..ServeSpec::default() });
+        .with_serve(ServeSpec {
+            devices: Some(DevicesSpec::Count(2)),
+            batch: 4,
+            ..ServeSpec::default()
+        });
     let spelled = Spec::inline(tinynet()).with_preset("conservative").with_serve(ServeSpec {
-        devices: Some(2),
+        devices: Some(DevicesSpec::Count(2)),
         batch: 4,
         faults: Some(FaultSpec::none()),
         resilience: Some(ResilienceSpec::default()),

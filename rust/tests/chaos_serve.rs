@@ -15,7 +15,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use pim_dram::api::{Job, ServeSpec, Spec};
+use pim_dram::api::{DevicesSpec, Job, ServeSpec, Spec};
 use pim_dram::coordinator::{
     simulate_fleet, Backend, CrashSpec, FaultSpec, FleetConfig, MultiDeviceServer,
     Policy, PoolConfig, ResilienceSpec, ServeError, StormSpec, StragglerSpec,
@@ -24,7 +24,7 @@ use pim_dram::coordinator::{
 /// A fully loaded fault-injected serve spec over a builtin network.
 fn chaotic_spec(fault_seed: u64) -> Spec {
     let mut spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
-        devices: Some(3),
+        devices: Some(DevicesSpec::Count(3)),
         batch: 4,
         policy: Policy::RoundRobin,
         faults: Some(FaultSpec {
@@ -124,7 +124,7 @@ fn noop_fault_section_serves_clean() {
     // `faults` present but injecting nothing: the live pool must behave
     // exactly like a spec with no fault section at all.
     let mut spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
-        devices: Some(2),
+        devices: Some(DevicesSpec::Count(2)),
         batch: 4,
         faults: Some(FaultSpec::none()),
         ..ServeSpec::default()
@@ -148,7 +148,7 @@ fn live_pool_fails_over_quarantines_and_reintegrates() {
     // quarantines it, failover reroutes to device 1, and the first probe
     // after the (1 ms) window reintegrates it.
     let spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
-        devices: Some(2),
+        devices: Some(DevicesSpec::Count(2)),
         batch: 4,
         policy: Policy::RoundRobin,
         faults: Some(FaultSpec {
@@ -201,7 +201,7 @@ fn transient_fault_without_retries_is_typed() {
     // retries = 0 (the default): the injected fault surfaces to the
     // caller as the typed variant, not a stringly anyhow error.
     let spec = Spec::builtin("pimnet").with_preset("conservative").with_serve(ServeSpec {
-        devices: Some(1),
+        devices: Some(DevicesSpec::Count(1)),
         batch: 4,
         faults: Some(FaultSpec { seed: 9, transient: 1.0, ..FaultSpec::none() }),
         ..ServeSpec::default()

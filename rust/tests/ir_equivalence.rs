@@ -11,7 +11,7 @@
 //! `workloads::nets` builders — the "pre-refactor path" this test holds
 //! the graph lowering to.
 
-use pim_dram::api::{Job, ServeSpec, Spec};
+use pim_dram::api::{DevicesSpec, Job, ServeSpec, Spec};
 use pim_dram::plan::ShardPolicy;
 use pim_dram::sim::{simulate, SimConfig, SimResult};
 use pim_dram::workloads::{nets, LayerDesc, Network, Residual};
@@ -298,7 +298,7 @@ fn generality_workloads_report_end_to_end() {
 fn generality_workloads_serve_end_to_end() {
     for name in ["mobilenet_mini", "tinyformer"] {
         let spec = Spec::builtin(name).with_preset("conservative").with_serve(
-            ServeSpec { devices: Some(2), batch: 4, ..ServeSpec::default() },
+            ServeSpec { devices: Some(DevicesSpec::Count(2)), batch: 4, ..ServeSpec::default() },
         );
         let job = Job::new(spec).unwrap();
         let net = job.network().clone();
